@@ -1,0 +1,97 @@
+//! Communication-cost sweep (DESIGN.md E5/E9): measured words per processor
+//! on the instrumented simulator vs the paper's closed forms, the Theorem 1
+//! lower bound, the All-to-All variant, and the §8 baselines.
+//!
+//!     cargo run --release --example comm_sweep -- [--scale 4]
+
+use sttsv::bounds;
+use sttsv::coordinator::{baselines, run_comm_only, run_sttsv, CommMode};
+use sttsv::partition::TetraPartition;
+use sttsv::runtime::Backend;
+use sttsv::steiner::spherical;
+use sttsv::tensor::SymTensor;
+use sttsv::util::cli::Args;
+use sttsv::util::rng::Rng;
+use sttsv::util::table::{fnum, Table};
+
+fn main() -> anyhow::Result<()> {
+    let args = Args::from_env();
+    let scale: usize = args.get_or("scale", 4usize);
+
+    println!("== E5: Algorithm 5 vs Theorem 1 lower bound (measured words/proc) ==");
+    let mut t = Table::new([
+        "q",
+        "P",
+        "n",
+        "p2p meas",
+        "closed form",
+        "Thm1 LB",
+        "p2p/LB",
+        "a2a meas",
+        "a2a/LB",
+        "steps/phase",
+    ]);
+    for q in [2usize, 3, 4, 5] {
+        let part = TetraPartition::from_steiner(&spherical(q as u64)?)?;
+        let b = q * (q + 1) * scale;
+        let n = b * part.m;
+        let p2p = run_comm_only(&part, b, CommMode::PointToPoint)?;
+        let a2a = run_comm_only(&part, b, CommMode::AllToAll)?;
+        let meas = p2p.iter().map(|s| s.sent_words).max().unwrap() as f64;
+        let meas_a2a = a2a.iter().map(|s| s.sent_words).max().unwrap() as f64;
+        let lb = bounds::lower_bound_words(n, part.p);
+        t.row([
+            q.to_string(),
+            part.p.to_string(),
+            n.to_string(),
+            fnum(meas),
+            fnum(bounds::algorithm_words(n, q)),
+            fnum(lb),
+            format!("{:.3}", meas / lb),
+            fnum(meas_a2a),
+            format!("{:.3}", meas_a2a / lb),
+            bounds::p2p_steps(q).to_string(),
+        ]);
+    }
+    t.print();
+
+    println!("\n== E9: Algorithm 5 vs baselines (q=2, P=10; measured) ==");
+    let part = TetraPartition::from_steiner(&spherical(2)?)?;
+    let mut t2 = Table::new([
+        "n",
+        "Alg5 p2p",
+        "naive 3-D grid",
+        "sequence (§8)",
+        "Alg5/LB",
+        "naive/LB",
+        "seq/LB",
+    ]);
+    for b in [6usize, 12, 24, 48] {
+        let n = b * part.m;
+        let tensor = SymTensor::random(n, 1);
+        let mut rng = Rng::new(2);
+        let x = rng.normal_vec(n);
+        let alg = run_sttsv(&tensor, &x, &part, CommMode::PointToPoint, Backend::Native)?;
+        let naive = baselines::run_naive_grid(&tensor, &x, part.p)?;
+        let seq = baselines::run_sequence(&tensor, &x, part.p)?;
+        let lb = bounds::lower_bound_words(n, part.p);
+        t2.row([
+            n.to_string(),
+            alg.max_sent_words().to_string(),
+            naive.max_sent_words().to_string(),
+            seq.max_sent_words().to_string(),
+            format!("{:.2}", alg.max_sent_words() as f64 / lb),
+            format!("{:.2}", naive.max_sent_words() as f64 / lb),
+            format!("{:.2}", seq.max_sent_words() as f64 / lb),
+        ]);
+    }
+    t2.print();
+    println!(
+        "\nNote: the sequence approach communicates Θ(n) per processor \
+         (vs Θ(n/P^(1/3))) and does ~2x the arithmetic (no symmetry); the \
+         naive grid tracks the non-symmetric Loomis-Whitney bound instead \
+         of Theorem 1."
+    );
+    println!("comm_sweep OK");
+    Ok(())
+}

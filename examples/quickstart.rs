@@ -1,0 +1,66 @@
+//! Quickstart: one distributed STTSV on P = 10 simulated processors.
+//!
+//!     cargo run --release --example quickstart
+//!
+//! Builds the q = 2 spherical Steiner partition (P = q(q²+1) = 10), runs
+//! Algorithm 5 on a random symmetric tensor, verifies the result against
+//! the sequential oracle, and prints the communication accounting next to
+//! the paper's Theorem 1 lower bound.
+
+use sttsv::bounds;
+use sttsv::coordinator::{run_sttsv, CommMode};
+use sttsv::partition::TetraPartition;
+use sttsv::runtime::Backend;
+use sttsv::steiner::spherical;
+use sttsv::tensor::SymTensor;
+use sttsv::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Partition: Steiner (5, 3, 3) system -> 10 tetrahedral blocks.
+    let sys = spherical(2)?;
+    let part = TetraPartition::from_steiner(&sys)?;
+    println!(
+        "partition: m = {} row blocks, P = {} processors, λ₁ = {}",
+        part.m,
+        part.p,
+        part.lambda1()
+    );
+
+    // 2. Problem: n = 60 (block size b = 12), random symmetric tensor.
+    let b = 12;
+    let n = b * part.m;
+    let tensor = SymTensor::random(n, 42);
+    let mut rng = Rng::new(43);
+    let x = rng.normal_vec(n);
+
+    // 3. Run Algorithm 5 (point-to-point schedule, native kernels; pass
+    //    Backend::Pjrt to use the AOT Pallas kernels after `make artifacts`).
+    let rep = run_sttsv(&tensor, &x, &part, CommMode::PointToPoint, Backend::Native)?;
+
+    // 4. Verify against the sequential Algorithm 4 oracle.
+    let want = tensor.sttsv(&x);
+    let scale = want.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+    let max_err = rep
+        .y
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs() / scale)
+        .fold(0.0f32, f32::max);
+    println!("max relative error vs oracle: {max_err:.2e}");
+    assert!(max_err < 5e-3);
+
+    // 5. Communication accounting.
+    println!(
+        "comm/proc: sent {} words, received {} words, {} steps per phase",
+        rep.max_sent_words(),
+        rep.max_recv_words(),
+        rep.steps_per_phase
+    );
+    println!(
+        "paper: closed form {} words, Theorem 1 lower bound {:.1} words",
+        bounds::algorithm_words(n, 2),
+        bounds::lower_bound_words(n, part.p)
+    );
+    println!("quickstart OK");
+    Ok(())
+}

@@ -1,0 +1,123 @@
+"""AOT bridge: lower the L2 JAX functions (with the L1 Pallas kernel inside)
+to HLO *text* artifacts that the Rust L3 runtime loads via the PJRT C API.
+
+Interchange format is HLO text, NOT a serialized HloModuleProto: jax >= 0.5
+emits protos with 64-bit instruction ids which the xla crate's bundled
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the HLO text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/gen_hlo.py.
+
+Run once at build time (``make artifacts``). Python never runs at runtime.
+
+Usage:
+    python -m compile.aot --out-dir ../artifacts [--quick]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Block sizes the Rust coordinator may request (b = n / (q^2+1)).
+BLOCK_SIZES = [4, 8, 16, 32]
+# Batch sizes nb: per-processor block counts for the supported partitions.
+#   spherical q=2: offdiag (q+1)q(q-1)/6 = 1, noncentral q = 2
+#   spherical q=3: offdiag 4, noncentral 3
+#   SQS(8):        offdiag C(4,3)=4, noncentral 4
+#   spherical q=4: offdiag (5*4*3)/6 = 10, noncentral 4
+BATCH_SIZES = [1, 2, 3, 4, 10]
+# Dense-baseline sizes (Algorithm 3 executable for verification).
+DENSE_SIZES = [20, 30, 40]
+
+QUICK_BLOCK_SIZES = [4, 8]
+QUICK_BATCH_SIZES = [1, 2]
+QUICK_DENSE_SIZES = [20]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (the 0.5.1-safe path)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def artifact_plan(quick: bool = False):
+    """Yield (name, fn, arg_specs, meta) for every artifact to emit."""
+    blocks = QUICK_BLOCK_SIZES if quick else BLOCK_SIZES
+    batches = QUICK_BATCH_SIZES if quick else BATCH_SIZES
+    denses = QUICK_DENSE_SIZES if quick else DENSE_SIZES
+
+    for b in blocks:
+        yield (
+            f"block_b{b}",
+            model.block_contract_fn,
+            (_spec(b, b, b), _spec(b), _spec(b), _spec(b)),
+            {"kind": "block", "b": b, "outputs": 3},
+        )
+    for b in blocks:
+        for nb in batches:
+            yield (
+                f"block_batch_b{b}_nb{nb}",
+                model.block_contract_batch_fn,
+                (_spec(nb, b, b, b), _spec(nb, b), _spec(nb, b), _spec(nb, b)),
+                {"kind": "block_batch", "b": b, "nb": nb, "outputs": 3},
+            )
+    for n in denses:
+        yield (
+            f"dense_sttsv_n{n}",
+            model.dense_sttsv_fn,
+            (_spec(n, n, n), _spec(n)),
+            {"kind": "dense", "n": n, "outputs": 1},
+        )
+    for n in denses:
+        yield (
+            f"power_step_n{n}",
+            model.power_step_fn,
+            (_spec(n, n, n), _spec(n)),
+            {"kind": "power_step", "n": n, "outputs": 2},
+        )
+
+
+def emit(out_dir: str, quick: bool = False) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = []
+    names = []
+    for name, fn, specs, meta in artifact_plan(quick):
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        fields = " ".join(f"{k}={v}" for k, v in meta.items())
+        manifest_lines.append(f"name={name} inputs={len(specs)} {fields}")
+        names.append(name)
+        print(f"  wrote {path} ({len(text)} chars)")
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    print(f"manifest: {len(names)} artifacts")
+    return names
+
+
+def main() -> None:
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    p.add_argument(
+        "--quick", action="store_true", help="emit a reduced artifact set (tests)"
+    )
+    args = p.parse_args()
+    emit(args.out_dir, quick=args.quick)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,100 @@
+"""Pure-jnp correctness oracles for the STTSV kernels.
+
+Every Pallas kernel in this package has a reference implementation here,
+written as plain einsums / loops with no Pallas involvement. pytest compares
+kernel outputs against these oracles (see python/tests/).
+
+Conventions match the paper's Algorithm 5 block computation: a block
+``A in R^{b x b x b}`` of the symmetric tensor is contracted against row-block
+vectors ``u`` (mode-1 / i), ``v`` (mode-2 / j), ``w`` (mode-3 / k).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def block_contract_ref(A, u, v, w):
+    """The fused ternary block contraction (oracle).
+
+    Returns the three mode contractions of one tensor block:
+
+      ci[a] = sum_{b,c} A[a,b,c] * v[b] * w[c]   -- contribution to y_i
+      cj[b] = sum_{a,c} A[a,b,c] * u[a] * w[c]   -- contribution to y_j
+      ck[c] = sum_{a,b} A[a,b,c] * u[a] * v[b]   -- contribution to y_k
+    """
+    ci = jnp.einsum("abc,b,c->a", A, v, w)
+    cj = jnp.einsum("abc,a,c->b", A, u, w)
+    ck = jnp.einsum("abc,a,b->c", A, u, v)
+    return ci, cj, ck
+
+
+def block_contract_batch_ref(As, us, vs, ws):
+    """Batched oracle: independent block contractions along axis 0."""
+    ci = jnp.einsum("nabc,nb,nc->na", As, vs, ws)
+    cj = jnp.einsum("nabc,na,nc->nb", As, us, ws)
+    ck = jnp.einsum("nabc,na,nb->nc", As, us, vs)
+    return ci, cj, ck
+
+
+def dense_sttsv_ref(A, x):
+    """Full STTSV y = A x2 x x3 x on a dense n^3 tensor (Algorithm 3)."""
+    return jnp.einsum("ijk,j,k->i", A, x, x)
+
+
+def dense_sttsv_loops(A, x):
+    """Triple-loop numpy oracle for dense STTSV -- the most literal
+    transcription of Algorithm 3, used to sanity-check the einsum oracle."""
+    A = np.asarray(A)
+    x = np.asarray(x)
+    n = x.shape[0]
+    y = np.zeros(n, dtype=A.dtype)
+    for i in range(n):
+        for j in range(n):
+            for k in range(n):
+                y[i] += A[i, j, k] * x[j] * x[k]
+    return y
+
+
+def symmetric_sttsv_loops(A, x):
+    """Algorithm 4 oracle: STTSV exploiting symmetry, iterating only the
+    lower tetrahedron i >= j >= k of a (dense, symmetric) tensor.
+
+    This is the paper's Algorithm 4 verbatim; it must agree with
+    dense_sttsv_loops on symmetric inputs.
+    """
+    A = np.asarray(A)
+    x = np.asarray(x)
+    n = x.shape[0]
+    y = np.zeros(n, dtype=A.dtype)
+    for i in range(n):
+        for j in range(i + 1):
+            for k in range(j + 1):
+                a = A[i, j, k]
+                if i != j and j != k:
+                    y[i] += 2 * a * x[j] * x[k]
+                    y[j] += 2 * a * x[i] * x[k]
+                    y[k] += 2 * a * x[i] * x[j]
+                elif i == j and j != k:
+                    y[i] += 2 * a * x[j] * x[k]
+                    y[k] += a * x[i] * x[j]
+                elif i != j and j == k:
+                    y[i] += a * x[j] * x[k]
+                    y[j] += 2 * a * x[i] * x[k]
+                else:  # i == j == k
+                    y[i] += a * x[j] * x[k]
+    return y
+
+
+def symmetrize(T):
+    """Symmetrize a dense cube over all 6 index permutations."""
+    T = np.asarray(T)
+    return (
+        T
+        + T.transpose(0, 2, 1)
+        + T.transpose(1, 0, 2)
+        + T.transpose(1, 2, 0)
+        + T.transpose(2, 0, 1)
+        + T.transpose(2, 1, 0)
+    ) / 6.0

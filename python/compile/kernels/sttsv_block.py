@@ -1,0 +1,179 @@
+"""L1 Pallas kernel: fused ternary block contraction for STTSV.
+
+This is the compute hot spot of the paper's Algorithm 5 (lines 16-28). Each
+owner-computed tensor block ``A in R^{b x b x b}`` must be contracted against
+the three row-block vectors it touches, producing the three partial results
+
+  ci[a] = sum_{b,c} A[a,b,c] * v[b] * w[c]
+  cj[b] = sum_{a,c} A[a,b,c] * u[a] * w[c]
+  ck[c] = sum_{a,b} A[a,b,c] * u[a] * v[b]
+
+The kernel computes all three in a *single pass* over ``A``: every tensor
+element loaded from memory is used three times. This is the node-level mirror
+of the paper's Lemma 2 reuse argument (a point of the symmetric iteration
+space touches all three one-dimensional projections), and it triples the
+arithmetic intensity relative to three independent contractions — the same
+reason the distributed algorithm wins at the network level.
+
+Structure (designed for TPU, executed here with ``interpret=True``):
+
+  * the grid walks the leading mode in slabs of ``t`` planes; each step holds
+    one ``t x b x b`` slab in VMEM;
+  * ``M = A_slab @ w`` (a ``(t*b, b) x (b,)`` matvec, MXU-friendly when
+    shaped as matmul) is computed once and shared between the ``ci`` and
+    ``cj`` contractions;
+  * ``cj``/``ck`` accumulators live in the (revisited) output block across
+    grid steps; ``ci`` is written slab-by-slab.
+
+See DESIGN.md section "Hardware-Adaptation" for the VMEM/MXU analysis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_slab(b: int, t: int | None) -> int:
+    """Largest divisor of b that is <= requested slab size (default 8)."""
+    want = t if t is not None else 8
+    want = max(1, min(want, b))
+    while b % want != 0:
+        want -= 1
+    return want
+
+
+def _fused_kernel(a_ref, u_ref, v_ref, w_ref, ci_ref, cj_ref, ck_ref):
+    """One grid step: contract a (t, b, b) slab of A against u-slice, v, w."""
+    s = pl.program_id(0)
+
+    A = a_ref[...]  # (t, b, b) slab, resident in VMEM
+    u = u_ref[...]  # (t,)   matching slice of u
+    v = v_ref[...]  # (b,)
+    w = w_ref[...]  # (b,)
+
+    # Shared intermediate: M[a, p] = sum_g A[a, p, g] * w[g].
+    # On TPU this is a (t*b, b) x (b,) contraction through the MXU; it is
+    # reused by both the ci and cj outputs, saving a full pass over A.
+    t, b, _ = A.shape
+    M = jnp.dot(A.reshape(t * b, b), w).reshape(t, b)  # (t, b)
+
+    # ci slab: ci[a] = sum_p M[a, p] * v[p]
+    ci_ref[...] = jnp.dot(M, v)
+
+    # cj partial from this slab: cj[p] = sum_a u[a] * M[a, p]
+    cj_part = jnp.dot(u, M)
+
+    # ck partial: ck[g] = sum_{a,p} A[a,p,g] * u[a] * v[p]
+    #            = sum_p v[p] * (sum_a u[a] A[a,p,g])
+    Au = jnp.tensordot(u, A, axes=(0, 0))  # (b, b): sum_a u[a] A[a, :, :]
+    ck_part = jnp.dot(v, Au)
+
+    # cj/ck output blocks are revisited on every grid step: zero-init on the
+    # first step, then accumulate.
+    @pl.when(s == 0)
+    def _init():
+        cj_ref[...] = jnp.zeros_like(cj_ref)
+        ck_ref[...] = jnp.zeros_like(ck_ref)
+
+    cj_ref[...] += cj_part
+    ck_ref[...] += ck_part
+
+
+@functools.partial(jax.jit, static_argnames=("slab",))
+def block_contract(A, u, v, w, *, slab: int | None = None):
+    """Fused ternary block contraction via a Pallas kernel.
+
+    Args:
+      A: (b, b, b) tensor block.
+      u, v, w: (b,) row-block vectors for modes 1, 2, 3.
+      slab: leading-mode slab size ``t`` (must divide b; defaults to the
+        largest divisor of b that is <= 8).
+
+    Returns:
+      (ci, cj, ck): the three (b,) mode contractions.
+    """
+    b = A.shape[0]
+    assert A.shape == (b, b, b), f"block must be cubic, got {A.shape}"
+    t = _pick_slab(b, slab)
+    grid = (b // t,)
+
+    return pl.pallas_call(
+        _fused_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, b, b), lambda s: (s, 0, 0)),
+            pl.BlockSpec((t,), lambda s: (s,)),
+            pl.BlockSpec((b,), lambda s: (0,)),
+            pl.BlockSpec((b,), lambda s: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((t,), lambda s: (s,)),
+            pl.BlockSpec((b,), lambda s: (0,)),
+            pl.BlockSpec((b,), lambda s: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), A.dtype),
+            jax.ShapeDtypeStruct((b,), A.dtype),
+            jax.ShapeDtypeStruct((b,), A.dtype),
+        ],
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(A, u, v, w)
+
+
+def _batch_kernel(a_ref, u_ref, v_ref, w_ref, ci_ref, cj_ref, ck_ref):
+    """One grid step: fully contract one (1, b, b, b) block of the batch."""
+    A = a_ref[0]  # (b, b, b)
+    u = u_ref[0]
+    v = v_ref[0]
+    w = w_ref[0]
+
+    b = A.shape[0]
+    M = jnp.dot(A.reshape(b * b, b), w).reshape(b, b)
+    ci_ref[0, :] = jnp.dot(M, v)
+    cj_ref[0, :] = jnp.dot(u, M)
+    Au = jnp.tensordot(u, A, axes=(0, 0))
+    ck_ref[0, :] = jnp.dot(v, Au)
+
+
+@jax.jit
+def block_contract_batch(As, us, vs, ws):
+    """Batched fused contraction: one grid step per block.
+
+    Args:
+      As: (nb, b, b, b) stacked blocks.
+      us, vs, ws: (nb, b) stacked row-block vectors.
+
+    Returns:
+      (cis, cjs, cks): (nb, b) stacked contractions.
+
+    This is the L3 hot-path variant: a processor stacks all owned blocks of
+    one type and issues a single PJRT execution instead of ``nb`` dispatches.
+    """
+    nb, b = As.shape[0], As.shape[1]
+    assert As.shape == (nb, b, b, b)
+
+    return pl.pallas_call(
+        _batch_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, b, b, b), lambda s: (s, 0, 0, 0)),
+            pl.BlockSpec((1, b), lambda s: (s, 0)),
+            pl.BlockSpec((1, b), lambda s: (s, 0)),
+            pl.BlockSpec((1, b), lambda s: (s, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, b), lambda s: (s, 0)),
+            pl.BlockSpec((1, b), lambda s: (s, 0)),
+            pl.BlockSpec((1, b), lambda s: (s, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, b), As.dtype),
+            jax.ShapeDtypeStruct((nb, b), As.dtype),
+            jax.ShapeDtypeStruct((nb, b), As.dtype),
+        ],
+        interpret=True,
+    )(As, us, vs, ws)

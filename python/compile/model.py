@@ -1,0 +1,53 @@
+"""L2 JAX model: the compute graphs that get AOT-lowered for the Rust runtime.
+
+Each public function here is a pure JAX function over statically-shaped
+arguments; ``aot.py`` lowers them to HLO text artifacts that the Rust L3
+coordinator loads via PJRT. The block contractions route through the L1
+Pallas kernel so the kernel lowers into the same HLO module.
+
+Functions (all return tuples — the Rust side unwraps `to_tuple`):
+
+  block_contract_fn(b)        -> (A,u,v,w) -> (ci, cj, ck)
+  block_contract_batch_fn(...)-> stacked variant
+  dense_sttsv_fn(n)           -> (A, x) -> (y,)          [Algorithm 3 baseline]
+  power_step_fn(n)            -> (A, x) -> (y, norm)     [one HOPM iteration]
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import sttsv_block
+from .kernels import ref
+
+
+def block_contract_fn(A, u, v, w):
+    """Single fused block contraction (Pallas kernel inside)."""
+    ci, cj, ck = sttsv_block.block_contract(A, u, v, w)
+    return ci, cj, ck
+
+
+def block_contract_batch_fn(As, us, vs, ws):
+    """Batched fused block contraction (Pallas kernel inside)."""
+    cis, cjs, cks = sttsv_block.block_contract_batch(As, us, vs, ws)
+    return cis, cjs, cks
+
+
+def dense_sttsv_fn(A, x):
+    """Dense STTSV y = A x2 x x3 x (Algorithm 3): the no-symmetry baseline."""
+    return (ref.dense_sttsv_ref(A, x),)
+
+
+def power_step_fn(A, x):
+    """One higher-order power method iteration on a dense symmetric tensor:
+    y = A x2 x x3 x ; return (y / ||y||, ||y||). Used for small-n end-to-end
+    checks of the distributed power method."""
+    y = ref.dense_sttsv_ref(A, x)
+    nrm = jnp.linalg.norm(y)
+    return y / nrm, nrm
+
+
+def rayleigh_fn(A, x):
+    """lambda = A x1 x x2 x x3 x (the eigenvalue extraction, Algorithm 1)."""
+    return (jnp.einsum("ijk,i,j,k->", A, x, x, x),)

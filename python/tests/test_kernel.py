@@ -1,0 +1,138 @@
+"""Kernel-vs-oracle correctness: the CORE numeric signal of the build path.
+
+The Pallas fused block contraction (L1) must agree with the pure-jnp einsum
+oracle (ref.py) across shapes, slab sizes, and value distributions, because
+every distributed STTSV result in the Rust layer is a sum of these block
+contractions.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from compile.kernels import ref, sttsv_block
+
+jax.config.update("jax_enable_x64", False)
+
+RTOL = 1e-5
+ATOL = 1e-5
+
+
+def _rand(rng, *shape):
+    return rng.standard_normal(shape).astype(np.float32)
+
+
+@pytest.mark.parametrize("b", [1, 2, 3, 4, 5, 7, 8, 12, 16, 24, 32])
+def test_block_contract_matches_ref(b):
+    rng = np.random.default_rng(b)
+    A = _rand(rng, b, b, b)
+    u, v, w = _rand(rng, b), _rand(rng, b), _rand(rng, b)
+    ci, cj, ck = sttsv_block.block_contract(A, u, v, w)
+    ri, rj, rk = ref.block_contract_ref(A, u, v, w)
+    np.testing.assert_allclose(ci, ri, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(cj, rj, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(ck, rk, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("b,slab", [(8, 1), (8, 2), (8, 4), (8, 8), (12, 3), (16, 8)])
+def test_block_contract_slab_invariance(b, slab):
+    """Result must not depend on the VMEM slab tiling."""
+    rng = np.random.default_rng(100 + b + slab)
+    A = _rand(rng, b, b, b)
+    u, v, w = _rand(rng, b), _rand(rng, b), _rand(rng, b)
+    got = sttsv_block.block_contract(A, u, v, w, slab=slab)
+    want = ref.block_contract_ref(A, u, v, w)
+    for g, r in zip(got, want):
+        np.testing.assert_allclose(g, r, rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("nb,b", [(1, 4), (2, 4), (3, 8), (4, 8), (4, 16)])
+def test_block_contract_batch_matches_ref(nb, b):
+    rng = np.random.default_rng(7 * nb + b)
+    As = _rand(rng, nb, b, b, b)
+    us, vs, ws = _rand(rng, nb, b), _rand(rng, nb, b), _rand(rng, nb, b)
+    got = sttsv_block.block_contract_batch(As, us, vs, ws)
+    want = ref.block_contract_batch_ref(As, us, vs, ws)
+    for g, r in zip(got, want):
+        np.testing.assert_allclose(g, r, rtol=RTOL, atol=ATOL)
+
+
+def test_batch_equals_loop_of_singles():
+    rng = np.random.default_rng(42)
+    nb, b = 4, 8
+    As = _rand(rng, nb, b, b, b)
+    us, vs, ws = _rand(rng, nb, b), _rand(rng, nb, b), _rand(rng, nb, b)
+    cis, cjs, cks = sttsv_block.block_contract_batch(As, us, vs, ws)
+    for i in range(nb):
+        ci, cj, ck = sttsv_block.block_contract(As[i], us[i], vs[i], ws[i])
+        np.testing.assert_allclose(cis[i], ci, rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(cjs[i], cj, rtol=RTOL, atol=ATOL)
+        np.testing.assert_allclose(cks[i], ck, rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis sweeps: shapes and value distributions
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=12),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+    scale=st.sampled_from([1e-3, 1.0, 1e3]),
+)
+def test_block_contract_hypothesis(b, seed, scale):
+    rng = np.random.default_rng(seed)
+    A = _rand(rng, b, b, b) * scale
+    u, v, w = _rand(rng, b), _rand(rng, b), _rand(rng, b)
+    got = sttsv_block.block_contract(A, u, v, w)
+    want = ref.block_contract_ref(A, u, v, w)
+    for g, r in zip(got, want):
+        np.testing.assert_allclose(g, r, rtol=1e-4, atol=1e-4 * scale)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    nb=st.integers(min_value=1, max_value=5),
+    b=st.integers(min_value=1, max_value=8),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_block_contract_batch_hypothesis(nb, b, seed):
+    rng = np.random.default_rng(seed)
+    As = _rand(rng, nb, b, b, b)
+    us, vs, ws = _rand(rng, nb, b), _rand(rng, nb, b), _rand(rng, nb, b)
+    got = sttsv_block.block_contract_batch(As, us, vs, ws)
+    want = ref.block_contract_batch_ref(As, us, vs, ws)
+    for g, r in zip(got, want):
+        np.testing.assert_allclose(g, r, rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# special structure: symmetric blocks behave like the paper's Algorithm 5 says
+# ---------------------------------------------------------------------------
+
+def test_symmetric_block_ci_cj_agree():
+    """For a block symmetric in modes 1-2 (non-central diagonal block
+    A[i][i][k]), contracting with u == v must give ci == cj."""
+    rng = np.random.default_rng(3)
+    b = 8
+    A = _rand(rng, b, b, b)
+    A = (A + A.transpose(1, 0, 2)) / 2  # symmetric in first two modes
+    x = _rand(rng, b)
+    w = _rand(rng, b)
+    ci, cj, ck = sttsv_block.block_contract(A, x, x, w)
+    np.testing.assert_allclose(ci, cj, rtol=RTOL, atol=ATOL)
+
+
+def test_fully_symmetric_block_all_agree():
+    """Central diagonal block: fully symmetric A with u == v == w gives
+    ci == cj == ck."""
+    rng = np.random.default_rng(4)
+    b = 6
+    A = ref.symmetrize(_rand(rng, b, b, b)).astype(np.float32)
+    x = _rand(rng, b)
+    ci, cj, ck = sttsv_block.block_contract(A, x, x, x)
+    np.testing.assert_allclose(ci, cj, rtol=RTOL, atol=ATOL)
+    np.testing.assert_allclose(cj, ck, rtol=RTOL, atol=ATOL)

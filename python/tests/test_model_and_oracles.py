@@ -1,0 +1,114 @@
+"""Oracle self-consistency and L2 model checks.
+
+Validates that our transcriptions of the paper's Algorithms 3 and 4 agree on
+symmetric inputs (the paper's factor-of-2 bookkeeping in Algorithm 4 is easy
+to get wrong), and that the L2 model functions are faithful.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def _sym(rng, n):
+    return ref.symmetrize(rng.standard_normal((n, n, n))).astype(np.float32)
+
+
+@pytest.mark.parametrize("n", [1, 2, 3, 4, 6, 9])
+def test_algorithm4_equals_algorithm3_on_symmetric(n):
+    """Paper Algorithm 4 (lower-tetrahedron, multiplicity-weighted) must
+    reproduce Algorithm 3 (all n^3 ternary multiplications)."""
+    rng = np.random.default_rng(n)
+    A = _sym(rng, n)
+    x = rng.standard_normal(n).astype(np.float32)
+    y3 = ref.dense_sttsv_loops(A, x)
+    y4 = ref.symmetric_sttsv_loops(A, x)
+    np.testing.assert_allclose(y4, y3, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("n", [2, 5, 8])
+def test_einsum_oracle_equals_loops(n):
+    rng = np.random.default_rng(10 + n)
+    A = rng.standard_normal((n, n, n)).astype(np.float32)  # need not be sym
+    x = rng.standard_normal(n).astype(np.float32)
+    np.testing.assert_allclose(
+        ref.dense_sttsv_ref(A, x), ref.dense_sttsv_loops(A, x), rtol=1e-4, atol=1e-4
+    )
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(min_value=1, max_value=7), seed=st.integers(0, 2**31 - 1))
+def test_algorithm4_hypothesis(n, seed):
+    rng = np.random.default_rng(seed)
+    A = _sym(rng, n)
+    x = rng.standard_normal(n).astype(np.float32)
+    np.testing.assert_allclose(
+        ref.symmetric_sttsv_loops(A, x),
+        ref.dense_sttsv_loops(A, x),
+        rtol=1e-4,
+        atol=1e-4,
+    )
+
+
+def test_model_dense_sttsv():
+    rng = np.random.default_rng(0)
+    n = 10
+    A = _sym(rng, n)
+    x = rng.standard_normal(n).astype(np.float32)
+    (y,) = model.dense_sttsv_fn(A, x)
+    np.testing.assert_allclose(y, ref.dense_sttsv_loops(A, x), rtol=1e-4, atol=1e-4)
+
+
+def test_model_power_step_normalizes():
+    rng = np.random.default_rng(1)
+    n = 8
+    A = _sym(rng, n)
+    x = rng.standard_normal(n).astype(np.float32)
+    xn, nrm = model.power_step_fn(A, x)
+    assert nrm > 0
+    np.testing.assert_allclose(np.linalg.norm(xn), 1.0, rtol=1e-5)
+
+
+def test_model_rayleigh_on_odeco():
+    """For an odeco (orthogonally decomposable) tensor A = sum lam_l e_l^3 with
+    orthonormal e_l, the Rayleigh quotient at e_l is lam_l."""
+    n, r = 6, 3
+    rng = np.random.default_rng(2)
+    Q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    lams = np.array([3.0, 2.0, 1.0])
+    A = np.zeros((n, n, n), dtype=np.float64)
+    for l in range(r):
+        e = Q[:, l]
+        A += lams[l] * np.einsum("i,j,k->ijk", e, e, e)
+    A = A.astype(np.float32)
+    for l in range(r):
+        (lam,) = model.rayleigh_fn(A, Q[:, l].astype(np.float32))
+        np.testing.assert_allclose(lam, lams[l], rtol=1e-4, atol=1e-4)
+
+
+def test_power_method_converges_to_dominant_eigenpair():
+    """Full HOPM (Algorithm 1) on an odeco tensor converges to the dominant
+    eigenvector when started near it."""
+    n, r = 8, 3
+    rng = np.random.default_rng(5)
+    Q, _ = np.linalg.qr(rng.standard_normal((n, n)))
+    lams = np.array([5.0, 2.0, 1.0])
+    A = np.zeros((n, n, n))
+    for l in range(r):
+        e = Q[:, l]
+        A += lams[l] * np.einsum("i,j,k->ijk", e, e, e)
+    A = A.astype(np.float32)
+    x = (Q[:, 0] + 0.3 * rng.standard_normal(n)).astype(np.float32)
+    x = x / np.linalg.norm(x)
+    for _ in range(50):
+        x, _ = model.power_step_fn(A, x)
+        x = np.asarray(x)
+    align = abs(float(np.dot(x, Q[:, 0])))
+    assert align > 1 - 1e-4, f"alignment {align}"
+    (lam,) = model.rayleigh_fn(A, x)
+    np.testing.assert_allclose(lam, 5.0, rtol=1e-3)

@@ -1,0 +1,94 @@
+//! Minimal benchmarking harness (no `criterion` crate is vendored).
+//!
+//! Measures wall-clock with warmup, reports median / min / max over N
+//! samples, and prints rows suitable for the paper-table benches. `cargo
+//! bench` targets are `harness = false` binaries built on this module.
+
+use std::time::{Duration, Instant};
+
+/// Result of timing one closure.
+#[derive(Debug, Clone, Copy)]
+pub struct Timing {
+    pub samples: usize,
+    pub median: Duration,
+    pub min: Duration,
+    pub max: Duration,
+}
+
+impl Timing {
+    /// Median duration in milliseconds.
+    pub fn median_ms(&self) -> f64 {
+        self.median.as_secs_f64() * 1e3
+    }
+}
+
+impl std::fmt::Display for Timing {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "median {:.3} ms (min {:.3}, max {:.3}, n={})",
+            self.median.as_secs_f64() * 1e3,
+            self.min.as_secs_f64() * 1e3,
+            self.max.as_secs_f64() * 1e3,
+            self.samples
+        )
+    }
+}
+
+/// Time `f` with `warmup` throwaway runs then `samples` measured runs.
+pub fn time<F: FnMut()>(warmup: usize, samples: usize, mut f: F) -> Timing {
+    assert!(samples >= 1);
+    for _ in 0..warmup {
+        f();
+    }
+    let mut times: Vec<Duration> = (0..samples)
+        .map(|_| {
+            let t0 = Instant::now();
+            f();
+            t0.elapsed()
+        })
+        .collect();
+    times.sort_unstable();
+    Timing {
+        samples,
+        median: times[samples / 2],
+        min: times[0],
+        max: times[samples - 1],
+    }
+}
+
+/// Standard bench header so all bench binaries look uniform.
+pub fn header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Simple throughput helper: GFLOP/s given flops and a timing.
+pub fn gflops(flops: f64, t: &Timing) -> f64 {
+    flops / t.median.as_secs_f64() / 1e9
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn timing_orders_samples() {
+        let t = time(1, 5, || {
+            std::thread::sleep(Duration::from_micros(100));
+        });
+        assert!(t.min <= t.median && t.median <= t.max);
+        assert!(t.min >= Duration::from_micros(50));
+        assert_eq!(t.samples, 5);
+    }
+
+    #[test]
+    fn gflops_math() {
+        let t = Timing {
+            samples: 1,
+            median: Duration::from_secs(1),
+            min: Duration::from_secs(1),
+            max: Duration::from_secs(1),
+        };
+        assert!((gflops(2e9, &t) - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,216 @@
+//! Closed-form cost expressions from the paper, used by tests and benches to
+//! compare measured quantities against the published analysis.
+
+/// Theorem 1: memory-independent communication lower bound — at least one
+/// processor communicates at least `2·(n(n-1)(n-2)/P)^{1/3} − 2n/P` words.
+pub fn lower_bound_words(n: usize, p: usize) -> f64 {
+    let n = n as f64;
+    let p = p as f64;
+    2.0 * (n * (n - 1.0) * (n - 2.0) / p).cbrt() - 2.0 * n / p
+}
+
+/// Leading term of the lower bound: `2n/P^{1/3}`.
+pub fn lower_bound_leading(n: usize, p: usize) -> f64 {
+    2.0 * n as f64 / (p as f64).cbrt()
+}
+
+/// §7.2.2: per-processor bandwidth cost of Algorithm 5 with the
+/// point-to-point schedule, both vector phases:
+/// `2·(n(q+1)/(q²+1) − n/P)` words.
+pub fn algorithm_words(n: usize, q: usize) -> f64 {
+    let p = (q * (q * q + 1)) as f64;
+    let n = n as f64;
+    let q = q as f64;
+    2.0 * (n * (q + 1.0) / (q * q + 1.0) - n / p)
+}
+
+/// §7.2.2: per-processor bandwidth cost with All-to-All collectives, both
+/// vector phases: `4n/(q+1) · (1 − 1/P)` — 2× the lower bound's leading term.
+pub fn alltoall_words(n: usize, q: usize) -> f64 {
+    let p = (q * (q * q + 1)) as f64;
+    4.0 * n as f64 / (q as f64 + 1.0) * (1.0 - 1.0 / p)
+}
+
+/// §7.2: number of point-to-point steps per vector phase:
+/// `q³/2 + 3q²/2 − 1` (= q²(q+3)/2 − 1, always integral).
+pub fn p2p_steps(q: usize) -> usize {
+    q * q * (q + 3) / 2 - 1
+}
+
+/// §7.1: ternary multiplications performed by processor p of Algorithm 5
+/// (upper bound, processors with a central block):
+/// `(q+1)q(q-1)/6·3b³ + q·(3b²(b−1)/2 + 2b²) + (b(b−1)(b−2)/2 + 2b(b−1) + b)`.
+pub fn per_proc_ternary_mults(q: usize, b: usize) -> usize {
+    let off = (q + 1) * q * (q - 1) / 6 * 3 * b * b * b;
+    let nc = q * (3 * b * b * (b - 1) / 2 + 2 * b * b);
+    let c = b * (b - 1) * (b - 2) / 2 + 2 * b * (b - 1) + b;
+    off + nc + c
+}
+
+/// Total ternary multiplications of the sequential Algorithm 4: n²(n+1)/2.
+pub fn total_ternary_mults(n: usize) -> usize {
+    n * n * (n + 1) / 2
+}
+
+/// §8: the "sequence" approach (A ×₂ x by matrix multiplication, then a
+/// matvec) moves at least O(n) words per processor when P ≤ n — its
+/// first stage is an n² × n matmul whose memory-independent bound is
+/// `Ω((n³/P)^{1/2})` limited by the largest array, ≥ n²/P words of the
+/// intermediate when P ≤ n... we report the simple `n` lower bound the
+/// paper cites ([3]: bandwidth of step one is at least O(n) for P ≤ n).
+pub fn sequence_words_lower(n: usize, p: usize) -> f64 {
+    if p <= n {
+        n as f64
+    } else {
+        // beyond the paper's stated regime; fall back to the matmul bound
+        (n as f64 * n as f64 * n as f64 / p as f64).sqrt()
+    }
+}
+
+/// Elementary arithmetic ops: symmetric approach ≈ 2n³·(1/2)·2 = ~n³ FMA-ish;
+/// the paper states ≈2n³ elementary ops for Algorithm 4 (2 mults + add per
+/// ternary mult ≈ 4·n²(n+1)/2 ≈ 2n³) vs 2n³ + 2n² for the sequence approach
+/// WITHOUT symmetry. We expose both for the §8 comparison bench.
+pub fn symmetric_flops(n: usize) -> f64 {
+    2.0 * (n as f64).powi(3)
+}
+
+/// Sequence-approach flops (no symmetry exploitation): 2n³ + 2n².
+pub fn sequence_flops(n: usize) -> f64 {
+    2.0 * (n as f64).powi(3) + 2.0 * (n as f64).powi(2)
+}
+
+/// Naive Algorithm-3 distribution (dense 3-D grid, no symmetry): each
+/// processor holds an (n/p₁)³ cube... For the comparison bench we use the
+/// standard memory-independent matmul-style bound for the n³ iteration
+/// space with vector I/O: `3·(n³/P)^{1/3} − 3n/P ≈ 3n/P^{1/3}` (Lemma 1
+/// without the symmetric factor-6 gain), i.e. the non-symmetric analogue.
+pub fn nonsymmetric_lower_bound_words(n: usize, p: usize) -> f64 {
+    let nf = n as f64;
+    let pf = p as f64;
+    3.0 * (nf * nf * nf / pf).cbrt() - 3.0 * nf / pf
+}
+
+/// §8 (future work, realized here): the d-dimensional generalization of
+/// Theorem 1. The Lemma 2 argument extends verbatim — for V in the strictly
+/// ordered orthant of Z^d, `d!·|V| ≤ |φ₁(V) ∪ … ∪ φ_d(V)|^d` (symmetrize V
+/// over the d! permutations and apply the d-dim Loomis–Whitney/HBL bound) —
+/// so a load-balanced atomic d-dimensional STTSV (one tensor, d−1 copies of
+/// the same vector) has a processor communicating at least
+/// `2·(n(n−1)···(n−d+1)/P)^{1/d} − 2n/P` words.
+pub fn lower_bound_words_d(n: usize, p: usize, d: u32) -> f64 {
+    assert!(d >= 2);
+    let mut falling = 1.0f64;
+    for t in 0..d as usize {
+        falling *= (n - t) as f64;
+    }
+    2.0 * (falling / p as f64).powf(1.0 / d as f64) - 2.0 * n as f64 / p as f64
+}
+
+/// Wilson's existence conditions for Steiner (n, r, 3) systems (Theorem 2):
+/// r−2 | n−2, (r−1)(r−2) | (n−1)(n−2), and r(r−1)(r−2) | n(n−1)(n−2).
+/// Necessary for all n; sufficient for all large enough n (Wilson 1975).
+pub fn wilson_conditions(n: usize, r: usize) -> bool {
+    n > r
+        && r >= 3
+        && (n - 2) % (r - 2) == 0
+        && ((n - 1) * (n - 2)) % ((r - 1) * (r - 2)) == 0
+        && (n * (n - 1) * (n - 2)) % (r * (r - 1) * (r - 2)) == 0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lower_bound_positive_and_scaling() {
+        let w1 = lower_bound_words(1000, 30);
+        let w2 = lower_bound_words(2000, 30);
+        assert!(w1 > 0.0);
+        // leading term is linear in n
+        assert!((w2 / w1 - 2.0).abs() < 0.01);
+        // and the leading term decreases exactly with P^(1/3)
+        let ratio = lower_bound_leading(1000, 30) / lower_bound_leading(1000, 240);
+        assert!((ratio - 2.0).abs() < 1e-9, "ratio={ratio}");
+        assert!(lower_bound_words(1000, 240) < w1);
+    }
+
+    #[test]
+    fn algorithm_matches_lower_bound_leading_term() {
+        // As n grows with q fixed, algorithm/lower-bound → (q+1)/(q²+1)^{2/3}
+        // /q^{-1/3}... the paper's claim: leading terms match exactly since
+        // (q²+1)/(q+1) ≈ P^{1/3}. Check the ratio tends to 1 for large q.
+        for q in [5usize, 9, 13, 25] {
+            let p = q * (q * q + 1);
+            let n = 1000 * (q * q + 1);
+            let ratio = algorithm_words(n, q) / lower_bound_leading(n, p);
+            // ratio − 1 = (q+1)·q^{1/3}/(q²+1)^{2/3} − 1 = Θ(q^{-2/3}) → 0
+            assert!(
+                ratio >= 1.0 && ratio - 1.0 < 0.5 / (q as f64).powf(2.0 / 3.0),
+                "q={q}: ratio={ratio}"
+            );
+        }
+    }
+
+    #[test]
+    fn alltoall_is_twice_leading_term() {
+        for q in [5usize, 9, 13] {
+            let p = q * (q * q + 1);
+            let n = 100 * (q * q + 1);
+            let ratio = alltoall_words(n, q) / lower_bound_leading(n, p);
+            assert!((ratio - 2.0).abs() < 0.4, "q={q}: ratio={ratio}");
+        }
+    }
+
+    #[test]
+    fn step_formula_known_values() {
+        assert_eq!(p2p_steps(2), 9); // 4·5/2 − 1
+        assert_eq!(p2p_steps(3), 26); // 9·6/2 − 1 = 13.5 + 13.5 − 1
+        assert_eq!(p2p_steps(4), 55);
+    }
+
+    #[test]
+    fn per_proc_mults_leading_order() {
+        // §7.1: cost ≈ n³/2P for large b.
+        let q = 3;
+        let b = 64;
+        let n = b * (q * q + 1);
+        let p = q * (q * q + 1);
+        let got = per_proc_ternary_mults(q, b) as f64;
+        let want = (n as f64).powi(3) / (2.0 * p as f64);
+        assert!((got / want - 1.0).abs() < 0.15, "got {got} want {want}");
+    }
+
+    #[test]
+    fn total_mults_formula() {
+        assert_eq!(total_ternary_mults(10), 550);
+    }
+
+    #[test]
+    fn d_dimensional_bound_specializes_to_theorem1() {
+        for (n, p) in [(120usize, 30usize), (1000, 130)] {
+            assert!((lower_bound_words_d(n, p, 3) - lower_bound_words(n, p)).abs() < 1e-9);
+        }
+        // higher d: leading term 2n/P^{1/d} grows with d (less reuse per word)
+        let n = 10_000;
+        let p = 1000;
+        assert!(lower_bound_words_d(n, p, 4) > lower_bound_words_d(n, p, 3));
+        assert!(lower_bound_words_d(n, p, 5) > lower_bound_words_d(n, p, 4));
+    }
+
+    #[test]
+    fn wilson_conditions_known_systems() {
+        // existing systems satisfy the conditions…
+        assert!(wilson_conditions(8, 4)); // SQS(8)
+        assert!(wilson_conditions(10, 4)); // spherical q=3
+        assert!(wilson_conditions(5, 3)); // spherical q=2
+        assert!(wilson_conditions(17, 5)); // spherical q=4
+        assert!(wilson_conditions(26, 6)); // spherical q=5
+        // …and the spherical family does for every supported q
+        for q in [2usize, 3, 4, 5, 7, 8, 9] {
+            assert!(wilson_conditions(q * q + 1, q + 1), "q={q}");
+        }
+        // a divisibility failure
+        assert!(!wilson_conditions(9, 4)); // 9−2 = 7 not divisible by 2
+    }
+}

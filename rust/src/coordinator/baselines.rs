@@ -1,0 +1,345 @@
+//! Baseline parallel STTSV algorithms for the paper's comparisons.
+//!
+//! * [`run_naive_grid`] — the Algorithm 3 flavor: the **full** n³ iteration
+//!   space distributed over a near-cubic 3-D processor grid, no symmetry
+//!   exploitation. Its comm cost tracks the non-symmetric Loomis–Whitney
+//!   bound (`bounds::nonsymmetric_lower_bound_words`) and its arithmetic is
+//!   ≈ 2× Algorithm 5's.
+//! * [`run_sequence`] — the §8 "sequence" approach: T = A ×₂ x as a parallel
+//!   matrix-like product over plane-distributed A, then y = T x locally.
+//!   Communication is Θ(n) per processor for P ≤ n (ring allgather of x) —
+//!   asymptotically worse than Algorithm 5's O(n/P^{1/3}).
+
+use crate::simulator::{self, CommStats};
+use crate::tensor::SymTensor;
+use anyhow::{ensure, Result};
+
+/// Report for a baseline run.
+#[derive(Debug, Clone)]
+pub struct BaselineReport {
+    pub y: Vec<f32>,
+    pub per_proc: Vec<CommStats>,
+    /// Elementary multiply-add pairs performed per processor (flop/2).
+    pub flops_per_proc: Vec<u64>,
+}
+
+impl BaselineReport {
+    pub fn max_sent_words(&self) -> u64 {
+        self.per_proc.iter().map(|s| s.sent_words).max().unwrap_or(0)
+    }
+    pub fn max_recv_words(&self) -> u64 {
+        self.per_proc.iter().map(|s| s.recv_words).max().unwrap_or(0)
+    }
+}
+
+/// Factor P into a near-cubic grid (p1, p2, p3), p1·p2·p3 = P, minimizing
+/// the spread max/min.
+pub fn grid_dims(p: usize) -> (usize, usize, usize) {
+    let mut best = (1, 1, p);
+    let mut best_spread = p;
+    for p1 in 1..=p {
+        if p % p1 != 0 {
+            continue;
+        }
+        let rest = p / p1;
+        for p2 in 1..=rest {
+            if rest % p2 != 0 {
+                continue;
+            }
+            let p3 = rest / p2;
+            let hi = p1.max(p2).max(p3);
+            let lo = p1.min(p2).min(p3);
+            if hi - lo < best_spread {
+                best_spread = hi - lo;
+                best = (p1, p2, p3);
+            }
+        }
+    }
+    best
+}
+
+fn split_range(n: usize, parts: usize, idx: usize) -> std::ops::Range<usize> {
+    let base = n / parts;
+    let extra = n % parts;
+    let start = idx * base + idx.min(extra);
+    start..start + base + usize::from(idx < extra)
+}
+
+/// Naive dense 3-D grid STTSV (no symmetry): processor (i1,i2,i3) owns the
+/// brick I₁×I₂×I₃ of the *full* cube and computes partial
+/// y[I₁] += Σ_{j∈I₂, k∈I₃} A[i,j,k]·x_j·x_k.
+///
+/// x starts distributed n/P per processor (rank order); the final y is
+/// distributed the same way. Measured comm: gathering the needed x ranges
+/// plus the all-to-all reduce-scatter of partial y over each grid row.
+pub fn run_naive_grid(tensor: &SymTensor, x: &[f32], p: usize) -> Result<BaselineReport> {
+    let n = tensor.n;
+    ensure!(x.len() == n);
+    let (p1, p2, p3) = grid_dims(p);
+    let coords = |rank: usize| -> (usize, usize, usize) {
+        (rank / (p2 * p3), (rank / p3) % p2, rank % p3)
+    };
+
+    type Out = (CommStats, u64, Vec<(usize, f32)>);
+    let outs: Vec<Out> = simulator::run(p, |comm| {
+        let me = comm.rank;
+        let (c1, c2, c3) = coords(me);
+        let (ri, rj, rk) = (
+            split_range(n, p1, c1),
+            split_range(n, p2, c2),
+            split_range(n, p3, c3),
+        );
+
+        // -- gather x[rj ∪ rk] from the n/P-block owners ------------------
+        let mut xe = vec![0.0f32; n];
+        let mut have = vec![false; n];
+        let own = split_range(n, p, me);
+        for g in own.clone() {
+            xe[g] = x[g];
+            have[g] = true;
+        }
+        // Deterministic index list a requester needs from an owner: the
+        // intersection of the requester's (rj ∪ rk) with the owner's n/P
+        // range, sorted and deduplicated. Both sides compute this, so only
+        // the *values* travel (honest word counting).
+        let wanted = |req: usize, owner: usize| -> Vec<usize> {
+            let (_, t2, t3) = coords(req);
+            let t_rj = split_range(n, p2, t2);
+            let t_rk = split_range(n, p3, t3);
+            let orange = split_range(n, p, owner);
+            let mut gs: Vec<usize> = orange
+                .filter(|g| t_rj.contains(g) || t_rk.contains(g))
+                .collect();
+            gs.dedup();
+            gs
+        };
+        // symmetric rounds: in round r exchange with me±r
+        for round in 1..p {
+            let to = (me + round) % p;
+            let from = (me + p - round) % p;
+            let out_idx = wanted(to, me);
+            if !out_idx.is_empty() {
+                let payload: Vec<f32> = out_idx.iter().map(|&g| x[g]).collect();
+                comm.send(to, 100 + round as u64, payload)?;
+            }
+            let in_idx = wanted(me, from);
+            if !in_idx.is_empty() {
+                let data = comm.recv(from, 100 + round as u64)?;
+                for (g, v) in in_idx.into_iter().zip(data) {
+                    xe[g] = v;
+                    have[g] = true;
+                }
+            }
+            comm.barrier();
+        }
+        for g in rj.clone().chain(rk.clone()) {
+            ensure!(have[g], "missing x[{g}]");
+        }
+
+        // -- local partial y over the owned brick (full cube, no symmetry) -
+        let mut part_y = vec![0.0f32; ri.len()];
+        let mut flops: u64 = 0;
+        for (ii, i) in ri.clone().enumerate() {
+            let mut acc = 0.0f64;
+            for j in rj.clone() {
+                let xj = xe[j] as f64;
+                let mut inner = 0.0f64;
+                for k in rk.clone() {
+                    inner += tensor.get(i, j, k) as f64 * xe[k] as f64;
+                }
+                acc += inner * xj;
+                flops += rk.len() as u64 * 2;
+            }
+            part_y[ii] = acc as f32;
+        }
+
+        // -- reduce partial y across the p2·p3 processors sharing c1, then
+        //    deliver to the final n/P owners. Reduce-scatter: the grid row's
+        //    m members each accumulate one 1/m chunk of ri.
+        let row: Vec<usize> = (0..p)
+            .filter(|&r| coords(r).0 == c1)
+            .collect();
+        let mpos = row.iter().position(|&r| r == me).unwrap();
+        let m = row.len();
+        for (t, &peer) in row.iter().enumerate() {
+            if peer == me {
+                continue;
+            }
+            let chunk = split_range(ri.len(), m, t);
+            let payload: Vec<f32> = part_y[chunk].to_vec();
+            comm.send(peer, 200 + t as u64, payload)?;
+        }
+        let my_chunk = split_range(ri.len(), m, mpos);
+        let mut reduced: Vec<f32> = part_y[my_chunk.clone()].to_vec();
+        for &peer in &row {
+            if peer == me {
+                continue;
+            }
+            let data = comm.recv(peer, 200 + mpos as u64)?;
+            for (o, v) in reduced.iter_mut().zip(data) {
+                *o += v;
+            }
+        }
+        comm.barrier();
+
+        // final y entries this proc produced (global index, value)
+        let final_y: Vec<(usize, f32)> = my_chunk
+            .clone()
+            .zip(reduced)
+            .map(|(off, v)| (ri.start + off, v))
+            .collect();
+        Ok((comm.stats, flops, final_y))
+    })?;
+
+    let mut y = vec![0.0f32; n];
+    let mut per_proc = Vec::new();
+    let mut flops_per_proc = Vec::new();
+    for (stats, flops, parts) in outs {
+        for (g, v) in parts {
+            y[g] = v;
+        }
+        per_proc.push(stats);
+        flops_per_proc.push(flops);
+    }
+    Ok(BaselineReport { y, per_proc, flops_per_proc })
+}
+
+/// The §8 sequence approach: plane-distributed T = A ×₂ x then local
+/// y = T·x. A ring allgather replicates x on every processor — Θ(n) words
+/// per processor, independent of P (for P ≤ n), which is the cost the paper
+/// contrasts with Algorithm 5's Θ(n/P^{1/3}).
+pub fn run_sequence(tensor: &SymTensor, x: &[f32], p: usize) -> Result<BaselineReport> {
+    let n = tensor.n;
+    ensure!(x.len() == n);
+
+    type Out = (CommStats, u64, Vec<(usize, f32)>);
+    let outs: Vec<Out> = simulator::run(p, |comm| {
+        let me = comm.rank;
+        let own = split_range(n, p, me);
+
+        // ring allgather of x: P−1 rounds, forward the previously received
+        // segment; each processor sends and receives n − n/P words total.
+        let mut xe = vec![0.0f32; n];
+        xe[own.clone()].copy_from_slice(&x[own.clone()]);
+        let next = (me + 1) % p;
+        let prev = (me + p - 1) % p;
+        let mut cur = own.clone();
+        for round in 0..p - 1 {
+            comm.send(next, 300 + round as u64, xe[cur.clone()].to_vec())?;
+            let seg_owner = (me + p - 1 - round % p) % p;
+            let seg = split_range(n, p, seg_owner);
+            let data = comm.recv(prev, 300 + round as u64)?;
+            xe[seg.clone()].copy_from_slice(&data);
+            cur = seg;
+            comm.barrier();
+        }
+
+        // local: T_i,k = Σ_j A[i,j,k] x_j for owned planes; then y_i = Σ_k T_i,k x_k.
+        // (2n²/P + 2n/P extra flops vs the fused form — the §8 accounting.)
+        let mut flops: u64 = 0;
+        let mut final_y = Vec::with_capacity(own.len());
+        let mut t_row = vec![0.0f32; n];
+        for i in own.clone() {
+            for k in 0..n {
+                let mut acc = 0.0f64;
+                for j in 0..n {
+                    acc += tensor.get(i, j, k) as f64 * xe[j] as f64;
+                }
+                t_row[k] = acc as f32;
+                flops += n as u64 * 2;
+            }
+            let mut yi = 0.0f64;
+            for k in 0..n {
+                yi += t_row[k] as f64 * xe[k] as f64;
+            }
+            flops += n as u64 * 2;
+            final_y.push((i, yi as f32));
+        }
+        Ok((comm.stats, flops, final_y))
+    })?;
+
+    let mut y = vec![0.0f32; n];
+    let mut per_proc = Vec::new();
+    let mut flops_per_proc = Vec::new();
+    for (stats, flops, parts) in outs {
+        for (g, v) in parts {
+            y[g] = v;
+        }
+        per_proc.push(stats);
+        flops_per_proc.push(flops);
+    }
+    Ok(BaselineReport { y, per_proc, flops_per_proc })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn grid_dims_factorizations() {
+        assert_eq!(grid_dims(8), (2, 2, 2));
+        assert_eq!(grid_dims(27), (3, 3, 3));
+        let (a, b, c) = grid_dims(30);
+        assert_eq!(a * b * c, 30);
+        assert!(a.max(b).max(c) <= 5);
+        assert_eq!(grid_dims(1), (1, 1, 1));
+    }
+
+    #[test]
+    fn naive_grid_matches_oracle() {
+        for p in [4usize, 8, 10] {
+            let n = 24;
+            let tensor = SymTensor::random(n, 21);
+            let mut rng = Rng::new(22);
+            let x = rng.normal_vec(n);
+            let want = tensor.sttsv(&x);
+            let rep = run_naive_grid(&tensor, &x, p).unwrap();
+            let scale = want.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+            for i in 0..n {
+                assert!(
+                    (rep.y[i] - want[i]).abs() < 2e-3 * scale,
+                    "p={p} i={i}: {} vs {}",
+                    rep.y[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sequence_matches_oracle() {
+        for p in [3usize, 6] {
+            let n = 18;
+            let tensor = SymTensor::random(n, 23);
+            let mut rng = Rng::new(24);
+            let x = rng.normal_vec(n);
+            let want = tensor.sttsv(&x);
+            let rep = run_sequence(&tensor, &x, p).unwrap();
+            let scale = want.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+            for i in 0..n {
+                assert!(
+                    (rep.y[i] - want[i]).abs() < 2e-3 * scale,
+                    "p={p} i={i}: {} vs {}",
+                    rep.y[i],
+                    want[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sequence_comm_is_theta_n() {
+        // ring allgather: every processor sends and receives n − n/P words.
+        let n = 20;
+        let p = 5;
+        let tensor = SymTensor::random(n, 25);
+        let mut rng = Rng::new(26);
+        let x = rng.normal_vec(n);
+        let rep = run_sequence(&tensor, &x, p).unwrap();
+        for s in &rep.per_proc {
+            assert_eq!(s.recv_words, (n - n / p) as u64);
+            assert_eq!(s.sent_words, (n - n / p) as u64);
+        }
+    }
+}

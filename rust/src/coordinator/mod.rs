@@ -1,0 +1,762 @@
+//! The L3 coordinator: Algorithm 5 (parallel STTSV) end to end, on the
+//! instrumented simulator, with local block computations dispatched to the
+//! runtime engine (AOT Pallas kernels via PJRT, or native loops).
+//!
+//! Phases (paper Algorithm 5):
+//!   1. gather x  — each processor collects the full row blocks x[i],
+//!      i ∈ R_p, from the other processors of Q_i (lines 3–14);
+//!   2. local ternary multiplications over owned tensor blocks via the
+//!      fused block kernel (lines 15–28);
+//!   3. scatter-reduce y — partial results for row block i are exchanged
+//!      and summed so each processor ends with its y[i]^(p) (lines 29–41).
+//!
+//! Both vector phases run either over the Theorem 6 point-to-point schedule
+//! (comm cost = the lower bound's leading term, exactly) or as All-to-All
+//! collectives (2× the leading term — §7.2.2).
+
+pub mod baselines;
+
+use crate::partition::{classify, BlockKind, TetraPartition};
+use crate::runtime::{Backend, Engine};
+use crate::schedule::CommSchedule;
+use crate::simulator::{self, Comm, CommStats};
+use crate::tensor::SymTensor;
+use anyhow::{bail, ensure, Result};
+use std::collections::HashMap;
+use std::time::{Duration, Instant};
+
+/// How vector data moves between processors.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CommMode {
+    /// Theorem 6 point-to-point schedule: comm matches the lower bound's
+    /// leading term exactly.
+    PointToPoint,
+    /// All-to-All collectives (§7.2.2): simpler, 2× the leading term.
+    AllToAll,
+}
+
+impl std::str::FromStr for CommMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "p2p" | "point-to-point" => Ok(CommMode::PointToPoint),
+            "a2a" | "all-to-all" => Ok(CommMode::AllToAll),
+            other => bail!("unknown comm mode '{other}' (use p2p|a2a)"),
+        }
+    }
+}
+
+/// Execution options for [`run_sttsv_opts`].
+#[derive(Debug, Clone, Copy)]
+pub struct ExecOpts {
+    pub mode: CommMode,
+    pub backend: Backend,
+    /// Batch all owned blocks of a type into one kernel dispatch (the L3
+    /// hot-path optimization; see EXPERIMENTS.md §Perf).
+    pub batch: bool,
+}
+
+impl Default for ExecOpts {
+    fn default() -> Self {
+        ExecOpts {
+            mode: CommMode::PointToPoint,
+            backend: Backend::Native,
+            batch: true,
+        }
+    }
+}
+
+/// Per-processor execution report.
+#[derive(Debug, Clone)]
+pub struct ProcReport {
+    pub stats: CommStats,
+    /// Logical ternary multiplications (paper §7.1 accounting).
+    pub ternary_mults: u64,
+    pub compute_time: Duration,
+}
+
+/// Whole-run report.
+#[derive(Debug, Clone)]
+pub struct SttsvReport {
+    /// The assembled result y = A ×₂ x ×₃ x.
+    pub y: Vec<f32>,
+    pub per_proc: Vec<ProcReport>,
+    /// Communication steps per vector phase.
+    pub steps_per_phase: usize,
+    pub elapsed: Duration,
+}
+
+impl SttsvReport {
+    /// Max over processors of words sent (the paper's bandwidth cost).
+    pub fn max_sent_words(&self) -> u64 {
+        self.per_proc.iter().map(|r| r.stats.sent_words).max().unwrap_or(0)
+    }
+
+    /// Max over processors of words received.
+    pub fn max_recv_words(&self) -> u64 {
+        self.per_proc.iter().map(|r| r.stats.recv_words).max().unwrap_or(0)
+    }
+
+    /// Max logical ternary multiplications on any processor (§7.1).
+    pub fn max_ternary_mults(&self) -> u64 {
+        self.per_proc.iter().map(|r| r.ternary_mults).max().unwrap_or(0)
+    }
+
+    /// Total logical ternary multiplications across processors.
+    pub fn total_ternary_mults(&self) -> u64 {
+        self.per_proc.iter().map(|r| r.ternary_mults).sum()
+    }
+}
+
+/// Scaling factors (α, β, γ) applied to (ci, cj, ck) per block kind — the
+/// multiplicity bookkeeping of Algorithm 5 lines 17–27.
+fn factors(kind: BlockKind, i: usize, j: usize, k: usize) -> (f32, f32, f32) {
+    match kind {
+        BlockKind::OffDiagonal => (2.0, 2.0, 2.0),
+        BlockKind::NonCentralDiagonal => {
+            if i == j {
+                // (a,a,b): y[a] += 2·ci, y[b] += 1·ck
+                (2.0, 0.0, 1.0)
+            } else {
+                debug_assert_eq!(j, k);
+                // (a,b,b): y[a] += 1·ci, y[b] += 2·cj
+                (1.0, 2.0, 0.0)
+            }
+        }
+        BlockKind::CentralDiagonal => (1.0, 0.0, 0.0),
+    }
+}
+
+/// Logical ternary multiplications for a block of size b (paper §7.1).
+fn block_ternary_mults(kind: BlockKind, b: u64) -> u64 {
+    match kind {
+        BlockKind::OffDiagonal => 3 * b * b * b,
+        BlockKind::NonCentralDiagonal => 3 * b * b * (b - 1) / 2 + 2 * b * b,
+        BlockKind::CentralDiagonal => b * (b - 1) * (b - 2) / 2 + 2 * b * (b - 1) + b,
+    }
+}
+
+/// Run parallel STTSV with default options (point-to-point, native, batched).
+pub fn run_sttsv(
+    tensor: &SymTensor,
+    x: &[f32],
+    part: &TetraPartition,
+    mode: CommMode,
+    backend: Backend,
+) -> Result<SttsvReport> {
+    run_sttsv_opts(tensor, x, part, ExecOpts { mode, backend, ..Default::default() })
+}
+
+/// Run parallel STTSV (Algorithm 5) on the simulated machine.
+///
+/// Builds a fresh [`SttsvPlan`] and runs it once; iterative callers (power
+/// method, CP gradient) should build the plan themselves and reuse it — the
+/// tensor-block extraction is input-independent (§Perf P5).
+pub fn run_sttsv_opts(
+    tensor: &SymTensor,
+    x: &[f32],
+    part: &TetraPartition,
+    opts: ExecOpts,
+) -> Result<SttsvReport> {
+    SttsvPlan::new(tensor, part, opts)?.run(x)
+}
+
+/// Run parallel STTSV for an n that does NOT divide into the partition's m
+/// row blocks: pads the tensor and vector to the next multiple of m with
+/// zeros (paper §6.1), runs Algorithm 5, and truncates y back to length n.
+/// Padding inflates the communication accounting by at most one block's
+/// worth (the padded coordinates still travel) — the paper's n′ analysis.
+pub fn run_sttsv_padded(
+    tensor: &SymTensor,
+    x: &[f32],
+    part: &TetraPartition,
+    opts: ExecOpts,
+) -> Result<SttsvReport> {
+    let n = tensor.n;
+    if n % part.m == 0 {
+        return run_sttsv_opts(tensor, x, part, opts);
+    }
+    let n2 = n.div_ceil(part.m) * part.m;
+    let padded = tensor.padded(n2);
+    let mut xp = x.to_vec();
+    xp.resize(n2, 0.0);
+    let mut rep = run_sttsv_opts(&padded, &xp, part, opts)?;
+    rep.y.truncate(n);
+    Ok(rep)
+}
+
+/// A same-kind batch of extracted tensor blocks owned by one processor.
+struct Group {
+    blocks: Vec<(usize, usize, usize)>,
+    /// Concatenated dense b³ blocks, ready for the (batched) kernel.
+    a: Vec<f32>,
+}
+
+/// A prepared distributed STTSV: partition + Theorem 6 schedule + the
+/// owner-compute block data, extracted once. `run` is then a function of
+/// the input vector only — mirroring the paper's point that the tensor is
+/// never communicated (here: never re-extracted) across repeated STTSVs.
+pub struct SttsvPlan<'p> {
+    part: &'p TetraPartition,
+    sched: CommSchedule,
+    b: usize,
+    n: usize,
+    opts: ExecOpts,
+    engine: Engine,
+    /// groups[p] = per-kind batches for processor p.
+    groups: Vec<Vec<Group>>,
+}
+
+impl<'p> SttsvPlan<'p> {
+    /// Prepare a plan: validate shapes, build the schedule, and extract
+    /// every processor's blocks (grouped by kind for batched dispatch).
+    pub fn new(
+        tensor: &SymTensor,
+        part: &'p TetraPartition,
+        opts: ExecOpts,
+    ) -> Result<SttsvPlan<'p>> {
+        let n = tensor.n;
+        ensure!(
+            n % part.m == 0,
+            "n = {n} must be a multiple of m = {} (pad the tensor; §6.1)",
+            part.m
+        );
+        let b = n / part.m;
+        let engine = Engine::shared(opts.backend)?;
+        let sched = CommSchedule::build(part)?;
+        let mut groups: Vec<Vec<Group>> = Vec::with_capacity(part.p);
+        for p in 0..part.p {
+            let mut by_kind: [Vec<(usize, usize, usize)>; 3] = Default::default();
+            for &(i, j, k) in &part.owned_blocks(p) {
+                let slot = match classify(i, j, k) {
+                    BlockKind::OffDiagonal => 0,
+                    BlockKind::NonCentralDiagonal => 1,
+                    BlockKind::CentralDiagonal => 2,
+                };
+                by_kind[slot].push((i, j, k));
+            }
+            let mut proc_groups = Vec::new();
+            for blocks in by_kind.into_iter().filter(|v| !v.is_empty()) {
+                let mut a = Vec::with_capacity(blocks.len() * b * b * b);
+                for &(i, j, k) in &blocks {
+                    a.extend(tensor.extract_block(i, j, k, b));
+                }
+                proc_groups.push(Group { blocks, a });
+            }
+            groups.push(proc_groups);
+        }
+        Ok(SttsvPlan {
+            part,
+            sched,
+            b,
+            n,
+            opts,
+            engine,
+            groups,
+        })
+    }
+
+    /// Execute the distributed STTSV for one input vector.
+    pub fn run(&self, x: &[f32]) -> Result<SttsvReport> {
+        ensure!(x.len() == self.n, "x length {} != n {}", x.len(), self.n);
+        let part = self.part;
+        let b = self.b;
+        let started = Instant::now();
+
+        type ProcOut = (
+            CommStats,
+            u64,
+            Duration,
+            Vec<(usize, std::ops::Range<usize>, Vec<f32>)>,
+        );
+        let outs: Vec<ProcOut> =
+            simulator::run(part.p, |comm| self.worker(comm, x))?;
+
+        // Assemble y from the final portions (each (i, sub-range) once).
+        let mut y = vec![0.0f32; self.n];
+        let mut covered = vec![false; self.n];
+        let mut per_proc = Vec::with_capacity(part.p);
+        for (stats, mults, ct, portions) in outs {
+            for (i, range, vals) in portions {
+                for (off, v) in range.clone().zip(vals) {
+                    let g = i * b + off;
+                    ensure!(!covered[g], "y[{g}] produced twice");
+                    covered[g] = true;
+                    y[g] = v;
+                }
+            }
+            per_proc.push(ProcReport {
+                stats,
+                ternary_mults: mults,
+                compute_time: ct,
+            });
+        }
+        ensure!(covered.iter().all(|&c| c), "y not fully covered");
+
+        let steps_per_phase = match self.opts.mode {
+            CommMode::PointToPoint => self.sched.num_steps(),
+            CommMode::AllToAll => part.p - 1,
+        };
+        Ok(SttsvReport {
+            y,
+            per_proc,
+            steps_per_phase,
+            elapsed: started.elapsed(),
+        })
+    }
+
+    /// One simulated processor executing Algorithm 5.
+    fn worker(
+        &self,
+        comm: &mut Comm,
+        x: &[f32],
+    ) -> Result<(
+        CommStats,
+        u64,
+        Duration,
+        Vec<(usize, std::ops::Range<usize>, Vec<f32>)>,
+    )> {
+        let me = comm.rank;
+        let part = self.part;
+        let b = self.b;
+        let opts = self.opts;
+
+        // ---- phase 1: gather full row blocks x[i], i ∈ R_p ----------------
+        let mut my_x: HashMap<usize, Vec<f32>> = HashMap::new();
+        for &i in &part.r_p[me] {
+            let mut buf = vec![0.0f32; b];
+            let r = part.portion(i, me, b);
+            buf[r.clone()].copy_from_slice(&x[i * b + r.start..i * b + r.end]);
+            my_x.insert(i, buf);
+        }
+        exchange(
+            comm,
+            part,
+            &self.sched,
+            b,
+            opts.mode,
+            0,
+            // pack: my own portion of each shared row block
+            |i, _to, my_x: &HashMap<usize, Vec<f32>>| {
+                let r = part.portion(i, me, b);
+                my_x[&i][r].to_vec()
+            },
+            // unpack: sender's portion of row block i
+            |i, from, data, my_x: &mut HashMap<usize, Vec<f32>>| {
+                let r = part.portion(i, from, b);
+                my_x.get_mut(&i).unwrap()[r].copy_from_slice(&data);
+            },
+            &mut my_x,
+        )?;
+
+        // ---- phase 2: local ternary multiplications -----------------------
+        let compute_start = Instant::now();
+        let mut my_y: HashMap<usize, Vec<f32>> = part.r_p[me]
+            .iter()
+            .map(|&i| (i, vec![0.0f32; b]))
+            .collect();
+        let mut mults: u64 = 0;
+
+        for group in &self.groups[me] {
+            let nb = group.blocks.len();
+            if opts.batch {
+                let mut us = Vec::with_capacity(nb * b);
+                let mut vs = Vec::with_capacity(nb * b);
+                let mut ws = Vec::with_capacity(nb * b);
+                for &(i, j, k) in &group.blocks {
+                    us.extend_from_slice(&my_x[&i]);
+                    vs.extend_from_slice(&my_x[&j]);
+                    ws.extend_from_slice(&my_x[&k]);
+                }
+                let (cis, cjs, cks) =
+                    self.engine
+                        .block_contract_batch(&group.a, &us, &vs, &ws, b, nb)?;
+                for (s, &(i, j, k)) in group.blocks.iter().enumerate() {
+                    let kind = classify(i, j, k);
+                    let (fi, fj, fk) = factors(kind, i, j, k);
+                    accumulate(&mut my_y, i, fi, &cis[s * b..(s + 1) * b]);
+                    accumulate(&mut my_y, j, fj, &cjs[s * b..(s + 1) * b]);
+                    accumulate(&mut my_y, k, fk, &cks[s * b..(s + 1) * b]);
+                    mults += block_ternary_mults(kind, b as u64);
+                }
+            } else {
+                for (s, &(i, j, k)) in group.blocks.iter().enumerate() {
+                    let kind = classify(i, j, k);
+                    let a = &group.a[s * b * b * b..(s + 1) * b * b * b];
+                    let (ci, cj, ck) = self
+                        .engine
+                        .block_contract(a, &my_x[&i], &my_x[&j], &my_x[&k], b)?;
+                    let (fi, fj, fk) = factors(kind, i, j, k);
+                    accumulate(&mut my_y, i, fi, &ci);
+                    accumulate(&mut my_y, j, fj, &cj);
+                    accumulate(&mut my_y, k, fk, &ck);
+                    mults += block_ternary_mults(kind, b as u64);
+                }
+            }
+        }
+        let compute_time = compute_start.elapsed();
+
+        // ---- phase 3: scatter-reduce y ------------------------------------
+        exchange(
+            comm,
+            part,
+            &self.sched,
+            b,
+            opts.mode,
+            1,
+            // pack: MY partial of the DESTINATION's portion of row block i
+            |i, to, my_y: &HashMap<usize, Vec<f32>>| {
+                let r = part.portion(i, to, b);
+                my_y[&i][r].to_vec()
+            },
+            // unpack: add sender's partial of MY portion
+            |i, _from, data, my_y: &mut HashMap<usize, Vec<f32>>| {
+                let r = part.portion(i, me, b);
+                let buf = my_y.get_mut(&i).unwrap();
+                for (off, v) in r.zip(data) {
+                    buf[off] += v;
+                }
+            },
+            &mut my_y,
+        )?;
+
+        // Final owned portions of y.
+        let portions: Vec<(usize, std::ops::Range<usize>, Vec<f32>)> = part.r_p[me]
+            .iter()
+            .map(|&i| {
+                let r = part.portion(i, me, b);
+                (i, r.clone(), my_y[&i][r].to_vec())
+            })
+            .collect();
+
+        Ok((comm.stats, mults, compute_time, portions))
+    }
+}
+
+fn accumulate(y: &mut HashMap<usize, Vec<f32>>, i: usize, f: f32, c: &[f32]) {
+    if f == 0.0 {
+        return;
+    }
+    let buf = y.get_mut(&i).unwrap();
+    for (o, v) in buf.iter_mut().zip(c) {
+        *o += f * v;
+    }
+}
+
+/// Execute one vector-exchange phase under the chosen comm mode.
+///
+/// `pack(i, to)` produces the payload segment for shared row block `i`
+/// destined to processor `to`; `unpack(i, from, data, state)` consumes a
+/// received segment. Payload layout: segments concatenated in the sorted
+/// order of the transfer's shared row blocks.
+#[allow(clippy::too_many_arguments)]
+fn exchange<S>(
+    comm: &mut Comm,
+    part: &TetraPartition,
+    sched: &CommSchedule,
+    b: usize,
+    mode: CommMode,
+    phase: u64,
+    mut pack: impl FnMut(usize, usize, &S) -> Vec<f32>,
+    mut unpack: impl FnMut(usize, usize, Vec<f32>, &mut S),
+    state: &mut S,
+) -> Result<()> {
+    let me = comm.rank;
+    match mode {
+        CommMode::PointToPoint => {
+            for (si, step) in sched.steps.iter().enumerate() {
+                let tag = phase * 1_000_000 + si as u64;
+                let mut incoming = None;
+                for &xi in step {
+                    let xf = &sched.xfers[xi];
+                    if xf.from == me {
+                        let mut payload = Vec::new();
+                        for &i in &xf.row_blocks {
+                            payload.extend(pack(i, xf.to, state));
+                        }
+                        comm.send(xf.to, tag, payload)?;
+                    }
+                    if xf.to == me {
+                        incoming = Some(xi);
+                    }
+                }
+                if let Some(xi) = incoming {
+                    let xf = &sched.xfers[xi];
+                    let data = comm.recv(xf.from, tag)?;
+                    let mut off = 0usize;
+                    for &i in &xf.row_blocks {
+                        // phase 0 payload: sender's portion; phase 1: my portion
+                        let len = if phase == 0 {
+                            part.portion(i, xf.from, b).len()
+                        } else {
+                            part.portion(i, me, b).len()
+                        };
+                        let seg = data[off..off + len].to_vec();
+                        off += len;
+                        unpack(i, xf.from, seg, state);
+                    }
+                    debug_assert_eq!(off, data.len());
+                }
+                comm.barrier();
+            }
+        }
+        CommMode::AllToAll => {
+            // Bandwidth-optimal All-to-All: P−1 rounds; uniform per-peer
+            // buffer of 2 row-block portions (§7.2.2 accounting). Pairs
+            // sharing fewer than 2 row blocks pad with zeros.
+            let lambda1 = part.lambda1();
+            let slot = b.div_ceil(lambda1);
+            let buf_words = 2 * slot;
+            for round in 1..part.p {
+                let to = (me + round) % part.p;
+                let from = (me + part.p - round) % part.p;
+                let tag = phase * 1_000_000 + 1000 + round as u64;
+                let shared_out: Vec<usize> = part.r_p[me]
+                    .iter()
+                    .copied()
+                    .filter(|i| part.r_p[to].contains(i))
+                    .collect();
+                let mut payload = Vec::with_capacity(buf_words);
+                for &i in &shared_out {
+                    payload.extend(pack(i, to, state));
+                }
+                payload.resize(buf_words, 0.0);
+                comm.send(to, tag, payload)?;
+
+                let shared_in: Vec<usize> = part.r_p[me]
+                    .iter()
+                    .copied()
+                    .filter(|i| part.r_p[from].contains(i))
+                    .collect();
+                let data = comm.recv(from, tag)?;
+                let mut off = 0usize;
+                for &i in &shared_in {
+                    let len = if phase == 0 {
+                        part.portion(i, from, b).len()
+                    } else {
+                        part.portion(i, me, b).len()
+                    };
+                    let seg = data[off..off + len].to_vec();
+                    off += len;
+                    unpack(i, from, seg, state);
+                }
+                comm.barrier();
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Communication-only dry run: executes the exchange phases with correctly
+/// sized (zero) payloads and no tensor or compute, so comm costs can be
+/// measured for large q/P without materializing an n³/6 tensor.
+pub fn run_comm_only(part: &TetraPartition, b: usize, mode: CommMode) -> Result<Vec<CommStats>> {
+    let sched = CommSchedule::build(part)?;
+    let outs = simulator::run(part.p, |comm| {
+        let me = comm.rank;
+        let mut state = ();
+        for phase in 0..2u64 {
+            exchange(
+                comm,
+                part,
+                &sched,
+                b,
+                mode,
+                phase,
+                |i, to, _state| {
+                    let r = if phase == 0 {
+                        part.portion(i, me, b)
+                    } else {
+                        part.portion(i, to, b)
+                    };
+                    vec![0.0f32; r.len()]
+                },
+                |_, _, _, _| {},
+                &mut state,
+            )?;
+        }
+        Ok(comm.stats)
+    })?;
+    Ok(outs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::steiner::{spherical, sqs8};
+    use crate::util::rng::Rng;
+
+    fn check_matches_oracle(part: &TetraPartition, b: usize, opts: ExecOpts, seed: u64) {
+        let n = part.m * b;
+        let tensor = SymTensor::random(n, seed);
+        let mut rng = Rng::new(seed + 1);
+        let x = rng.normal_vec(n);
+        let want = tensor.sttsv(&x);
+        let rep = run_sttsv_opts(&tensor, &x, part, opts).unwrap();
+        let scale = want.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+        for i in 0..n {
+            assert!(
+                (rep.y[i] - want[i]).abs() < 2e-3 * scale,
+                "i={i}: {} vs {} (scale {scale})",
+                rep.y[i],
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn algorithm5_matches_oracle_q2_p2p() {
+        let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+        for batch in [false, true] {
+            check_matches_oracle(
+                &part,
+                8,
+                ExecOpts { mode: CommMode::PointToPoint, backend: Backend::Native, batch },
+                7,
+            );
+        }
+    }
+
+    #[test]
+    fn algorithm5_matches_oracle_q2_a2a() {
+        let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+        check_matches_oracle(
+            &part,
+            6,
+            ExecOpts { mode: CommMode::AllToAll, backend: Backend::Native, batch: true },
+            8,
+        );
+    }
+
+    #[test]
+    fn algorithm5_matches_oracle_sqs8() {
+        let part = TetraPartition::from_steiner(&sqs8()).unwrap();
+        check_matches_oracle(
+            &part,
+            7,
+            ExecOpts { mode: CommMode::PointToPoint, backend: Backend::Native, batch: true },
+            9,
+        );
+    }
+
+    #[test]
+    fn algorithm5_matches_oracle_q3() {
+        let part = TetraPartition::from_steiner(&spherical(3).unwrap()).unwrap();
+        check_matches_oracle(
+            &part,
+            12,
+            ExecOpts { mode: CommMode::PointToPoint, backend: Backend::Native, batch: true },
+            10,
+        );
+    }
+
+    #[test]
+    fn comm_words_match_paper_formula_exactly() {
+        // §7.2.2: each processor sends and receives n(q+1)/(q²+1) − n/P
+        // words per vector, so 2× that across both phases.
+        for q in [2usize, 3] {
+            let part =
+                TetraPartition::from_steiner(&spherical(q as u64).unwrap()).unwrap();
+            let lambda1 = q * (q + 1);
+            let b = lambda1; // divisible ⇒ formula exact
+            let n = b * part.m;
+            let tensor = SymTensor::random(n, 3);
+            let mut rng = Rng::new(4);
+            let x = rng.normal_vec(n);
+            let rep = run_sttsv(&tensor, &x, &part, CommMode::PointToPoint, Backend::Native)
+                .unwrap();
+            let expected = 2 * (n * (q + 1) / (q * q + 1) - n / part.p) as u64;
+            for (p, r) in rep.per_proc.iter().enumerate() {
+                assert_eq!(r.stats.sent_words, expected, "q={q} proc {p} sent");
+                assert_eq!(r.stats.recv_words, expected, "q={q} proc {p} recv");
+            }
+        }
+    }
+
+    #[test]
+    fn comm_only_matches_full_run_counts() {
+        let q = 2usize;
+        let part = TetraPartition::from_steiner(&spherical(q as u64).unwrap()).unwrap();
+        let b = q * (q + 1);
+        let n = b * part.m;
+        let tensor = SymTensor::random(n, 5);
+        let mut rng = Rng::new(6);
+        let x = rng.normal_vec(n);
+        let full = run_sttsv(&tensor, &x, &part, CommMode::PointToPoint, Backend::Native)
+            .unwrap();
+        let dry = run_comm_only(&part, b, CommMode::PointToPoint).unwrap();
+        for p in 0..part.p {
+            assert_eq!(full.per_proc[p].stats.sent_words, dry[p].sent_words);
+            assert_eq!(full.per_proc[p].stats.recv_words, dry[p].recv_words);
+        }
+    }
+
+    #[test]
+    fn ternary_mult_totals_match_algorithm4() {
+        // total over processors = n²(n+1)/2 (§3): every lower-tetra point
+        // computed exactly once.
+        let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+        let b = 6;
+        let n = b * part.m;
+        let tensor = SymTensor::random(n, 11);
+        let mut rng = Rng::new(12);
+        let x = rng.normal_vec(n);
+        let rep = run_sttsv(&tensor, &x, &part, CommMode::PointToPoint, Backend::Native)
+            .unwrap();
+        assert_eq!(
+            rep.total_ternary_mults(),
+            (n * n * (n + 1) / 2) as u64
+        );
+    }
+
+    #[test]
+    fn alltoall_costs_double_p2p_leading_term() {
+        let q = 3usize;
+        let part = TetraPartition::from_steiner(&spherical(q as u64).unwrap()).unwrap();
+        let b = q * (q + 1) * 2;
+        let dry_p2p = run_comm_only(&part, b, CommMode::PointToPoint).unwrap();
+        let dry_a2a = run_comm_only(&part, b, CommMode::AllToAll).unwrap();
+        let max_p2p = dry_p2p.iter().map(|s| s.sent_words).max().unwrap();
+        let max_a2a = dry_a2a.iter().map(|s| s.sent_words).max().unwrap();
+        let n = b * part.m;
+        let expected_a2a = 2 * (2 * b / (q * (q + 1))) * (part.p - 1);
+        assert_eq!(max_a2a, expected_a2a as u64);
+        // a2a / p2p → 2(q²+1)/(q+1)² (→ 2 as q grows); at q=3 it is 20/16.
+        let ratio = max_a2a as f64 / max_p2p as f64;
+        let expected = 2.0 * (q * q + 1) as f64 / ((q + 1) * (q + 1)) as f64;
+        assert!(
+            (ratio - expected).abs() < 0.08,
+            "ratio {ratio} vs expected {expected} ({max_a2a} vs {max_p2p})"
+        );
+        let _ = n;
+    }
+
+    #[test]
+    fn padded_run_matches_oracle_on_awkward_n() {
+        // m = 5 (q = 2); n = 23 is not a multiple of 5 → pad to 25.
+        let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+        let n = 23;
+        let tensor = SymTensor::random(n, 77);
+        let mut rng = Rng::new(78);
+        let x = rng.normal_vec(n);
+        let want = tensor.sttsv(&x);
+        let rep = run_sttsv_padded(&tensor, &x, &part, ExecOpts::default()).unwrap();
+        assert_eq!(rep.y.len(), n);
+        let scale = want.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+        for i in 0..n {
+            assert!((rep.y[i] - want[i]).abs() < 3e-3 * scale, "i={i}");
+        }
+    }
+
+    #[test]
+    fn uneven_portions_still_correct() {
+        // b not divisible by λ₁ exercises the ±1 portion ranges.
+        let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+        check_matches_oracle(
+            &part,
+            7, // λ₁ = 6 does not divide 7
+            ExecOpts { mode: CommMode::PointToPoint, backend: Backend::Native, batch: true },
+            13,
+        );
+    }
+}

@@ -1,0 +1,326 @@
+//! Finite fields GF(p^e) for the spherical Steiner-system construction.
+//!
+//! The paper's tetrahedral partitions come from Steiner (q²+1, q+1, 3)
+//! systems built on the projective line PG(1, q²) (Theorem 3). We therefore
+//! need arithmetic in GF(q²) = GF(p^{2e}) for prime powers q = p^e, together
+//! with subfield detection (F_q = fixed points of the Frobenius x ↦ x^q).
+//!
+//! Elements are represented as integers `0..q` encoding polynomial
+//! coefficient vectors over F_p in base p. Multiplication uses exp/log
+//! tables of a primitive element (found by search against a searched-for
+//! irreducible polynomial); addition is digit-wise mod-p. Fields here are
+//! tiny (≤ GF(3^4) = 81 elements for q ≤ 9; ≤ GF(13²) for q = 13), so the
+//! table-based approach is exact and effectively free.
+
+mod poly;
+
+pub use poly::Poly;
+
+use anyhow::{bail, Result};
+
+/// Factor a prime power `q = p^e`; errors if `q` is not a prime power.
+pub fn prime_power(q: u64) -> Result<(u64, u32)> {
+    if q < 2 {
+        bail!("{q} is not a prime power");
+    }
+    let mut p = 0u64;
+    let mut m = q;
+    for d in 2..=q {
+        if m % d == 0 {
+            p = d;
+            while m % d == 0 {
+                m /= d;
+            }
+            break;
+        }
+    }
+    if m != 1 {
+        bail!("{q} is not a prime power");
+    }
+    let mut e = 0u32;
+    let mut t = q;
+    while t > 1 {
+        if t % p != 0 {
+            bail!("{q} is not a prime power");
+        }
+        t /= p;
+        e += 1;
+    }
+    Ok((p, e))
+}
+
+/// The finite field GF(p^e) with exp/log multiplication tables.
+#[derive(Debug, Clone)]
+pub struct Gf {
+    /// Characteristic.
+    pub p: u64,
+    /// Extension degree.
+    pub e: u32,
+    /// Field order q = p^e.
+    pub q: u64,
+    /// exp[i] = g^i for a primitive element g, i in 0..q-1.
+    exp: Vec<u64>,
+    /// log[x] for x in 1..q; log[0] unused.
+    log: Vec<u64>,
+}
+
+impl Gf {
+    /// Construct GF(q) for a prime power q.
+    pub fn new(q: u64) -> Result<Gf> {
+        let (p, e) = prime_power(q)?;
+        let modulus = poly::find_irreducible(p, e)?;
+        // Find a primitive element: try g = x (the polynomial t), then other
+        // elements, checking multiplicative order == q-1.
+        let order = q - 1;
+        let mut exp = vec![0u64; order as usize];
+        let mut log = vec![0u64; q as usize];
+        let mut found = false;
+        'cand: for gid in 1..q {
+            let g = Poly::from_id(gid, p);
+            // accumulate powers
+            let mut acc = Poly::one(p);
+            let mut seen_one_at = None;
+            for i in 0..order {
+                exp[i as usize] = acc.to_id();
+                if i > 0 && acc.is_one() {
+                    seen_one_at = Some(i);
+                    break;
+                }
+                acc = poly::mul_mod(&acc, &g, &modulus);
+            }
+            if seen_one_at.is_some() || !acc.is_one() {
+                // order < q-1 (hit 1 early) or g not invertible cycle; next.
+                continue 'cand;
+            }
+            // fill logs
+            for i in 0..order {
+                log[exp[i as usize] as usize] = i;
+            }
+            found = true;
+            break;
+        }
+        if !found {
+            bail!("no primitive element found for GF({q})");
+        }
+        Ok(Gf { p, e, q, exp, log })
+    }
+
+    /// Additive identity.
+    pub fn zero(&self) -> u64 {
+        0
+    }
+
+    /// Multiplicative identity.
+    pub fn one(&self) -> u64 {
+        1
+    }
+
+    /// Addition: digit-wise mod p on the base-p encodings.
+    pub fn add(&self, a: u64, b: u64) -> u64 {
+        debug_assert!(a < self.q && b < self.q);
+        let (mut a, mut b) = (a, b);
+        let mut out = 0u64;
+        let mut mult = 1u64;
+        for _ in 0..self.e {
+            let d = (a % self.p + b % self.p) % self.p;
+            out += d * mult;
+            mult *= self.p;
+            a /= self.p;
+            b /= self.p;
+        }
+        out
+    }
+
+    /// Additive inverse.
+    pub fn neg(&self, a: u64) -> u64 {
+        debug_assert!(a < self.q);
+        let mut a = a;
+        let mut out = 0u64;
+        let mut mult = 1u64;
+        for _ in 0..self.e {
+            let d = (self.p - a % self.p) % self.p;
+            out += d * mult;
+            mult *= self.p;
+            a /= self.p;
+        }
+        out
+    }
+
+    /// Subtraction.
+    pub fn sub(&self, a: u64, b: u64) -> u64 {
+        self.add(a, self.neg(b))
+    }
+
+    /// Multiplication via exp/log tables.
+    pub fn mul(&self, a: u64, b: u64) -> u64 {
+        debug_assert!(a < self.q && b < self.q);
+        if a == 0 || b == 0 {
+            return 0;
+        }
+        let la = self.log[a as usize];
+        let lb = self.log[b as usize];
+        self.exp[((la + lb) % (self.q - 1)) as usize]
+    }
+
+    /// Multiplicative inverse (panics on 0).
+    pub fn inv(&self, a: u64) -> u64 {
+        assert!(a != 0, "division by zero in GF({})", self.q);
+        let la = self.log[a as usize];
+        self.exp[((self.q - 1 - la) % (self.q - 1)) as usize]
+    }
+
+    /// Division a / b.
+    pub fn div(&self, a: u64, b: u64) -> u64 {
+        self.mul(a, self.inv(b))
+    }
+
+    /// Exponentiation a^k.
+    pub fn pow(&self, a: u64, k: u64) -> u64 {
+        if a == 0 {
+            return if k == 0 { 1 } else { 0 };
+        }
+        let la = self.log[a as usize] as u128;
+        let idx = (la * k as u128) % (self.q - 1) as u128;
+        self.exp[idx as usize]
+    }
+
+    /// A fixed primitive element (generator of the multiplicative group).
+    pub fn generator(&self) -> u64 {
+        self.exp[1]
+    }
+
+    /// All field elements 0..q.
+    pub fn elements(&self) -> impl Iterator<Item = u64> {
+        0..self.q
+    }
+
+    /// The subfield F_{p^d} = {x : x^{p^d} = x} for d dividing e, as element ids.
+    pub fn subfield(&self, d: u32) -> Vec<u64> {
+        assert!(self.e % d == 0, "subfield degree must divide e");
+        let sq = self.p.pow(d);
+        self.elements()
+            .filter(|&x| self.pow(x, sq) == x)
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn prime_power_factoring() {
+        assert_eq!(prime_power(2).unwrap(), (2, 1));
+        assert_eq!(prime_power(9).unwrap(), (3, 2));
+        assert_eq!(prime_power(8).unwrap(), (2, 3));
+        assert_eq!(prime_power(81).unwrap(), (3, 4));
+        assert!(prime_power(6).is_err());
+        assert!(prime_power(12).is_err());
+        assert!(prime_power(1).is_err());
+    }
+
+    fn check_field_axioms(q: u64) {
+        let f = Gf::new(q).unwrap();
+        assert_eq!(f.q, q);
+        // closure + associativity + commutativity + distributivity,
+        // exhaustively (fields are tiny).
+        let lim = q.min(32); // cap exhaustive triple loop for larger fields
+        for a in 0..lim {
+            for b in 0..lim {
+                assert!(f.add(a, b) < q);
+                assert!(f.mul(a, b) < q);
+                assert_eq!(f.add(a, b), f.add(b, a));
+                assert_eq!(f.mul(a, b), f.mul(b, a));
+                assert_eq!(f.add(a, f.neg(a)), 0);
+                if a != 0 {
+                    assert_eq!(f.mul(a, f.inv(a)), 1, "a={a} q={q}");
+                }
+                for c in 0..lim {
+                    assert_eq!(f.add(f.add(a, b), c), f.add(a, f.add(b, c)));
+                    assert_eq!(f.mul(f.mul(a, b), c), f.mul(a, f.mul(b, c)));
+                    assert_eq!(
+                        f.mul(a, f.add(b, c)),
+                        f.add(f.mul(a, b), f.mul(a, c)),
+                        "distributivity failed a={a} b={b} c={c} q={q}"
+                    );
+                }
+            }
+        }
+        // identity laws
+        for a in 0..q {
+            assert_eq!(f.add(a, 0), a);
+            assert_eq!(f.mul(a, 1), a);
+            assert_eq!(f.mul(a, 0), 0);
+        }
+    }
+
+    #[test]
+    fn field_axioms_small_fields() {
+        for q in [2, 3, 4, 5, 7, 8, 9, 11, 13, 16, 25, 27] {
+            check_field_axioms(q);
+        }
+    }
+
+    #[test]
+    fn generator_has_full_order() {
+        for q in [4, 8, 9, 16, 25, 49, 64, 81] {
+            let f = Gf::new(q).unwrap();
+            let g = f.generator();
+            let mut seen = std::collections::HashSet::new();
+            let mut x = 1u64;
+            for _ in 0..(q - 1) {
+                assert!(seen.insert(x), "generator order < q-1 for q={q}");
+                x = f.mul(x, g);
+            }
+            assert_eq!(x, 1);
+        }
+    }
+
+    #[test]
+    fn subfield_detection() {
+        // GF(4) inside GF(16): 4 elements fixed by x^4.
+        let f = Gf::new(16).unwrap();
+        let sub = f.subfield(2);
+        assert_eq!(sub.len(), 4);
+        // closed under add/mul
+        for &a in &sub {
+            for &b in &sub {
+                assert!(sub.contains(&f.add(a, b)));
+                assert!(sub.contains(&f.mul(a, b)));
+            }
+        }
+        // GF(3) inside GF(9)
+        let f9 = Gf::new(9).unwrap();
+        let sub3 = f9.subfield(1);
+        assert_eq!(sub3.len(), 3);
+        // GF(9) inside GF(81)
+        let f81 = Gf::new(81).unwrap();
+        assert_eq!(f81.subfield(2).len(), 9);
+    }
+
+    #[test]
+    fn pow_matches_repeated_mul() {
+        let f = Gf::new(27).unwrap();
+        for a in 0..27 {
+            let mut acc = 1u64;
+            for k in 0..30u64 {
+                assert_eq!(f.pow(a, k), acc, "a={a} k={k}");
+                acc = f.mul(acc, a);
+            }
+        }
+    }
+
+    #[test]
+    fn frobenius_is_additive() {
+        // x -> x^p is a field automorphism: (a+b)^p = a^p + b^p.
+        let f = Gf::new(8).unwrap();
+        for a in 0..8 {
+            for b in 0..8 {
+                assert_eq!(
+                    f.pow(f.add(a, b), 2),
+                    f.add(f.pow(a, 2), f.pow(b, 2))
+                );
+            }
+        }
+    }
+}

@@ -1,0 +1,228 @@
+//! Polynomial arithmetic over F_p, used only to bootstrap the GF(p^e)
+//! exp/log tables: find an irreducible modulus and multiply polynomial
+//! representatives modulo it.
+
+use anyhow::{bail, Result};
+
+/// A polynomial over F_p, little-endian coefficients (coeffs[i] is the x^i
+/// coefficient). Normalized: no trailing zeros (zero polynomial = empty).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Poly {
+    pub p: u64,
+    pub coeffs: Vec<u64>,
+}
+
+impl Poly {
+    /// The zero polynomial.
+    pub fn zero(p: u64) -> Poly {
+        Poly { p, coeffs: vec![] }
+    }
+
+    /// The constant polynomial 1.
+    pub fn one(p: u64) -> Poly {
+        Poly { p, coeffs: vec![1] }
+    }
+
+    /// Decode an element id (base-p digit string) into a polynomial.
+    pub fn from_id(mut id: u64, p: u64) -> Poly {
+        let mut coeffs = vec![];
+        while id > 0 {
+            coeffs.push(id % p);
+            id /= p;
+        }
+        Poly { p, coeffs }
+    }
+
+    /// Encode back to an element id.
+    pub fn to_id(&self) -> u64 {
+        let mut id = 0u64;
+        for &c in self.coeffs.iter().rev() {
+            id = id * self.p + c;
+        }
+        id
+    }
+
+    /// Degree, or None for the zero polynomial.
+    pub fn degree(&self) -> Option<usize> {
+        if self.coeffs.is_empty() {
+            None
+        } else {
+            Some(self.coeffs.len() - 1)
+        }
+    }
+
+    /// Whether this is the constant 1.
+    pub fn is_one(&self) -> bool {
+        self.coeffs == [1]
+    }
+
+    fn trim(mut self) -> Poly {
+        while self.coeffs.last() == Some(&0) {
+            self.coeffs.pop();
+        }
+        self
+    }
+}
+
+/// Plain polynomial product over F_p.
+pub fn mul(a: &Poly, b: &Poly) -> Poly {
+    assert_eq!(a.p, b.p);
+    if a.coeffs.is_empty() || b.coeffs.is_empty() {
+        return Poly::zero(a.p);
+    }
+    let mut out = vec![0u64; a.coeffs.len() + b.coeffs.len() - 1];
+    for (i, &ca) in a.coeffs.iter().enumerate() {
+        for (j, &cb) in b.coeffs.iter().enumerate() {
+            out[i + j] = (out[i + j] + ca * cb) % a.p;
+        }
+    }
+    Poly { p: a.p, coeffs: out }.trim()
+}
+
+/// Remainder of a modulo m (m must be nonzero).
+pub fn rem(a: &Poly, m: &Poly) -> Poly {
+    assert_eq!(a.p, m.p);
+    let p = a.p;
+    let dm = m.degree().expect("modulus must be nonzero");
+    let lead_inv = inv_mod_p(m.coeffs[dm], p);
+    let mut r = a.coeffs.clone();
+    while r.len() > dm {
+        let da = r.len() - 1;
+        let factor = (r[da] * lead_inv) % p;
+        if factor != 0 {
+            let shift = da - dm;
+            for (i, &mc) in m.coeffs.iter().enumerate() {
+                let sub = (factor * mc) % p;
+                r[shift + i] = (r[shift + i] + p - sub) % p;
+            }
+        }
+        while r.last() == Some(&0) {
+            r.pop();
+        }
+        if r.len() <= dm {
+            break;
+        }
+    }
+    Poly { p, coeffs: r }.trim()
+}
+
+/// Modular product: a*b mod m.
+pub fn mul_mod(a: &Poly, b: &Poly, m: &Poly) -> Poly {
+    rem(&mul(a, b), m)
+}
+
+/// Inverse of a nonzero scalar mod prime p (Fermat).
+fn inv_mod_p(a: u64, p: u64) -> u64 {
+    // a^(p-2) mod p
+    let mut base = a % p;
+    let mut exp = p - 2;
+    let mut acc = 1u64;
+    while exp > 0 {
+        if exp & 1 == 1 {
+            acc = acc * base % p;
+        }
+        base = base * base % p;
+        exp >>= 1;
+    }
+    acc
+}
+
+/// Brute-force irreducibility: f (monic, degree e >= 1) is irreducible over
+/// F_p iff no monic polynomial of degree 1..=e/2 divides it. Fields here are
+/// tiny, so enumeration is instant.
+pub fn is_irreducible(f: &Poly) -> bool {
+    let p = f.p;
+    let e = match f.degree() {
+        Some(d) if d >= 1 => d,
+        _ => return false,
+    };
+    for d in 1..=e / 2 {
+        // enumerate monic polys of degree d: p^d of them
+        let count = p.pow(d as u32);
+        for id in 0..count {
+            let mut g = Poly::from_id(id, p);
+            g.coeffs.resize(d + 1, 0);
+            g.coeffs[d] = 1; // monic
+            if rem(f, &g).coeffs.is_empty() {
+                return false;
+            }
+        }
+    }
+    true
+}
+
+/// Find a monic irreducible polynomial of degree e over F_p by search.
+pub fn find_irreducible(p: u64, e: u32) -> Result<Poly> {
+    let e = e as usize;
+    if e == 1 {
+        // x itself: GF(p) with trivial modulus
+        return Ok(Poly { p, coeffs: vec![0, 1] });
+    }
+    let count = p.pow(e as u32);
+    for id in 0..count {
+        let mut f = Poly::from_id(id, p);
+        f.coeffs.resize(e + 1, 0);
+        f.coeffs[e] = 1;
+        if is_irreducible(&f) {
+            return Ok(f);
+        }
+    }
+    bail!("no irreducible polynomial of degree {e} over F_{p}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn id_roundtrip() {
+        for p in [2u64, 3, 5] {
+            for id in 0..40 {
+                assert_eq!(Poly::from_id(id, p).to_id(), id);
+            }
+        }
+    }
+
+    #[test]
+    fn mul_known() {
+        // (x+1)^2 over F_2 = x^2 + 1
+        let a = Poly { p: 2, coeffs: vec![1, 1] };
+        let sq = mul(&a, &a);
+        assert_eq!(sq.coeffs, vec![1, 0, 1]);
+    }
+
+    #[test]
+    fn rem_known() {
+        // x^2 mod (x^2 + x + 1) over F_2 = x + 1
+        let x2 = Poly { p: 2, coeffs: vec![0, 0, 1] };
+        let m = Poly { p: 2, coeffs: vec![1, 1, 1] };
+        assert_eq!(rem(&x2, &m).coeffs, vec![1, 1]);
+    }
+
+    #[test]
+    fn irreducibility_known_cases() {
+        // x^2 + x + 1 irreducible over F_2; x^2 + 1 = (x+1)^2 is not.
+        assert!(is_irreducible(&Poly { p: 2, coeffs: vec![1, 1, 1] }));
+        assert!(!is_irreducible(&Poly { p: 2, coeffs: vec![1, 0, 1] }));
+        // x^2 + 1 IS irreducible over F_3 (no root: 0,1,2 -> 1,2,2)
+        assert!(is_irreducible(&Poly { p: 3, coeffs: vec![1, 0, 1] }));
+    }
+
+    #[test]
+    fn find_irreducible_degrees() {
+        for (p, e) in [(2u64, 2u32), (2, 3), (2, 4), (3, 2), (3, 4), (5, 2), (7, 2)] {
+            let f = find_irreducible(p, e).unwrap();
+            assert_eq!(f.degree(), Some(e as usize));
+            assert!(is_irreducible(&f));
+        }
+    }
+
+    #[test]
+    fn scalar_inverse() {
+        for p in [3u64, 5, 7, 11] {
+            for a in 1..p {
+                assert_eq!(inv_mod_p(a, p) * a % p, 1);
+            }
+        }
+    }
+}

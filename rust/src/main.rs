@@ -1,0 +1,379 @@
+//! `sttsv` — CLI for the communication-optimal parallel STTSV system.
+//!
+//! Subcommands:
+//!   tables        regenerate the paper's Tables 1–3 (partitions)
+//!   schedule      regenerate Figure 1 (the 12-step schedule) or any q's
+//!   run           one distributed STTSV; verify vs oracle; print comm
+//!   power-method  Algorithm 1 end to end on an odeco tensor
+//!   cp-gradient   Algorithm 2 end to end
+//!   sweep         comm-cost sweep vs the Theorem 1 lower bound
+//!   verify        exhaustive invariant checks for a given q
+//!   bounds        print the paper's closed-form costs
+
+use anyhow::{bail, Result};
+use sttsv::apps;
+use sttsv::bounds;
+use sttsv::coordinator::{self, baselines, CommMode, ExecOpts};
+use sttsv::partition::TetraPartition;
+use sttsv::runtime::Backend;
+use sttsv::schedule::CommSchedule;
+use sttsv::steiner::{fixtures, spherical, sqs8};
+use sttsv::tensor::{linalg, SymTensor};
+use sttsv::util::cli::Args;
+use sttsv::util::rng::Rng;
+use sttsv::util::table::{fnum, fset, ftriples, Table};
+
+fn main() {
+    let args = Args::from_env();
+    let result = match args.subcommand() {
+        Some("tables") => cmd_tables(&args),
+        Some("schedule") => cmd_schedule(&args),
+        Some("run") => cmd_run(&args),
+        Some("power-method") => cmd_power_method(&args),
+        Some("cp-gradient") => cmd_cp_gradient(&args),
+        Some("mttkrp") => cmd_mttkrp(&args),
+        Some("sweep") => cmd_sweep(&args),
+        Some("verify") => cmd_verify(&args),
+        Some("bounds") => cmd_bounds(&args),
+        _ => {
+            eprintln!(
+                "usage: sttsv <tables|schedule|run|power-method|cp-gradient|mttkrp|sweep|verify|bounds> \
+                 [--q N] [--b N] [--mode p2p|a2a] [--backend native|pjrt] [--iters N] [--sqs8]"
+            );
+            std::process::exit(2);
+        }
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn partition_for(args: &Args) -> Result<(TetraPartition, String)> {
+    if args.flag("sqs8") {
+        let part = TetraPartition::from_steiner(&sqs8())?;
+        Ok((part, "SQS(8), m=8, P=14".to_string()))
+    } else {
+        let q: u64 = args.get_or("q", 2u64);
+        let sys = spherical(q)?;
+        let part = TetraPartition::from_steiner(&sys)?;
+        let label = format!("spherical q={q}, m={}, P={}", part.m, part.p);
+        Ok((part, label))
+    }
+}
+
+fn print_partition_table(part: &TetraPartition, title: &str) {
+    println!("\n{title}");
+    let mut t = Table::new(["p", "R_p", "N_p", "D_p"]);
+    for p in 0..part.p {
+        let d = match part.d_p[p] {
+            Some(a) => format!("{{({},{},{})}}", a + 1, a + 1, a + 1),
+            None => "{}".to_string(),
+        };
+        t.row([
+            (p + 1).to_string(),
+            fset(&part.r_p[p]),
+            ftriples(&part.n_p[p]),
+            d,
+        ]);
+    }
+    t.print();
+}
+
+fn cmd_tables(_args: &Args) -> Result<()> {
+    // Table 1 + 2 (q = 3) — our construction.
+    let part3 = TetraPartition::from_steiner(&spherical(3)?)?;
+    part3.verify()?;
+    print_partition_table(
+        &part3,
+        "Table 1 (reproduced): tetrahedral block partition, m=10, P=30 \
+         [our Steiner (10,4,3) construction; paper's instance is isomorphic]",
+    );
+    println!("\nTable 2 (reproduced): row block sets Q_i (|Q_i| = q(q+1) = 12)");
+    let mut t2 = Table::new(["i", "Q_i"]);
+    for i in 0..part3.m {
+        t2.row([(i + 1).to_string(), fset(&part3.q_i[i])]);
+    }
+    t2.print();
+
+    // Table 3 (SQS(8)).
+    let part8 = TetraPartition::from_steiner(&sqs8())?;
+    part8.verify()?;
+    print_partition_table(
+        &part8,
+        "Table 3 (reproduced): tetrahedral block partition, m=8, P=14 \
+         [planes of AG(3,2); paper's instance is isomorphic]",
+    );
+
+    // And validate the paper's literal fixtures.
+    TetraPartition::from_rows(10, &fixtures::table1())?;
+    TetraPartition::from_rows(8, &fixtures::table3())?;
+    println!("\npaper fixtures (literal Tables 1/3): partition invariants OK");
+    Ok(())
+}
+
+fn cmd_schedule(args: &Args) -> Result<()> {
+    let (part, label) = partition_for(args)?;
+    let sched = CommSchedule::build(&part)?;
+    sched.validate(&part)?;
+    println!(
+        "communication schedule for {label}: {} transfers in {} steps",
+        sched.xfers.len(),
+        sched.num_steps()
+    );
+    for (si, step) in sched.steps.iter().enumerate() {
+        let moves: Vec<String> = step
+            .iter()
+            .map(|&xi| {
+                let x = &sched.xfers[xi];
+                format!("{}→{}", x.from + 1, x.to + 1)
+            })
+            .collect();
+        println!("step {:>2}: {}", si + 1, moves.join("  "));
+    }
+    Ok(())
+}
+
+fn exec_opts(args: &Args) -> Result<ExecOpts> {
+    Ok(ExecOpts {
+        mode: args.get("mode").unwrap_or("p2p").parse::<CommMode>()?,
+        backend: args.get("backend").unwrap_or("native").parse::<Backend>()?,
+        batch: !args.flag("no-batch"),
+    })
+}
+
+fn cmd_run(args: &Args) -> Result<()> {
+    let (part, label) = partition_for(args)?;
+    let b: usize = args.get_or("b", 8usize);
+    let n = b * part.m;
+    let opts = exec_opts(args)?;
+    println!("STTSV on {label}: n={n} (b={b}), {opts:?}");
+    let tensor = SymTensor::random(n, args.get_or("seed", 42u64));
+    let mut rng = Rng::new(args.get_or("seed", 42u64) + 1);
+    let x = rng.normal_vec(n);
+    let rep = coordinator::run_sttsv_opts(&tensor, &x, &part, opts)?;
+    let want = tensor.sttsv(&x);
+    let scale = want.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+    let max_err = rep
+        .y
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| (a - b).abs() / scale)
+        .fold(0.0f32, f32::max);
+    println!(
+        "result: max rel err vs sequential oracle = {max_err:.2e} {}",
+        if max_err < 5e-3 { "(OK)" } else { "(FAIL)" }
+    );
+    println!(
+        "comm: max sent {} w, max recv {} w over {} steps/phase",
+        rep.max_sent_words(),
+        rep.max_recv_words(),
+        rep.steps_per_phase
+    );
+    println!(
+        "lower bound (Thm 1): {} w; algorithm closed form: {} w",
+        fnum(bounds::lower_bound_words(n, part.p)),
+        fnum(2.0 * (n as f64 * part.r as f64 / part.m as f64 - n as f64 / part.p as f64))
+    );
+    println!(
+        "compute: max {} ternary mults/proc (n³/2P = {})",
+        rep.max_ternary_mults(),
+        fnum((n as f64).powi(3) / (2.0 * part.p as f64))
+    );
+    Ok(())
+}
+
+fn cmd_power_method(args: &Args) -> Result<()> {
+    let (part, label) = partition_for(args)?;
+    let b: usize = args.get_or("b", 8usize);
+    let n = b * part.m;
+    let iters: usize = args.get_or("iters", 50usize);
+    let opts = exec_opts(args)?;
+    println!("higher-order power method on {label}: n={n}, {opts:?}");
+    let lambdas = [5.0f32, 2.0, 1.0];
+    let (tensor, cols) = SymTensor::odeco(n, &lambdas, args.get_or("seed", 7u64));
+    let mut rng = Rng::new(args.get_or("seed", 7u64) + 1);
+    let mut x0 = cols[0].clone();
+    for v in x0.iter_mut() {
+        *v += 0.25 * rng.normal_f32();
+    }
+    let rep = apps::power_method(&tensor, &part, &x0, iters, 1e-6, opts)?;
+    for (t, it) in rep.iters.iter().enumerate() {
+        println!(
+            "iter {:>3}: ||y|| = {:<10.6} lambda = {:<10.6} delta = {:.3e}",
+            t + 1,
+            it.norm,
+            it.lambda,
+            it.delta
+        );
+    }
+    let align = linalg::dot(&rep.x, &cols[0]).abs();
+    println!(
+        "converged: lambda = {:.6} (planted 5.0), |<x, e1>| = {align:.6}",
+        rep.lambda
+    );
+    let max_sent = rep.comm.iter().map(|s| s.sent_words).max().unwrap();
+    println!(
+        "total comm over {} iters: max sent/proc = {} words ({} per iter)",
+        rep.iters.len(),
+        max_sent,
+        max_sent / rep.iters.len() as u64
+    );
+    Ok(())
+}
+
+fn cmd_cp_gradient(args: &Args) -> Result<()> {
+    let (part, label) = partition_for(args)?;
+    let b: usize = args.get_or("b", 4usize);
+    let n = b * part.m;
+    let r: usize = args.get_or("r", 3usize);
+    let opts = exec_opts(args)?;
+    println!("symmetric CP gradient on {label}: n={n}, r={r}, {opts:?}");
+    let lambdas: Vec<f32> = (0..r).map(|l| (r - l) as f32).collect();
+    let (tensor, _) = SymTensor::odeco(n, &lambdas, args.get_or("seed", 11u64));
+    let mut rng = Rng::new(args.get_or("seed", 11u64) + 1);
+    let x_cols: Vec<Vec<f32>> = (0..r).map(|_| rng.normal_vec(n)).collect();
+    let rep = apps::cp_gradient(&tensor, &part, &x_cols, opts)?;
+    for (l, g) in rep.grad.iter().enumerate() {
+        println!("||grad_{l}|| = {:.6}", linalg::norm(g));
+    }
+    let max_sent = rep.comm.iter().map(|s| s.sent_words).max().unwrap();
+    println!("comm: max sent/proc = {max_sent} words over r = {r} STTSVs");
+    Ok(())
+}
+
+fn cmd_mttkrp(args: &Args) -> Result<()> {
+    let (part, label) = partition_for(args)?;
+    let b: usize = args.get_or("b", 4usize);
+    let n = b * part.m;
+    let r: usize = args.get_or("r", 4usize);
+    let opts = exec_opts(args)?;
+    println!("mode-1 symmetric MTTKRP on {label}: n={n}, r={r} (paper §8 extension)");
+    let tensor = SymTensor::random(n, args.get_or("seed", 21u64));
+    let mut rng = Rng::new(args.get_or("seed", 21u64) + 1);
+    let x_cols: Vec<Vec<f32>> = (0..r).map(|_| rng.normal_vec(n)).collect();
+    let (ys, comm) = apps::symmetric_mttkrp(&tensor, &part, &x_cols, opts)?;
+    let mut max_err = 0.0f32;
+    for (l, xl) in x_cols.iter().enumerate() {
+        let want = tensor.sttsv(xl);
+        let scale = want.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+        for i in 0..n {
+            max_err = max_err.max((ys[l][i] - want[i]).abs() / scale);
+        }
+    }
+    println!(
+        "Y: {r} columns of length {n}; max rel err vs r sequential STTSVs = {max_err:.2e} {}",
+        if max_err < 5e-3 { "(OK)" } else { "(FAIL)" }
+    );
+    let max_sent = comm.iter().map(|s| s.sent_words).max().unwrap();
+    println!(
+        "comm: max sent/proc = {max_sent} words = r x {} (one STTSV)",
+        max_sent / r as u64
+    );
+    Ok(())
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    let scale: usize = args.get_or("scale", 2usize);
+    println!("comm-cost sweep (measured on the simulator, words per processor, both phases)");
+    let mut t = Table::new([
+        "q", "P", "n", "measured p2p", "closed form", "lower bound", "meas/LB",
+        "measured a2a", "a2a/LB",
+    ]);
+    for q in [2usize, 3, 4, 5] {
+        let part = TetraPartition::from_steiner(&spherical(q as u64)?)?;
+        let b = q * (q + 1) * scale;
+        let n = b * part.m;
+        let p2p = coordinator::run_comm_only(&part, b, CommMode::PointToPoint)?;
+        let a2a = coordinator::run_comm_only(&part, b, CommMode::AllToAll)?;
+        let meas = p2p.iter().map(|s| s.sent_words).max().unwrap() as f64;
+        let meas_a2a = a2a.iter().map(|s| s.sent_words).max().unwrap() as f64;
+        let lb = bounds::lower_bound_words(n, part.p);
+        t.row([
+            q.to_string(),
+            part.p.to_string(),
+            n.to_string(),
+            fnum(meas),
+            fnum(bounds::algorithm_words(n, q)),
+            fnum(lb),
+            format!("{:.3}", meas / lb),
+            fnum(meas_a2a),
+            format!("{:.3}", meas_a2a / lb),
+        ]);
+    }
+    t.print();
+
+    println!("\nbaselines at q=2 (P=10):");
+    let part = TetraPartition::from_steiner(&spherical(2)?)?;
+    let b: usize = args.get_or("b", 12usize);
+    let n = b * part.m;
+    let tensor = SymTensor::random(n, 1);
+    let mut rng = Rng::new(2);
+    let x = rng.normal_vec(n);
+    let alg = coordinator::run_sttsv(&tensor, &x, &part, CommMode::PointToPoint, Backend::Native)?;
+    let naive = baselines::run_naive_grid(&tensor, &x, part.p)?;
+    let seq = baselines::run_sequence(&tensor, &x, part.p)?;
+    let mut t2 = Table::new(["algorithm", "max sent words/proc", "vs Thm 1 LB"]);
+    let lb = bounds::lower_bound_words(n, part.p);
+    t2.row([
+        "Algorithm 5 (p2p)".to_string(),
+        alg.max_sent_words().to_string(),
+        format!("{:.2}x", alg.max_sent_words() as f64 / lb),
+    ]);
+    t2.row([
+        "naive 3-D grid (Alg 3)".to_string(),
+        naive.max_sent_words().to_string(),
+        format!("{:.2}x", naive.max_sent_words() as f64 / lb),
+    ]);
+    t2.row([
+        "sequence (§8)".to_string(),
+        seq.max_sent_words().to_string(),
+        format!("{:.2}x", seq.max_sent_words() as f64 / lb),
+    ]);
+    t2.print();
+    Ok(())
+}
+
+fn cmd_verify(args: &Args) -> Result<()> {
+    let q: u64 = args.get_or("q", 3u64);
+    println!("verifying spherical q={q} end to end...");
+    let sys = spherical(q)?;
+    sys.verify()?;
+    println!("  Steiner ({}, {}, 3) system: OK ({} blocks)", sys.m, sys.r, sys.num_blocks());
+    let part = TetraPartition::from_steiner(&sys)?;
+    part.verify()?;
+    println!("  tetrahedral partition: OK (P = {})", part.p);
+    let sched = CommSchedule::build(&part)?;
+    sched.validate(&part)?;
+    let expected = q as usize * q as usize * (q as usize + 3) / 2 - 1;
+    println!(
+        "  schedule: OK ({} steps; formula q³/2+3q²/2−1 = {expected})",
+        sched.num_steps()
+    );
+    if sched.num_steps() != expected {
+        bail!("step count mismatch");
+    }
+    Ok(())
+}
+
+fn cmd_bounds(args: &Args) -> Result<()> {
+    let n: usize = args.get_or("n", 1000usize);
+    let mut t = Table::new([
+        "q", "P", "Thm1 LB", "leading 2n/P^(1/3)", "Alg5 p2p", "Alg5 a2a", "steps/phase",
+    ]);
+    for q in [2usize, 3, 4, 5, 7, 8, 9] {
+        let p = q * (q * q + 1);
+        t.row([
+            q.to_string(),
+            p.to_string(),
+            fnum(bounds::lower_bound_words(n, p)),
+            fnum(bounds::lower_bound_leading(n, p)),
+            fnum(bounds::algorithm_words(n, q)),
+            fnum(bounds::alltoall_words(n, q)),
+            bounds::p2p_steps(q).to_string(),
+        ]);
+    }
+    println!("closed-form communication costs at n = {n} (words/processor):");
+    t.print();
+    Ok(())
+}

@@ -1,0 +1,413 @@
+//! Bipartite matching machinery used by the partition and schedule layers.
+//!
+//! * [`hopcroft_karp`] — maximum bipartite matching in O(E·√V); the paper
+//!   cites Hopcroft–Karp / Ford–Fulkerson for exactly these constructions.
+//! * [`disjoint_matchings`] — Corollary 5: `d` pairwise-disjoint matchings,
+//!   each covering every left vertex, found by matching on the graph with
+//!   each left vertex cloned `d` times.
+//! * [`bipartite_edge_coloring`] — Theorem 6 / König: a Δ-regular bipartite
+//!   multigraph decomposes into exactly Δ perfect matchings. Directed
+//!   messages form a bipartite (sender × receiver) multigraph; each color
+//!   class is one communication step in which every processor sends ≤ 1 and
+//!   receives ≤ 1 message — precisely the paper's α-β-γ model constraint.
+
+use anyhow::{bail, Result};
+use std::collections::VecDeque;
+
+/// Maximum matching in a bipartite graph given as left-adjacency lists.
+///
+/// Returns `(size, match_left, match_right)` where `match_left[u]` is the
+/// right vertex matched to left vertex `u` (or None).
+pub fn hopcroft_karp(
+    adj: &[Vec<usize>],
+    n_right: usize,
+) -> (usize, Vec<Option<usize>>, Vec<Option<usize>>) {
+    let n_left = adj.len();
+    let mut match_l: Vec<Option<usize>> = vec![None; n_left];
+    let mut match_r: Vec<Option<usize>> = vec![None; n_right];
+    let mut dist: Vec<u32> = vec![0; n_left];
+    let inf = u32::MAX;
+    let mut size = 0usize;
+
+    fn try_kuhn(
+        u: usize,
+        adj: &[Vec<usize>],
+        dist: &mut [u32],
+        match_l: &mut [Option<usize>],
+        match_r: &mut [Option<usize>],
+    ) -> bool {
+        for i in 0..adj[u].len() {
+            let v = adj[u][i];
+            match match_r[v] {
+                None => {
+                    match_l[u] = Some(v);
+                    match_r[v] = Some(u);
+                    return true;
+                }
+                Some(u2) => {
+                    if dist[u2] == dist[u] + 1 && try_kuhn(u2, adj, dist, match_l, match_r) {
+                        match_l[u] = Some(v);
+                        match_r[v] = Some(u);
+                        return true;
+                    }
+                }
+            }
+        }
+        dist[u] = u32::MAX; // dead end; prune
+        false
+    }
+
+    loop {
+        // BFS layering from free left vertices
+        let mut queue = VecDeque::new();
+        for u in 0..n_left {
+            if match_l[u].is_none() {
+                dist[u] = 0;
+                queue.push_back(u);
+            } else {
+                dist[u] = inf;
+            }
+        }
+        let mut found_augmenting = false;
+        while let Some(u) = queue.pop_front() {
+            for &v in &adj[u] {
+                match match_r[v] {
+                    Some(u2) => {
+                        if dist[u2] == inf {
+                            dist[u2] = dist[u] + 1;
+                            queue.push_back(u2);
+                        }
+                    }
+                    None => found_augmenting = true,
+                }
+            }
+        }
+        if !found_augmenting {
+            break;
+        }
+        for u in 0..n_left {
+            if match_l[u].is_none() && try_kuhn(u, adj, &mut dist, &mut match_l, &mut match_r) {
+                size += 1;
+            }
+        }
+    }
+    (size, match_l, match_r)
+}
+
+/// Corollary 5: find `d` matchings, pairwise disjoint in both edges and
+/// right vertices, each covering every left vertex. Implemented by cloning
+/// each left vertex `d` times and finding one maximum matching of the
+/// expanded graph (Hall's condition `d|W| <= |N(W)|` guarantees a perfect
+/// one exists for the graphs we build; we verify success directly).
+///
+/// Returns `d` vectors, each mapping left vertex -> its right vertex.
+pub fn disjoint_matchings(
+    adj: &[Vec<usize>],
+    n_right: usize,
+    d: usize,
+) -> Result<Vec<Vec<usize>>> {
+    let n_left = adj.len();
+    // expanded left vertex (u, clone) = u * d + c
+    let expanded: Vec<Vec<usize>> = (0..n_left * d).map(|x| adj[x / d].clone()).collect();
+    let (size, match_l, _) = hopcroft_karp(&expanded, n_right);
+    if size != n_left * d {
+        bail!(
+            "no {d} disjoint matchings: matched {size} of {} clones",
+            n_left * d
+        );
+    }
+    let mut out = vec![vec![usize::MAX; n_left]; d];
+    for u in 0..n_left {
+        for c in 0..d {
+            out[c][u] = match_l[u * d + c].unwrap();
+        }
+    }
+    Ok(out)
+}
+
+/// A bipartite multigraph of directed messages: edge (sender, receiver,
+/// payload-id). Senders and receivers are both indexed `0..n`.
+#[derive(Debug, Clone)]
+pub struct BipartiteMultiGraph {
+    pub n: usize,
+    pub edges: Vec<(usize, usize, usize)>,
+}
+
+/// Decompose the message multigraph into the minimum number of steps such
+/// that in each step every vertex sends at most one and receives at most one
+/// message (Theorem 6). Pads to a Δ-regular bipartite multigraph with dummy
+/// edges (payload `usize::MAX`, dropped from the output), then peels Δ
+/// perfect matchings — König's theorem guarantees each peel succeeds.
+///
+/// Returns, per step, the payload ids scheduled in that step. The number of
+/// steps equals the maximum send- or receive-degree Δ.
+pub fn bipartite_edge_coloring(graph: &BipartiteMultiGraph) -> Result<Vec<Vec<usize>>> {
+    let n = graph.n;
+    let mut out_deg = vec![0usize; n];
+    let mut in_deg = vec![0usize; n];
+    for &(u, v, _) in &graph.edges {
+        out_deg[u] += 1;
+        in_deg[v] += 1;
+    }
+    let delta = out_deg
+        .iter()
+        .chain(in_deg.iter())
+        .copied()
+        .max()
+        .unwrap_or(0);
+    if delta == 0 {
+        return Ok(vec![]);
+    }
+
+    // Pad to Δ-regular: repeatedly connect a send-deficient vertex to a
+    // receive-deficient vertex. Total send deficit == total receive deficit,
+    // so this always terminates. (A dummy u->u message is harmless: sender
+    // side and receiver side are different parts of the bipartition.)
+    let mut edges = graph.edges.clone();
+    loop {
+        let u = (0..n).find(|&u| out_deg[u] < delta);
+        let v = (0..n).find(|&v| in_deg[v] < delta);
+        match (u, v) {
+            (Some(u), Some(v)) => {
+                edges.push((u, v, usize::MAX));
+                out_deg[u] += 1;
+                in_deg[v] += 1;
+            }
+            (None, None) => break,
+            _ => bail!("send/receive deficit mismatch while padding"),
+        }
+    }
+
+    // Peel Δ perfect matchings. Multigraph handling: deduplicate (u,v) pairs
+    // for the matching step, then remove one *edge instance* per matched pair.
+    let mut remaining: Vec<(usize, usize, usize)> = edges;
+    let mut steps = Vec::with_capacity(delta);
+    for round in 0..delta {
+        let mut adj: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for &(u, v, _) in &remaining {
+            if !adj[u].contains(&v) {
+                adj[u].push(v);
+            }
+        }
+        let (size, match_l, _) = hopcroft_karp(&adj, n);
+        if size != n {
+            bail!(
+                "König peel failed at round {round}: matched {size}/{n} \
+                 (graph not regular?)"
+            );
+        }
+        let mut step = Vec::new();
+        for u in 0..n {
+            let v = match_l[u].unwrap();
+            // remove one instance of (u, v)
+            let idx = remaining
+                .iter()
+                .position(|&(a, b, _)| a == u && b == v)
+                .expect("matched edge must exist");
+            let (_, _, payload) = remaining.swap_remove(idx);
+            if payload != usize::MAX {
+                step.push(payload);
+            }
+        }
+        if !step.is_empty() {
+            steps.push(step);
+        }
+    }
+    debug_assert!(remaining.is_empty());
+    Ok(steps)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    /// brute-force maximum matching by augmenting paths (Kuhn), as oracle
+    fn kuhn_oracle(adj: &[Vec<usize>], n_right: usize) -> usize {
+        fn aug(u: usize, adj: &[Vec<usize>], seen: &mut [bool], mr: &mut [Option<usize>]) -> bool {
+            for &v in &adj[u] {
+                if !seen[v] {
+                    seen[v] = true;
+                    if mr[v].is_none() || aug(mr[v].unwrap(), adj, seen, mr) {
+                        mr[v] = Some(u);
+                        return true;
+                    }
+                }
+            }
+            false
+        }
+        let mut mr = vec![None; n_right];
+        let mut size = 0;
+        for u in 0..adj.len() {
+            let mut seen = vec![false; n_right];
+            if aug(u, adj, &mut seen, &mut mr) {
+                size += 1;
+            }
+        }
+        size
+    }
+
+    #[test]
+    fn hk_matches_oracle_on_random_graphs() {
+        let mut rng = Rng::new(11);
+        for trial in 0..60 {
+            let nl = 1 + rng.below(12);
+            let nr = 1 + rng.below(12);
+            let adj: Vec<Vec<usize>> = (0..nl)
+                .map(|_| {
+                    let deg = rng.below(nr + 1);
+                    let mut vs: Vec<usize> = (0..nr).collect();
+                    rng.shuffle(&mut vs);
+                    vs.truncate(deg);
+                    vs
+                })
+                .collect();
+            let (size, ml, mr) = hopcroft_karp(&adj, nr);
+            assert_eq!(size, kuhn_oracle(&adj, nr), "trial {trial}");
+            // consistency of the returned matching
+            let mut used_r = vec![false; nr];
+            let mut count = 0;
+            for u in 0..nl {
+                if let Some(v) = ml[u] {
+                    assert!(adj[u].contains(&v));
+                    assert!(!used_r[v]);
+                    used_r[v] = true;
+                    assert_eq!(mr[v], Some(u));
+                    count += 1;
+                }
+            }
+            assert_eq!(count, size);
+        }
+    }
+
+    #[test]
+    fn hk_perfect_on_complete_bipartite() {
+        let n = 8;
+        let adj: Vec<Vec<usize>> = (0..n).map(|_| (0..n).collect()).collect();
+        let (size, _, _) = hopcroft_karp(&adj, n);
+        assert_eq!(size, n);
+    }
+
+    #[test]
+    fn disjoint_matchings_on_expandable_graph() {
+        // The Corollary 5 semantics: each right vertex is used at most once
+        // GLOBALLY across the d matchings (this is how non-central diagonal
+        // blocks are assigned — every block to exactly one processor). So we
+        // need |adj| targets ≥ d per left vertex with enough global slack:
+        // left 0..4, rights 0..12, each left sees 6 rights.
+        let nl = 4;
+        let nr = 12;
+        let d = 3;
+        let adj: Vec<Vec<usize>> = (0..nl)
+            .map(|u| (0..6).map(|k| (3 * u + k) % nr).collect())
+            .collect();
+        let ms = disjoint_matchings(&adj, nr, d).unwrap();
+        assert_eq!(ms.len(), d);
+        let mut used_rights = std::collections::HashSet::new();
+        for m in &ms {
+            assert_eq!(m.len(), nl); // covers every left vertex
+            for (u, &v) in m.iter().enumerate() {
+                assert!(adj[u].contains(&v));
+                assert!(used_rights.insert(v), "right vertex {v} assigned twice");
+            }
+        }
+        assert_eq!(used_rights.len(), nl * d);
+    }
+
+    #[test]
+    fn disjoint_matchings_fails_when_impossible() {
+        let adj = vec![vec![0], vec![0]];
+        assert!(disjoint_matchings(&adj, 1, 1).is_err());
+    }
+
+    fn check_schedule(n: usize, edges: &[(usize, usize, usize)], steps: &[Vec<usize>]) {
+        let mut seen = std::collections::HashSet::new();
+        for step in steps {
+            let mut sending = vec![false; n];
+            let mut receiving = vec![false; n];
+            for &payload in step {
+                let (u, v, _) = edges[payload];
+                assert!(!sending[u], "vertex {u} sends twice in one step");
+                assert!(!receiving[v], "vertex {v} receives twice in one step");
+                sending[u] = true;
+                receiving[v] = true;
+                assert!(seen.insert(payload));
+            }
+        }
+        assert_eq!(seen.len(), edges.len(), "not all messages scheduled");
+    }
+
+    #[test]
+    fn coloring_all_to_all() {
+        // complete directed exchange among n: Δ = n-1 steps
+        let n = 5;
+        let mut edges = vec![];
+        for u in 0..n {
+            for v in 0..n {
+                if u != v {
+                    edges.push((u, v, edges.len()));
+                }
+            }
+        }
+        let g = BipartiteMultiGraph { n, edges: edges.clone() };
+        let steps = bipartite_edge_coloring(&g).unwrap();
+        assert_eq!(steps.len(), n - 1);
+        check_schedule(n, &edges, &steps);
+    }
+
+    #[test]
+    fn coloring_symmetric_exchanges() {
+        // ring of symmetric exchanges: each vertex sends/receives 2 → 2 steps
+        let n = 6;
+        let mut edges = vec![];
+        for u in 0..n {
+            let v = (u + 1) % n;
+            edges.push((u, v, edges.len()));
+            edges.push((v, u, edges.len()));
+        }
+        let g = BipartiteMultiGraph { n, edges: edges.clone() };
+        let steps = bipartite_edge_coloring(&g).unwrap();
+        assert_eq!(steps.len(), 2);
+        check_schedule(n, &edges, &steps);
+    }
+
+    #[test]
+    fn coloring_random_irregular() {
+        let mut rng = Rng::new(5);
+        for _ in 0..40 {
+            let n = 3 + rng.below(10);
+            let mut edges = vec![];
+            for u in 0..n {
+                for v in 0..n {
+                    if u != v && rng.next_f64() < 0.35 {
+                        edges.push((u, v, edges.len()));
+                    }
+                }
+            }
+            if edges.is_empty() {
+                continue;
+            }
+            let mut outd = vec![0usize; n];
+            let mut ind = vec![0usize; n];
+            for &(u, v, _) in &edges {
+                outd[u] += 1;
+                ind[v] += 1;
+            }
+            let delta = outd.iter().chain(ind.iter()).copied().max().unwrap();
+            let g = BipartiteMultiGraph { n, edges: edges.clone() };
+            let steps = bipartite_edge_coloring(&g).unwrap();
+            check_schedule(n, &edges, &steps);
+            assert!(steps.len() <= delta, "steps {} > Δ {}", steps.len(), delta);
+        }
+    }
+
+    #[test]
+    fn coloring_handles_parallel_edges() {
+        // two parallel messages 0->1 force 2 steps
+        let edges = vec![(0, 1, 0), (0, 1, 1)];
+        let g = BipartiteMultiGraph { n: 2, edges: edges.clone() };
+        let steps = bipartite_edge_coloring(&g).unwrap();
+        assert_eq!(steps.len(), 2);
+        check_schedule(2, &edges, &steps);
+    }
+}

@@ -1,0 +1,410 @@
+//! Tetrahedral block partitioning (§6 of the paper).
+//!
+//! Given a Steiner (m, r, 3) system, the strict lower tetrahedron of the
+//! block-index space {(i,j,k) : i > j > k} is partitioned into tetrahedral
+//! blocks TB₃(R_p): processor p owns every off-diagonal block whose three
+//! distinct indices all lie in its Steiner block R_p. Diagonal blocks
+//! ((a,a,b), (a,b,b) non-central; (a,a,a) central) are assigned by bipartite
+//! matching so that their computations need no vector data beyond what the
+//! off-diagonal assignment already requires (§6.1.3).
+
+use crate::matching::{disjoint_matchings, hopcroft_karp};
+use crate::steiner::SteinerSystem;
+use anyhow::{bail, Context, Result};
+
+/// Classification of a lower-tetrahedral block index (i >= j >= k).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BlockKind {
+    /// i > j > k
+    OffDiagonal,
+    /// exactly two indices equal: (a,a,b) or (a,b,b) with a > b
+    NonCentralDiagonal,
+    /// i == j == k
+    CentralDiagonal,
+}
+
+/// Classify a lower-tetrahedral block index triple (requires i >= j >= k).
+pub fn classify(i: usize, j: usize, k: usize) -> BlockKind {
+    assert!(i >= j && j >= k, "block index must satisfy i >= j >= k");
+    if i > j && j > k {
+        BlockKind::OffDiagonal
+    } else if i == j && j == k {
+        BlockKind::CentralDiagonal
+    } else {
+        BlockKind::NonCentralDiagonal
+    }
+}
+
+/// The tetrahedral block defined by an index subset R (paper §6):
+/// TB₃(R) = {(i,j,k) : i,j,k ∈ R, i > j > k}, in lexicographic order.
+pub fn tb3(r: &[usize]) -> Vec<(usize, usize, usize)> {
+    let mut s = r.to_vec();
+    s.sort_unstable();
+    let mut out = Vec::new();
+    for a in 0..s.len() {
+        for b in 0..a {
+            for c in 0..b {
+                out.push((s[a], s[b], s[c]));
+            }
+        }
+    }
+    out
+}
+
+/// A complete tetrahedral block partition: the paper's Tables 1/3 object.
+#[derive(Debug, Clone)]
+pub struct TetraPartition {
+    /// Number of row blocks m (= q²+1 for the spherical family).
+    pub m: usize,
+    /// Number of processors P (= number of Steiner blocks).
+    pub p: usize,
+    /// Steiner block size r (= q+1 for the spherical family).
+    pub r: usize,
+    /// R_p: the index set of processor p's tetrahedral block (sorted).
+    pub r_p: Vec<Vec<usize>>,
+    /// N_p: non-central diagonal blocks assigned to processor p, as
+    /// lower-tetrahedral triples (i >= j >= k with exactly two equal).
+    pub n_p: Vec<Vec<(usize, usize, usize)>>,
+    /// D_p: the central diagonal block index assigned to p, if any.
+    pub d_p: Vec<Option<usize>>,
+    /// Q_i: the processors that require row block i (those with i ∈ R_p).
+    pub q_i: Vec<Vec<usize>>,
+}
+
+impl TetraPartition {
+    /// Build the full partition from a Steiner (m, r, 3) system, assigning
+    /// diagonal blocks via the §6.1.3 matchings.
+    pub fn from_steiner(sys: &SteinerSystem) -> Result<Self> {
+        let m = sys.m;
+        let p = sys.num_blocks();
+        let r_p = sys.blocks.clone();
+
+        // Q_i: processors whose R_p contains i.
+        let mut q_i: Vec<Vec<usize>> = vec![Vec::new(); m];
+        for (pi, r) in r_p.iter().enumerate() {
+            for &i in r {
+                q_i[i].push(pi);
+            }
+        }
+
+        // --- non-central diagonal blocks ------------------------------
+        // Right vertices: all (a,a,b) and (a,b,b) with a > b.
+        let mut nc_blocks: Vec<(usize, usize, usize)> = Vec::new();
+        for a in 0..m {
+            for b in 0..a {
+                nc_blocks.push((a, a, b));
+                nc_blocks.push((a, b, b));
+            }
+        }
+        let total_nc = m * (m - 1);
+        debug_assert_eq!(nc_blocks.len(), total_nc);
+        if total_nc % p != 0 {
+            bail!(
+                "non-central diagonal count {total_nc} not divisible by P={p}; \
+                 this Steiner system does not admit the balanced assignment"
+            );
+        }
+        let d = total_nc / p; // = q for the spherical family
+
+        // Bipartite graph: processor -> compatible non-central blocks
+        // ({a, b} ⊆ R_p).
+        let adj: Vec<Vec<usize>> = r_p
+            .iter()
+            .map(|r| {
+                nc_blocks
+                    .iter()
+                    .enumerate()
+                    .filter(|(_, &(a, _, c))| r.contains(&a) && r.contains(&c))
+                    .map(|(idx, _)| idx)
+                    .collect()
+            })
+            .collect();
+        let assignments = disjoint_matchings(&adj, nc_blocks.len(), d)
+            .context("non-central diagonal block assignment (Corollary 5)")?;
+        let mut n_p: Vec<Vec<(usize, usize, usize)>> = vec![Vec::new(); p];
+        for matching in &assignments {
+            for (proc, &blk) in matching.iter().enumerate() {
+                n_p[proc].push(nc_blocks[blk]);
+            }
+        }
+
+        // --- central diagonal blocks ----------------------------------
+        // Match each of the m central blocks (a,a,a) to a processor with
+        // a ∈ R_p (Hall's theorem guarantees a matching; §6.1.3).
+        let central_adj: Vec<Vec<usize>> = (0..m).map(|a| q_i[a].clone()).collect();
+        let (size, match_l, _) = hopcroft_karp(&central_adj, p);
+        if size != m {
+            bail!("central diagonal matching covered only {size}/{m} blocks");
+        }
+        let mut d_p: Vec<Option<usize>> = vec![None; p];
+        for a in 0..m {
+            let proc = match_l[a].unwrap();
+            debug_assert!(d_p[proc].is_none());
+            d_p[proc] = Some(a);
+        }
+
+        Ok(TetraPartition {
+            m,
+            p,
+            r: sys.r,
+            r_p,
+            n_p,
+            d_p,
+            q_i,
+        })
+    }
+
+    /// Build a partition from published (R_p, N_p, D_p) rows (the paper's
+    /// Tables 1/3 fixtures) rather than re-deriving the matchings.
+    pub fn from_rows(m: usize, rows: &[crate::steiner::fixtures::PaperRow]) -> Result<Self> {
+        let p = rows.len();
+        let r = rows[0].r_p.len();
+        let r_p: Vec<Vec<usize>> = rows.iter().map(|x| x.r_p.clone()).collect();
+        let n_p: Vec<Vec<(usize, usize, usize)>> = rows.iter().map(|x| x.n_p.clone()).collect();
+        let d_p: Vec<Option<usize>> = rows.iter().map(|x| x.d_p).collect();
+        let mut q_i: Vec<Vec<usize>> = vec![Vec::new(); m];
+        for (pi, rset) in r_p.iter().enumerate() {
+            for &i in rset {
+                q_i[i].push(pi);
+            }
+        }
+        let part = TetraPartition { m, p, r, r_p, n_p, d_p, q_i };
+        part.verify()?;
+        Ok(part)
+    }
+
+    /// Off-diagonal blocks owned by processor p: TB₃(R_p).
+    pub fn offdiag_blocks(&self, p: usize) -> Vec<(usize, usize, usize)> {
+        tb3(&self.r_p[p])
+    }
+
+    /// All lower-tetrahedral blocks owned by processor p (off-diagonal,
+    /// then non-central diagonal, then central diagonal).
+    pub fn owned_blocks(&self, p: usize) -> Vec<(usize, usize, usize)> {
+        let mut out = self.offdiag_blocks(p);
+        out.extend(self.n_p[p].iter().copied());
+        if let Some(a) = self.d_p[p] {
+            out.push((a, a, a));
+        }
+        out
+    }
+
+    /// Verify the partition invariants:
+    /// every lower-tetrahedral block (i >= j >= k) owned by exactly one
+    /// processor, and every diagonal block compatible with its owner's R_p.
+    pub fn verify(&self) -> Result<()> {
+        let mut owner = std::collections::HashMap::new();
+        for p in 0..self.p {
+            for blk in self.owned_blocks(p) {
+                if let Some(prev) = owner.insert(blk, p) {
+                    bail!("block {:?} owned by both {prev} and {p}", blk);
+                }
+            }
+        }
+        let expected = self.m * (self.m + 1) * (self.m + 2) / 6;
+        if owner.len() != expected {
+            bail!("{} blocks owned, expected {expected}", owner.len());
+        }
+        // compatibility: diagonal blocks only touch indices in R_p
+        for p in 0..self.p {
+            for &(a, b, c) in &self.n_p[p] {
+                if !(a >= b && b >= c && (a == b || b == c) && a != c) {
+                    bail!("{:?} is not a non-central diagonal block", (a, b, c));
+                }
+                if !(self.r_p[p].contains(&a) && self.r_p[p].contains(&c)) {
+                    bail!("non-central block {:?} incompatible with R_{p}", (a, b, c));
+                }
+            }
+            if let Some(a) = self.d_p[p] {
+                if !self.r_p[p].contains(&a) {
+                    bail!("central block ({a},{a},{a}) incompatible with R_{p}");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Number of row-block portions each processor holds: every p holds a
+    /// 1/|Q_i| slice of row block i for each i ∈ R_p.
+    pub fn lambda1(&self) -> usize {
+        self.q_i[0].len()
+    }
+
+    /// The sub-range of row block i (of length b) owned by processor p,
+    /// where p must be in Q_i. Slices are contiguous and near-even (sizes
+    /// differ by at most 1 when |Q_i| does not divide b).
+    pub fn portion(&self, i: usize, p: usize, b: usize) -> std::ops::Range<usize> {
+        let qi = &self.q_i[i];
+        let idx = qi
+            .iter()
+            .position(|&x| x == p)
+            .expect("processor does not require this row block");
+        let parts = qi.len();
+        let base = b / parts;
+        let extra = b % parts;
+        let start = idx * base + idx.min(extra);
+        let len = base + usize::from(idx < extra);
+        start..start + len
+    }
+
+    /// Per-processor tensor storage in words for block size b (paper §6.1.3
+    /// closing count): packed lower-tetrahedral element counts.
+    pub fn tensor_words(&self, p: usize, b: usize) -> usize {
+        let off = self.offdiag_blocks(p).len() * b * b * b;
+        let nc = self.n_p[p].len() * b * b * (b + 1) / 2;
+        let c = if self.d_p[p].is_some() {
+            b * (b + 1) * (b + 2) / 6
+        } else {
+            0
+        };
+        off + nc + c
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::steiner::{fixtures, spherical, sqs8};
+
+    #[test]
+    fn tb3_matches_paper_example() {
+        // Paper §6: TB₃({1,4,6,8}) = {(6,4,1),(8,4,1),(8,6,1),(8,6,4)}
+        // (1-indexed). 0-indexed: {0,3,5,7}.
+        let blocks = tb3(&[0, 3, 5, 7]);
+        assert_eq!(
+            blocks,
+            vec![(5, 3, 0), (7, 3, 0), (7, 5, 0), (7, 5, 3)]
+        );
+    }
+
+    #[test]
+    fn classify_kinds() {
+        assert_eq!(classify(3, 2, 1), BlockKind::OffDiagonal);
+        assert_eq!(classify(3, 3, 1), BlockKind::NonCentralDiagonal);
+        assert_eq!(classify(3, 1, 1), BlockKind::NonCentralDiagonal);
+        assert_eq!(classify(2, 2, 2), BlockKind::CentralDiagonal);
+    }
+
+    #[test]
+    fn partition_from_spherical_q2() {
+        let s = spherical(2).unwrap();
+        let part = TetraPartition::from_steiner(&s).unwrap();
+        assert_eq!(part.m, 5);
+        assert_eq!(part.p, 10);
+        part.verify().unwrap();
+        // q = 2: each processor gets q = 2 non-central blocks, (q+1)q(q-1)/6
+        // = 1 off-diagonal block.
+        for p in 0..part.p {
+            assert_eq!(part.n_p[p].len(), 2);
+            assert_eq!(part.offdiag_blocks(p).len(), 1);
+        }
+        // 5 central blocks over 10 processors: 5 assigned
+        assert_eq!(part.d_p.iter().flatten().count(), 5);
+    }
+
+    #[test]
+    fn partition_from_spherical_q3_matches_table1_shape() {
+        let s = spherical(3).unwrap();
+        let part = TetraPartition::from_steiner(&s).unwrap();
+        assert_eq!((part.m, part.p), (10, 30));
+        part.verify().unwrap();
+        for p in 0..part.p {
+            assert_eq!(part.offdiag_blocks(p).len(), 4); // (q+1)q(q-1)/6
+            assert_eq!(part.n_p[p].len(), 3); // q
+        }
+        assert_eq!(part.d_p.iter().flatten().count(), 10); // m central blocks
+        for i in 0..part.m {
+            assert_eq!(part.q_i[i].len(), 12); // q(q+1), Table 2
+        }
+    }
+
+    #[test]
+    fn partition_from_sqs8_matches_table3_shape() {
+        let part = TetraPartition::from_steiner(&sqs8()).unwrap();
+        assert_eq!((part.m, part.p), (8, 14));
+        part.verify().unwrap();
+        for p in 0..part.p {
+            assert_eq!(part.offdiag_blocks(p).len(), 4); // C(4,3)
+            assert_eq!(part.n_p[p].len(), 4); // m(m-1)/P = 56/14
+        }
+        assert_eq!(part.d_p.iter().flatten().count(), 8);
+        for i in 0..part.m {
+            assert_eq!(part.q_i[i].len(), 7); // λ₁
+        }
+    }
+
+    #[test]
+    fn paper_table1_rows_form_valid_partition() {
+        let part = TetraPartition::from_rows(10, &fixtures::table1()).unwrap();
+        assert_eq!(part.p, 30);
+        // Q_i derived from rows must equal the paper's Table 2
+        assert_eq!(part.q_i, fixtures::table2());
+    }
+
+    #[test]
+    fn paper_table3_rows_form_valid_partition() {
+        let part = TetraPartition::from_rows(8, &fixtures::table3()).unwrap();
+        assert_eq!(part.p, 14);
+        part.verify().unwrap();
+    }
+
+    #[test]
+    fn portions_tile_each_row_block() {
+        let s = spherical(2).unwrap();
+        let part = TetraPartition::from_steiner(&s).unwrap();
+        for b in [6usize, 7, 12, 30] {
+            for i in 0..part.m {
+                let mut covered = vec![false; b];
+                for &p in &part.q_i[i] {
+                    for x in part.portion(i, p, b) {
+                        assert!(!covered[x]);
+                        covered[x] = true;
+                    }
+                }
+                assert!(covered.iter().all(|&c| c), "row block {i} b={b}");
+            }
+        }
+    }
+
+    #[test]
+    fn tensor_words_close_to_n3_over_6p() {
+        // Paper: each processor stores ≈ n³/6P tensor elements.
+        let s = spherical(3).unwrap();
+        let part = TetraPartition::from_steiner(&s).unwrap();
+        let b = 24;
+        let n = b * part.m;
+        let target = (n * n * n) as f64 / (6.0 * part.p as f64);
+        for p in 0..part.p {
+            let w = part.tensor_words(p, b) as f64;
+            assert!(
+                (w - target).abs() / target < 0.25,
+                "proc {p}: {w} vs {target}"
+            );
+        }
+    }
+
+    #[test]
+    fn owned_blocks_cover_every_lower_tetra_block_exactly_once() {
+        for sys in [spherical(2).unwrap(), sqs8()] {
+            let part = TetraPartition::from_steiner(&sys).unwrap();
+            let mut count = std::collections::HashMap::new();
+            for p in 0..part.p {
+                for blk in part.owned_blocks(p) {
+                    *count.entry(blk).or_insert(0usize) += 1;
+                }
+            }
+            for i in 0..part.m {
+                for j in 0..=i {
+                    for k in 0..=j {
+                        assert_eq!(
+                            count.get(&(i, j, k)).copied().unwrap_or(0),
+                            1,
+                            "block {:?}",
+                            (i, j, k)
+                        );
+                    }
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,388 @@
+//! PJRT runtime: loads the AOT-compiled HLO artifacts (JAX/Pallas lowered at
+//! build time by `python/compile/aot.py`) and executes them from the Rust
+//! hot path. Python never runs here.
+//!
+//! Threading: the `xla` crate's PJRT wrappers hold raw pointers that are not
+//! `Send`/`Sync`, while the simulator runs P worker threads. All PJRT
+//! objects therefore live on one dedicated **engine service thread**; worker
+//! threads talk to it over a channel. The native backend computes inline on
+//! the calling thread (used for cross-checks and as the CPU perf baseline).
+
+mod native;
+
+pub use native::{block_contract_native, dense_sttsv_native};
+
+use anyhow::{anyhow, bail, Context, Result};
+use std::collections::{HashMap, HashSet};
+use std::path::{Path, PathBuf};
+use std::sync::mpsc;
+
+/// Which compute backend executes block contractions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    /// Pure-Rust loops (always available; cross-check + perf baseline).
+    Native,
+    /// AOT JAX/Pallas kernels via the PJRT CPU client.
+    Pjrt,
+}
+
+impl std::str::FromStr for Backend {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "native" => Ok(Backend::Native),
+            "pjrt" => Ok(Backend::Pjrt),
+            other => bail!("unknown backend '{other}' (use native|pjrt)"),
+        }
+    }
+}
+
+/// Resolve the artifacts directory: $STTSV_ARTIFACTS or ./artifacts.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var_os("STTSV_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+/// A request to the engine service thread: execute artifact `name` on
+/// f32 inputs with the given dims; reply with the output tuple.
+struct Req {
+    name: String,
+    inputs: Vec<(Vec<f32>, Vec<i64>)>,
+    reply: mpsc::Sender<Result<Vec<Vec<f32>>>>,
+}
+
+/// Handle to the engine. Cheap to clone; safe to use from many threads.
+#[derive(Clone)]
+pub struct Engine {
+    backend: Backend,
+    tx: Option<mpsc::Sender<Req>>,
+    available: HashSet<String>,
+}
+
+impl Engine {
+    /// Create an engine. For [`Backend::Pjrt`] this spawns the service
+    /// thread, creates the PJRT CPU client there, and reads the artifact
+    /// manifest; executables are compiled lazily and cached by name.
+    pub fn new(backend: Backend) -> Result<Engine> {
+        match backend {
+            Backend::Native => Ok(Engine {
+                backend,
+                tx: None,
+                available: HashSet::new(),
+            }),
+            Backend::Pjrt => {
+                let dir = artifacts_dir();
+                let manifest = dir.join("manifest.txt");
+                let text = std::fs::read_to_string(&manifest).with_context(|| {
+                    format!(
+                        "reading {} — run `make artifacts` first",
+                        manifest.display()
+                    )
+                })?;
+                let mut available = HashSet::new();
+                for line in text.lines() {
+                    if let Some(name) = line
+                        .split_whitespace()
+                        .find_map(|f| f.strip_prefix("name="))
+                    {
+                        available.insert(name.to_string());
+                    }
+                }
+                let (tx, rx) = mpsc::channel::<Req>();
+                std::thread::Builder::new()
+                    .name("pjrt-engine".into())
+                    .spawn(move || service_loop(rx, dir))
+                    .context("spawning engine thread")?;
+                Ok(Engine {
+                    backend,
+                    tx: Some(tx),
+                    available,
+                })
+            }
+        }
+    }
+
+    /// Process-wide shared engine per backend. The PJRT engine owns an
+    /// executable cache keyed by artifact name; sharing it across
+    /// `run_sttsv` calls means each artifact is compiled once per process
+    /// instead of once per call — the dominant cost of iterative apps like
+    /// the power method (see EXPERIMENTS.md §Perf, P1).
+    pub fn shared(backend: Backend) -> Result<Engine> {
+        use std::sync::OnceLock;
+        static NATIVE: OnceLock<Engine> = OnceLock::new();
+        static PJRT: OnceLock<std::result::Result<Engine, String>> = OnceLock::new();
+        match backend {
+            Backend::Native => Ok(NATIVE
+                .get_or_init(|| Engine::new(Backend::Native).expect("native engine"))
+                .clone()),
+            Backend::Pjrt => PJRT
+                .get_or_init(|| Engine::new(Backend::Pjrt).map_err(|e| format!("{e:#}")))
+                .clone()
+                .map_err(|e| anyhow!("{e}")),
+        }
+    }
+
+    /// The backend this engine runs.
+    pub fn backend(&self) -> Backend {
+        self.backend
+    }
+
+    /// Whether an artifact with this name exists in the manifest.
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.available.contains(name)
+    }
+
+    fn call(&self, name: &str, inputs: Vec<(Vec<f32>, Vec<i64>)>) -> Result<Vec<Vec<f32>>> {
+        let tx = self
+            .tx
+            .as_ref()
+            .ok_or_else(|| anyhow!("engine has no PJRT service thread"))?;
+        let (reply_tx, reply_rx) = mpsc::channel();
+        tx.send(Req {
+            name: name.to_string(),
+            inputs,
+            reply: reply_tx,
+        })
+        .map_err(|_| anyhow!("engine thread gone"))?;
+        reply_rx
+            .recv()
+            .map_err(|_| anyhow!("engine thread dropped reply"))?
+    }
+
+    /// Fused ternary block contraction on one b×b×b block (L1 kernel):
+    /// returns (ci, cj, ck). Dispatches to the `block_b{b}` artifact or the
+    /// native loops.
+    pub fn block_contract(
+        &self,
+        a: &[f32],
+        u: &[f32],
+        v: &[f32],
+        w: &[f32],
+        b: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        debug_assert_eq!(a.len(), b * b * b);
+        match self.backend {
+            Backend::Native => Ok(block_contract_native(a, u, v, w, b)),
+            Backend::Pjrt => {
+                let name = format!("block_b{b}");
+                if !self.has_artifact(&name) {
+                    bail!("artifact {name} not in manifest; re-run make artifacts");
+                }
+                let bt = b as i64;
+                let out = self.call(
+                    &name,
+                    vec![
+                        (a.to_vec(), vec![bt, bt, bt]),
+                        (u.to_vec(), vec![bt]),
+                        (v.to_vec(), vec![bt]),
+                        (w.to_vec(), vec![bt]),
+                    ],
+                )?;
+                let [ci, cj, ck]: [Vec<f32>; 3] = out
+                    .try_into()
+                    .map_err(|_| anyhow!("{name}: expected 3 outputs"))?;
+                Ok((ci, cj, ck))
+            }
+        }
+    }
+
+    /// Batched fused contraction over `nb` stacked blocks (the hot-path
+    /// variant: one PJRT dispatch per block type). Falls back to looping
+    /// single-block calls when no `block_batch_b{b}_nb{nb}` artifact exists.
+    #[allow(clippy::too_many_arguments)]
+    pub fn block_contract_batch(
+        &self,
+        a: &[f32],
+        u: &[f32],
+        v: &[f32],
+        w: &[f32],
+        b: usize,
+        nb: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        debug_assert_eq!(a.len(), nb * b * b * b);
+        match self.backend {
+            Backend::Native => {
+                let mut ci = Vec::with_capacity(nb * b);
+                let mut cj = Vec::with_capacity(nb * b);
+                let mut ck = Vec::with_capacity(nb * b);
+                for s in 0..nb {
+                    let (x, y, z) = block_contract_native(
+                        &a[s * b * b * b..(s + 1) * b * b * b],
+                        &u[s * b..(s + 1) * b],
+                        &v[s * b..(s + 1) * b],
+                        &w[s * b..(s + 1) * b],
+                        b,
+                    );
+                    ci.extend(x);
+                    cj.extend(y);
+                    ck.extend(z);
+                }
+                Ok((ci, cj, ck))
+            }
+            Backend::Pjrt => {
+                let name = format!("block_batch_b{b}_nb{nb}");
+                if !self.has_artifact(&name) {
+                    // loop the single-block artifact
+                    let mut ci = Vec::with_capacity(nb * b);
+                    let mut cj = Vec::with_capacity(nb * b);
+                    let mut ck = Vec::with_capacity(nb * b);
+                    for s in 0..nb {
+                        let (x, y, z) = self.block_contract(
+                            &a[s * b * b * b..(s + 1) * b * b * b],
+                            &u[s * b..(s + 1) * b],
+                            &v[s * b..(s + 1) * b],
+                            &w[s * b..(s + 1) * b],
+                            b,
+                        )?;
+                        ci.extend(x);
+                        cj.extend(y);
+                        ck.extend(z);
+                    }
+                    return Ok((ci, cj, ck));
+                }
+                let (nbt, bt) = (nb as i64, b as i64);
+                let out = self.call(
+                    &name,
+                    vec![
+                        (a.to_vec(), vec![nbt, bt, bt, bt]),
+                        (u.to_vec(), vec![nbt, bt]),
+                        (v.to_vec(), vec![nbt, bt]),
+                        (w.to_vec(), vec![nbt, bt]),
+                    ],
+                )?;
+                let [ci, cj, ck]: [Vec<f32>; 3] = out
+                    .try_into()
+                    .map_err(|_| anyhow!("{name}: expected 3 outputs"))?;
+                Ok((ci, cj, ck))
+            }
+        }
+    }
+
+    /// Dense STTSV on an n×n×n row-major tensor (Algorithm 3 baseline
+    /// executable `dense_sttsv_n{n}`, or native loops).
+    pub fn dense_sttsv(&self, a: &[f32], x: &[f32], n: usize) -> Result<Vec<f32>> {
+        debug_assert_eq!(a.len(), n * n * n);
+        match self.backend {
+            Backend::Native => Ok(dense_sttsv_native(a, x, n)),
+            Backend::Pjrt => {
+                let name = format!("dense_sttsv_n{n}");
+                if !self.has_artifact(&name) {
+                    return Ok(dense_sttsv_native(a, x, n));
+                }
+                let nt = n as i64;
+                let out = self.call(
+                    &name,
+                    vec![(a.to_vec(), vec![nt, nt, nt]), (x.to_vec(), vec![nt])],
+                )?;
+                out.into_iter()
+                    .next()
+                    .ok_or_else(|| anyhow!("{name}: missing output"))
+            }
+        }
+    }
+}
+
+/// The engine service loop: owns the PJRT client and the executable cache.
+fn service_loop(rx: mpsc::Receiver<Req>, dir: PathBuf) {
+    let client = match xla::PjRtClient::cpu() {
+        Ok(c) => c,
+        Err(e) => {
+            // Fail every request with the client error.
+            while let Ok(req) = rx.recv() {
+                let _ = req
+                    .reply
+                    .send(Err(anyhow!("PJRT CPU client failed: {e:?}")));
+            }
+            return;
+        }
+    };
+    let mut cache: HashMap<String, xla::PjRtLoadedExecutable> = HashMap::new();
+    while let Ok(req) = rx.recv() {
+        let result = execute(&client, &mut cache, &dir, &req);
+        let _ = req.reply.send(result);
+    }
+}
+
+fn execute(
+    client: &xla::PjRtClient,
+    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: &Path,
+    req: &Req,
+) -> Result<Vec<Vec<f32>>> {
+    if !cache.contains_key(&req.name) {
+        let path = dir.join(format!("{}.hlo.txt", req.name));
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .map_err(|e| anyhow!("loading {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", req.name))?;
+        cache.insert(req.name.clone(), exe);
+    }
+    let exe = cache.get(&req.name).unwrap();
+    let literals: Vec<xla::Literal> = req
+        .inputs
+        .iter()
+        .map(|(data, dims)| {
+            xla::Literal::vec1(data)
+                .reshape(dims)
+                .map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
+        })
+        .collect::<Result<_>>()?;
+    let result = exe
+        .execute::<xla::Literal>(&literals)
+        .map_err(|e| anyhow!("executing {}: {e:?}", req.name))?[0][0]
+        .to_literal_sync()
+        .map_err(|e| anyhow!("sync {}: {e:?}", req.name))?;
+    // aot.py lowers with return_tuple=True: always a tuple.
+    let parts = result
+        .to_tuple()
+        .map_err(|e| anyhow!("tuple {}: {e:?}", req.name))?;
+    parts
+        .into_iter()
+        .map(|l| l.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}")))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn native_block_contract_matches_brute_force() {
+        let b = 5;
+        let mut rng = Rng::new(1);
+        let a = rng.normal_vec(b * b * b);
+        let (u, v, w) = (rng.normal_vec(b), rng.normal_vec(b), rng.normal_vec(b));
+        let (ci, cj, ck) = block_contract_native(&a, &u, &v, &w, b);
+        for x in 0..b {
+            let mut wi = 0.0f64;
+            let mut wj = 0.0f64;
+            let mut wk = 0.0f64;
+            for y in 0..b {
+                for z in 0..b {
+                    wi += a[(x * b + y) * b + z] as f64 * v[y] as f64 * w[z] as f64;
+                    wj += a[(y * b + x) * b + z] as f64 * u[y] as f64 * w[z] as f64;
+                    wk += a[(y * b + z) * b + x] as f64 * u[y] as f64 * v[z] as f64;
+                }
+            }
+            assert!((ci[x] as f64 - wi).abs() < 1e-4);
+            assert!((cj[x] as f64 - wj).abs() < 1e-4);
+            assert!((ck[x] as f64 - wk).abs() < 1e-4);
+        }
+    }
+
+    #[test]
+    fn backend_parse() {
+        assert_eq!("native".parse::<Backend>().unwrap(), Backend::Native);
+        assert_eq!("pjrt".parse::<Backend>().unwrap(), Backend::Pjrt);
+        assert!("cuda".parse::<Backend>().is_err());
+    }
+
+    // PJRT round-trip tests live in rust/tests/pjrt_integration.rs (they
+    // need `make artifacts` to have run).
+}

@@ -1,0 +1,109 @@
+//! Native (pure-Rust) reference implementations of the compute kernels.
+//!
+//! These serve three purposes: a backend that works without artifacts, a
+//! numeric cross-check for the PJRT path, and the CPU roofline baseline for
+//! the §Perf comparisons. The loop structure mirrors the Pallas kernel: one
+//! pass over A computing all three contractions (3× arithmetic intensity),
+//! with the shared intermediate M = A ×₃ w reused by ci and cj.
+
+/// Fused ternary block contraction: A is b×b×b row-major ((a·b+β)·b+γ).
+///
+///   ci[a] = Σ_{β,γ} A[a,β,γ]·v[β]·w[γ]
+///   cj[β] = Σ_{a,γ} A[a,β,γ]·u[a]·w[γ]
+///   ck[γ] = Σ_{a,β} A[a,β,γ]·u[a]·v[β]
+pub fn block_contract_native(
+    a: &[f32],
+    u: &[f32],
+    v: &[f32],
+    w: &[f32],
+    b: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    let mut ci = vec![0.0f32; b];
+    let mut cj = vec![0.0f32; b];
+    let mut ck = vec![0.0f32; b];
+    // Single pass over A in row-major order: each b-length row A[x,y,:]
+    // stays in L1 and is used twice —
+    //   m = Σ_z A[x,y,z]·w[z]          (shared between ci and cj)
+    //   ci[x] += m·v[y]; cj[y] += m·u[x]
+    //   ck[z] += A[x,y,z]·(u[x]·v[y])
+    // The dot-product and the axpy run as separate z-sweeps so each
+    // autovectorizes cleanly (a combined sweep mixes a reduction with a
+    // scatter and defeats SIMD — see EXPERIMENTS.md §Perf P2).
+    for x in 0..b {
+        let ux = u[x];
+        let mut ci_x = 0.0f32;
+        for y in 0..b {
+            let row = &a[(x * b + y) * b..(x * b + y + 1) * b];
+            let uv = ux * v[y];
+            let mut m = 0.0f32;
+            for z in 0..b {
+                m += row[z] * w[z];
+            }
+            for z in 0..b {
+                ck[z] += row[z] * uv;
+            }
+            ci_x += m * v[y];
+            cj[y] += m * ux;
+        }
+        ci[x] += ci_x;
+    }
+    (ci, cj, ck)
+}
+
+/// Dense STTSV y = A ×₂ x ×₃ x on an n×n×n row-major tensor (Algorithm 3).
+pub fn dense_sttsv_native(a: &[f32], x: &[f32], n: usize) -> Vec<f32> {
+    let mut y = vec![0.0f32; n];
+    for i in 0..n {
+        let mut acc = 0.0f64;
+        for j in 0..n {
+            let row = &a[(i * n + j) * n..(i * n + j + 1) * n];
+            let mut inner = 0.0f32;
+            for k in 0..n {
+                inner += row[k] * x[k];
+            }
+            acc += inner as f64 * x[j] as f64;
+        }
+        y[i] = acc as f32;
+    }
+    y
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn dense_sttsv_small_known() {
+        // n = 2, A[i][j][k] = 1 everywhere, x = (1, 2): y_i = (1+2)² = 9.
+        let a = vec![1.0f32; 8];
+        let y = dense_sttsv_native(&a, &[1.0, 2.0], 2);
+        assert_eq!(y, vec![9.0, 9.0]);
+    }
+
+    #[test]
+    fn block_contract_on_rank_one_tensor() {
+        // A[x,y,z] = p[x]·q[y]·r[z] ⇒ ci = p·(q·v)(r·w), etc.
+        let b = 4;
+        let mut rng = Rng::new(2);
+        let (p, q, r) = (rng.normal_vec(b), rng.normal_vec(b), rng.normal_vec(b));
+        let (u, v, w) = (rng.normal_vec(b), rng.normal_vec(b), rng.normal_vec(b));
+        let mut a = vec![0.0f32; b * b * b];
+        for x in 0..b {
+            for y in 0..b {
+                for z in 0..b {
+                    a[(x * b + y) * b + z] = p[x] * q[y] * r[z];
+                }
+            }
+        }
+        let dotf = |a: &[f32], b: &[f32]| -> f32 { a.iter().zip(b).map(|(x, y)| x * y).sum() };
+        let (ci, cj, ck) = block_contract_native(&a, &u, &v, &w, b);
+        let (qv, rw, pu, uv) = (dotf(&q, &v), dotf(&r, &w), dotf(&p, &u), dotf(&q, &v));
+        let _ = uv;
+        for t in 0..b {
+            assert!((ci[t] - p[t] * qv * rw).abs() < 1e-4);
+            assert!((cj[t] - q[t] * pu * rw).abs() < 1e-4);
+            assert!((ck[t] - r[t] * pu * qv).abs() < 1e-4);
+        }
+    }
+}

@@ -1,0 +1,264 @@
+//! Communication schedules for Algorithm 5 (§7.2).
+//!
+//! Two processors must exchange vector data iff their Steiner index sets
+//! intersect; the payload of the (p → p′) message is p's own portions of
+//! every shared row block. The paper (Theorem 6) shows all transfers fit in
+//! Δ steps where each processor sends ≤ 1 and receives ≤ 1 message per step,
+//! with Δ = q³/2 + 3q²/2 − 1 for the spherical family (and 12 for the
+//! Table 3 / Figure 1 SQS(8) instance).
+//!
+//! We realize Theorem 6 constructively: the directed message multigraph is
+//! padded to Δ-regular and peeled into Δ perfect matchings (König), exactly
+//! as in `matching::bipartite_edge_coloring`.
+
+use crate::matching::{bipartite_edge_coloring, BipartiteMultiGraph};
+use crate::partition::TetraPartition;
+use anyhow::Result;
+
+/// One directed point-to-point transfer: `from` sends its own portions of
+/// the listed row blocks to `to`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Xfer {
+    pub from: usize,
+    pub to: usize,
+    /// Row blocks shared between the two processors (sorted).
+    pub row_blocks: Vec<usize>,
+}
+
+impl Xfer {
+    /// Words carried by this message for row-block length b: the sender's
+    /// portion of each shared row block.
+    pub fn words(&self, part: &TetraPartition, b: usize) -> usize {
+        self.row_blocks
+            .iter()
+            .map(|&i| part.portion(i, self.from, b).len())
+            .sum()
+    }
+}
+
+/// A stepped point-to-point communication schedule (one vector phase).
+#[derive(Debug, Clone)]
+pub struct CommSchedule {
+    /// All required transfers.
+    pub xfers: Vec<Xfer>,
+    /// Steps: indices into `xfers`; within a step every processor sends at
+    /// most one and receives at most one message (the paper's model).
+    pub steps: Vec<Vec<usize>>,
+}
+
+impl CommSchedule {
+    /// Build the point-to-point schedule for a partition (Theorem 6).
+    pub fn build(part: &TetraPartition) -> Result<CommSchedule> {
+        let mut xfers = Vec::new();
+        for p in 0..part.p {
+            for p2 in 0..part.p {
+                if p == p2 {
+                    continue;
+                }
+                let shared: Vec<usize> = part.r_p[p]
+                    .iter()
+                    .copied()
+                    .filter(|i| part.r_p[p2].contains(i))
+                    .collect();
+                if !shared.is_empty() {
+                    xfers.push(Xfer {
+                        from: p,
+                        to: p2,
+                        row_blocks: shared,
+                    });
+                }
+            }
+        }
+        let graph = BipartiteMultiGraph {
+            n: part.p,
+            edges: xfers
+                .iter()
+                .enumerate()
+                .map(|(id, x)| (x.from, x.to, id))
+                .collect(),
+        };
+        let steps = bipartite_edge_coloring(&graph)?;
+        Ok(CommSchedule { xfers, steps })
+    }
+
+    /// Number of communication steps.
+    pub fn num_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Maximum words sent (== received, by symmetry of the transfer set) by
+    /// any processor over the whole schedule, for row-block length b.
+    pub fn max_words_per_proc(&self, part: &TetraPartition, b: usize) -> usize {
+        let mut sent = vec![0usize; part.p];
+        for x in &self.xfers {
+            sent[x.from] += x.words(part, b);
+        }
+        sent.into_iter().max().unwrap_or(0)
+    }
+
+    /// Validate the schedule against the α-β-γ model and the partition:
+    /// every required transfer appears exactly once, and per step each
+    /// processor sends ≤ 1 and receives ≤ 1 message.
+    pub fn validate(&self, part: &TetraPartition) -> Result<()> {
+        use anyhow::bail;
+        let mut seen = vec![false; self.xfers.len()];
+        for (si, step) in self.steps.iter().enumerate() {
+            let mut sending = vec![false; part.p];
+            let mut receiving = vec![false; part.p];
+            for &xi in step {
+                let x = &self.xfers[xi];
+                if sending[x.from] {
+                    bail!("step {si}: processor {} sends twice", x.from);
+                }
+                if receiving[x.to] {
+                    bail!("step {si}: processor {} receives twice", x.to);
+                }
+                sending[x.from] = true;
+                receiving[x.to] = true;
+                if seen[xi] {
+                    bail!("transfer {xi} scheduled twice");
+                }
+                seen[xi] = true;
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            bail!("not all transfers scheduled");
+        }
+        // completeness: every pair with shared row blocks exchanges both ways
+        for p in 0..part.p {
+            for p2 in 0..part.p {
+                if p == p2 {
+                    continue;
+                }
+                let shared: Vec<usize> = part.r_p[p]
+                    .iter()
+                    .copied()
+                    .filter(|i| part.r_p[p2].contains(i))
+                    .collect();
+                let found = self
+                    .xfers
+                    .iter()
+                    .filter(|x| x.from == p && x.to == p2)
+                    .count();
+                if shared.is_empty() && found != 0 {
+                    bail!("spurious transfer {p} -> {p2}");
+                }
+                if !shared.is_empty() {
+                    if found != 1 {
+                        bail!("expected 1 transfer {p} -> {p2}, found {found}");
+                    }
+                    let x = self
+                        .xfers
+                        .iter()
+                        .find(|x| x.from == p && x.to == p2)
+                        .unwrap();
+                    if x.row_blocks != shared {
+                        bail!("transfer {p} -> {p2} carries wrong row blocks");
+                    }
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+/// Bandwidth cost per processor of the All-to-All formulation (§7.2.2),
+/// for ONE vector phase: the collective runs P−1 steps with a uniform
+/// per-step buffer of λ₂−1... — concretely, the paper's accounting: at each
+/// of the P−1 steps a processor may send its own data of up to 2 row blocks,
+/// i.e. `2·b/λ₁` words, giving `2b/λ₁·(P−1)` words per vector.
+pub fn alltoall_words_per_vector(part: &TetraPartition, b: usize) -> usize {
+    let lambda1 = part.lambda1();
+    2 * b.div_ceil(lambda1) * (part.p - 1)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::steiner::{fixtures, spherical, sqs8};
+
+    fn schedule_for(sys: &crate::steiner::SteinerSystem) -> (TetraPartition, CommSchedule) {
+        let part = TetraPartition::from_steiner(sys).unwrap();
+        let sched = CommSchedule::build(&part).unwrap();
+        sched.validate(&part).unwrap();
+        (part, sched)
+    }
+
+    #[test]
+    fn sqs8_schedule_has_12_steps_like_figure1() {
+        // Figure 1: all transfers for the Table 3 partition complete in 12
+        // steps (< P-1 = 13).
+        let (_, sched) = schedule_for(&sqs8());
+        assert_eq!(sched.num_steps(), 12);
+    }
+
+    #[test]
+    fn paper_table3_partition_also_schedules_in_12_steps() {
+        let part = TetraPartition::from_rows(8, &fixtures::table3()).unwrap();
+        let sched = CommSchedule::build(&part).unwrap();
+        sched.validate(&part).unwrap();
+        assert_eq!(sched.num_steps(), 12);
+    }
+
+    #[test]
+    fn spherical_step_counts_match_formula() {
+        // §7.2: q³/2 + 3q²/2 − 1 steps.
+        for q in [2usize, 3] {
+            let s = spherical(q as u64).unwrap();
+            let (_, sched) = schedule_for(&s);
+            let expected = q * q * (q + 3) / 2 - 1; // q³/2 + 3q²/2 − 1
+            assert_eq!(sched.num_steps(), expected, "q={q}");
+        }
+    }
+
+    #[test]
+    fn partner_counts_match_paper() {
+        // Each processor communicates 2 row blocks with q²(q+1)/2 partners
+        // and 1 row block with q²−1 partners (§7.2.2).
+        let q = 3usize;
+        let s = spherical(q as u64).unwrap();
+        let (part, sched) = schedule_for(&s);
+        for p in 0..part.p {
+            let outgoing: Vec<&Xfer> = sched.xfers.iter().filter(|x| x.from == p).collect();
+            let two = outgoing.iter().filter(|x| x.row_blocks.len() == 2).count();
+            let one = outgoing.iter().filter(|x| x.row_blocks.len() == 1).count();
+            assert_eq!(two, q * q * (q + 1) / 2, "proc {p} two-block partners");
+            assert_eq!(one, q * q - 1, "proc {p} one-block partners");
+            assert_eq!(outgoing.len(), two + one);
+        }
+    }
+
+    #[test]
+    fn words_per_proc_match_closed_form() {
+        // Each processor sends n(q+1)/(q²+1) − n/P words per vector (§7.2.2)
+        // when λ₁ divides b.
+        for q in [2usize, 3] {
+            let s = spherical(q as u64).unwrap();
+            let (part, sched) = schedule_for(&s);
+            let lambda1 = q * (q + 1);
+            let b = 2 * lambda1; // divisible
+            let n = b * part.m;
+            let expected = n * (q + 1) / (q * q + 1) - n / part.p;
+            for p in 0..part.p {
+                let sent: usize = sched
+                    .xfers
+                    .iter()
+                    .filter(|x| x.from == p)
+                    .map(|x| x.words(&part, b))
+                    .sum();
+                assert_eq!(sent, expected, "q={q} proc {p}");
+            }
+        }
+    }
+
+    #[test]
+    fn alltoall_cost_matches_formula() {
+        // §7.2.2: 2b/(q(q+1)) · (P−1) words per vector.
+        let q = 3usize;
+        let s = spherical(q as u64).unwrap();
+        let part = TetraPartition::from_steiner(&s).unwrap();
+        let b = 2 * q * (q + 1);
+        let w = alltoall_words_per_vector(&part, b);
+        assert_eq!(w, 2 * b / (q * (q + 1)) * (part.p - 1));
+    }
+}

@@ -1,0 +1,82 @@
+//! α-β cost-model evaluation (paper §3.1).
+//!
+//! The paper's model charges α per message (latency) and β per word
+//! (bandwidth). The simulator counts both exactly; this module turns those
+//! counts, plus a schedule's step structure, into modeled times so the
+//! point-to-point vs All-to-All trade-off can be quantified: p2p moves
+//! fewer words **and** uses fewer steps (q³/2+3q²/2−1 < P−1 for q ≥ 2),
+//! so it wins on both axes — the ablation bench demonstrates this.
+
+use super::CommStats;
+
+/// Machine parameters for the α-β model (times in seconds).
+#[derive(Debug, Clone, Copy)]
+pub struct CostModel {
+    /// Per-message latency (seconds).
+    pub alpha: f64,
+    /// Per-word transfer time (seconds/word).
+    pub beta: f64,
+}
+
+impl CostModel {
+    /// A typical HPC-interconnect operating point: ~1 µs latency,
+    /// ~10 GB/s per-link bandwidth at 4-byte words.
+    pub fn typical() -> CostModel {
+        CostModel {
+            alpha: 1e-6,
+            beta: 4.0 / 10e9,
+        }
+    }
+
+    /// Modeled communication time for a processor executing a stepped
+    /// schedule: since sends/receives within a step overlap (the model
+    /// allows one of each concurrently), the time is
+    /// `steps·α + max(sent, recv)·β` — latency per step plus the
+    /// bandwidth-bound word stream.
+    pub fn time(&self, stats: &CommStats, steps: usize) -> f64 {
+        self.alpha * steps as f64 + self.beta * stats.sent_words.max(stats.recv_words) as f64
+    }
+
+    /// Bandwidth-only component (the quantity Theorem 1 bounds).
+    pub fn bandwidth_time(&self, stats: &CommStats) -> f64 {
+        self.beta * stats.sent_words.max(stats.recv_words) as f64
+    }
+
+    /// Latency-only component.
+    pub fn latency_time(&self, steps: usize) -> f64 {
+        self.alpha * steps as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stats(sent: u64, recv: u64) -> CommStats {
+        CommStats {
+            sent_words: sent,
+            recv_words: recv,
+            sent_msgs: 0,
+            recv_msgs: 0,
+        }
+    }
+
+    #[test]
+    fn time_combines_components() {
+        let m = CostModel {
+            alpha: 1.0,
+            beta: 0.5,
+        };
+        let t = m.time(&stats(10, 8), 3);
+        assert!((t - (3.0 + 5.0)).abs() < 1e-12);
+        assert!((m.latency_time(3) - 3.0).abs() < 1e-12);
+        assert!((m.bandwidth_time(&stats(10, 8)) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn typical_is_latency_dominated_for_tiny_messages() {
+        let m = CostModel::typical();
+        // 100 words over 10 steps: latency 10 µs >> bandwidth 40 ns
+        assert!(m.latency_time(10) > 100.0 * m.beta);
+    }
+}

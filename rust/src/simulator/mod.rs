@@ -1,0 +1,240 @@
+//! The instrumented α-β-γ machine (paper §3.1).
+//!
+//! P virtual processors run as OS threads with private state and
+//! communicate *only* by message passing through per-processor mailboxes.
+//! Every send/receive is counted in words (f32 elements) and messages —
+//! exactly the quantities the paper's lower bound constrains. A shared
+//! barrier lets algorithms execute stepped schedules, enforcing the model's
+//! "one send and one receive per step" discipline (which the schedule
+//! itself guarantees by construction; validation happens in `schedule`).
+//!
+//! This simulator is the faithful substitute for a physical MPI cluster:
+//! the paper's claims are word counts per processor in an abstract model,
+//! and the simulator measures them exactly (see DESIGN.md §5).
+
+pub mod cost;
+
+use anyhow::{anyhow, Result};
+use std::collections::HashMap;
+use std::sync::{mpsc, Arc, Barrier, Mutex};
+
+/// Per-processor communication counters.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub struct CommStats {
+    /// f32 words sent / received (payload only — the bandwidth cost β·W).
+    pub sent_words: u64,
+    pub recv_words: u64,
+    /// messages sent / received (the latency cost α·S).
+    pub sent_msgs: u64,
+    pub recv_msgs: u64,
+}
+
+impl CommStats {
+    /// Total words moved through this processor's NIC.
+    pub fn total_words(&self) -> u64 {
+        self.sent_words + self.recv_words
+    }
+}
+
+struct Packet {
+    from: usize,
+    tag: u64,
+    data: Vec<f32>,
+}
+
+/// A processor's communication endpoint inside [`run`].
+pub struct Comm {
+    /// This processor's rank in 0..P.
+    pub rank: usize,
+    /// Total number of processors.
+    pub p: usize,
+    senders: Vec<mpsc::Sender<Packet>>,
+    inbox: mpsc::Receiver<Packet>,
+    /// Out-of-order buffer: packets received while waiting for another tag.
+    stash: HashMap<(usize, u64), Vec<f32>>,
+    barrier: Arc<Barrier>,
+    /// Word/message counters for this processor.
+    pub stats: CommStats,
+}
+
+impl Comm {
+    /// Send `data` to processor `to` with a matching `tag`.
+    pub fn send(&mut self, to: usize, tag: u64, data: Vec<f32>) -> Result<()> {
+        debug_assert_ne!(to, self.rank, "self-send is a bug in the algorithm");
+        self.stats.sent_words += data.len() as u64;
+        self.stats.sent_msgs += 1;
+        self.senders[to]
+            .send(Packet {
+                from: self.rank,
+                tag,
+                data,
+            })
+            .map_err(|_| anyhow!("processor {to} hung up"))
+    }
+
+    /// Blocking receive of the message from `from` with `tag` (out-of-order
+    /// deliveries are stashed).
+    pub fn recv(&mut self, from: usize, tag: u64) -> Result<Vec<f32>> {
+        if let Some(data) = self.stash.remove(&(from, tag)) {
+            self.stats.recv_words += data.len() as u64;
+            self.stats.recv_msgs += 1;
+            return Ok(data);
+        }
+        loop {
+            let pkt = self
+                .inbox
+                .recv()
+                .map_err(|_| anyhow!("inbox closed while waiting for {from}:{tag}"))?;
+            if pkt.from == from && pkt.tag == tag {
+                self.stats.recv_words += pkt.data.len() as u64;
+                self.stats.recv_msgs += 1;
+                return Ok(pkt.data);
+            }
+            self.stash.insert((pkt.from, pkt.tag), pkt.data);
+        }
+    }
+
+    /// Synchronize all processors (end of a schedule step).
+    pub fn barrier(&self) {
+        self.barrier.wait();
+    }
+}
+
+/// Run `body` on P simulated processors; returns the per-rank results in
+/// rank order. Any processor error aborts the run.
+pub fn run<R, F>(p: usize, body: F) -> Result<Vec<R>>
+where
+    R: Send,
+    F: Fn(&mut Comm) -> Result<R> + Send + Sync,
+{
+    assert!(p >= 1);
+    let mut senders = Vec::with_capacity(p);
+    let mut inboxes = Vec::with_capacity(p);
+    for _ in 0..p {
+        let (tx, rx) = mpsc::channel::<Packet>();
+        senders.push(tx);
+        inboxes.push(Some(rx));
+    }
+    let barrier = Arc::new(Barrier::new(p));
+    let results: Vec<Mutex<Option<Result<R>>>> = (0..p).map(|_| Mutex::new(None)).collect();
+    let body = &body;
+
+    std::thread::scope(|scope| {
+        for (rank, inbox) in inboxes.iter_mut().enumerate() {
+            let senders = senders.clone();
+            let barrier = barrier.clone();
+            let inbox = inbox.take().unwrap();
+            let slot = &results[rank];
+            scope.spawn(move || {
+                let mut comm = Comm {
+                    rank,
+                    p,
+                    senders,
+                    inbox,
+                    stash: HashMap::new(),
+                    barrier,
+                    stats: CommStats::default(),
+                };
+                let out = body(&mut comm);
+                *slot.lock().unwrap() = Some(out);
+            });
+        }
+    });
+
+    results
+        .into_iter()
+        .enumerate()
+        .map(|(rank, slot)| {
+            slot.into_inner()
+                .unwrap()
+                .ok_or_else(|| anyhow!("processor {rank} produced no result"))?
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_pass_counts_words() {
+        // each rank sends 10 words to (rank+1) % p
+        let p = 6;
+        let out = run(p, |comm| {
+            let to = (comm.rank + 1) % comm.p;
+            let from = (comm.rank + comm.p - 1) % comm.p;
+            comm.send(to, 0, vec![comm.rank as f32; 10])?;
+            let got = comm.recv(from, 0)?;
+            assert_eq!(got, vec![from as f32; 10]);
+            Ok(comm.stats)
+        })
+        .unwrap();
+        for s in out {
+            assert_eq!(s.sent_words, 10);
+            assert_eq!(s.recv_words, 10);
+            assert_eq!(s.sent_msgs, 1);
+            assert_eq!(s.recv_msgs, 1);
+        }
+    }
+
+    #[test]
+    fn out_of_order_tags_are_stashed() {
+        let out = run(2, |comm| {
+            if comm.rank == 0 {
+                comm.send(1, 7, vec![7.0])?;
+                comm.send(1, 8, vec![8.0])?;
+                Ok(0.0)
+            } else {
+                // receive in reverse order
+                let b = comm.recv(0, 8)?;
+                let a = comm.recv(0, 7)?;
+                Ok(a[0] * 10.0 + b[0])
+            }
+        })
+        .unwrap();
+        assert_eq!(out[1], 78.0);
+    }
+
+    #[test]
+    fn barrier_synchronizes_steps() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        let counter = AtomicUsize::new(0);
+        let p = 4;
+        run(p, |comm| {
+            for step in 0..3 {
+                counter.fetch_add(1, Ordering::SeqCst);
+                comm.barrier();
+                // after the barrier, all p increments of this step happened
+                let c = counter.load(Ordering::SeqCst);
+                assert!(c >= (step + 1) * p, "step {step}: {c}");
+                comm.barrier();
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(counter.load(Ordering::SeqCst), 3 * p);
+    }
+
+    #[test]
+    fn allreduce_sum_pattern() {
+        // naive allreduce: everyone sends to 0, 0 broadcasts
+        let p = 5;
+        let out = run(p, |comm| {
+            if comm.rank == 0 {
+                let mut acc = 1.0; // own value
+                for r in 1..comm.p {
+                    acc += comm.recv(r, 1)?[0];
+                }
+                for r in 1..comm.p {
+                    comm.send(r, 2, vec![acc])?;
+                }
+                Ok(acc)
+            } else {
+                comm.send(0, 1, vec![1.0])?;
+                Ok(comm.recv(0, 2)?[0])
+            }
+        })
+        .unwrap();
+        assert!(out.iter().all(|&v| v == p as f32));
+    }
+}

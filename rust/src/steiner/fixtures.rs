@@ -1,0 +1,232 @@
+//! The paper's literal Tables 1–3, transcribed as fixtures.
+//!
+//! These let us validate our own constructions against the exact published
+//! instances: Table 1/2 (Steiner (10,4,3) partition, m = 10, P = 30) and
+//! Table 3 (Steiner (8,4,3) partition, m = 8, P = 14). All data here is
+//! 1-indexed in the paper; we store 0-indexed.
+
+use super::SteinerSystem;
+
+/// A full published partition row: (R_p, N_p, D_p).
+pub struct PaperRow {
+    /// Index set of the tetrahedral block (the Steiner block), 0-indexed.
+    pub r_p: Vec<usize>,
+    /// Non-central diagonal blocks (a,a,b) / (a,b,b) assigned, 0-indexed.
+    pub n_p: Vec<(usize, usize, usize)>,
+    /// Central diagonal block (a,a,a) if assigned, 0-indexed.
+    pub d_p: Option<usize>,
+}
+
+fn row(r: &[usize], n: &[(usize, usize, usize)], d: Option<usize>) -> PaperRow {
+    PaperRow {
+        r_p: r.iter().map(|x| x - 1).collect(),
+        n_p: n.iter().map(|&(a, b, c)| (a - 1, b - 1, c - 1)).collect(),
+        d_p: d.map(|x| x - 1),
+    }
+}
+
+/// Table 1: processor sets of the tetrahedral block partition for m = 10,
+/// P = 30 (spherical q = 3).
+pub fn table1() -> Vec<PaperRow> {
+    vec![
+        row(&[1, 2, 3, 7], &[(2, 2, 1), (2, 1, 1), (7, 2, 2)], Some(1)),
+        row(&[1, 2, 4, 5], &[(4, 4, 1), (4, 1, 1), (5, 1, 1)], Some(2)),
+        row(&[1, 2, 6, 10], &[(6, 6, 1), (10, 10, 2), (6, 1, 1)], Some(6)),
+        row(&[1, 2, 8, 9], &[(8, 8, 1), (9, 9, 8), (8, 1, 1)], Some(8)),
+        row(&[1, 3, 4, 10], &[(10, 10, 1), (10, 10, 3), (10, 1, 1)], Some(3)),
+        row(&[1, 3, 5, 8], &[(3, 3, 1), (8, 8, 5), (3, 1, 1)], Some(5)),
+        row(&[1, 3, 6, 9], &[(9, 9, 1), (9, 9, 3), (9, 1, 1)], Some(9)),
+        row(&[1, 4, 6, 8], &[(6, 6, 4), (8, 8, 6), (6, 4, 4)], Some(4)),
+        row(&[1, 4, 7, 9], &[(7, 7, 1), (9, 9, 4), (7, 1, 1)], Some(7)),
+        row(&[1, 5, 6, 7], &[(5, 5, 1), (7, 7, 6), (7, 6, 6)], None),
+        row(&[1, 5, 9, 10], &[(9, 9, 5), (10, 10, 9), (9, 5, 5)], Some(10)),
+        row(&[1, 7, 8, 10], &[(8, 8, 7), (10, 10, 8), (10, 8, 8)], None),
+        row(&[2, 3, 4, 8], &[(3, 3, 2), (3, 2, 2), (4, 2, 2)], None),
+        row(&[2, 3, 5, 6], &[(5, 5, 2), (5, 2, 2), (6, 5, 5)], None),
+        row(&[2, 3, 9, 10], &[(9, 9, 2), (9, 2, 2), (10, 2, 2)], None),
+        row(&[2, 4, 6, 9], &[(4, 4, 2), (9, 9, 6), (9, 6, 6)], None),
+        row(&[2, 4, 7, 10], &[(7, 7, 2), (10, 10, 4), (10, 4, 4)], None),
+        row(&[2, 5, 7, 9], &[(7, 7, 5), (9, 9, 7), (7, 5, 5)], None),
+        row(&[2, 5, 8, 10], &[(8, 8, 2), (8, 2, 2), (10, 5, 5)], None),
+        row(&[2, 6, 7, 8], &[(6, 6, 2), (6, 2, 2), (8, 6, 6)], None),
+        row(&[3, 4, 5, 9], &[(4, 4, 3), (4, 3, 3), (9, 4, 4)], None),
+        row(&[3, 4, 6, 7], &[(6, 6, 3), (6, 3, 3), (7, 3, 3)], None),
+        row(&[3, 5, 7, 10], &[(5, 5, 3), (5, 3, 3), (10, 3, 3)], None),
+        row(&[3, 6, 8, 10], &[(8, 8, 3), (10, 10, 6), (8, 3, 3)], None),
+        row(&[3, 7, 8, 9], &[(7, 7, 3), (9, 7, 7), (9, 3, 3)], None),
+        row(&[4, 5, 6, 10], &[(5, 5, 4), (5, 4, 4), (10, 10, 5)], None),
+        row(&[4, 5, 7, 8], &[(7, 7, 4), (7, 4, 4), (8, 7, 7)], None),
+        row(&[4, 8, 9, 10], &[(8, 8, 4), (8, 4, 4), (10, 9, 9)], None),
+        row(&[5, 6, 8, 9], &[(6, 6, 5), (8, 5, 5), (9, 8, 8)], None),
+        row(&[6, 7, 9, 10], &[(10, 6, 6), (10, 10, 7), (10, 7, 7)], None),
+    ]
+}
+
+/// Table 2: Q_i row-block sets for the Table 1 partition (1-indexed in the
+/// paper; 0-indexed here). Row block i is distributed over processors Q_i.
+pub fn table2() -> Vec<Vec<usize>> {
+    let raw: Vec<Vec<usize>> = vec![
+        vec![1, 2, 3, 4, 5, 6, 7, 8, 9, 10, 11, 12],
+        vec![1, 2, 3, 4, 13, 14, 15, 16, 17, 18, 19, 20],
+        vec![1, 5, 6, 7, 13, 14, 15, 21, 22, 23, 24, 25],
+        vec![2, 5, 8, 9, 13, 16, 17, 21, 22, 26, 27, 28],
+        vec![2, 6, 10, 11, 14, 18, 19, 21, 23, 26, 27, 29],
+        vec![3, 7, 8, 10, 14, 16, 20, 22, 24, 26, 29, 30],
+        vec![1, 9, 10, 12, 17, 18, 20, 22, 23, 25, 27, 30],
+        vec![4, 6, 8, 12, 13, 19, 20, 24, 25, 27, 28, 29],
+        vec![4, 7, 9, 11, 15, 16, 18, 21, 25, 28, 29, 30],
+        vec![3, 5, 11, 12, 15, 17, 19, 23, 24, 26, 28, 30],
+    ];
+    raw.into_iter()
+        .map(|q| q.into_iter().map(|p| p - 1).collect())
+        .collect()
+}
+
+/// Table 3: the Steiner (8,4,3) partition for m = 8, P = 14 (Appendix A).
+pub fn table3() -> Vec<PaperRow> {
+    vec![
+        row(
+            &[1, 2, 3, 4],
+            &[(2, 2, 1), (3, 3, 2), (2, 1, 1), (3, 2, 2)],
+            Some(1),
+        ),
+        row(
+            &[1, 2, 5, 6],
+            &[(5, 5, 1), (6, 6, 1), (5, 1, 1), (5, 2, 2)],
+            Some(2),
+        ),
+        row(
+            &[1, 2, 7, 8],
+            &[(7, 7, 1), (8, 8, 1), (7, 1, 1), (7, 2, 2)],
+            Some(7),
+        ),
+        row(
+            &[1, 3, 5, 7],
+            &[(7, 7, 3), (7, 7, 5), (3, 1, 1), (7, 3, 3)],
+            Some(3),
+        ),
+        row(
+            &[1, 3, 6, 8],
+            &[(6, 6, 3), (3, 3, 1), (6, 1, 1), (8, 1, 1)],
+            Some(6),
+        ),
+        row(
+            &[1, 4, 5, 8],
+            &[(8, 8, 4), (5, 5, 4), (4, 1, 1), (5, 4, 4)],
+            Some(5),
+        ),
+        row(
+            &[1, 4, 6, 7],
+            &[(7, 7, 4), (4, 4, 1), (6, 4, 4), (7, 6, 6)],
+            Some(4),
+        ),
+        row(
+            &[2, 3, 5, 8],
+            &[(8, 8, 5), (5, 5, 3), (5, 3, 3), (8, 2, 2)],
+            Some(8),
+        ),
+        row(
+            &[2, 3, 6, 7],
+            &[(6, 6, 2), (7, 7, 2), (6, 2, 2), (6, 3, 3)],
+            None,
+        ),
+        row(
+            &[2, 4, 5, 7],
+            &[(5, 5, 2), (4, 4, 2), (4, 2, 2), (7, 4, 4)],
+            None,
+        ),
+        row(
+            &[2, 4, 6, 8],
+            &[(8, 8, 2), (8, 8, 6), (8, 4, 4), (8, 6, 6)],
+            None,
+        ),
+        row(
+            &[3, 4, 5, 6],
+            &[(6, 6, 4), (4, 4, 3), (4, 3, 3), (6, 5, 5)],
+            None,
+        ),
+        row(
+            &[3, 4, 7, 8],
+            &[(8, 8, 3), (8, 8, 7), (8, 3, 3), (8, 7, 7)],
+            None,
+        ),
+        row(
+            &[5, 6, 7, 8],
+            &[(6, 6, 5), (7, 7, 6), (7, 5, 5), (8, 5, 5)],
+            None,
+        ),
+    ]
+}
+
+/// The Table 1 R_p sets as a SteinerSystem (m = 10, r = 4).
+pub fn table1_system() -> SteinerSystem {
+    SteinerSystem::new(10, 4, table1().into_iter().map(|r| r.r_p).collect())
+        .expect("Table 1 fixture")
+}
+
+/// The Table 3 R_p sets as a SteinerSystem (m = 8, r = 4).
+pub fn table3_system() -> SteinerSystem {
+    SteinerSystem::new(8, 4, table3().into_iter().map(|r| r.r_p).collect())
+        .expect("Table 3 fixture")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table2_is_derivable_from_table1() {
+        // Q_i = { p : i ∈ R_p } — the paper's Table 2 must be exactly the
+        // point-incidence sets of Table 1.
+        let rows = table1();
+        let q = table2();
+        for i in 0..10 {
+            let derived: Vec<usize> = (0..rows.len())
+                .filter(|&p| rows[p].r_p.contains(&i))
+                .collect();
+            assert_eq!(derived, q[i], "Q_{}", i + 1);
+        }
+    }
+
+    #[test]
+    fn table1_diagonal_assignment_is_valid() {
+        // N_p blocks only use indices with both values in R_p; D_p central
+        // index must be in R_p; all diagonal blocks covered exactly once.
+        let rows = table1();
+        let mut noncentral = std::collections::HashSet::new();
+        let mut central = std::collections::HashSet::new();
+        for r in &rows {
+            for &(a, b, c) in &r.n_p {
+                assert!(a >= b && b >= c && (a == b || b == c) && a != c);
+                assert!(r.r_p.contains(&a) && r.r_p.contains(&c), "{:?}", (a, b, c));
+                assert!(noncentral.insert((a, b, c)), "dup noncentral {:?}", (a, b, c));
+            }
+            if let Some(d) = r.d_p {
+                assert!(r.r_p.contains(&d));
+                assert!(central.insert(d), "dup central {d}");
+            }
+        }
+        assert_eq!(noncentral.len(), 90); // m(m-1) = 10*9
+        assert_eq!(central.len(), 10); // m
+    }
+
+    #[test]
+    fn table3_diagonal_assignment_is_valid() {
+        let rows = table3();
+        let mut noncentral = std::collections::HashSet::new();
+        let mut central = std::collections::HashSet::new();
+        for r in &rows {
+            for &(a, b, c) in &r.n_p {
+                assert!(a >= b && b >= c && (a == b || b == c) && a != c);
+                assert!(r.r_p.contains(&a) && r.r_p.contains(&c), "{:?}", (a, b, c));
+                assert!(noncentral.insert((a, b, c)), "dup noncentral {:?}", (a, b, c));
+            }
+            if let Some(d) = r.d_p {
+                assert!(r.r_p.contains(&d));
+                assert!(central.insert(d));
+            }
+        }
+        assert_eq!(noncentral.len(), 56); // m(m-1) = 8*7
+        assert_eq!(central.len(), 8);
+    }
+}

@@ -1,0 +1,288 @@
+//! Steiner (m, r, 3) systems — the combinatorial engine behind the paper's
+//! tetrahedral block partitions (§6).
+//!
+//! A Steiner (m, r, 3) system is a collection of r-subsets ("blocks") of
+//! {0..m} such that every 3-subset of points lies in exactly one block
+//! (Definition 2). Two constructions are provided:
+//!
+//! * [`spherical`] — the infinite family of Theorem 3: blocks are the orbit
+//!   of the subline PG(1, q) ⊂ PG(1, q²) under PGL₂(q²), giving a
+//!   (q²+1, q+1, 3) system with exactly q(q²+1) blocks — one per processor.
+//! * [`sqs8`] — the unique S(3, 4, 8) (Steiner quadruple system on 8
+//!   points): planes of AG(3, 2), i.e. 4-sets of F₂³ with zero XOR. This is
+//!   the paper's Appendix A / Table 3 instance (P = 14).
+//!
+//! [`fixtures`] carries the paper's literal Tables 1–3 for fidelity checks.
+
+pub mod fixtures;
+mod spherical;
+
+pub use spherical::{spherical, spherical_alpha};
+
+use anyhow::{bail, Result};
+use std::collections::HashMap;
+
+/// A Steiner (m, r, 3) system over points `0..m`.
+#[derive(Debug, Clone)]
+pub struct SteinerSystem {
+    /// Number of points.
+    pub m: usize,
+    /// Block size.
+    pub r: usize,
+    /// Blocks, each a sorted r-subset of `0..m`.
+    pub blocks: Vec<Vec<usize>>,
+}
+
+impl SteinerSystem {
+    /// Construct from raw blocks, sorting and sanity-checking arity.
+    pub fn new(m: usize, r: usize, mut blocks: Vec<Vec<usize>>) -> Result<Self> {
+        for b in &mut blocks {
+            b.sort_unstable();
+            if b.len() != r {
+                bail!("block {:?} has size {} != r={}", b, b.len(), r);
+            }
+            if b.windows(2).any(|w| w[0] == w[1]) {
+                bail!("block {:?} has repeated points", b);
+            }
+            if b.iter().any(|&x| x >= m) {
+                bail!("block {:?} has out-of-range point (m={})", b, m);
+            }
+        }
+        blocks.sort();
+        Ok(SteinerSystem { m, r, blocks })
+    }
+
+    /// Number of blocks. For the spherical family this equals q(q²+1) = P.
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// λ₂ (Lemma 4): every 2-subset of points appears in exactly
+    /// (m-2)/(r-2) blocks.
+    pub fn lambda2(&self) -> usize {
+        (self.m - 2) / (self.r - 2)
+    }
+
+    /// λ₁ (Lemma 5): every point appears in exactly
+    /// (m-1)(m-2)/((r-1)(r-2)) blocks.
+    pub fn lambda1(&self) -> usize {
+        (self.m - 1) * (self.m - 2) / ((self.r - 1) * (self.r - 2))
+    }
+
+    /// Verify the defining property (every 3-subset in exactly one block)
+    /// plus the Lemma 4 / Lemma 5 replication counts. Exhaustive.
+    pub fn verify(&self) -> Result<()> {
+        let expected_blocks = self.m * (self.m - 1) * (self.m - 2)
+            / (self.r * (self.r - 1) * (self.r - 2));
+        if self.num_blocks() != expected_blocks {
+            bail!(
+                "block count {} != expected {} for ({}, {}, 3)",
+                self.num_blocks(),
+                expected_blocks,
+                self.m,
+                self.r
+            );
+        }
+        // every 3-subset covered exactly once
+        let mut seen: HashMap<(usize, usize, usize), usize> = HashMap::new();
+        for (bi, b) in self.blocks.iter().enumerate() {
+            for x in 0..b.len() {
+                for y in x + 1..b.len() {
+                    for z in y + 1..b.len() {
+                        let key = (b[x], b[y], b[z]);
+                        if let Some(&other) = seen.get(&key) {
+                            bail!("triple {:?} in blocks {} and {}", key, other, bi);
+                        }
+                        seen.insert(key, bi);
+                    }
+                }
+            }
+        }
+        let total_triples = self.m * (self.m - 1) * (self.m - 2) / 6;
+        if seen.len() != total_triples {
+            bail!("covered {} triples, expected {}", seen.len(), total_triples);
+        }
+        // replication numbers
+        let mut per_point = vec![0usize; self.m];
+        let mut per_pair: HashMap<(usize, usize), usize> = HashMap::new();
+        for b in &self.blocks {
+            for &x in b {
+                per_point[x] += 1;
+            }
+            for x in 0..b.len() {
+                for y in x + 1..b.len() {
+                    *per_pair.entry((b[x], b[y])).or_insert(0) += 1;
+                }
+            }
+        }
+        let l1 = self.lambda1();
+        if per_point.iter().any(|&c| c != l1) {
+            bail!("per-point replication != λ₁ = {l1}: {:?}", per_point);
+        }
+        let l2 = self.lambda2();
+        for i in 0..self.m {
+            for j in i + 1..self.m {
+                if per_pair.get(&(i, j)).copied().unwrap_or(0) != l2 {
+                    bail!("pair ({i},{j}) replication != λ₂ = {l2}");
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Blocks containing a given point.
+    pub fn blocks_with_point(&self, x: usize) -> Vec<usize> {
+        (0..self.blocks.len())
+            .filter(|&b| self.blocks[b].contains(&x))
+            .collect()
+    }
+
+    /// Blocks containing both given points.
+    pub fn blocks_with_pair(&self, x: usize, y: usize) -> Vec<usize> {
+        (0..self.blocks.len())
+            .filter(|&b| self.blocks[b].contains(&x) && self.blocks[b].contains(&y))
+            .collect()
+    }
+}
+
+/// The unique Steiner quadruple system S(3, 4, 8): points are the vectors of
+/// F₂³ (ids 0..8), blocks are the 14 affine planes {a, b, c, a⊕b⊕c}.
+///
+/// This is the system behind the paper's Table 3 / Figure 1 example (m = 8,
+/// P = 14); it is *not* in the spherical family (q² = 7 is not a prime-power
+/// square) but the partition machinery is family-agnostic.
+pub fn sqs8() -> SteinerSystem {
+    let mut blocks = Vec::new();
+    for a in 0usize..8 {
+        for b in a + 1..8 {
+            for c in b + 1..8 {
+                let d = a ^ b ^ c;
+                // each plane is emitted once: from its three smallest points
+                if d > c {
+                    blocks.push(vec![a, b, c, d]);
+                }
+            }
+        }
+    }
+    SteinerSystem::new(8, 4, blocks).expect("SQS(8) construction")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sqs8_is_a_steiner_system() {
+        let s = sqs8();
+        assert_eq!(s.m, 8);
+        assert_eq!(s.r, 4);
+        assert_eq!(s.num_blocks(), 14);
+        assert_eq!(s.lambda1(), 7);
+        assert_eq!(s.lambda2(), 3);
+        s.verify().unwrap();
+    }
+
+    #[test]
+    fn sqs8_blocks_intersect_in_0_or_2_points() {
+        // The property behind Figure 1's 12-step schedule: any two distinct
+        // quadruples of SQS(8) share exactly 0 or 2 points.
+        let s = sqs8();
+        for i in 0..s.blocks.len() {
+            for j in i + 1..s.blocks.len() {
+                let shared = s.blocks[i]
+                    .iter()
+                    .filter(|x| s.blocks[j].contains(x))
+                    .count();
+                assert!(shared == 0 || shared == 2, "blocks {i},{j} share {shared}");
+            }
+        }
+    }
+
+    #[test]
+    fn spherical_q2_properties() {
+        let s = spherical(2).unwrap();
+        assert_eq!(s.m, 5);
+        assert_eq!(s.r, 3);
+        assert_eq!(s.num_blocks(), 10); // q(q²+1) = 2*5
+        s.verify().unwrap();
+    }
+
+    #[test]
+    fn spherical_q3_matches_paper_table1_shape() {
+        let s = spherical(3).unwrap();
+        assert_eq!(s.m, 10);
+        assert_eq!(s.r, 4);
+        assert_eq!(s.num_blocks(), 30); // P = 30, the paper's Table 1
+        assert_eq!(s.lambda1(), 12); // q(q+1) = |Q_i| in Table 2
+        assert_eq!(s.lambda2(), 4); // q+1
+        s.verify().unwrap();
+    }
+
+    #[test]
+    fn spherical_q4_and_q5() {
+        let s4 = spherical(4).unwrap();
+        assert_eq!((s4.m, s4.r, s4.num_blocks()), (17, 5, 68));
+        s4.verify().unwrap();
+        let s5 = spherical(5).unwrap();
+        assert_eq!((s5.m, s5.r, s5.num_blocks()), (26, 6, 130));
+        s5.verify().unwrap();
+    }
+
+    #[test]
+    fn spherical_prime_power_q() {
+        // q = 7 (prime), q = 8 = 2³, q = 9 = 3² all exist.
+        for (q, m, p) in [(7u64, 50usize, 350usize), (8, 65, 520), (9, 82, 738)] {
+            let s = spherical(q).unwrap();
+            assert_eq!((s.m, s.num_blocks()), (m, p), "q={q}");
+            s.verify().unwrap();
+        }
+    }
+
+    #[test]
+    fn spherical_rejects_non_prime_power() {
+        assert!(spherical(6).is_err());
+        assert!(spherical(10).is_err());
+    }
+
+    #[test]
+    fn paper_table1_fixture_is_a_steiner_system() {
+        let s = fixtures::table1_system();
+        assert_eq!((s.m, s.r, s.num_blocks()), (10, 4, 30));
+        s.verify().unwrap();
+    }
+
+    #[test]
+    fn paper_table3_fixture_is_a_steiner_system() {
+        let s = fixtures::table3_system();
+        assert_eq!((s.m, s.r, s.num_blocks()), (8, 4, 14));
+        s.verify().unwrap();
+    }
+
+    #[test]
+    fn our_sqs8_isomorphism_invariants_match_table3() {
+        // Constructions may differ by point relabeling; compare the full
+        // invariant profile instead.
+        let ours = sqs8();
+        let paper = fixtures::table3_system();
+        assert_eq!(ours.m, paper.m);
+        assert_eq!(ours.r, paper.r);
+        assert_eq!(ours.num_blocks(), paper.num_blocks());
+        assert_eq!(ours.lambda1(), paper.lambda1());
+        assert_eq!(ours.lambda2(), paper.lambda2());
+        // intersection-size distribution is an isomorphism invariant
+        let dist = |s: &SteinerSystem| {
+            let mut d = [0usize; 5];
+            for i in 0..s.blocks.len() {
+                for j in i + 1..s.blocks.len() {
+                    let shared = s.blocks[i]
+                        .iter()
+                        .filter(|x| s.blocks[j].contains(x))
+                        .count();
+                    d[shared] += 1;
+                }
+            }
+            d
+        };
+        assert_eq!(dist(&ours), dist(&paper));
+    }
+}

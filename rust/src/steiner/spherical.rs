@@ -1,0 +1,174 @@
+//! The spherical (Miquelian inversive plane) family of Steiner systems
+//! (Theorem 3 in the paper):
+//!
+//! Points are the projective line PG(1, q²) = F_{q²} ∪ {∞} (q² + 1 points).
+//! The base block is the subline PG(1, q) = F_q ∪ {∞}, where F_q ⊂ F_{q²}
+//! is the fixed field of the Frobenius x ↦ x^q. Blocks are the orbit of the
+//! base block under PGL₂(q²) acting by Möbius transformations; the orbit has
+//! |PGL₂(q²)| / |PGL₂(q)| = q(q²+1) blocks — exactly P, one per processor.
+//!
+//! We enumerate the orbit by BFS with the standard PGL₂ generators
+//! x ↦ x+1, x ↦ g·x (g primitive), x ↦ 1/x.
+
+use super::SteinerSystem;
+use crate::gf::{prime_power, Gf};
+use anyhow::{Context, Result};
+use std::collections::{HashSet, VecDeque};
+
+/// A point of PG(1, q^α): field element ids `0..q^α`, with `q^α` denoting ∞.
+type Point = u64;
+
+/// Build the Steiner (q²+1, q+1, 3) system for a prime power q — the α = 2
+/// member of Theorem 3's family, the one the paper's balanced partition
+/// uses (P = q(q²+1) = number of blocks).
+pub fn spherical(q: u64) -> Result<SteinerSystem> {
+    spherical_alpha(q, 2)
+}
+
+/// Theorem 3 in full generality: the Steiner (q^α + 1, q + 1, 3) system as
+/// the PGL₂(q^α) orbit of PG(1, q) ⊂ PG(1, q^α), for any prime power q and
+/// α ≥ 2. The orbit has (q^α+1)·q^α·(q^α−1) / ((q+1)q(q−1)) blocks.
+///
+/// Note: only α = 2 yields the paper's balanced processor assignment
+/// (blocks = q(q²+1) = P and m(m−1) divisible by P); for α ≥ 3 the system
+/// still partitions the off-diagonal tetrahedral blocks but the diagonal
+/// assignment of §6.1.3 need not balance — `TetraPartition::from_steiner`
+/// reports this explicitly.
+pub fn spherical_alpha(q: u64, alpha: u32) -> Result<SteinerSystem> {
+    anyhow::ensure!(alpha >= 2, "alpha must be >= 2 (alpha = 1 is trivial)");
+    let (p, e) = prime_power(q).with_context(|| format!("q={q} must be a prime power"))?;
+    let qa = q.pow(alpha);
+    let f = Gf::new(qa).with_context(|| format!("building GF({qa})"))?;
+    let inf: Point = qa;
+
+    // Base block: the subline F_q ∪ {∞} = fixed points of x ↦ x^q, plus ∞.
+    let mut base: Vec<Point> = f.subfield(e).into_iter().collect();
+    base.push(inf);
+    base.sort_unstable();
+    debug_assert_eq!(base.len() as u64, q + 1);
+
+    let g = f.generator();
+
+    // Möbius generator actions on PG(1, q²).
+    let translate = |x: Point| -> Point {
+        if x == inf {
+            inf
+        } else {
+            f.add(x, 1)
+        }
+    };
+    let scale = |x: Point| -> Point {
+        if x == inf {
+            inf
+        } else {
+            f.mul(g, x)
+        }
+    };
+    let invert = |x: Point| -> Point {
+        if x == inf {
+            0
+        } else if x == 0 {
+            inf
+        } else {
+            f.inv(x)
+        }
+    };
+
+    let apply = |block: &[Point], map: &dyn Fn(Point) -> Point| -> Vec<Point> {
+        let mut out: Vec<Point> = block.iter().map(|&x| map(x)).collect();
+        out.sort_unstable();
+        out
+    };
+
+    // BFS over the orbit of the base block.
+    let mut seen: HashSet<Vec<Point>> = HashSet::new();
+    let mut queue: VecDeque<Vec<Point>> = VecDeque::new();
+    seen.insert(base.clone());
+    queue.push_back(base);
+    while let Some(block) = queue.pop_front() {
+        for map in [&translate as &dyn Fn(Point) -> Point, &scale, &invert] {
+            let img = apply(&block, map);
+            if !seen.contains(&img) {
+                seen.insert(img.clone());
+                queue.push_back(img);
+            }
+        }
+    }
+
+    let expected = ((qa + 1) * qa * (qa - 1) / ((q + 1) * q * (q - 1))) as usize;
+    anyhow::ensure!(
+        seen.len() == expected,
+        "orbit size {} != |PGL₂(q^α)|/|PGL₂(q)| = {expected} for q={q}, α={alpha} (p={p}, e={e})",
+        seen.len()
+    );
+
+    let blocks: Vec<Vec<usize>> = seen
+        .into_iter()
+        .map(|b| b.into_iter().map(|x| x as usize).collect())
+        .collect();
+    SteinerSystem::new((qa + 1) as usize, (q + 1) as usize, blocks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn base_block_is_closed_subline() {
+        // For q=3: F_3 ∪ {∞} inside PG(1, 9) has 4 points.
+        let s = spherical(3).unwrap();
+        assert!(s.blocks.iter().all(|b| b.len() == 4));
+    }
+
+    #[test]
+    fn orbit_count_equals_processor_count() {
+        for q in [2u64, 3, 4, 5] {
+            let s = spherical(q).unwrap();
+            assert_eq!(s.num_blocks() as u64, q * (q * q + 1), "q={q}");
+        }
+    }
+
+    #[test]
+    fn every_point_in_lambda1_blocks() {
+        // Lemma 5: each of the q²+1 points lies in q(q+1) blocks.
+        let s = spherical(3).unwrap();
+        for x in 0..s.m {
+            assert_eq!(s.blocks_with_point(x).len(), 12);
+        }
+    }
+
+    #[test]
+    fn every_pair_in_lambda2_blocks() {
+        // Lemma 4: each pair lies in q+1 blocks.
+        let s = spherical(3).unwrap();
+        for x in 0..s.m {
+            for y in x + 1..s.m {
+                assert_eq!(s.blocks_with_pair(x, y).len(), 4);
+            }
+        }
+    }
+
+    #[test]
+    fn theorem3_general_alpha() {
+        // α = 3, q = 2: Steiner (9, 3, 3) — every 3-subset of 9 points is a
+        // block (the complete quadruple-free case): 9·8·7/(3·2·1) = 84.
+        let s = spherical_alpha(2, 3).unwrap();
+        assert_eq!((s.m, s.r), (9, 3));
+        assert_eq!(s.num_blocks(), 84);
+        s.verify().unwrap();
+        // α = 3, q = 3: Steiner (28, 4, 3), 819 blocks.
+        let s = spherical_alpha(3, 3).unwrap();
+        assert_eq!((s.m, s.r), (28, 4));
+        assert_eq!(s.num_blocks(), 819);
+        s.verify().unwrap();
+        // α = 4, q = 2: Steiner (17, 3, 3) = all triples of 17 points, 680.
+        let s = spherical_alpha(2, 4).unwrap();
+        assert_eq!((s.m, s.r, s.num_blocks()), (17, 3, 680));
+        s.verify().unwrap();
+    }
+
+    #[test]
+    fn alpha_one_rejected() {
+        assert!(spherical_alpha(3, 1).is_err());
+    }
+}

@@ -1,0 +1,83 @@
+//! Small dense linear-algebra helpers (no external linalg crate is
+//! vendored): Gram–Schmidt orthonormalization, norms, dots.
+
+use crate::util::rng::Rng;
+
+/// Euclidean norm.
+pub fn norm(x: &[f32]) -> f32 {
+    x.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt() as f32
+}
+
+/// Dot product with f64 accumulation.
+pub fn dot(x: &[f32], y: &[f32]) -> f32 {
+    debug_assert_eq!(x.len(), y.len());
+    x.iter()
+        .zip(y)
+        .map(|(a, b)| (*a as f64) * (*b as f64))
+        .sum::<f64>() as f32
+}
+
+/// Normalize in place; returns the original norm.
+pub fn normalize(x: &mut [f32]) -> f32 {
+    let n = norm(x);
+    if n > 0.0 {
+        for v in x.iter_mut() {
+            *v /= n;
+        }
+    }
+    n
+}
+
+/// r orthonormal random columns of length n via modified Gram–Schmidt
+/// (re-orthogonalized once for numerical hygiene).
+pub fn orthonormal_columns(n: usize, r: usize, rng: &mut Rng) -> Vec<Vec<f32>> {
+    assert!(r <= n);
+    let mut cols: Vec<Vec<f32>> = Vec::with_capacity(r);
+    while cols.len() < r {
+        let mut v = rng.normal_vec(n);
+        for _pass in 0..2 {
+            for c in &cols {
+                let d = dot(&v, c);
+                for (vi, ci) in v.iter_mut().zip(c) {
+                    *vi -= d * ci;
+                }
+            }
+        }
+        if normalize(&mut v) > 1e-6 {
+            cols.push(v);
+        }
+    }
+    cols
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn norm_and_dot() {
+        assert!((norm(&[3.0, 4.0]) - 5.0).abs() < 1e-6);
+        assert!((dot(&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]) - 32.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn normalize_unit() {
+        let mut v = vec![1.0, 1.0, 1.0, 1.0];
+        let n = normalize(&mut v);
+        assert!((n - 2.0).abs() < 1e-6);
+        assert!((norm(&v) - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn gram_schmidt_orthonormal() {
+        let mut rng = Rng::new(9);
+        let cols = orthonormal_columns(20, 5, &mut rng);
+        for a in 0..5 {
+            for b in 0..5 {
+                let d = dot(&cols[a], &cols[b]);
+                let want = if a == b { 1.0 } else { 0.0 };
+                assert!((d - want).abs() < 1e-5, "({a},{b}): {d}");
+            }
+        }
+    }
+}

@@ -1,0 +1,354 @@
+//! Symmetric 3-D tensor storage and sequential STTSV oracles.
+//!
+//! A fully symmetric tensor is stored *packed*: one value per
+//! lower-tetrahedral index (i ≥ j ≥ k), n(n+1)(n+2)/6 words — the unique
+//! parameters the paper counts. Accessors symmetrize transparently.
+
+pub mod linalg;
+
+use crate::util::rng::Rng;
+
+/// Packed fully-symmetric tensor of dimension n × n × n.
+#[derive(Debug, Clone)]
+pub struct SymTensor {
+    pub n: usize,
+    data: Vec<f32>,
+}
+
+/// Number of packed entries for dimension n: n(n+1)(n+2)/6.
+pub fn packed_len(n: usize) -> usize {
+    n * (n + 1) * (n + 2) / 6
+}
+
+#[inline]
+fn tet(i: usize) -> usize {
+    i * (i + 1) * (i + 2) / 6
+}
+
+#[inline]
+fn tri(j: usize) -> usize {
+    j * (j + 1) / 2
+}
+
+/// Sort three indices descending.
+#[inline]
+pub fn sort3(i: usize, j: usize, k: usize) -> (usize, usize, usize) {
+    let (mut a, mut b, mut c) = (i, j, k);
+    if a < b {
+        std::mem::swap(&mut a, &mut b);
+    }
+    if b < c {
+        std::mem::swap(&mut b, &mut c);
+    }
+    if a < b {
+        std::mem::swap(&mut a, &mut b);
+    }
+    (a, b, c)
+}
+
+impl SymTensor {
+    /// All-zeros tensor.
+    pub fn zeros(n: usize) -> SymTensor {
+        SymTensor {
+            n,
+            data: vec![0.0; packed_len(n)],
+        }
+    }
+
+    /// i.i.d. standard-normal unique entries (a generic symmetric tensor).
+    pub fn random(n: usize, seed: u64) -> SymTensor {
+        let mut rng = Rng::new(seed);
+        SymTensor {
+            n,
+            data: (0..packed_len(n)).map(|_| rng.normal_f32()).collect(),
+        }
+    }
+
+    /// Odeco (orthogonally decomposable) tensor A = Σ_l λ_l e_l ⊗ e_l ⊗ e_l
+    /// with orthonormal e_l. Returns the tensor and the factors (columns),
+    /// so tests can check recovered eigenpairs exactly. The dominant
+    /// eigenpair of such a tensor is (λ_max, e_max) — the ground truth for
+    /// the end-to-end power-method experiment.
+    pub fn odeco(n: usize, lambdas: &[f32], seed: u64) -> (SymTensor, Vec<Vec<f32>>) {
+        let r = lambdas.len();
+        assert!(r <= n);
+        let mut rng = Rng::new(seed);
+        let cols: Vec<Vec<f32>> = linalg::orthonormal_columns(n, r, &mut rng);
+        let mut t = SymTensor::zeros(n);
+        let mut idx = 0usize;
+        for i in 0..n {
+            for j in 0..=i {
+                for k in 0..=j {
+                    let mut v = 0.0f64;
+                    for (l, &lam) in lambdas.iter().enumerate() {
+                        v += lam as f64
+                            * cols[l][i] as f64
+                            * cols[l][j] as f64
+                            * cols[l][k] as f64;
+                    }
+                    t.data[idx] = v as f32;
+                    idx += 1;
+                }
+            }
+        }
+        debug_assert_eq!(idx, packed_len(n));
+        (t, cols)
+    }
+
+    #[inline]
+    fn packed_index(i: usize, j: usize, k: usize) -> usize {
+        // requires i >= j >= k
+        tet(i) + tri(j) + k
+    }
+
+    /// Read entry (i, j, k) in any index order.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize, k: usize) -> f32 {
+        let (a, b, c) = sort3(i, j, k);
+        self.data[Self::packed_index(a, b, c)]
+    }
+
+    /// Write entry (i, j, k) (any order; writes the unique representative).
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, k: usize, v: f32) {
+        let (a, b, c) = sort3(i, j, k);
+        self.data[Self::packed_index(a, b, c)] = v;
+    }
+
+    /// Number of stored (unique) entries.
+    pub fn packed_len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Extract the dense b³ sub-block with block index (bi, bj, bk) and
+    /// block size b, row-major ((α·b + β)·b + γ): entry (α, β, γ) holds the
+    /// full-tensor value A[bi·b+α, bj·b+β, bk·b+γ]. This is the layout the
+    /// AOT block kernels consume.
+    pub fn extract_block(&self, bi: usize, bj: usize, bk: usize, b: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; b * b * b];
+        if bi > bj && bj > bk {
+            // Off-diagonal fast path (the hot case: ~all blocks are
+            // off-diagonal): every element already satisfies i > j > k, and
+            // for fixed (i, j) the packed k-run [bk·b, bk·b + b) is
+            // contiguous — copy row-wise instead of per-element sort3+index
+            // (EXPERIMENTS.md §Perf P4).
+            for a in 0..b {
+                let i = bi * b + a;
+                let ti = tet(i);
+                for be in 0..b {
+                    let j = bj * b + be;
+                    let base = ti + tri(j) + bk * b;
+                    out[(a * b + be) * b..(a * b + be + 1) * b]
+                        .copy_from_slice(&self.data[base..base + b]);
+                }
+            }
+        } else {
+            for a in 0..b {
+                for be in 0..b {
+                    for g in 0..b {
+                        out[(a * b + be) * b + g] =
+                            self.get(bi * b + a, bj * b + be, bk * b + g);
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Zero-pad to dimension `n2 >= n` (paper §6.1: when q²+1 does not
+    /// divide n, pad to the next multiple; padded entries are zero so the
+    /// computation is unchanged on the first n coordinates).
+    pub fn padded(&self, n2: usize) -> SymTensor {
+        assert!(n2 >= self.n);
+        let mut out = SymTensor::zeros(n2);
+        // packed layouts nest: indices with i < n keep their packed offsets
+        out.data[..self.data.len()].copy_from_slice(&self.data);
+        out
+    }
+
+    /// Sequential STTSV oracle: y = A ×₂ x ×₃ x via the paper's Algorithm 4
+    /// (lower-tetrahedron iteration with multiplicity weights), f64
+    /// accumulation for a trustworthy reference.
+    pub fn sttsv(&self, x: &[f32]) -> Vec<f32> {
+        assert_eq!(x.len(), self.n);
+        let mut y = vec![0.0f64; self.n];
+        let mut idx = 0usize;
+        for i in 0..self.n {
+            for j in 0..=i {
+                for k in 0..=j {
+                    let a = self.data[idx] as f64;
+                    idx += 1;
+                    let (xi, xj, xk) = (x[i] as f64, x[j] as f64, x[k] as f64);
+                    if i != j && j != k {
+                        y[i] += 2.0 * a * xj * xk;
+                        y[j] += 2.0 * a * xi * xk;
+                        y[k] += 2.0 * a * xi * xj;
+                    } else if i == j && j != k {
+                        y[i] += 2.0 * a * xj * xk;
+                        y[k] += a * xi * xj;
+                    } else if i != j && j == k {
+                        y[i] += a * xj * xk;
+                        y[j] += 2.0 * a * xi * xk;
+                    } else {
+                        y[i] += a * xj * xk;
+                    }
+                }
+            }
+        }
+        y.into_iter().map(|v| v as f32).collect()
+    }
+
+    /// Number of ternary multiplications Algorithm 4 performs: n²(n+1)/2.
+    pub fn ternary_mult_count(&self) -> usize {
+        let n = self.n;
+        n * n * (n + 1) / 2
+    }
+
+    /// Rayleigh quotient λ = A ×₁ x ×₂ x ×₃ x (Algorithm 1, line 6).
+    pub fn rayleigh(&self, x: &[f32]) -> f32 {
+        let y = self.sttsv(x);
+        y.iter().zip(x).map(|(a, b)| (*a as f64) * (*b as f64)).sum::<f64>() as f32
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn packed_len_formula() {
+        assert_eq!(packed_len(1), 1);
+        assert_eq!(packed_len(2), 4);
+        assert_eq!(packed_len(3), 10);
+        assert_eq!(packed_len(10), 220);
+    }
+
+    #[test]
+    fn get_is_permutation_invariant() {
+        let t = SymTensor::random(6, 1);
+        for (i, j, k) in [(5, 3, 1), (4, 4, 2), (3, 3, 3), (5, 0, 0)] {
+            let v = t.get(i, j, k);
+            for (a, b, c) in [
+                (i, j, k),
+                (i, k, j),
+                (j, i, k),
+                (j, k, i),
+                (k, i, j),
+                (k, j, i),
+            ] {
+                assert_eq!(t.get(a, b, c), v);
+            }
+        }
+    }
+
+    #[test]
+    fn set_then_get_roundtrip() {
+        let mut t = SymTensor::zeros(5);
+        t.set(1, 4, 2, 7.5);
+        assert_eq!(t.get(4, 2, 1), 7.5);
+        assert_eq!(t.get(2, 1, 4), 7.5);
+    }
+
+    #[test]
+    fn sttsv_matches_dense_triple_loop() {
+        let n = 7;
+        let t = SymTensor::random(n, 3);
+        let mut rng = Rng::new(4);
+        let x = rng.normal_vec(n);
+        let y = t.sttsv(&x);
+        // dense oracle: y_i = Σ_{j,k} A[i,j,k] x_j x_k
+        for i in 0..n {
+            let mut want = 0.0f64;
+            for j in 0..n {
+                for k in 0..n {
+                    want += t.get(i, j, k) as f64 * x[j] as f64 * x[k] as f64;
+                }
+            }
+            assert!(
+                (y[i] as f64 - want).abs() < 1e-3 * want.abs().max(1.0),
+                "i={i}: {} vs {want}",
+                y[i]
+            );
+        }
+    }
+
+    #[test]
+    fn extract_block_values() {
+        let n = 8;
+        let b = 4;
+        let t = SymTensor::random(n, 5);
+        let blk = t.extract_block(1, 0, 1, b);
+        for a in 0..b {
+            for be in 0..b {
+                for g in 0..b {
+                    assert_eq!(blk[(a * b + be) * b + g], t.get(b + a, be, b + g));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn odeco_eigen_structure() {
+        let (t, cols) = SymTensor::odeco(10, &[4.0, 2.0, 1.0], 6);
+        // columns orthonormal
+        for a in 0..3 {
+            for b in 0..3 {
+                let dot: f64 = cols[a]
+                    .iter()
+                    .zip(&cols[b])
+                    .map(|(x, y)| *x as f64 * *y as f64)
+                    .sum();
+                let want = if a == b { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-5, "({a},{b}) dot={dot}");
+            }
+        }
+        // A ×₂ e_l ×₃ e_l = λ_l e_l  (Z-eigenpair definition)
+        for (l, lam) in [(0usize, 4.0f32), (1, 2.0), (2, 1.0)] {
+            let y = t.sttsv(&cols[l]);
+            for i in 0..10 {
+                assert!(
+                    (y[i] - lam * cols[l][i]).abs() < 1e-3,
+                    "l={l} i={i}: {} vs {}",
+                    y[i],
+                    lam * cols[l][i]
+                );
+            }
+            assert!((t.rayleigh(&cols[l]) - lam).abs() < 1e-3);
+        }
+    }
+
+    #[test]
+    fn padded_preserves_entries_and_results() {
+        let t = SymTensor::random(7, 8);
+        let tp = t.padded(10);
+        assert_eq!(tp.n, 10);
+        for i in 0..7 {
+            for j in 0..=i {
+                for k in 0..=j {
+                    assert_eq!(tp.get(i, j, k), t.get(i, j, k));
+                }
+            }
+        }
+        // padded region is zero
+        assert_eq!(tp.get(9, 5, 2), 0.0);
+        // STTSV with zero-extended x agrees on the first n coords
+        let mut rng = Rng::new(9);
+        let x = rng.normal_vec(7);
+        let mut xp = x.clone();
+        xp.resize(10, 0.0);
+        let y = t.sttsv(&x);
+        let yp = tp.sttsv(&xp);
+        for i in 0..7 {
+            assert!((y[i] - yp[i]).abs() < 1e-5);
+        }
+        for i in 7..10 {
+            assert_eq!(yp[i], 0.0);
+        }
+    }
+
+    #[test]
+    fn ternary_count_formula() {
+        let t = SymTensor::zeros(10);
+        assert_eq!(t.ternary_mult_count(), 100 * 11 / 2);
+    }
+}

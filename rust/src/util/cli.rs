@@ -1,0 +1,106 @@
+//! Tiny hand-rolled CLI argument parser (no `clap` is vendored).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+
+use std::collections::HashMap;
+
+/// Parsed command-line arguments: positionals plus `--key [value]` options.
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    options: HashMap<String, String>,
+    flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse from an iterator of raw argument strings (without argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I) -> Self {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = it.next().unwrap();
+                    out.options.insert(stripped.to_string(), v);
+                } else {
+                    out.flags.push(stripped.to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    /// Get an option value as a string.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    /// Get an option parsed to any `FromStr` type, with a default.
+    pub fn get_or<T: std::str::FromStr>(&self, key: &str, default: T) -> T {
+        match self.options.get(key) {
+            Some(v) => v.parse().unwrap_or_else(|_| {
+                eprintln!("warning: could not parse --{key} {v}; using default");
+                std::process::exit(2)
+            }),
+            None => default,
+        }
+    }
+
+    /// Whether a bare `--flag` was passed (a `--key value` also counts).
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.iter().any(|f| f == key) || self.options.contains_key(key)
+    }
+
+    /// First positional argument (the subcommand), if any.
+    pub fn subcommand(&self) -> Option<&str> {
+        self.positional.first().map(|s| s.as_str())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(s.iter().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn parses_positional_and_options() {
+        // note: a bare flag directly followed by a positional would consume
+        // it as a value (`--verbose extra`), so flags go last by convention.
+        let a = parse(&["run", "--q", "3", "--b=8", "extra", "--verbose"]);
+        assert_eq!(a.subcommand(), Some("run"));
+        assert_eq!(a.get("q"), Some("3"));
+        assert_eq!(a.get_or("b", 0usize), 8);
+        assert!(a.flag("verbose"));
+        assert_eq!(a.positional, vec!["run", "extra"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&["x"]);
+        assert_eq!(a.get_or("q", 2usize), 2);
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn trailing_flag_without_value() {
+        let a = parse(&["--check"]);
+        assert!(a.flag("check"));
+        assert_eq!(a.get("check"), None);
+    }
+}

@@ -1,0 +1,9 @@
+//! Cross-cutting utilities: deterministic PRNG, table rendering, CLI
+//! parsing, and a seeded property-test driver (standing in for the `rand`,
+//! `clap`, and `proptest` crates, which are not vendored in this
+//! environment).
+
+pub mod cli;
+pub mod proptest;
+pub mod rng;
+pub mod table;

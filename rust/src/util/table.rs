@@ -1,0 +1,135 @@
+//! Minimal markdown/ASCII table printer used by the bench harness and CLI to
+//! emit paper-style tables (Tables 1–3, cost sweeps) as aligned text.
+
+/// A simple column-aligned table with a header row.
+#[derive(Debug, Default, Clone)]
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// Create a table with the given column headers.
+    pub fn new<S: Into<String>, I: IntoIterator<Item = S>>(header: I) -> Self {
+        Table {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must have the same arity as the header).
+    pub fn row<S: Into<String>, I: IntoIterator<Item = S>>(&mut self, cells: I) -> &mut Self {
+        let r: Vec<String> = cells.into_iter().map(Into::into).collect();
+        assert_eq!(r.len(), self.header.len(), "row arity mismatch");
+        self.rows.push(r);
+        self
+    }
+
+    /// Number of data rows.
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// True when the table has no data rows.
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    /// Render as a GitHub-flavored markdown table.
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let body: Vec<String> = (0..ncol)
+                .map(|i| format!("{:w$}", cells[i], w = widths[i]))
+                .collect();
+            format!("| {} |", body.join(" | "))
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&format!("|-{}-|", sep.join("-|-")));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Print to stdout.
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a float compactly (paper tables use 3-4 significant digits).
+pub fn fnum(x: f64) -> String {
+    if x == 0.0 {
+        "0".to_string()
+    } else if x.abs() >= 1000.0 || x.abs() < 0.01 {
+        format!("{x:.3e}")
+    } else {
+        format!("{x:.3}")
+    }
+}
+
+/// Format a set of indices as `{a,b,c}` (1-based, paper convention).
+pub fn fset(xs: &[usize]) -> String {
+    let inner: Vec<String> = xs.iter().map(|x| (x + 1).to_string()).collect();
+    format!("{{{}}}", inner.join(","))
+}
+
+/// Format a list of index triples as `{(a,b,c), ...}` (1-based).
+pub fn ftriples(ts: &[(usize, usize, usize)]) -> String {
+    let inner: Vec<String> = ts
+        .iter()
+        .map(|(a, b, c)| format!("({},{},{})", a + 1, b + 1, c + 1))
+        .collect();
+    format!("{{{}}}", inner.join(", "))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned_markdown() {
+        let mut t = Table::new(["p", "R_p"]);
+        t.row(["1", "{1,2,3,7}"]);
+        t.row(["22", "{3,4,6,7}"]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("| p "));
+        assert!(lines[1].starts_with("|--"));
+        // all lines same width
+        assert!(lines.iter().all(|l| l.len() == lines[0].len()));
+    }
+
+    #[test]
+    #[should_panic]
+    fn arity_mismatch_panics() {
+        let mut t = Table::new(["a", "b"]);
+        t.row(["only-one"]);
+    }
+
+    #[test]
+    fn set_formatting_is_one_based() {
+        assert_eq!(fset(&[0, 1, 6]), "{1,2,7}");
+        assert_eq!(ftriples(&[(1, 1, 0)]), "{(2,2,1)}");
+    }
+
+    #[test]
+    fn fnum_ranges() {
+        assert_eq!(fnum(0.0), "0");
+        assert!(fnum(12345.0).contains('e'));
+        assert_eq!(fnum(1.5), "1.500");
+    }
+}

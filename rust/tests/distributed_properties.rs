@@ -1,0 +1,193 @@
+//! Randomized end-to-end property tests over the distributed stack
+//! (seeded, deterministic — see `util::proptest`).
+//!
+//! P1: for every supported partition and random tensor/vector, the
+//!     distributed Algorithm 5 result equals the sequential Algorithm 4
+//!     oracle (both comm modes, batched and unbatched).
+//! P2: communication counters equal the §7.2.2 closed form *exactly*
+//!     whenever λ₁ | b, for every processor (not just the max).
+//! P3: total logical ternary multiplications equal n²(n+1)/2 regardless of
+//!     the partition (no work duplicated or dropped).
+//! P4: schedules remain valid for random mixes of q and the SQS(8) system.
+
+use sttsv::coordinator::{run_comm_only, run_sttsv_opts, CommMode, ExecOpts};
+use sttsv::partition::TetraPartition;
+use sttsv::runtime::Backend;
+use sttsv::schedule::CommSchedule;
+use sttsv::steiner::{spherical, sqs8};
+use sttsv::tensor::SymTensor;
+use sttsv::util::proptest::check;
+use sttsv::util::rng::Rng;
+
+fn partition_pool() -> Vec<TetraPartition> {
+    vec![
+        TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap(),
+        TetraPartition::from_steiner(&spherical(3).unwrap()).unwrap(),
+        TetraPartition::from_steiner(&sqs8()).unwrap(),
+    ]
+}
+
+#[test]
+fn p1_distributed_equals_sequential_oracle() {
+    let pool = partition_pool();
+    check(
+        "distributed == oracle",
+        0xA11CE,
+        12,
+        |rng: &mut Rng| {
+            let part_idx = rng.below(pool.len());
+            let b = 2 + rng.below(7); // 2..=8, including non-divisible-by-λ₁
+            let mode = if rng.below(2) == 0 {
+                CommMode::PointToPoint
+            } else {
+                CommMode::AllToAll
+            };
+            let batch = rng.below(2) == 0;
+            let seed = rng.next_u64();
+            (part_idx, b, mode, batch, seed)
+        },
+        |&(part_idx, b, mode, batch, seed)| {
+            let part = &pool[part_idx];
+            let n = b * part.m;
+            let tensor = SymTensor::random(n, seed);
+            let mut rng = Rng::new(seed ^ 0x5555);
+            let x = rng.normal_vec(n);
+            let want = tensor.sttsv(&x);
+            let rep = run_sttsv_opts(
+                &tensor,
+                &x,
+                part,
+                ExecOpts { mode, backend: Backend::Native, batch },
+            )
+            .map_err(|e| e.to_string())?;
+            let scale = want.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+            for i in 0..n {
+                if (rep.y[i] - want[i]).abs() > 3e-3 * scale {
+                    return Err(format!(
+                        "mismatch at i={i}: {} vs {} (scale {scale})",
+                        rep.y[i], want[i]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn p2_comm_counters_match_closed_form_on_every_proc() {
+    check(
+        "comm == closed form",
+        0xB0B,
+        8,
+        |rng: &mut Rng| {
+            let q = [2usize, 3][rng.below(2)];
+            let mult = 1 + rng.below(3);
+            (q, mult)
+        },
+        |&(q, mult)| {
+            let part = TetraPartition::from_steiner(&spherical(q as u64).unwrap())
+                .map_err(|e| e.to_string())?;
+            let lambda1 = q * (q + 1);
+            let b = lambda1 * mult;
+            let n = b * part.m;
+            let stats = run_comm_only(&part, b, CommMode::PointToPoint)
+                .map_err(|e| e.to_string())?;
+            let expected = 2 * (n * (q + 1) / (q * q + 1) - n / part.p) as u64;
+            for (p, s) in stats.iter().enumerate() {
+                if s.sent_words != expected || s.recv_words != expected {
+                    return Err(format!(
+                        "proc {p}: sent {} recv {} expected {expected}",
+                        s.sent_words, s.recv_words
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn p3_total_ternary_mults_invariant() {
+    let pool = partition_pool();
+    check(
+        "total ternary mults == n²(n+1)/2",
+        0xC0DE,
+        9,
+        |rng: &mut Rng| (rng.below(pool.len()), 2 + rng.below(5), rng.next_u64()),
+        |&(part_idx, b, seed)| {
+            let part = &pool[part_idx];
+            let n = b * part.m;
+            let tensor = SymTensor::random(n, seed);
+            let mut rng = Rng::new(seed);
+            let x = rng.normal_vec(n);
+            let rep = run_sttsv_opts(
+                &tensor,
+                &x,
+                part,
+                ExecOpts {
+                    mode: CommMode::PointToPoint,
+                    backend: Backend::Native,
+                    batch: true,
+                },
+            )
+            .map_err(|e| e.to_string())?;
+            let want = (n * n * (n + 1) / 2) as u64;
+            if rep.total_ternary_mults() != want {
+                return Err(format!(
+                    "total mults {} != {want}",
+                    rep.total_ternary_mults()
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn p4_schedules_valid_for_all_supported_systems() {
+    for sys in [spherical(2).unwrap(), spherical(3).unwrap(), spherical(4).unwrap(), sqs8()] {
+        let part = TetraPartition::from_steiner(&sys).unwrap();
+        let sched = CommSchedule::build(&part).unwrap();
+        sched.validate(&part).unwrap();
+        // model constraint re-checked here: one send + one recv per step max
+        for step in &sched.steps {
+            let mut s = vec![0u8; part.p];
+            let mut r = vec![0u8; part.p];
+            for &xi in step {
+                s[sched.xfers[xi].from] += 1;
+                r[sched.xfers[xi].to] += 1;
+            }
+            assert!(s.iter().all(|&c| c <= 1));
+            assert!(r.iter().all(|&c| c <= 1));
+        }
+    }
+}
+
+#[test]
+fn load_balance_within_paper_slack() {
+    // §7.1: imbalance does not affect the leading term — max/mean ternary
+    // mults stays within the diagonal-block slack.
+    for q in [2usize, 3] {
+        let part = TetraPartition::from_steiner(&spherical(q as u64).unwrap()).unwrap();
+        let b = 8;
+        let n = b * part.m;
+        let tensor = SymTensor::random(n, 3);
+        let mut rng = Rng::new(4);
+        let x = rng.normal_vec(n);
+        let rep = run_sttsv_opts(
+            &tensor,
+            &x,
+            &part,
+            ExecOpts {
+                mode: CommMode::PointToPoint,
+                backend: Backend::Native,
+                batch: true,
+            },
+        )
+        .unwrap();
+        let max = rep.max_ternary_mults() as f64;
+        let mean = rep.total_ternary_mults() as f64 / part.p as f64;
+        assert!(max / mean < 1.15, "q={q}: max/mean = {}", max / mean);
+    }
+}

@@ -1,0 +1,160 @@
+//! Integration tests for the PJRT path: AOT artifacts (JAX/Pallas, lowered
+//! by `make artifacts`) loaded and executed from Rust, alone and through the
+//! full distributed coordinator.
+//!
+//! Requires `artifacts/manifest.txt` (run `make artifacts`); tests skip with
+//! a notice when artifacts are missing so `cargo test` stays runnable in a
+//! fresh checkout.
+
+use sttsv::coordinator::{run_sttsv_opts, CommMode, ExecOpts};
+use sttsv::partition::TetraPartition;
+use sttsv::runtime::{artifacts_dir, block_contract_native, Backend, Engine};
+use sttsv::steiner::spherical;
+use sttsv::tensor::SymTensor;
+use sttsv::util::rng::Rng;
+
+fn have_artifacts() -> bool {
+    if artifacts_dir().join("manifest.txt").exists() {
+        true
+    } else {
+        eprintln!("SKIP: no artifacts (run `make artifacts`)");
+        false
+    }
+}
+
+#[test]
+fn pjrt_block_kernel_matches_native() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::new(Backend::Pjrt).unwrap();
+    for b in [4usize, 8, 16, 32] {
+        if !engine.has_artifact(&format!("block_b{b}")) {
+            continue;
+        }
+        let mut rng = Rng::new(b as u64);
+        let a = rng.normal_vec(b * b * b);
+        let (u, v, w) = (rng.normal_vec(b), rng.normal_vec(b), rng.normal_vec(b));
+        let (ci, cj, ck) = engine.block_contract(&a, &u, &v, &w, b).unwrap();
+        let (ni, nj, nk) = block_contract_native(&a, &u, &v, &w, b);
+        for t in 0..b {
+            assert!((ci[t] - ni[t]).abs() < 1e-3, "b={b} ci[{t}]");
+            assert!((cj[t] - nj[t]).abs() < 1e-3, "b={b} cj[{t}]");
+            assert!((ck[t] - nk[t]).abs() < 1e-3, "b={b} ck[{t}]");
+        }
+    }
+}
+
+#[test]
+fn pjrt_batched_kernel_matches_native() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::new(Backend::Pjrt).unwrap();
+    let (b, nb) = (8usize, 4usize);
+    let mut rng = Rng::new(77);
+    let a = rng.normal_vec(nb * b * b * b);
+    let (u, v, w) = (
+        rng.normal_vec(nb * b),
+        rng.normal_vec(nb * b),
+        rng.normal_vec(nb * b),
+    );
+    let (ci, cj, ck) = engine.block_contract_batch(&a, &u, &v, &w, b, nb).unwrap();
+    let native = Engine::new(Backend::Native).unwrap();
+    let (ni, nj, nk) = native.block_contract_batch(&a, &u, &v, &w, b, nb).unwrap();
+    for t in 0..nb * b {
+        assert!((ci[t] - ni[t]).abs() < 1e-3);
+        assert!((cj[t] - nj[t]).abs() < 1e-3);
+        assert!((ck[t] - nk[t]).abs() < 1e-3);
+    }
+}
+
+#[test]
+fn pjrt_dense_sttsv_matches_oracle() {
+    if !have_artifacts() {
+        return;
+    }
+    let engine = Engine::new(Backend::Pjrt).unwrap();
+    let n = 20usize;
+    let tensor = SymTensor::random(n, 5);
+    let mut a = vec![0.0f32; n * n * n];
+    for i in 0..n {
+        for j in 0..n {
+            for k in 0..n {
+                a[(i * n + j) * n + k] = tensor.get(i, j, k);
+            }
+        }
+    }
+    let mut rng = Rng::new(6);
+    let x = rng.normal_vec(n);
+    let y = engine.dense_sttsv(&a, &x, n).unwrap();
+    let want = tensor.sttsv(&x);
+    let scale = want.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+    for i in 0..n {
+        assert!((y[i] - want[i]).abs() < 2e-3 * scale, "i={i}");
+    }
+}
+
+#[test]
+fn distributed_sttsv_on_pjrt_backend_q2() {
+    if !have_artifacts() {
+        return;
+    }
+    // Full Algorithm 5 with every block contraction running through the AOT
+    // Pallas kernel: n = 40, q = 2 (P = 10), b = 8.
+    let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+    let b = 8usize;
+    let n = b * part.m;
+    let tensor = SymTensor::random(n, 7);
+    let mut rng = Rng::new(8);
+    let x = rng.normal_vec(n);
+    let want = tensor.sttsv(&x);
+    for batch in [false, true] {
+        let rep = run_sttsv_opts(
+            &tensor,
+            &x,
+            &part,
+            ExecOpts {
+                mode: CommMode::PointToPoint,
+                backend: Backend::Pjrt,
+                batch,
+            },
+        )
+        .unwrap();
+        let scale = want.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+        for i in 0..n {
+            assert!(
+                (rep.y[i] - want[i]).abs() < 2e-3 * scale,
+                "batch={batch} i={i}: {} vs {}",
+                rep.y[i],
+                want[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn pjrt_and_native_backends_agree_through_power_method() {
+    if !have_artifacts() {
+        return;
+    }
+    use sttsv::apps::power_method;
+    let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+    let b = 8usize;
+    let n = b * part.m;
+    let (tensor, cols) = SymTensor::odeco(n, &[4.0, 1.0], 9);
+    let mut x0 = cols[0].clone();
+    let mut rng = Rng::new(10);
+    for v in x0.iter_mut() {
+        *v += 0.2 * rng.normal_f32();
+    }
+    let opts = |backend| ExecOpts {
+        mode: CommMode::PointToPoint,
+        backend,
+        batch: true,
+    };
+    let rp = power_method(&tensor, &part, &x0, 40, 1e-6, opts(Backend::Pjrt)).unwrap();
+    let rn = power_method(&tensor, &part, &x0, 40, 1e-6, opts(Backend::Native)).unwrap();
+    assert!((rp.lambda - 4.0).abs() < 1e-2, "pjrt lambda {}", rp.lambda);
+    assert!((rp.lambda - rn.lambda).abs() < 1e-3);
+}
