@@ -1,0 +1,22 @@
+# Top-level convenience targets (the code's "run `make artifacts`" pointers).
+
+.PHONY: artifacts artifacts-quick test pytest bench
+
+# AOT-lower the JAX/Pallas kernels (incl. the multi-RHS block_multi_* set)
+# to HLO text artifacts for the Rust PJRT backend.
+artifacts:
+	cd python && python -m compile.aot --out-dir ../artifacts
+
+artifacts-quick:
+	cd python && python -m compile.aot --out-dir ../artifacts --quick
+
+# Tier-1 verify.
+test:
+	cd rust && cargo build --release && cargo test -q
+
+pytest:
+	cd python && python -m pytest tests/ -q
+
+# Kernel-throughput r-sweep; writes rust/BENCH_kernel.json.
+bench:
+	cd rust && cargo bench --bench kernel_throughput

@@ -33,10 +33,20 @@ BLOCK_SIZES = [4, 8, 16, 32]
 BATCH_SIZES = [1, 2, 3, 4, 10]
 # Dense-baseline sizes (Algorithm 3 executable for verification).
 DENSE_SIZES = [20, 30, 40]
+# Multi-RHS column counts r: the batched STTSV engine sweeps each block once
+# for all r right-hand sides (CP-gradient rank / concurrent power-method
+# queries). The Rust engine falls back to per-column dispatch for other r.
+MULTI_R = [2, 4, 8, 16]
+# The batched multi-RHS hot path covers the same r values (nb comes from
+# BATCH_SIZES, the per-processor block counts of the supported partitions);
+# keeping the sets equal means any r served by the single-block multi
+# artifact also gets the one-dispatch-per-group batched artifact.
+MULTI_BATCH_R = MULTI_R
 
 QUICK_BLOCK_SIZES = [4, 8]
 QUICK_BATCH_SIZES = [1, 2]
 QUICK_DENSE_SIZES = [20]
+QUICK_MULTI_R = [2]
 
 
 def to_hlo_text(lowered) -> str:
@@ -57,6 +67,8 @@ def artifact_plan(quick: bool = False):
     blocks = QUICK_BLOCK_SIZES if quick else BLOCK_SIZES
     batches = QUICK_BATCH_SIZES if quick else BATCH_SIZES
     denses = QUICK_DENSE_SIZES if quick else DENSE_SIZES
+    multi_rs = QUICK_MULTI_R if quick else MULTI_R
+    multi_batch_rs = QUICK_MULTI_R if quick else MULTI_BATCH_R
 
     for b in blocks:
         yield (
@@ -73,6 +85,28 @@ def artifact_plan(quick: bool = False):
                 (_spec(nb, b, b, b), _spec(nb, b), _spec(nb, b), _spec(nb, b)),
                 {"kind": "block_batch", "b": b, "nb": nb, "outputs": 3},
             )
+    for b in blocks:
+        for r in multi_rs:
+            yield (
+                f"block_multi_b{b}_r{r}",
+                model.block_contract_multi_fn,
+                (_spec(b, b, b), _spec(b, r), _spec(b, r), _spec(b, r)),
+                {"kind": "block_multi", "b": b, "r": r, "outputs": 3},
+            )
+    for b in blocks:
+        for nb in batches:
+            for r in multi_batch_rs:
+                yield (
+                    f"block_multi_batch_b{b}_nb{nb}_r{r}",
+                    model.block_contract_multi_batch_fn,
+                    (
+                        _spec(nb, b, b, b),
+                        _spec(nb, b, r),
+                        _spec(nb, b, r),
+                        _spec(nb, b, r),
+                    ),
+                    {"kind": "block_multi_batch", "b": b, "nb": nb, "r": r, "outputs": 3},
+                )
     for n in denses:
         yield (
             f"dense_sttsv_n{n}",

@@ -98,3 +98,28 @@ def symmetrize(T):
         + T.transpose(2, 0, 1)
         + T.transpose(2, 1, 0)
     ) / 6.0
+
+
+def block_contract_multi_ref(A, U, V, W):
+    """Multi-RHS oracle: contract one block against r columns at once.
+
+    ``U``, ``V``, ``W`` are ``(b, r)`` panels (column ``l`` of the mode-1
+    vector batch lives in ``U[:, l]``); outputs are ``(b, r)`` panels with
+
+      ci[a, l] = sum_{b,c} A[a,b,c] * V[b,l] * W[c,l]
+
+    and cj/ck analogously -- i.e. per-column exactly block_contract_ref.
+    """
+    ci = jnp.einsum("abc,bl,cl->al", A, V, W)
+    cj = jnp.einsum("abc,al,cl->bl", A, U, W)
+    ck = jnp.einsum("abc,al,bl->cl", A, U, V)
+    return ci, cj, ck
+
+
+def block_contract_multi_batch_ref(As, Us, Vs, Ws):
+    """Batched multi-RHS oracle: independent (block, r-panel) contractions
+    along axis 0; shapes (nb, b, b, b) and (nb, b, r)."""
+    ci = jnp.einsum("nabc,nbl,ncl->nal", As, Vs, Ws)
+    cj = jnp.einsum("nabc,nal,ncl->nbl", As, Us, Ws)
+    ck = jnp.einsum("nabc,nal,nbl->ncl", As, Us, Vs)
+    return ci, cj, ck

@@ -177,3 +177,152 @@ def block_contract_batch(As, us, vs, ws):
         ],
         interpret=True,
     )(As, us, vs, ws)
+
+
+def _fused_multi_kernel(a_ref, u_ref, v_ref, w_ref, ci_ref, cj_ref, ck_ref):
+    """One grid step: contract a (t, b, b) slab of A against r RHS columns.
+
+    The multi-RHS panels U/V/W are (b, r): column l is one right-hand side.
+    One slab of A is read once and contracted against ALL r columns -- the
+    node-level amortization behind the batched STTSV engine (the same slab
+    would otherwise be re-streamed r times by r single-RHS calls).
+    """
+    s = pl.program_id(0)
+
+    A = a_ref[...]  # (t, b, b) slab, resident in VMEM
+    U = u_ref[...]  # (t, r)   matching slice of the U panel
+    V = v_ref[...]  # (b, r)
+    W = w_ref[...]  # (b, r)
+
+    t, b, _ = A.shape
+    r = W.shape[1]
+
+    # Shared intermediate: M[a, p, l] = sum_g A[a, p, g] * W[g, l]. On TPU
+    # this is a (t*b, b) x (b, r) matmul through the MXU -- the r columns
+    # widen the RHS, raising MXU utilization over the r = 1 matvec -- and it
+    # is reused by both the ci and cj outputs.
+    M = jnp.dot(A.reshape(t * b, b), W).reshape(t, b, r)  # (t, b, r)
+
+    # ci slab: ci[a, l] = sum_p M[a, p, l] * V[p, l]
+    ci_ref[...] = jnp.sum(M * V[None, :, :], axis=1)
+
+    # cj partial from this slab: cj[p, l] = sum_a U[a, l] * M[a, p, l]
+    cj_part = jnp.sum(M * U[:, None, :], axis=0)
+
+    # ck partial: ck[g, l] = sum_{a,p} A[a,p,g] * U[a,l] * V[p,l]
+    #   Au[p, g, l] = sum_a A[a, p, g] * U[a, l]   (another MXU contraction)
+    Au = jnp.tensordot(A, U, axes=((0,), (0,)))  # (b, b, r)
+    ck_part = jnp.sum(Au * V[:, None, :], axis=0)
+
+    # cj/ck output blocks are revisited on every grid step: zero-init on the
+    # first step, then accumulate.
+    @pl.when(s == 0)
+    def _init():
+        cj_ref[...] = jnp.zeros_like(cj_ref)
+        ck_ref[...] = jnp.zeros_like(ck_ref)
+
+    cj_ref[...] += cj_part
+    ck_ref[...] += ck_part
+
+
+@functools.partial(jax.jit, static_argnames=("slab",))
+def block_contract_multi(A, U, V, W, *, slab: int | None = None):
+    """Multi-RHS fused ternary block contraction via a Pallas kernel.
+
+    Args:
+      A: (b, b, b) tensor block.
+      U, V, W: (b, r) panels of row-block vectors -- column l is the l-th
+        right-hand side for modes 1, 2, 3.
+      slab: leading-mode slab size ``t`` (must divide b; defaults to the
+        largest divisor of b that is <= 8).
+
+    Returns:
+      (ci, cj, ck): the three (b, r) mode-contraction panels.
+    """
+    b = A.shape[0]
+    r = U.shape[1]
+    assert A.shape == (b, b, b), f"block must be cubic, got {A.shape}"
+    assert U.shape == V.shape == W.shape == (b, r), (U.shape, V.shape, W.shape)
+    t = _pick_slab(b, slab)
+    grid = (b // t,)
+
+    return pl.pallas_call(
+        _fused_multi_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((t, b, b), lambda s: (s, 0, 0)),
+            pl.BlockSpec((t, r), lambda s: (s, 0)),
+            pl.BlockSpec((b, r), lambda s: (0, 0)),
+            pl.BlockSpec((b, r), lambda s: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((t, r), lambda s: (s, 0)),
+            pl.BlockSpec((b, r), lambda s: (0, 0)),
+            pl.BlockSpec((b, r), lambda s: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, r), A.dtype),
+            jax.ShapeDtypeStruct((b, r), A.dtype),
+            jax.ShapeDtypeStruct((b, r), A.dtype),
+        ],
+        interpret=True,  # CPU PJRT cannot execute Mosaic custom-calls
+    )(A, U, V, W)
+
+
+def _batch_multi_kernel(a_ref, u_ref, v_ref, w_ref, ci_ref, cj_ref, ck_ref):
+    """One grid step: fully contract one (1, b, b, b) block against its
+    (1, b, r) RHS panels."""
+    A = a_ref[0]  # (b, b, b)
+    U = u_ref[0]  # (b, r)
+    V = v_ref[0]
+    W = w_ref[0]
+
+    b = A.shape[0]
+    M = jnp.dot(A.reshape(b * b, b), W).reshape(b, b, W.shape[1])
+    ci_ref[0] = jnp.sum(M * V[None, :, :], axis=1)
+    cj_ref[0] = jnp.sum(M * U[:, None, :], axis=0)
+    Au = jnp.tensordot(A, U, axes=((0,), (0,)))
+    ck_ref[0] = jnp.sum(Au * V[:, None, :], axis=0)
+
+
+@jax.jit
+def block_contract_multi_batch(As, Us, Vs, Ws):
+    """Batched multi-RHS fused contraction: one grid step per block.
+
+    Args:
+      As: (nb, b, b, b) stacked blocks.
+      Us, Vs, Ws: (nb, b, r) stacked RHS panels.
+
+    Returns:
+      (cis, cjs, cks): (nb, b, r) stacked contraction panels.
+
+    This is the L3 hot-path variant behind ``SttsvPlan::run_multi``: a
+    processor stacks all owned blocks of one kind and issues a single PJRT
+    execution that sweeps each block once for all r columns.
+    """
+    nb, b = As.shape[0], As.shape[1]
+    r = Us.shape[2]
+    assert As.shape == (nb, b, b, b)
+    assert Us.shape == Vs.shape == Ws.shape == (nb, b, r)
+
+    return pl.pallas_call(
+        _batch_multi_kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, b, b, b), lambda s: (s, 0, 0, 0)),
+            pl.BlockSpec((1, b, r), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, b, r), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, b, r), lambda s: (s, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, b, r), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, b, r), lambda s: (s, 0, 0)),
+            pl.BlockSpec((1, b, r), lambda s: (s, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((nb, b, r), As.dtype),
+            jax.ShapeDtypeStruct((nb, b, r), As.dtype),
+            jax.ShapeDtypeStruct((nb, b, r), As.dtype),
+        ],
+        interpret=True,
+    )(As, Us, Vs, Ws)

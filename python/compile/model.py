@@ -9,6 +9,9 @@ Functions (all return tuples — the Rust side unwraps `to_tuple`):
 
   block_contract_fn(b)        -> (A,u,v,w) -> (ci, cj, ck)
   block_contract_batch_fn(...)-> stacked variant
+  block_contract_multi_fn     -> (A,U,V,W) -> (ci, cj, ck)  [(b, r) panels:
+                                 one sweep of A serves r RHS columns]
+  block_contract_multi_batch_fn -> stacked multi-RHS variant
   dense_sttsv_fn(n)           -> (A, x) -> (y,)          [Algorithm 3 baseline]
   power_step_fn(n)            -> (A, x) -> (y, norm)     [one HOPM iteration]
 """
@@ -31,6 +34,19 @@ def block_contract_fn(A, u, v, w):
 def block_contract_batch_fn(As, us, vs, ws):
     """Batched fused block contraction (Pallas kernel inside)."""
     cis, cjs, cks = sttsv_block.block_contract_batch(As, us, vs, ws)
+    return cis, cjs, cks
+
+
+def block_contract_multi_fn(A, U, V, W):
+    """Multi-RHS fused block contraction (Pallas kernel inside): (b, r)
+    panels in, (b, r) panels out -- one sweep of A for all r columns."""
+    ci, cj, ck = sttsv_block.block_contract_multi(A, U, V, W)
+    return ci, cj, ck
+
+
+def block_contract_multi_batch_fn(As, Us, Vs, Ws):
+    """Batched multi-RHS fused block contraction (Pallas kernel inside)."""
+    cis, cjs, cks = sttsv_block.block_contract_multi_batch(As, Us, Vs, Ws)
     return cis, cjs, cks
 
 

@@ -1,0 +1,71 @@
+"""Property-test shim: re-export `hypothesis` when it is installed, else a
+miniature deterministic stand-in.
+
+This environment does not vendor the `hypothesis` package, so the kernel and
+oracle sweeps fall back to a seeded, deterministic sampler with the same
+decorator surface (`@settings(max_examples=...)` over `@given(...)` with
+`st.integers` / `st.sampled_from`). It mirrors what `rust/src/util/proptest.rs`
+does for the missing `proptest` crate: fewer shrinking smarts, same coverage
+style, fully reproducible.
+"""
+
+try:  # pragma: no cover - exercised only where hypothesis exists
+    from hypothesis import given, settings, strategies as st  # noqa: F401
+except ImportError:
+    import random
+
+    class _Integers:
+        def __init__(self, lo, hi):
+            self.lo, self.hi = lo, hi
+
+        def sample(self, rng):
+            return rng.randint(self.lo, self.hi)
+
+    class _SampledFrom:
+        def __init__(self, options):
+            self.options = list(options)
+
+        def sample(self, rng):
+            return rng.choice(self.options)
+
+    class st:  # noqa: N801 - mimics `hypothesis.strategies` module name
+        @staticmethod
+        def integers(min_value, max_value):
+            return _Integers(min_value, max_value)
+
+        @staticmethod
+        def sampled_from(options):
+            return _SampledFrom(options)
+
+    def settings(max_examples=20, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+
+        return deco
+
+    def given(**strategies):
+        def deco(fn):
+            # NOTE: no functools.wraps here — pytest must see a zero-argument
+            # function, not the strategy parameters (it would treat them as
+            # fixtures).
+            def wrapper():
+                # Seed from the test name so every run replays identically.
+                rng = random.Random(f"proptest:{fn.__name__}")
+                examples = getattr(wrapper, "_max_examples", 20)
+                for case in range(examples):
+                    drawn = {k: s.sample(rng) for k, s in strategies.items()}
+                    try:
+                        fn(**drawn)
+                    except Exception as e:  # noqa: BLE001 - re-raise with case
+                        raise AssertionError(
+                            f"property {fn.__name__!r} failed on case {case} "
+                            f"with {drawn!r}: {e}"
+                        ) from e
+
+            wrapper.__name__ = fn.__name__
+            wrapper.__doc__ = fn.__doc__
+            wrapper._max_examples = getattr(fn, "_max_examples", 20)
+            return wrapper
+
+        return deco

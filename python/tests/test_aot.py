@@ -56,4 +56,27 @@ def test_block_artifact_signature(emitted):
 
 def test_quick_plan_covers_all_kinds():
     kinds = {meta["kind"] for _, _, _, meta in aot.artifact_plan(quick=True)}
-    assert kinds == {"block", "block_batch", "dense", "power_step"}
+    assert kinds == {
+        "block",
+        "block_batch",
+        "block_multi",
+        "block_multi_batch",
+        "dense",
+        "power_step",
+    }
+
+
+def test_multi_artifact_signature(emitted):
+    out, names = emitted
+    assert "block_multi_b4_r2" in names
+    with open(os.path.join(out, "block_multi_b4_r2.hlo.txt")) as f:
+        text = f.read()
+    # 4 parameters: A(4,4,4), U(4,2), V(4,2), W(4,2); tuple of 3 (4,2) outputs.
+    assert "f32[4,4,4]" in text
+    assert "f32[4,2]" in text
+    entry = text[text.index("ENTRY") :]
+    assert re.search(
+        r"\(f32\[4,2\](\{[0-9,]+\})?, f32\[4,2\](\{[0-9,]+\})?, "
+        r"f32\[4,2\](\{[0-9,]+\})?\) tuple",
+        entry,
+    ), "expected a 3-tuple of f32[4,2] outputs"

@@ -8,7 +8,7 @@ contractions.
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from proptest_compat import given, settings, st
 
 import jax
 import jax.numpy as jnp
@@ -136,3 +136,78 @@ def test_fully_symmetric_block_all_agree():
     ci, cj, ck = sttsv_block.block_contract(A, x, x, x)
     np.testing.assert_allclose(ci, cj, rtol=RTOL, atol=ATOL)
     np.testing.assert_allclose(cj, ck, rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# multi-RHS kernels: one sweep of A serving r columns
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,r", [(1, 1), (4, 1), (4, 2), (8, 4), (8, 8), (12, 3), (16, 16)])
+def test_block_contract_multi_matches_ref(b, r):
+    rng = np.random.default_rng(13 * b + r)
+    A = _rand(rng, b, b, b)
+    U, V, W = _rand(rng, b, r), _rand(rng, b, r), _rand(rng, b, r)
+    got = sttsv_block.block_contract_multi(A, U, V, W)
+    want = ref.block_contract_multi_ref(A, U, V, W)
+    for g, rr in zip(got, want):
+        assert g.shape == (b, r)
+        np.testing.assert_allclose(g, rr, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,r,slab", [(8, 4, 1), (8, 4, 2), (8, 4, 8), (12, 5, 3)])
+def test_block_contract_multi_slab_invariance(b, r, slab):
+    """The r-column result must not depend on the VMEM slab tiling."""
+    rng = np.random.default_rng(200 + b + r + slab)
+    A = _rand(rng, b, b, b)
+    U, V, W = _rand(rng, b, r), _rand(rng, b, r), _rand(rng, b, r)
+    got = sttsv_block.block_contract_multi(A, U, V, W, slab=slab)
+    want = ref.block_contract_multi_ref(A, U, V, W)
+    for g, rr in zip(got, want):
+        np.testing.assert_allclose(g, rr, rtol=1e-4, atol=1e-4)
+
+
+def test_multi_equals_loop_of_single_rhs():
+    """Column l of the multi-RHS kernel == the single-RHS kernel on column l
+    (the contract the Rust engine's fallback path relies on)."""
+    rng = np.random.default_rng(14)
+    b, r = 8, 5
+    A = _rand(rng, b, b, b)
+    U, V, W = _rand(rng, b, r), _rand(rng, b, r), _rand(rng, b, r)
+    cis, cjs, cks = sttsv_block.block_contract_multi(A, U, V, W)
+    for l in range(r):
+        ci, cj, ck = sttsv_block.block_contract(A, U[:, l], V[:, l], W[:, l])
+        np.testing.assert_allclose(cis[:, l], ci, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(cjs[:, l], cj, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(cks[:, l], ck, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("nb,b,r", [(1, 4, 2), (2, 4, 4), (3, 8, 2), (4, 8, 8)])
+def test_block_contract_multi_batch_matches_ref(nb, b, r):
+    rng = np.random.default_rng(17 * nb + b + r)
+    As = _rand(rng, nb, b, b, b)
+    Us, Vs, Ws = (
+        _rand(rng, nb, b, r),
+        _rand(rng, nb, b, r),
+        _rand(rng, nb, b, r),
+    )
+    got = sttsv_block.block_contract_multi_batch(As, Us, Vs, Ws)
+    want = ref.block_contract_multi_batch_ref(As, Us, Vs, Ws)
+    for g, rr in zip(got, want):
+        assert g.shape == (nb, b, r)
+        np.testing.assert_allclose(g, rr, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(min_value=1, max_value=10),
+    r=st.integers(min_value=1, max_value=9),
+    seed=st.integers(min_value=0, max_value=2**31 - 1),
+)
+def test_block_contract_multi_hypothesis(b, r, seed):
+    rng = np.random.default_rng(seed)
+    A = _rand(rng, b, b, b)
+    U, V, W = _rand(rng, b, r), _rand(rng, b, r), _rand(rng, b, r)
+    got = sttsv_block.block_contract_multi(A, U, V, W)
+    want = ref.block_contract_multi_ref(A, U, V, W)
+    for g, rr in zip(got, want):
+        np.testing.assert_allclose(g, rr, rtol=1e-4, atol=1e-4)

@@ -7,7 +7,7 @@ to get wrong), and that the L2 model functions are faithful.
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from proptest_compat import given, settings, st
 
 import jax.numpy as jnp
 

@@ -1,16 +1,32 @@
-//! Bench: the L1 block-kernel hot path (DESIGN.md E10).
+//! Bench: the L1 block-kernel hot path (DESIGN.md E10) and the multi-RHS
+//! amortization sweep (EXPERIMENTS.md §Perf P6).
 //!
 //! Measures the fused ternary block contraction on the native backend and,
 //! when artifacts exist, on the PJRT backend (interpret-mode Pallas — CPU
 //! numerics, not a TPU perf proxy; see DESIGN.md §Hardware-Adaptation for
 //! the TPU VMEM/MXU analysis). Also measures the batched variant that
-//! amortizes PJRT dispatch, and the unfused 3-pass native variant to show
-//! the arithmetic-intensity win of the fused kernel.
+//! amortizes PJRT dispatch, the unfused 3-pass native variant to show the
+//! arithmetic-intensity win of the fused kernel, and — the headline of this
+//! file — the r-sweep of the multi-RHS path at both the kernel level
+//! (`block_contract_multi` vs r single-RHS sweeps) and the end-to-end
+//! engine level (`SttsvPlan::run_multi` vs r sequential `run` calls,
+//! including the exact r×-words / constant-messages comm check).
+//!
+//! Emits a machine-readable `BENCH_kernel.json` next to the package root so
+//! the perf trajectory is tracked across PRs.
 //!
 //!     cargo bench --bench kernel_throughput
 
+use std::fmt::Write as _;
+
 use sttsv::bench::{gflops, header, time};
-use sttsv::runtime::{artifacts_dir, block_contract_native, Backend, Engine};
+use sttsv::coordinator::{CommMode, ExecOpts, SttsvPlan};
+use sttsv::partition::TetraPartition;
+use sttsv::runtime::{
+    artifacts_dir, block_contract_multi, block_contract_native, Backend, Engine,
+};
+use sttsv::steiner::spherical;
+use sttsv::tensor::SymTensor;
 use sttsv::util::rng::Rng;
 use sttsv::util::table::Table;
 
@@ -56,6 +72,29 @@ fn block_contract_unfused(
         }
     }
     (ci, cj, ck)
+}
+
+/// One JSON record of the kernel-level r-sweep.
+struct KernelRow {
+    b: usize,
+    r: usize,
+    seq_gflops: f64,
+    multi_gflops: f64,
+    /// Effective A-words served per second: each of the r columns logically
+    /// consumes the b³ block, so multi serves r·b³ words per physical sweep.
+    seq_eff_words_per_sec: f64,
+    multi_eff_words_per_sec: f64,
+    speedup: f64,
+}
+
+/// One JSON record of the end-to-end engine r-sweep.
+struct EngineRow {
+    r: usize,
+    seq_blocks_per_sec: f64,
+    multi_blocks_per_sec: f64,
+    speedup: f64,
+    words_ratio: f64,
+    msgs_ratio: f64,
 }
 
 fn main() -> anyhow::Result<()> {
@@ -128,7 +167,7 @@ fn main() -> anyhow::Result<()> {
     );
     for (label, engine) in [
         ("native", Some(Engine::new(Backend::Native)?)),
-        ("pjrt", pjrt.as_ref().cloned().map(Some).unwrap_or(None)),
+        ("pjrt", pjrt.as_ref().cloned()),
     ] {
         let Some(eng) = engine else { continue };
         let t_loop = time(3, 15, || {
@@ -162,10 +201,206 @@ fn main() -> anyhow::Result<()> {
         ]);
     }
     t2.print();
+
+    // ---- E10c: multi-RHS kernel r-sweep (§Perf P6) ------------------------
+    header("E10c: multi-RHS kernel r-sweep — one A sweep serves r columns");
+    let mut kernel_rows: Vec<KernelRow> = Vec::new();
+    let mut t3 = Table::new([
+        "b", "r", "seq µs", "multi µs", "seq GF/s", "multi GF/s",
+        "eff Mwords/s (multi)", "speedup",
+    ]);
+    for b in [16usize, 32] {
+        for r in [1usize, 2, 4, 8, 16] {
+            let mut rng = Rng::new((b * 100 + r) as u64);
+            let a = rng.normal_vec(b * b * b);
+            // (b, r) interleaved panels and their per-column views
+            let us = rng.normal_vec(b * r);
+            let vs = rng.normal_vec(b * r);
+            let ws = rng.normal_vec(b * r);
+            let mut cols: Vec<[Vec<f32>; 3]> = Vec::with_capacity(r);
+            for l in 0..r {
+                let mut u = vec![0.0f32; b];
+                let mut v = vec![0.0f32; b];
+                let mut w = vec![0.0f32; b];
+                for x in 0..b {
+                    u[x] = us[x * r + l];
+                    v[x] = vs[x * r + l];
+                    w[x] = ws[x * r + l];
+                }
+                cols.push([u, v, w]);
+            }
+            let flops = 6.0 * (b as f64).powi(3) * r as f64;
+            let eff_words = (b * b * b) as f64 * r as f64;
+
+            let t_seq = time(5, 30, || {
+                for [u, v, w] in &cols {
+                    std::hint::black_box(block_contract_native(&a, u, v, w, b));
+                }
+            });
+            let t_multi = time(5, 30, || {
+                std::hint::black_box(block_contract_multi(&a, &us, &vs, &ws, b, r));
+            });
+            let row = KernelRow {
+                b,
+                r,
+                seq_gflops: gflops(flops, &t_seq),
+                multi_gflops: gflops(flops, &t_multi),
+                seq_eff_words_per_sec: eff_words / t_seq.median.as_secs_f64(),
+                multi_eff_words_per_sec: eff_words / t_multi.median.as_secs_f64(),
+                speedup: t_seq.median.as_secs_f64() / t_multi.median.as_secs_f64(),
+            };
+            t3.row([
+                b.to_string(),
+                r.to_string(),
+                format!("{:.2}", t_seq.median.as_secs_f64() * 1e6),
+                format!("{:.2}", t_multi.median.as_secs_f64() * 1e6),
+                format!("{:.3}", row.seq_gflops),
+                format!("{:.3}", row.multi_gflops),
+                format!("{:.1}", row.multi_eff_words_per_sec / 1e6),
+                format!("{:.2}x", row.speedup),
+            ]);
+            kernel_rows.push(row);
+        }
+    }
+    t3.print();
+
+    // ---- E10d: end-to-end engine r-sweep ---------------------------------
+    header("E10d: SttsvPlan::run_multi vs r sequential runs (q=2, b=32, native)");
+    let part = TetraPartition::from_steiner(&spherical(2)?)?;
+    let bb = 32usize;
+    let n = bb * part.m;
+    let tensor = SymTensor::random(n, 7);
+    let plan = SttsvPlan::new(
+        &tensor,
+        &part,
+        ExecOpts {
+            mode: CommMode::PointToPoint,
+            backend: Backend::Native,
+            batch: true,
+        },
+    )?;
+    // total owned lower-tetra blocks across processors: m(m+1)(m+2)/6
+    let total_blocks = part.m * (part.m + 1) * (part.m + 2) / 6;
+    let mut rng = Rng::new(8);
+    let mut engine_rows: Vec<EngineRow> = Vec::new();
+    let mut t4 = Table::new([
+        "r", "seq ms", "multi ms", "blk-contr/s seq", "blk-contr/s multi",
+        "words multi/seq", "msgs multi/seq", "speedup",
+    ]);
+    for r in [1usize, 2, 4, 8, 16] {
+        let xs: Vec<Vec<f32>> = (0..r).map(|_| rng.normal_vec(n)).collect();
+        let t_seq = time(1, 7, || {
+            for x in &xs {
+                std::hint::black_box(plan.run(x).unwrap());
+            }
+        });
+        let t_multi = time(1, 7, || {
+            std::hint::black_box(plan.run_multi(&xs).unwrap());
+        });
+
+        // Exact comm accounting: words must be exactly r×, messages equal.
+        let single = plan.run(&xs[0])?;
+        let multi = plan.run_multi(&xs)?;
+        for p in 0..part.p {
+            let s1 = &single.per_proc[p].stats;
+            let sm = &multi.per_proc[p].stats;
+            assert_eq!(sm.sent_words, r as u64 * s1.sent_words, "proc {p} words");
+            assert_eq!(sm.sent_msgs, s1.sent_msgs, "proc {p} msgs");
+        }
+        let words_ratio = multi.max_sent_words() as f64 / single.max_sent_words() as f64;
+        let msgs_ratio = multi.max_sent_msgs() as f64
+            / single
+                .per_proc
+                .iter()
+                .map(|pr| pr.stats.sent_msgs)
+                .max()
+                .unwrap() as f64;
+
+        let contractions = (total_blocks * r) as f64;
+        let row = EngineRow {
+            r,
+            seq_blocks_per_sec: contractions / t_seq.median.as_secs_f64(),
+            multi_blocks_per_sec: contractions / t_multi.median.as_secs_f64(),
+            speedup: t_seq.median.as_secs_f64() / t_multi.median.as_secs_f64(),
+            words_ratio,
+            msgs_ratio,
+        };
+        t4.row([
+            r.to_string(),
+            format!("{:.2}", t_seq.median.as_secs_f64() * 1e3),
+            format!("{:.2}", t_multi.median.as_secs_f64() * 1e3),
+            format!("{:.0}", row.seq_blocks_per_sec),
+            format!("{:.0}", row.multi_blocks_per_sec),
+            format!("{words_ratio:.2}"),
+            format!("{msgs_ratio:.2}"),
+            format!("{:.2}x", row.speedup),
+        ]);
+        engine_rows.push(row);
+    }
+    t4.print();
+    let r8 = engine_rows.iter().find(|e| e.r == 8).unwrap();
+    println!(
+        "acceptance (r=8): run_multi throughput = {:.2}x of 8 sequential runs \
+         (target >= 3x): {}",
+        r8.speedup,
+        if r8.speedup >= 3.0 { "PASS" } else { "FAIL" }
+    );
+    println!(
+        "comm at r=8: words exactly {}x, messages {}x the r=1 counts \
+         (asserted exact per processor above)",
+        r8.words_ratio, r8.msgs_ratio
+    );
+
+    // ---- machine-readable output -----------------------------------------
+    let json = render_json(&kernel_rows, &engine_rows);
+    std::fs::write("BENCH_kernel.json", &json)?;
+    println!("\nwrote BENCH_kernel.json ({} bytes)", json.len());
+
     println!(
         "interpret-mode Pallas timings are CPU-only (structure check); the \
          TPU projection (VMEM footprint, MXU-shaped matmuls, 1.5 flop/B from \
-         HBM, 3× reuse vs unfused) is in DESIGN.md §Hardware-Adaptation."
+         HBM, 3× reuse vs unfused, r-wide MXU RHS for the multi kernel) is \
+         in DESIGN.md §Hardware-Adaptation."
     );
     Ok(())
+}
+
+/// Hand-rolled JSON (no serde is vendored): two arrays of flat records.
+fn render_json(kernel: &[KernelRow], engine: &[EngineRow]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n  \"bench\": \"kernel_throughput\",\n  \"kernel_rsweep\": [\n");
+    for (idx, k) in kernel.iter().enumerate() {
+        let _ = write!(
+            s,
+            "    {{\"b\": {}, \"r\": {}, \"seq_gflops\": {:.4}, \
+             \"multi_gflops\": {:.4}, \"seq_eff_words_per_sec\": {:.1}, \
+             \"multi_eff_words_per_sec\": {:.1}, \"speedup\": {:.4}}}{}\n",
+            k.b,
+            k.r,
+            k.seq_gflops,
+            k.multi_gflops,
+            k.seq_eff_words_per_sec,
+            k.multi_eff_words_per_sec,
+            k.speedup,
+            if idx + 1 < kernel.len() { "," } else { "" }
+        );
+    }
+    s.push_str("  ],\n  \"engine_rsweep\": [\n");
+    for (idx, e) in engine.iter().enumerate() {
+        let _ = write!(
+            s,
+            "    {{\"r\": {}, \"seq_blocks_per_sec\": {:.1}, \
+             \"multi_blocks_per_sec\": {:.1}, \"speedup\": {:.4}, \
+             \"words_ratio\": {:.4}, \"msgs_ratio\": {:.4}}}{}\n",
+            e.r,
+            e.seq_blocks_per_sec,
+            e.multi_blocks_per_sec,
+            e.speedup,
+            e.words_ratio,
+            e.msgs_ratio,
+            if idx + 1 < engine.len() { "," } else { "" }
+        );
+    }
+    s.push_str("  ]\n}\n");
+    s
 }

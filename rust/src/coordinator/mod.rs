@@ -13,6 +13,16 @@
 //! Both vector phases run either over the Theorem 6 point-to-point schedule
 //! (comm cost = the lower bound's leading term, exactly) or as All-to-All
 //! collectives (2× the leading term — §7.2.2).
+//!
+//! **Multi-RHS batching** ([`SttsvPlan::run_multi`]): the same two vector
+//! phases and the same schedule serve an r-column right-hand-side batch
+//! `Y = A ×₂ X ×₃ X` (column-wise) by packing every message r words deep
+//! per coordinate. Communication words scale as exactly r× the r = 1
+//! counts while the *message* counts (the α·S latency term) are unchanged,
+//! and each owned tensor block is swept once for all r columns — the
+//! amortization that makes the symmetric CP gradient / MTTKRP workload
+//! (Algorithm 2, §8) r× cheaper per column than r independent STTSVs.
+//! [`SttsvPlan::run`] is the r = 1 special case.
 
 pub mod baselines;
 
@@ -22,7 +32,6 @@ use crate::schedule::CommSchedule;
 use crate::simulator::{self, Comm, CommStats};
 use crate::tensor::SymTensor;
 use anyhow::{bail, ensure, Result};
-use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
 /// How vector data moves between processors.
@@ -70,12 +79,13 @@ impl Default for ExecOpts {
 #[derive(Debug, Clone)]
 pub struct ProcReport {
     pub stats: CommStats,
-    /// Logical ternary multiplications (paper §7.1 accounting).
+    /// Logical ternary multiplications (paper §7.1 accounting), summed over
+    /// all right-hand-side columns of the run.
     pub ternary_mults: u64,
     pub compute_time: Duration,
 }
 
-/// Whole-run report.
+/// Whole-run report for a single right-hand side.
 #[derive(Debug, Clone)]
 pub struct SttsvReport {
     /// The assembled result y = A ×₂ x ×₃ x.
@@ -108,6 +118,46 @@ impl SttsvReport {
     }
 }
 
+/// Whole-run report for an r-column batched run ([`SttsvPlan::run_multi`]).
+#[derive(Debug, Clone)]
+pub struct SttsvMultiReport {
+    /// ys[l] = A ×₂ xs[l] ×₃ xs[l], one result column per input column.
+    pub ys: Vec<Vec<f32>>,
+    pub per_proc: Vec<ProcReport>,
+    /// Communication steps per vector phase (independent of r).
+    pub steps_per_phase: usize,
+    pub elapsed: Duration,
+}
+
+impl SttsvMultiReport {
+    /// Number of right-hand-side columns served.
+    pub fn nrhs(&self) -> usize {
+        self.ys.len()
+    }
+
+    /// Max over processors of words sent (scales as r× the r = 1 count).
+    pub fn max_sent_words(&self) -> u64 {
+        self.per_proc.iter().map(|r| r.stats.sent_words).max().unwrap_or(0)
+    }
+
+    /// Max over processors of words received.
+    pub fn max_recv_words(&self) -> u64 {
+        self.per_proc.iter().map(|r| r.stats.recv_words).max().unwrap_or(0)
+    }
+
+    /// Max over processors of messages sent (independent of r — the
+    /// latency-side win of r-deep packing).
+    pub fn max_sent_msgs(&self) -> u64 {
+        self.per_proc.iter().map(|r| r.stats.sent_msgs).max().unwrap_or(0)
+    }
+
+    /// Total logical ternary multiplications across processors (all
+    /// columns): r · n²(n+1)/2.
+    pub fn total_ternary_mults(&self) -> u64 {
+        self.per_proc.iter().map(|r| r.ternary_mults).sum()
+    }
+}
+
 /// Scaling factors (α, β, γ) applied to (ci, cj, ck) per block kind — the
 /// multiplicity bookkeeping of Algorithm 5 lines 17–27.
 fn factors(kind: BlockKind, i: usize, j: usize, k: usize) -> (f32, f32, f32) {
@@ -127,7 +177,8 @@ fn factors(kind: BlockKind, i: usize, j: usize, k: usize) -> (f32, f32, f32) {
     }
 }
 
-/// Logical ternary multiplications for a block of size b (paper §7.1).
+/// Logical ternary multiplications for a block of size b (paper §7.1),
+/// per right-hand-side column.
 fn block_ternary_mults(kind: BlockKind, b: u64) -> u64 {
     match kind {
         BlockKind::OffDiagonal => 3 * b * b * b,
@@ -159,6 +210,17 @@ pub fn run_sttsv_opts(
     opts: ExecOpts,
 ) -> Result<SttsvReport> {
     SttsvPlan::new(tensor, part, opts)?.run(x)
+}
+
+/// Run an r-column batched STTSV (one tensor sweep, r-deep messages) on a
+/// fresh plan. Iterative callers should build and reuse the plan.
+pub fn run_sttsv_multi(
+    tensor: &SymTensor,
+    xs: &[Vec<f32>],
+    part: &TetraPartition,
+    opts: ExecOpts,
+) -> Result<SttsvMultiReport> {
+    SttsvPlan::new(tensor, part, opts)?.run_multi(xs)
 }
 
 /// Run parallel STTSV for an n that does NOT divide into the partition's m
@@ -193,9 +255,10 @@ struct Group {
 }
 
 /// A prepared distributed STTSV: partition + Theorem 6 schedule + the
-/// owner-compute block data, extracted once. `run` is then a function of
-/// the input vector only — mirroring the paper's point that the tensor is
-/// never communicated (here: never re-extracted) across repeated STTSVs.
+/// owner-compute block data, extracted once. `run`/`run_multi` are then
+/// functions of the input vectors only — mirroring the paper's point that
+/// the tensor is never communicated (here: never re-extracted) across
+/// repeated STTSVs.
 pub struct SttsvPlan<'p> {
     part: &'p TetraPartition,
     sched: CommSchedule,
@@ -205,6 +268,11 @@ pub struct SttsvPlan<'p> {
     engine: Engine,
     /// groups[p] = per-kind batches for processor p.
     groups: Vec<Vec<Group>>,
+    /// slot_of[p][i] = dense slot of row block i on processor p (the index
+    /// of i in the sorted R_p), or `usize::MAX` when i ∉ R_p. Workers use
+    /// this to address their slot-indexed gather/accumulate buffers instead
+    /// of hashing row-block ids.
+    slot_of: Vec<Vec<usize>>,
 }
 
 impl<'p> SttsvPlan<'p> {
@@ -225,6 +293,7 @@ impl<'p> SttsvPlan<'p> {
         let engine = Engine::shared(opts.backend)?;
         let sched = CommSchedule::build(part)?;
         let mut groups: Vec<Vec<Group>> = Vec::with_capacity(part.p);
+        let mut slot_of: Vec<Vec<usize>> = Vec::with_capacity(part.p);
         for p in 0..part.p {
             let mut by_kind: [Vec<(usize, usize, usize)>; 3] = Default::default();
             for &(i, j, k) in &part.owned_blocks(p) {
@@ -244,6 +313,11 @@ impl<'p> SttsvPlan<'p> {
                 proc_groups.push(Group { blocks, a });
             }
             groups.push(proc_groups);
+            let mut map = vec![usize::MAX; part.m];
+            for (s, &i) in part.r_p[p].iter().enumerate() {
+                map[i] = s;
+            }
+            slot_of.push(map);
         }
         Ok(SttsvPlan {
             part,
@@ -253,12 +327,37 @@ impl<'p> SttsvPlan<'p> {
             opts,
             engine,
             groups,
+            slot_of,
         })
     }
 
-    /// Execute the distributed STTSV for one input vector.
+    /// Execute the distributed STTSV for one input vector — the r = 1
+    /// special case of [`SttsvPlan::run_multi`], preserving the paper's
+    /// per-vector communication counts exactly.
     pub fn run(&self, x: &[f32]) -> Result<SttsvReport> {
-        ensure!(x.len() == self.n, "x length {} != n {}", x.len(), self.n);
+        let SttsvMultiReport { mut ys, per_proc, steps_per_phase, elapsed } =
+            self.run_multi(&[x])?;
+        Ok(SttsvReport {
+            y: ys.pop().expect("r = 1 result column"),
+            per_proc,
+            steps_per_phase,
+            elapsed,
+        })
+    }
+
+    /// Execute the distributed STTSV for an r-column batch of input
+    /// vectors: `ys[l] = A ×₂ xs[l] ×₃ xs[l]` for every column, with ONE
+    /// sweep over the owned tensor blocks and r-deep packed messages over
+    /// the same Theorem 6 schedule. Per-processor communication words are
+    /// exactly r× the single-vector counts; message counts (latency) are
+    /// unchanged.
+    pub fn run_multi<X: AsRef<[f32]>>(&self, xs: &[X]) -> Result<SttsvMultiReport> {
+        let r = xs.len();
+        ensure!(r >= 1, "run_multi needs at least one right-hand side");
+        let views: Vec<&[f32]> = xs.iter().map(|x| x.as_ref()).collect();
+        for (l, x) in views.iter().enumerate() {
+            ensure!(x.len() == self.n, "xs[{l}] length {} != n {}", x.len(), self.n);
+        }
         let part = self.part;
         let b = self.b;
         let started = Instant::now();
@@ -270,19 +369,22 @@ impl<'p> SttsvPlan<'p> {
             Vec<(usize, std::ops::Range<usize>, Vec<f32>)>,
         );
         let outs: Vec<ProcOut> =
-            simulator::run(part.p, |comm| self.worker(comm, x))?;
+            simulator::run(part.p, |comm| self.worker(comm, &views))?;
 
-        // Assemble y from the final portions (each (i, sub-range) once).
-        let mut y = vec![0.0f32; self.n];
+        // Assemble ys from the final portions (each (i, sub-range) once;
+        // portion payloads are (len, r) interleaved panels).
+        let mut ys = vec![vec![0.0f32; self.n]; r];
         let mut covered = vec![false; self.n];
         let mut per_proc = Vec::with_capacity(part.p);
         for (stats, mults, ct, portions) in outs {
             for (i, range, vals) in portions {
-                for (off, v) in range.clone().zip(vals) {
+                for (t, off) in range.enumerate() {
                     let g = i * b + off;
                     ensure!(!covered[g], "y[{g}] produced twice");
                     covered[g] = true;
-                    y[g] = v;
+                    for (l, ycol) in ys.iter_mut().enumerate() {
+                        ycol[g] = vals[t * r + l];
+                    }
                 }
             }
             per_proc.push(ProcReport {
@@ -297,19 +399,26 @@ impl<'p> SttsvPlan<'p> {
             CommMode::PointToPoint => self.sched.num_steps(),
             CommMode::AllToAll => part.p - 1,
         };
-        Ok(SttsvReport {
-            y,
+        Ok(SttsvMultiReport {
+            ys,
             per_proc,
             steps_per_phase,
             elapsed: started.elapsed(),
         })
     }
 
-    /// One simulated processor executing Algorithm 5.
+    /// One simulated processor executing Algorithm 5 for r packed columns.
+    ///
+    /// All per-worker vector state lives in two dense slot-indexed buffers
+    /// (`xbuf`, `ybuf`) of shape (|R_p|, b, r): slot s holds the (b, r)
+    /// interleaved panel of row block `part.r_p[me][s]`. Portion sub-ranges
+    /// are contiguous slices of a panel, so message pack/unpack are plain
+    /// copies and kernels consume panels in place — no HashMap lookups on
+    /// the hot path.
     fn worker(
         &self,
         comm: &mut Comm,
-        x: &[f32],
+        xs: &[&[f32]],
     ) -> Result<(
         CommStats,
         u64,
@@ -319,78 +428,90 @@ impl<'p> SttsvPlan<'p> {
         let me = comm.rank;
         let part = self.part;
         let b = self.b;
+        let r = xs.len();
         let opts = self.opts;
+        let slots = &self.slot_of[me];
+        let nslots = part.r_p[me].len();
+        let panel = b * r;
 
-        // ---- phase 1: gather full row blocks x[i], i ∈ R_p ----------------
-        let mut my_x: HashMap<usize, Vec<f32>> = HashMap::new();
-        for &i in &part.r_p[me] {
-            let mut buf = vec![0.0f32; b];
-            let r = part.portion(i, me, b);
-            buf[r.clone()].copy_from_slice(&x[i * b + r.start..i * b + r.end]);
-            my_x.insert(i, buf);
+        // ---- phase 1: gather r-deep row-block panels x[i], i ∈ R_p --------
+        let mut xbuf = vec![0.0f32; nslots * panel];
+        for (s, &i) in part.r_p[me].iter().enumerate() {
+            for off in part.portion(i, me, b) {
+                let dst = (s * b + off) * r;
+                for (l, x) in xs.iter().enumerate() {
+                    xbuf[dst + l] = x[i * b + off];
+                }
+            }
         }
         exchange(
             comm,
             part,
             &self.sched,
             b,
+            r,
             opts.mode,
             0,
-            // pack: my own portion of each shared row block
-            |i, _to, my_x: &HashMap<usize, Vec<f32>>| {
-                let r = part.portion(i, me, b);
-                my_x[&i][r].to_vec()
+            // pack: my own portion of each shared row block (all r columns)
+            |i, _to, xbuf: &Vec<f32>| {
+                let s = slots[i];
+                let rg = part.portion(i, me, b);
+                xbuf[(s * b + rg.start) * r..(s * b + rg.end) * r].to_vec()
             },
             // unpack: sender's portion of row block i
-            |i, from, data, my_x: &mut HashMap<usize, Vec<f32>>| {
-                let r = part.portion(i, from, b);
-                my_x.get_mut(&i).unwrap()[r].copy_from_slice(&data);
+            |i, from, data, xbuf: &mut Vec<f32>| {
+                let s = slots[i];
+                let rg = part.portion(i, from, b);
+                xbuf[(s * b + rg.start) * r..(s * b + rg.end) * r].copy_from_slice(&data);
             },
-            &mut my_x,
+            &mut xbuf,
         )?;
 
         // ---- phase 2: local ternary multiplications -----------------------
+        // One sweep of each owned block serves all r columns (§Perf P6).
         let compute_start = Instant::now();
-        let mut my_y: HashMap<usize, Vec<f32>> = part.r_p[me]
-            .iter()
-            .map(|&i| (i, vec![0.0f32; b]))
-            .collect();
+        let mut ybuf = vec![0.0f32; nslots * panel];
         let mut mults: u64 = 0;
 
         for group in &self.groups[me] {
             let nb = group.blocks.len();
             if opts.batch {
-                let mut us = Vec::with_capacity(nb * b);
-                let mut vs = Vec::with_capacity(nb * b);
-                let mut ws = Vec::with_capacity(nb * b);
+                let mut us = Vec::with_capacity(nb * panel);
+                let mut vs = Vec::with_capacity(nb * panel);
+                let mut ws = Vec::with_capacity(nb * panel);
                 for &(i, j, k) in &group.blocks {
-                    us.extend_from_slice(&my_x[&i]);
-                    vs.extend_from_slice(&my_x[&j]);
-                    ws.extend_from_slice(&my_x[&k]);
+                    us.extend_from_slice(&xbuf[slots[i] * panel..(slots[i] + 1) * panel]);
+                    vs.extend_from_slice(&xbuf[slots[j] * panel..(slots[j] + 1) * panel]);
+                    ws.extend_from_slice(&xbuf[slots[k] * panel..(slots[k] + 1) * panel]);
                 }
-                let (cis, cjs, cks) =
-                    self.engine
-                        .block_contract_batch(&group.a, &us, &vs, &ws, b, nb)?;
+                let (cis, cjs, cks) = self
+                    .engine
+                    .block_contract_multi_batch(&group.a, &us, &vs, &ws, b, nb, r)?;
                 for (s, &(i, j, k)) in group.blocks.iter().enumerate() {
                     let kind = classify(i, j, k);
                     let (fi, fj, fk) = factors(kind, i, j, k);
-                    accumulate(&mut my_y, i, fi, &cis[s * b..(s + 1) * b]);
-                    accumulate(&mut my_y, j, fj, &cjs[s * b..(s + 1) * b]);
-                    accumulate(&mut my_y, k, fk, &cks[s * b..(s + 1) * b]);
-                    mults += block_ternary_mults(kind, b as u64);
+                    axpy_panel(&mut ybuf, slots[i], panel, fi, &cis[s * panel..(s + 1) * panel]);
+                    axpy_panel(&mut ybuf, slots[j], panel, fj, &cjs[s * panel..(s + 1) * panel]);
+                    axpy_panel(&mut ybuf, slots[k], panel, fk, &cks[s * panel..(s + 1) * panel]);
+                    mults += r as u64 * block_ternary_mults(kind, b as u64);
                 }
             } else {
                 for (s, &(i, j, k)) in group.blocks.iter().enumerate() {
                     let kind = classify(i, j, k);
                     let a = &group.a[s * b * b * b..(s + 1) * b * b * b];
-                    let (ci, cj, ck) = self
-                        .engine
-                        .block_contract(a, &my_x[&i], &my_x[&j], &my_x[&k], b)?;
+                    let (ci, cj, ck) = self.engine.block_contract_multi(
+                        a,
+                        &xbuf[slots[i] * panel..(slots[i] + 1) * panel],
+                        &xbuf[slots[j] * panel..(slots[j] + 1) * panel],
+                        &xbuf[slots[k] * panel..(slots[k] + 1) * panel],
+                        b,
+                        r,
+                    )?;
                     let (fi, fj, fk) = factors(kind, i, j, k);
-                    accumulate(&mut my_y, i, fi, &ci);
-                    accumulate(&mut my_y, j, fj, &cj);
-                    accumulate(&mut my_y, k, fk, &ck);
-                    mults += block_ternary_mults(kind, b as u64);
+                    axpy_panel(&mut ybuf, slots[i], panel, fi, &ci);
+                    axpy_panel(&mut ybuf, slots[j], panel, fj, &cj);
+                    axpy_panel(&mut ybuf, slots[k], panel, fk, &ck);
+                    mults += r as u64 * block_ternary_mults(kind, b as u64);
                 }
             }
         }
@@ -402,30 +523,35 @@ impl<'p> SttsvPlan<'p> {
             part,
             &self.sched,
             b,
+            r,
             opts.mode,
             1,
             // pack: MY partial of the DESTINATION's portion of row block i
-            |i, to, my_y: &HashMap<usize, Vec<f32>>| {
-                let r = part.portion(i, to, b);
-                my_y[&i][r].to_vec()
+            |i, to, ybuf: &Vec<f32>| {
+                let s = slots[i];
+                let rg = part.portion(i, to, b);
+                ybuf[(s * b + rg.start) * r..(s * b + rg.end) * r].to_vec()
             },
             // unpack: add sender's partial of MY portion
-            |i, _from, data, my_y: &mut HashMap<usize, Vec<f32>>| {
-                let r = part.portion(i, me, b);
-                let buf = my_y.get_mut(&i).unwrap();
-                for (off, v) in r.zip(data) {
-                    buf[off] += v;
+            |i, _from, data, ybuf: &mut Vec<f32>| {
+                let s = slots[i];
+                let rg = part.portion(i, me, b);
+                let dst = &mut ybuf[(s * b + rg.start) * r..(s * b + rg.end) * r];
+                for (o, v) in dst.iter_mut().zip(data) {
+                    *o += v;
                 }
             },
-            &mut my_y,
+            &mut ybuf,
         )?;
 
-        // Final owned portions of y.
+        // Final owned portions of y (interleaved r-deep panels).
         let portions: Vec<(usize, std::ops::Range<usize>, Vec<f32>)> = part.r_p[me]
             .iter()
-            .map(|&i| {
-                let r = part.portion(i, me, b);
-                (i, r.clone(), my_y[&i][r].to_vec())
+            .enumerate()
+            .map(|(s, &i)| {
+                let rg = part.portion(i, me, b);
+                let vals = ybuf[(s * b + rg.start) * r..(s * b + rg.end) * r].to_vec();
+                (i, rg, vals)
             })
             .collect();
 
@@ -433,28 +559,33 @@ impl<'p> SttsvPlan<'p> {
     }
 }
 
-fn accumulate(y: &mut HashMap<usize, Vec<f32>>, i: usize, f: f32, c: &[f32]) {
+/// ybuf[slot panel] += f · c over one contiguous (b, r) panel.
+fn axpy_panel(ybuf: &mut [f32], slot: usize, panel: usize, f: f32, c: &[f32]) {
     if f == 0.0 {
         return;
     }
-    let buf = y.get_mut(&i).unwrap();
-    for (o, v) in buf.iter_mut().zip(c) {
+    let dst = &mut ybuf[slot * panel..(slot + 1) * panel];
+    for (o, v) in dst.iter_mut().zip(c) {
         *o += f * v;
     }
 }
 
-/// Execute one vector-exchange phase under the chosen comm mode.
+/// Execute one vector-exchange phase under the chosen comm mode, with
+/// `r` words per vector coordinate (r-deep column packing; r = 1 is the
+/// paper's single-vector accounting).
 ///
 /// `pack(i, to)` produces the payload segment for shared row block `i`
 /// destined to processor `to`; `unpack(i, from, data, state)` consumes a
 /// received segment. Payload layout: segments concatenated in the sorted
-/// order of the transfer's shared row blocks.
+/// order of the transfer's shared row blocks, each segment an interleaved
+/// (portion_len, r) panel.
 #[allow(clippy::too_many_arguments)]
 fn exchange<S>(
     comm: &mut Comm,
     part: &TetraPartition,
     sched: &CommSchedule,
     b: usize,
+    r: usize,
     mode: CommMode,
     phase: u64,
     mut pack: impl FnMut(usize, usize, &S) -> Vec<f32>,
@@ -486,7 +617,7 @@ fn exchange<S>(
                     let mut off = 0usize;
                     for &i in &xf.row_blocks {
                         // phase 0 payload: sender's portion; phase 1: my portion
-                        let len = if phase == 0 {
+                        let len = r * if phase == 0 {
                             part.portion(i, xf.from, b).len()
                         } else {
                             part.portion(i, me, b).len()
@@ -502,11 +633,12 @@ fn exchange<S>(
         }
         CommMode::AllToAll => {
             // Bandwidth-optimal All-to-All: P−1 rounds; uniform per-peer
-            // buffer of 2 row-block portions (§7.2.2 accounting). Pairs
-            // sharing fewer than 2 row blocks pad with zeros.
+            // buffer of 2 row-block portions (§7.2.2 accounting), r words
+            // deep per coordinate. Pairs sharing fewer than 2 row blocks
+            // pad with zeros.
             let lambda1 = part.lambda1();
             let slot = b.div_ceil(lambda1);
-            let buf_words = 2 * slot;
+            let buf_words = 2 * slot * r;
             for round in 1..part.p {
                 let to = (me + round) % part.p;
                 let from = (me + part.p - round) % part.p;
@@ -531,7 +663,7 @@ fn exchange<S>(
                 let data = comm.recv(from, tag)?;
                 let mut off = 0usize;
                 for &i in &shared_in {
-                    let len = if phase == 0 {
+                    let len = r * if phase == 0 {
                         part.portion(i, from, b).len()
                     } else {
                         part.portion(i, me, b).len()
@@ -551,6 +683,18 @@ fn exchange<S>(
 /// sized (zero) payloads and no tensor or compute, so comm costs can be
 /// measured for large q/P without materializing an n³/6 tensor.
 pub fn run_comm_only(part: &TetraPartition, b: usize, mode: CommMode) -> Result<Vec<CommStats>> {
+    run_comm_only_multi(part, b, mode, 1)
+}
+
+/// Communication-only dry run of an r-column batched STTSV: every payload
+/// is r words deep per coordinate, so per-processor words are exactly r×
+/// the [`run_comm_only`] counts while message counts are identical.
+pub fn run_comm_only_multi(
+    part: &TetraPartition,
+    b: usize,
+    mode: CommMode,
+    r: usize,
+) -> Result<Vec<CommStats>> {
     let sched = CommSchedule::build(part)?;
     let outs = simulator::run(part.p, |comm| {
         let me = comm.rank;
@@ -561,15 +705,16 @@ pub fn run_comm_only(part: &TetraPartition, b: usize, mode: CommMode) -> Result<
                 part,
                 &sched,
                 b,
+                r,
                 mode,
                 phase,
                 |i, to, _state| {
-                    let r = if phase == 0 {
+                    let rg = if phase == 0 {
                         part.portion(i, me, b)
                     } else {
                         part.portion(i, to, b)
                     };
-                    vec![0.0f32; r.len()]
+                    vec![0.0f32; rg.len() * r]
                 },
                 |_, _, _, _| {},
                 &mut state,
@@ -651,6 +796,99 @@ mod tests {
     }
 
     #[test]
+    fn run_multi_matches_independent_oracles() {
+        // The r-column batched path must agree column-by-column with r
+        // independent sequential oracle STTSVs, in both comm modes, on a
+        // partition exercising all three block kinds.
+        for mode in [CommMode::PointToPoint, CommMode::AllToAll] {
+            let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+            let b = 6;
+            let n = b * part.m;
+            let tensor = SymTensor::random(n, 91);
+            let mut rng = Rng::new(92);
+            let r = 3;
+            let xs: Vec<Vec<f32>> = (0..r).map(|_| rng.normal_vec(n)).collect();
+            for batch in [false, true] {
+                let plan = SttsvPlan::new(
+                    &tensor,
+                    &part,
+                    ExecOpts { mode, backend: Backend::Native, batch },
+                )
+                .unwrap();
+                let rep = plan.run_multi(&xs).unwrap();
+                assert_eq!(rep.nrhs(), r);
+                for (l, x) in xs.iter().enumerate() {
+                    let want = tensor.sttsv(x);
+                    let scale = want.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+                    for i in 0..n {
+                        assert!(
+                            (rep.ys[l][i] - want[i]).abs() < 3e-3 * scale,
+                            "mode {mode:?} batch {batch} col {l} i={i}: {} vs {}",
+                            rep.ys[l][i],
+                            want[i]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn run_multi_comm_is_r_deep_packed() {
+        // Per-processor words scale as EXACTLY r× the r = 1 counts; message
+        // counts are unchanged — in both comm modes, including uneven
+        // portion splits (λ₁ ∤ b).
+        let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+        let b = 7;
+        let n = b * part.m;
+        let tensor = SymTensor::random(n, 93);
+        let mut rng = Rng::new(94);
+        let r = 5;
+        for mode in [CommMode::PointToPoint, CommMode::AllToAll] {
+            let plan = SttsvPlan::new(
+                &tensor,
+                &part,
+                ExecOpts { mode, backend: Backend::Native, batch: true },
+            )
+            .unwrap();
+            let single = plan.run(&rng.normal_vec(n)).unwrap();
+            let xs: Vec<Vec<f32>> = (0..r).map(|_| rng.normal_vec(n)).collect();
+            let multi = plan.run_multi(&xs).unwrap();
+            for p in 0..part.p {
+                let s1 = &single.per_proc[p].stats;
+                let sm = &multi.per_proc[p].stats;
+                assert_eq!(sm.sent_words, r as u64 * s1.sent_words, "{mode:?} proc {p} sent");
+                assert_eq!(sm.recv_words, r as u64 * s1.recv_words, "{mode:?} proc {p} recv");
+                assert_eq!(sm.sent_msgs, s1.sent_msgs, "{mode:?} proc {p} sent msgs");
+                assert_eq!(sm.recv_msgs, s1.recv_msgs, "{mode:?} proc {p} recv msgs");
+            }
+            // the comm-only dry run predicts the same counts
+            let dry = run_comm_only_multi(&part, b, mode, r).unwrap();
+            for p in 0..part.p {
+                assert_eq!(multi.per_proc[p].stats.sent_words, dry[p].sent_words);
+                assert_eq!(multi.per_proc[p].stats.recv_words, dry[p].recv_words);
+            }
+        }
+    }
+
+    #[test]
+    fn run_multi_ternary_mults_scale_with_r() {
+        let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+        let b = 4;
+        let n = b * part.m;
+        let tensor = SymTensor::random(n, 95);
+        let mut rng = Rng::new(96);
+        let r = 3;
+        let xs: Vec<Vec<f32>> = (0..r).map(|_| rng.normal_vec(n)).collect();
+        let plan = SttsvPlan::new(&tensor, &part, ExecOpts::default()).unwrap();
+        let rep = plan.run_multi(&xs).unwrap();
+        assert_eq!(
+            rep.total_ternary_mults(),
+            r as u64 * (n * n * (n + 1) / 2) as u64
+        );
+    }
+
+    #[test]
     fn comm_words_match_paper_formula_exactly() {
         // §7.2.2: each processor sends and receives n(q+1)/(q²+1) − n/P
         // words per vector, so 2× that across both phases.
@@ -718,7 +956,6 @@ mod tests {
         let dry_a2a = run_comm_only(&part, b, CommMode::AllToAll).unwrap();
         let max_p2p = dry_p2p.iter().map(|s| s.sent_words).max().unwrap();
         let max_a2a = dry_a2a.iter().map(|s| s.sent_words).max().unwrap();
-        let n = b * part.m;
         let expected_a2a = 2 * (2 * b / (q * (q + 1))) * (part.p - 1);
         assert_eq!(max_a2a, expected_a2a as u64);
         // a2a / p2p → 2(q²+1)/(q+1)² (→ 2 as q grows); at q=3 it is 20/16.
@@ -728,7 +965,6 @@ mod tests {
             (ratio - expected).abs() < 0.08,
             "ratio {ratio} vs expected {expected} ({max_a2a} vs {max_p2p})"
         );
-        let _ = n;
     }
 
     #[test]
@@ -746,6 +982,41 @@ mod tests {
         for i in 0..n {
             assert!((rep.y[i] - want[i]).abs() < 3e-3 * scale, "i={i}");
         }
+    }
+
+    #[test]
+    fn padded_run_truncates_y_and_bounds_comm_overhead() {
+        // Regression for the §6.1 n′ analysis: a padded run (n = 23 on the
+        // m = 5 partition → b′ = 5) must (a) truncate y back to n, (b)
+        // account communication exactly like a dry run at the padded block
+        // size, and (c) stay within one block's worth of words per phase of
+        // the exact-n closed form 2·(n(q+1)/(q²+1) − n/P).
+        let q = 2usize;
+        let part = TetraPartition::from_steiner(&spherical(q as u64).unwrap()).unwrap();
+        let n = 23usize;
+        let b2 = n.div_ceil(part.m); // 5
+        let tensor = SymTensor::random(n, 79);
+        let mut rng = Rng::new(80);
+        let x = rng.normal_vec(n);
+        let rep = run_sttsv_padded(&tensor, &x, &part, ExecOpts::default()).unwrap();
+        assert_eq!(rep.y.len(), n, "y must be truncated back to n");
+
+        let dry = run_comm_only(&part, b2, CommMode::PointToPoint).unwrap();
+        for (p, pr) in rep.per_proc.iter().enumerate() {
+            assert_eq!(pr.stats.sent_words, dry[p].sent_words, "proc {p} vs dry run");
+        }
+        // The paper's bandwidth cost is the max over processors; padding may
+        // shift words between processors but the max exceeds the exact-n
+        // closed form by at most one block's worth per phase.
+        let ideal_max = 2.0
+            * (n as f64 * (q + 1) as f64 / (q * q + 1) as f64 - n as f64 / part.p as f64);
+        let max_sent = rep.max_sent_words() as f64;
+        let extra = max_sent - ideal_max;
+        assert!(
+            (0.0..=2.0 * b2 as f64).contains(&extra),
+            "padding overhead {extra} words (max {max_sent} vs ideal \
+             {ideal_max}) exceeds one block ({b2}) per phase"
+        );
     }
 
     #[test]

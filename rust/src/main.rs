@@ -37,8 +37,9 @@ fn main() {
         Some("bounds") => cmd_bounds(&args),
         _ => {
             eprintln!(
-                "usage: sttsv <tables|schedule|run|power-method|cp-gradient|mttkrp|sweep|verify|bounds> \
-                 [--q N] [--b N] [--mode p2p|a2a] [--backend native|pjrt] [--iters N] [--sqs8]"
+                "usage: sttsv <tables|schedule|run|power-method|cp-gradient|mttkrp\
+                 |sweep|verify|bounds> [--q N] [--b N] [--mode p2p|a2a] \
+                 [--backend native|pjrt] [--iters N] [--sqs8]"
             );
             std::process::exit(2);
         }

@@ -7,14 +7,20 @@
 //! objects therefore live on one dedicated **engine service thread**; worker
 //! threads talk to it over a channel. The native backend computes inline on
 //! the calling thread (used for cross-checks and as the CPU perf baseline).
+//!
+//! Build-time gating: the `xla` crate is not vendored in every environment,
+//! so everything that names it lives behind the off-by-default `pjrt` cargo
+//! feature. Without the feature the engine still parses manifests and
+//! resolves artifact names, but executing a request returns an error that
+//! says how to enable the backend. See rust/Cargo.toml for the recipe.
 
 mod native;
 
-pub use native::{block_contract_native, dense_sttsv_native};
+pub use native::{block_contract_multi, block_contract_native, dense_sttsv_native};
 
 use anyhow::{anyhow, bail, Context, Result};
-use std::collections::{HashMap, HashSet};
-use std::path::{Path, PathBuf};
+use std::collections::HashSet;
+use std::path::PathBuf;
 use std::sync::mpsc;
 
 /// Which compute backend executes block contractions.
@@ -259,6 +265,139 @@ impl Engine {
         }
     }
 
+    /// Multi-RHS fused contraction on one b×b×b block: `us`/`vs`/`ws` and
+    /// the returned (ci, cj, ck) are `(b, r)` row-major panels (see
+    /// [`block_contract_multi`]). One sweep of A serves all r columns.
+    ///
+    /// Dispatch: native loops, or the `block_multi_b{b}_r{r}` artifact; when
+    /// the artifact is missing, falls back to de-interleaving the panels and
+    /// looping the single-RHS path per column (correct, r× the A traffic).
+    #[allow(clippy::too_many_arguments)]
+    pub fn block_contract_multi(
+        &self,
+        a: &[f32],
+        us: &[f32],
+        vs: &[f32],
+        ws: &[f32],
+        b: usize,
+        r: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        debug_assert_eq!(a.len(), b * b * b);
+        debug_assert_eq!(us.len(), b * r);
+        if r == 1 {
+            // (b, 1) panels are plain vectors: reuse the single-RHS path and
+            // its wider artifact coverage.
+            return self.block_contract(a, us, vs, ws, b);
+        }
+        match self.backend {
+            Backend::Native => Ok(block_contract_multi(a, us, vs, ws, b, r)),
+            Backend::Pjrt => {
+                let name = format!("block_multi_b{b}_r{r}");
+                if !self.has_artifact(&name) {
+                    return self.multi_via_columns(a, us, vs, ws, b, r);
+                }
+                let (bt, rt) = (b as i64, r as i64);
+                let out = self.call(
+                    &name,
+                    vec![
+                        (a.to_vec(), vec![bt, bt, bt]),
+                        (us.to_vec(), vec![bt, rt]),
+                        (vs.to_vec(), vec![bt, rt]),
+                        (ws.to_vec(), vec![bt, rt]),
+                    ],
+                )?;
+                let [ci, cj, ck]: [Vec<f32>; 3] = out
+                    .try_into()
+                    .map_err(|_| anyhow!("{name}: expected 3 outputs"))?;
+                Ok((ci, cj, ck))
+            }
+        }
+    }
+
+    /// Batched multi-RHS contraction over `nb` stacked blocks: inputs and
+    /// outputs are `(nb, b, r)` stacks of panels. The L3 hot path for
+    /// [`crate::coordinator::SttsvPlan::run_multi`]: one dispatch per block
+    /// kind per processor, sweeping each block once for all r columns.
+    #[allow(clippy::too_many_arguments)]
+    pub fn block_contract_multi_batch(
+        &self,
+        a: &[f32],
+        us: &[f32],
+        vs: &[f32],
+        ws: &[f32],
+        b: usize,
+        nb: usize,
+        r: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        debug_assert_eq!(a.len(), nb * b * b * b);
+        debug_assert_eq!(us.len(), nb * b * r);
+        if r == 1 {
+            return self.block_contract_batch(a, us, vs, ws, b, nb);
+        }
+        if self.backend == Backend::Pjrt {
+            let name = format!("block_multi_batch_b{b}_nb{nb}_r{r}");
+            if self.has_artifact(&name) {
+                let (nbt, bt, rt) = (nb as i64, b as i64, r as i64);
+                let out = self.call(
+                    &name,
+                    vec![
+                        (a.to_vec(), vec![nbt, bt, bt, bt]),
+                        (us.to_vec(), vec![nbt, bt, rt]),
+                        (vs.to_vec(), vec![nbt, bt, rt]),
+                        (ws.to_vec(), vec![nbt, bt, rt]),
+                    ],
+                )?;
+                let [ci, cj, ck]: [Vec<f32>; 3] = out
+                    .try_into()
+                    .map_err(|_| anyhow!("{name}: expected 3 outputs"))?;
+                return Ok((ci, cj, ck));
+            }
+        }
+        // PJRT without the batched-multi artifact but WITHOUT a per-block
+        // multi artifact either: de-interleave once and run the single-RHS
+        // batched path per column (r dispatches, keeping the nb-dispatch
+        // amortization) instead of degrading to nb·r per-block round-trips.
+        let have_per_block_multi = self.has_artifact(&format!("block_multi_b{b}_r{r}"));
+        if self.backend == Backend::Pjrt && !have_per_block_multi {
+            return per_column_fallback(us, vs, ws, nb * b, r, |u, v, w| {
+                self.block_contract_batch(a, u, v, w, b, nb)
+            });
+        }
+        // Native (no dispatch cost), or PJRT with the per-block multi
+        // artifact: loop the multi kernel per block (nb dispatches).
+        let mut ci = Vec::with_capacity(nb * b * r);
+        let mut cj = Vec::with_capacity(nb * b * r);
+        let mut ck = Vec::with_capacity(nb * b * r);
+        for s in 0..nb {
+            let (x, y, z) = self.block_contract_multi(
+                &a[s * b * b * b..(s + 1) * b * b * b],
+                &us[s * b * r..(s + 1) * b * r],
+                &vs[s * b * r..(s + 1) * b * r],
+                &ws[s * b * r..(s + 1) * b * r],
+                b,
+                r,
+            )?;
+            ci.extend(x);
+            cj.extend(y);
+            ck.extend(z);
+        }
+        Ok((ci, cj, ck))
+    }
+
+    /// Column-loop fallback for the multi path: de-interleave the `(b, r)`
+    /// panels, run the single-RHS kernel per column, re-interleave.
+    fn multi_via_columns(
+        &self,
+        a: &[f32],
+        us: &[f32],
+        vs: &[f32],
+        ws: &[f32],
+        b: usize,
+        r: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        per_column_fallback(us, vs, ws, b, r, |u, v, w| self.block_contract(a, u, v, w, b))
+    }
+
     /// Dense STTSV on an n×n×n row-major tensor (Algorithm 3 baseline
     /// executable `dense_sttsv_n{n}`, or native loops).
     pub fn dense_sttsv(&self, a: &[f32], x: &[f32], n: usize) -> Result<Vec<f32>> {
@@ -283,8 +422,45 @@ impl Engine {
     }
 }
 
+/// Shared column-loop fallback for the multi-RHS paths: de-interleave the
+/// `(len, r)` row-major panels into per-column vectors, run `call` per
+/// column, re-interleave the outputs. Used when no multi artifact covers
+/// the requested r; correctness is identical to the fused path, the cost
+/// is r single-RHS sweeps.
+fn per_column_fallback(
+    us: &[f32],
+    vs: &[f32],
+    ws: &[f32],
+    len: usize,
+    r: usize,
+    mut call: impl FnMut(&[f32], &[f32], &[f32]) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)>,
+) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+    let mut ci = vec![0.0f32; len * r];
+    let mut cj = vec![0.0f32; len * r];
+    let mut ck = vec![0.0f32; len * r];
+    let mut u = vec![0.0f32; len];
+    let mut v = vec![0.0f32; len];
+    let mut w = vec![0.0f32; len];
+    for l in 0..r {
+        for x in 0..len {
+            u[x] = us[x * r + l];
+            v[x] = vs[x * r + l];
+            w[x] = ws[x * r + l];
+        }
+        let (si, sj, sk) = call(&u, &v, &w)?;
+        for x in 0..len {
+            ci[x * r + l] = si[x];
+            cj[x * r + l] = sj[x];
+            ck[x * r + l] = sk[x];
+        }
+    }
+    Ok((ci, cj, ck))
+}
+
 /// The engine service loop: owns the PJRT client and the executable cache.
+#[cfg(feature = "pjrt")]
 fn service_loop(rx: mpsc::Receiver<Req>, dir: PathBuf) {
+    use std::collections::HashMap;
     let client = match xla::PjRtClient::cpu() {
         Ok(c) => c,
         Err(e) => {
@@ -304,10 +480,26 @@ fn service_loop(rx: mpsc::Receiver<Req>, dir: PathBuf) {
     }
 }
 
+/// Stub service loop when the crate is built without the `pjrt` feature:
+/// every request fails with a pointer at the build recipe. Keeping the
+/// thread + channel shape identical means `Engine::new(Backend::Pjrt)` and
+/// manifest introspection behave the same either way.
+#[cfg(not(feature = "pjrt"))]
+fn service_loop(rx: mpsc::Receiver<Req>, _dir: PathBuf) {
+    while let Ok(req) = rx.recv() {
+        let _ = req.reply.send(Err(anyhow!(
+            "PJRT backend unavailable: built without the `pjrt` feature \
+             (add the `xla` dependency and build with --features pjrt; \
+             see rust/Cargo.toml)"
+        )));
+    }
+}
+
+#[cfg(feature = "pjrt")]
 fn execute(
     client: &xla::PjRtClient,
-    cache: &mut HashMap<String, xla::PjRtLoadedExecutable>,
-    dir: &Path,
+    cache: &mut std::collections::HashMap<String, xla::PjRtLoadedExecutable>,
+    dir: &std::path::Path,
     req: &Req,
 ) -> Result<Vec<Vec<f32>>> {
     if !cache.contains_key(&req.name) {
@@ -377,6 +569,33 @@ mod tests {
     }
 
     #[test]
+    fn engine_multi_batch_native_matches_per_block_multi() {
+        let (b, nb, r) = (4usize, 3usize, 4usize);
+        let mut rng = Rng::new(21);
+        let a = rng.normal_vec(nb * b * b * b);
+        let us = rng.normal_vec(nb * b * r);
+        let vs = rng.normal_vec(nb * b * r);
+        let ws = rng.normal_vec(nb * b * r);
+        let eng = Engine::new(Backend::Native).unwrap();
+        let (ci, cj, ck) = eng
+            .block_contract_multi_batch(&a, &us, &vs, &ws, b, nb, r)
+            .unwrap();
+        for s in 0..nb {
+            let (x, y, z) = block_contract_multi(
+                &a[s * b * b * b..(s + 1) * b * b * b],
+                &us[s * b * r..(s + 1) * b * r],
+                &vs[s * b * r..(s + 1) * b * r],
+                &ws[s * b * r..(s + 1) * b * r],
+                b,
+                r,
+            );
+            assert_eq!(&ci[s * b * r..(s + 1) * b * r], &x[..], "block {s} ci");
+            assert_eq!(&cj[s * b * r..(s + 1) * b * r], &y[..], "block {s} cj");
+            assert_eq!(&ck[s * b * r..(s + 1) * b * r], &z[..], "block {s} ck");
+        }
+    }
+
+    #[test]
     fn backend_parse() {
         assert_eq!("native".parse::<Backend>().unwrap(), Backend::Native);
         assert_eq!("pjrt".parse::<Backend>().unwrap(), Backend::Pjrt);
@@ -384,5 +603,5 @@ mod tests {
     }
 
     // PJRT round-trip tests live in rust/tests/pjrt_integration.rs (they
-    // need `make artifacts` to have run).
+    // need `make artifacts` to have run and a build with --features pjrt).
 }

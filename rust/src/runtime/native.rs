@@ -5,6 +5,12 @@
 //! the §Perf comparisons. The loop structure mirrors the Pallas kernel: one
 //! pass over A computing all three contractions (3× arithmetic intensity),
 //! with the shared intermediate M = A ×₃ w reused by ci and cj.
+//!
+//! Multi-RHS layout convention (shared with the Pallas kernels and the
+//! coordinator): an r-column panel stores coordinate `x` of column `l` at
+//! offset `x*r + l` — i.e. a row-major `(b, r)` matrix. The column index
+//! varies fastest so the per-coordinate inner loops over `l` touch
+//! contiguous memory and autovectorize (EXPERIMENTS.md §Perf P6).
 
 /// Fused ternary block contraction: A is b×b×b row-major ((a·b+β)·b+γ).
 ///
@@ -50,6 +56,82 @@ pub fn block_contract_native(
     (ci, cj, ck)
 }
 
+/// Multi-RHS fused ternary block contraction: one sweep of the b³ block
+/// serves r right-hand-side columns.
+///
+/// `us`, `vs`, `ws` are `(b, r)` row-major panels (`us[x*r + l]` is
+/// coordinate `x` of column `l`); the returned `(ci, cj, ck)` are `(b, r)`
+/// panels with the same layout, satisfying per column `l`
+///
+///   ci[a,l] = Σ_{β,γ} A[a,β,γ]·vs[β,l]·ws[γ,l]   (and cj/ck analogously).
+///
+/// The kernel is the r-tiled version of [`block_contract_native`]: each
+/// A-row is loaded once and contracted against all r columns, multiplying
+/// the arithmetic intensity by r (the node-level mirror of the multi-vector
+/// amortization argument for MTTKRP-style workloads; EXPERIMENTS.md §Perf
+/// P6). The inner `l`-loops run over contiguous r-length panel rows and
+/// keep the per-row accumulators (`m`, `uv`, `ci_x`) in registers for the
+/// practical r ≤ 16 range.
+pub fn block_contract_multi(
+    a: &[f32],
+    us: &[f32],
+    vs: &[f32],
+    ws: &[f32],
+    b: usize,
+    r: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert_eq!(a.len(), b * b * b);
+    debug_assert_eq!(us.len(), b * r);
+    debug_assert_eq!(vs.len(), b * r);
+    debug_assert_eq!(ws.len(), b * r);
+    let mut ci = vec![0.0f32; b * r];
+    let mut cj = vec![0.0f32; b * r];
+    let mut ck = vec![0.0f32; b * r];
+    // Per-row accumulators, hoisted out of the loops (one allocation per
+    // block, not per row).
+    let mut m = vec![0.0f32; r];
+    let mut uv = vec![0.0f32; r];
+    let mut ci_x = vec![0.0f32; r];
+    for x in 0..b {
+        let ux = &us[x * r..(x + 1) * r];
+        ci_x.fill(0.0);
+        for y in 0..b {
+            let row = &a[(x * b + y) * b..(x * b + y + 1) * b];
+            let vy = &vs[y * r..(y + 1) * r];
+            for l in 0..r {
+                uv[l] = ux[l] * vy[l];
+            }
+            m.fill(0.0);
+            // Same two-sweep structure as the single-RHS kernel (§Perf P2),
+            // with the scalar A element broadcast across the r lanes.
+            for z in 0..b {
+                let az = row[z];
+                let wz = &ws[z * r..(z + 1) * r];
+                for l in 0..r {
+                    m[l] += az * wz[l];
+                }
+            }
+            for z in 0..b {
+                let az = row[z];
+                let cz = &mut ck[z * r..(z + 1) * r];
+                for l in 0..r {
+                    cz[l] += az * uv[l];
+                }
+            }
+            let cjy = &mut cj[y * r..(y + 1) * r];
+            for l in 0..r {
+                ci_x[l] += m[l] * vy[l];
+                cjy[l] += m[l] * ux[l];
+            }
+        }
+        let cix = &mut ci[x * r..(x + 1) * r];
+        for l in 0..r {
+            cix[l] += ci_x[l];
+        }
+    }
+    (ci, cj, ck)
+}
+
 /// Dense STTSV y = A ×₂ x ×₃ x on an n×n×n row-major tensor (Algorithm 3).
 pub fn dense_sttsv_native(a: &[f32], x: &[f32], n: usize) -> Vec<f32> {
     let mut y = vec![0.0f32; n];
@@ -83,7 +165,8 @@ mod tests {
 
     #[test]
     fn block_contract_on_rank_one_tensor() {
-        // A[x,y,z] = p[x]·q[y]·r[z] ⇒ ci = p·(q·v)(r·w), etc.
+        // A[x,y,z] = p[x]·q[y]·r[z] ⇒ ci = p·(q·v)(r·w), cj = q·(p·u)(r·w),
+        // ck = r·(p·u)(q·v).
         let b = 4;
         let mut rng = Rng::new(2);
         let (p, q, r) = (rng.normal_vec(b), rng.normal_vec(b), rng.normal_vec(b));
@@ -98,12 +181,79 @@ mod tests {
         }
         let dotf = |a: &[f32], b: &[f32]| -> f32 { a.iter().zip(b).map(|(x, y)| x * y).sum() };
         let (ci, cj, ck) = block_contract_native(&a, &u, &v, &w, b);
-        let (qv, rw, pu, uv) = (dotf(&q, &v), dotf(&r, &w), dotf(&p, &u), dotf(&q, &v));
-        let _ = uv;
+        let (qv, rw, pu) = (dotf(&q, &v), dotf(&r, &w), dotf(&p, &u));
         for t in 0..b {
             assert!((ci[t] - p[t] * qv * rw).abs() < 1e-4);
             assert!((cj[t] - q[t] * pu * rw).abs() < 1e-4);
             assert!((ck[t] - r[t] * pu * qv).abs() < 1e-4);
         }
+    }
+
+    #[test]
+    fn block_contract_single_entry_pins_index_order() {
+        // A zero except at one entry with three DISTINCT indices: pins down
+        // the accumulation order exactly (a transposed loop nest would move
+        // the nonzero to the wrong output coordinate, which the rank-one and
+        // random tests — symmetric in distribution — can miss).
+        let b = 5;
+        let (x0, y0, z0) = (3usize, 1usize, 4usize);
+        let mut a = vec![0.0f32; b * b * b];
+        a[(x0 * b + y0) * b + z0] = 2.0;
+        let mut rng = Rng::new(11);
+        let (u, v, w) = (rng.normal_vec(b), rng.normal_vec(b), rng.normal_vec(b));
+        let (ci, cj, ck) = block_contract_native(&a, &u, &v, &w, b);
+        for t in 0..b {
+            let want_ci = if t == x0 { 2.0 * v[y0] * w[z0] } else { 0.0 };
+            let want_cj = if t == y0 { 2.0 * u[x0] * w[z0] } else { 0.0 };
+            let want_ck = if t == z0 { 2.0 * u[x0] * v[y0] } else { 0.0 };
+            assert!((ci[t] - want_ci).abs() < 1e-5, "ci[{t}]");
+            assert!((cj[t] - want_cj).abs() < 1e-5, "cj[{t}]");
+            assert!((ck[t] - want_ck).abs() < 1e-5, "ck[{t}]");
+        }
+    }
+
+    #[test]
+    fn multi_rhs_matches_column_by_column() {
+        // The r-column fused kernel must reproduce r independent single-RHS
+        // calls exactly (same FP operation order per column).
+        let (b, r) = (6usize, 5usize);
+        let mut rng = Rng::new(3);
+        let a = rng.normal_vec(b * b * b);
+        let cols: Vec<[Vec<f32>; 3]> = (0..r)
+            .map(|_| [rng.normal_vec(b), rng.normal_vec(b), rng.normal_vec(b)])
+            .collect();
+        // interleave into (b, r) panels
+        let mut us = vec![0.0f32; b * r];
+        let mut vs = vec![0.0f32; b * r];
+        let mut ws = vec![0.0f32; b * r];
+        for (l, [u, v, w]) in cols.iter().enumerate() {
+            for x in 0..b {
+                us[x * r + l] = u[x];
+                vs[x * r + l] = v[x];
+                ws[x * r + l] = w[x];
+            }
+        }
+        let (ci, cj, ck) = block_contract_multi(&a, &us, &vs, &ws, b, r);
+        for (l, [u, v, w]) in cols.iter().enumerate() {
+            let (si, sj, sk) = block_contract_native(&a, u, v, w, b);
+            for t in 0..b {
+                assert_eq!(ci[t * r + l], si[t], "col {l} ci[{t}]");
+                assert_eq!(cj[t * r + l], sj[t], "col {l} cj[{t}]");
+                assert_eq!(ck[t * r + l], sk[t], "col {l} ck[{t}]");
+            }
+        }
+    }
+
+    #[test]
+    fn multi_rhs_r1_is_the_single_kernel() {
+        let b = 7;
+        let mut rng = Rng::new(4);
+        let a = rng.normal_vec(b * b * b);
+        let (u, v, w) = (rng.normal_vec(b), rng.normal_vec(b), rng.normal_vec(b));
+        let (ci, cj, ck) = block_contract_multi(&a, &u, &v, &w, b, 1);
+        let (si, sj, sk) = block_contract_native(&a, &u, &v, &w, b);
+        assert_eq!(ci, si);
+        assert_eq!(cj, sj);
+        assert_eq!(ck, sk);
     }
 }

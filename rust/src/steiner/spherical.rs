@@ -98,7 +98,8 @@ pub fn spherical_alpha(q: u64, alpha: u32) -> Result<SteinerSystem> {
     let expected = ((qa + 1) * qa * (qa - 1) / ((q + 1) * q * (q - 1))) as usize;
     anyhow::ensure!(
         seen.len() == expected,
-        "orbit size {} != |PGL₂(q^α)|/|PGL₂(q)| = {expected} for q={q}, α={alpha} (p={p}, e={e})",
+        "orbit size {} != |PGL₂(q^α)|/|PGL₂(q)| = {expected} for q={q}, α={alpha} \
+         (p={p}, e={e})",
         seen.len()
     );
 

@@ -9,8 +9,12 @@
 //! P3: total logical ternary multiplications equal n²(n+1)/2 regardless of
 //!     the partition (no work duplicated or dropped).
 //! P4: schedules remain valid for random mixes of q and the SQS(8) system.
+//! P5: the batched multi-RHS path (`SttsvPlan::run_multi`) matches r
+//!     independent oracle calls column-by-column across all three block
+//!     kinds and both comm modes, with words exactly r× and messages
+//!     independent of r.
 
-use sttsv::coordinator::{run_comm_only, run_sttsv_opts, CommMode, ExecOpts};
+use sttsv::coordinator::{run_comm_only, run_sttsv_opts, CommMode, ExecOpts, SttsvPlan};
 use sttsv::partition::TetraPartition;
 use sttsv::runtime::Backend;
 use sttsv::schedule::CommSchedule;
@@ -190,4 +194,79 @@ fn load_balance_within_paper_slack() {
         let mean = rep.total_ternary_mults() as f64 / part.p as f64;
         assert!(max / mean < 1.15, "q={q}: max/mean = {}", max / mean);
     }
+}
+
+#[test]
+fn p5_run_multi_equals_r_independent_oracles() {
+    // The batched multi-RHS path must match r independent sequential
+    // Algorithm 4 oracle calls, column by column, across partitions that
+    // exercise all three block kinds (off-diagonal, non-central diagonal,
+    // central diagonal), both comm modes, batched and per-block dispatch —
+    // and its comm counters must be exactly r-deep-packed: words r× the
+    // single-vector dry run, messages identical to it.
+    let pool = partition_pool();
+    check(
+        "run_multi == r oracles",
+        0xBA7C4,
+        10,
+        |rng: &mut Rng| {
+            let part_idx = rng.below(pool.len());
+            let b = 2 + rng.below(6); // 2..=7, including non-divisible-by-λ₁
+            let r = 1 + rng.below(5); // 1..=5
+            let mode = if rng.below(2) == 0 {
+                CommMode::PointToPoint
+            } else {
+                CommMode::AllToAll
+            };
+            let batch = rng.below(2) == 0;
+            let seed = rng.next_u64();
+            (part_idx, b, r, mode, batch, seed)
+        },
+        |&(part_idx, b, r, mode, batch, seed)| {
+            let part = &pool[part_idx];
+            let n = b * part.m;
+            let tensor = SymTensor::random(n, seed);
+            let mut rng = Rng::new(seed ^ 0xAAAA);
+            let xs: Vec<Vec<f32>> = (0..r).map(|_| rng.normal_vec(n)).collect();
+            let plan = SttsvPlan::new(
+                &tensor,
+                part,
+                ExecOpts { mode, backend: Backend::Native, batch },
+            )
+            .map_err(|e| e.to_string())?;
+            let rep = plan.run_multi(&xs).map_err(|e| e.to_string())?;
+            if rep.ys.len() != r {
+                return Err(format!("{} result columns, expected {r}", rep.ys.len()));
+            }
+            for (l, x) in xs.iter().enumerate() {
+                let want = tensor.sttsv(x);
+                let scale = want.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+                for i in 0..n {
+                    if (rep.ys[l][i] - want[i]).abs() > 3e-3 * scale {
+                        return Err(format!(
+                            "col {l} mismatch at i={i}: {} vs {} (scale {scale})",
+                            rep.ys[l][i], want[i]
+                        ));
+                    }
+                }
+            }
+            // r-deep packing invariant vs the single-vector dry run
+            let dry = run_comm_only(part, b, mode).map_err(|e| e.to_string())?;
+            for (p, (pr, d)) in rep.per_proc.iter().zip(&dry).enumerate() {
+                if pr.stats.sent_words != r as u64 * d.sent_words {
+                    return Err(format!(
+                        "proc {p}: sent {} words, expected r×{}",
+                        pr.stats.sent_words, d.sent_words
+                    ));
+                }
+                if pr.stats.sent_msgs != d.sent_msgs {
+                    return Err(format!(
+                        "proc {p}: sent {} msgs, expected {} (r-independent)",
+                        pr.stats.sent_msgs, d.sent_msgs
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
 }
