@@ -1,6 +1,6 @@
 # Top-level convenience targets (the code's "run `make artifacts`" pointers).
 
-.PHONY: artifacts artifacts-quick test pytest bench
+.PHONY: artifacts artifacts-quick test pytest bench bench-smoke
 
 # AOT-lower the JAX/Pallas kernels (incl. the multi-RHS block_multi_* set)
 # to HLO text artifacts for the Rust PJRT backend.
@@ -17,6 +17,11 @@ test:
 pytest:
 	cd python && python -m pytest tests/ -q
 
-# Kernel-throughput r-sweep; writes rust/BENCH_kernel.json.
+# Kernel-throughput r-sweep + E11 packed-vs-dense; writes
+# rust/BENCH_kernel.json.
 bench:
 	cd rust && cargo bench --bench kernel_throughput
+
+# Fast variant (what CI runs): every path executes, fewer samples.
+bench-smoke:
+	cd rust && STTSV_BENCH_SMOKE=1 cargo bench --bench kernel_throughput

@@ -41,11 +41,7 @@ fn main() -> anyhow::Result<()> {
         })
         .collect();
 
-    let opts = ExecOpts {
-        mode: CommMode::PointToPoint,
-        backend,
-        batch: true,
-    };
+    let opts = ExecOpts { mode: CommMode::PointToPoint, ..ExecOpts::for_backend(backend) };
 
     let f0 = cp_objective(&tensor, &x);
     println!("initial objective f(X) = {f0:.6}");

@@ -41,11 +41,7 @@ fn main() -> anyhow::Result<()> {
         *v += 0.25 * rng.normal_f32();
     }
 
-    let opts = ExecOpts {
-        mode: CommMode::PointToPoint,
-        backend,
-        batch: true,
-    };
+    let opts = ExecOpts { mode: CommMode::PointToPoint, ..ExecOpts::for_backend(backend) };
     let rep = power_method(&tensor, &part, &x0, iters, 1e-6, opts)?;
 
     println!("\n# iter   ||y||        lambda       ||dx||");

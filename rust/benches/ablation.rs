@@ -74,8 +74,8 @@ fn main() -> anyhow::Result<()> {
         for batch in [false, true] {
             let opts = ExecOpts {
                 mode: CommMode::PointToPoint,
-                backend,
                 batch,
+                ..ExecOpts::for_backend(backend)
             };
             if run_sttsv_opts(&tensor, &x, &part, opts).is_err() {
                 continue; // pjrt without artifacts

@@ -41,8 +41,7 @@ fn main() -> anyhow::Result<()> {
             }
             let opts = ExecOpts {
                 mode: CommMode::PointToPoint,
-                backend,
-                batch: true,
+                ..ExecOpts::for_backend(backend)
             };
             let rep = power_method(&tensor, &part, &x0, 40, 1e-6, opts)?;
             let align = linalg::dot(&rep.x, &cols[0]).abs();

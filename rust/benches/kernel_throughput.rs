@@ -12,15 +12,23 @@
 //! engine level (`SttsvPlan::run_multi` vs r sequential `run` calls,
 //! including the exact r×-words / constant-messages comm check).
 //!
+//! New in this PR, the E11 series (§Perf P7): plan-resident tensor words
+//! and end-to-end throughput of the zero-copy packed execution path vs the
+//! dense-extract path, including plan-construction time.
+//!
 //! Emits a machine-readable `BENCH_kernel.json` next to the package root so
 //! the perf trajectory is tracked across PRs.
 //!
 //!     cargo bench --bench kernel_throughput
+//!
+//! Set `STTSV_BENCH_SMOKE=1` (as CI does) to cut warmup/sample counts for a
+//! quick smoke run: numbers are rougher but every code path still executes
+//! and BENCH_kernel.json is still written.
 
 use std::fmt::Write as _;
 
 use sttsv::bench::{gflops, header, time};
-use sttsv::coordinator::{CommMode, ExecOpts, SttsvPlan};
+use sttsv::coordinator::{ExecOpts, SttsvPlan};
 use sttsv::partition::TetraPartition;
 use sttsv::runtime::{
     artifacts_dir, block_contract_multi, block_contract_native, Backend, Engine,
@@ -97,6 +105,37 @@ struct EngineRow {
     msgs_ratio: f64,
 }
 
+/// One JSON record of the E11 packed-vs-dense series (§Perf P7).
+struct PackedRow {
+    b: usize,
+    r: usize,
+    tensor_packed_words: usize,
+    plan_words_packed: usize,
+    plan_words_dense: usize,
+    construct_ms_packed: f64,
+    construct_ms_dense: f64,
+    run_ms_packed: f64,
+    run_ms_dense: f64,
+    /// packed run throughput relative to dense-extract (>1 = packed faster)
+    packed_over_dense: f64,
+}
+
+/// Smoke mode (STTSV_BENCH_SMOKE=1, used by CI): scale down a
+/// (warmup, samples) pair so every path runs but quickly.
+fn reps(warmup: usize, samples: usize) -> (usize, usize) {
+    if std::env::var_os("STTSV_BENCH_SMOKE").is_some() {
+        (warmup.min(1), samples.clamp(1, 3))
+    } else {
+        (warmup, samples)
+    }
+}
+
+/// Smoke-aware wrapper around the in-tree timing harness.
+fn btime<F: FnMut()>(warmup: usize, samples: usize, f: F) -> sttsv::bench::Timing {
+    let (w, s) = reps(warmup, samples);
+    time(w, s, f)
+}
+
 fn main() -> anyhow::Result<()> {
     header("E10: fused block-contraction kernel throughput");
     let have_pjrt = artifacts_dir().join("manifest.txt").exists();
@@ -116,7 +155,7 @@ fn main() -> anyhow::Result<()> {
         let flops = 6.0 * (b as f64).powi(3);
         let intensity = flops / (b * b * b * 4) as f64;
 
-        let tn = time(10, 50, || {
+        let tn = btime(10, 50, || {
             std::hint::black_box(block_contract_native(&a, &u, &v, &w, b));
         });
         t.row([
@@ -127,7 +166,7 @@ fn main() -> anyhow::Result<()> {
             format!("{intensity:.2}"),
         ]);
 
-        let tu = time(10, 50, || {
+        let tu = btime(10, 50, || {
             std::hint::black_box(block_contract_unfused(&a, &u, &v, &w, b));
         });
         t.row([
@@ -140,7 +179,7 @@ fn main() -> anyhow::Result<()> {
 
         if let Some(eng) = &pjrt {
             if eng.has_artifact(&format!("block_b{b}")) {
-                let tp = time(3, 15, || {
+                let tp = btime(3, 15, || {
                     std::hint::black_box(eng.block_contract(&a, &u, &v, &w, b).unwrap());
                 });
                 t.row([
@@ -170,7 +209,7 @@ fn main() -> anyhow::Result<()> {
         ("pjrt", pjrt.as_ref().cloned()),
     ] {
         let Some(eng) = engine else { continue };
-        let t_loop = time(3, 15, || {
+        let t_loop = btime(3, 15, || {
             for s in 0..nb {
                 std::hint::black_box(
                     eng.block_contract(
@@ -184,7 +223,7 @@ fn main() -> anyhow::Result<()> {
                 );
             }
         });
-        let t_batch = time(3, 15, || {
+        let t_batch = btime(3, 15, || {
             std::hint::black_box(eng.block_contract_batch(&a, &us, &vs, &ws, b, nb).unwrap());
         });
         t2.row([
@@ -232,12 +271,12 @@ fn main() -> anyhow::Result<()> {
             let flops = 6.0 * (b as f64).powi(3) * r as f64;
             let eff_words = (b * b * b) as f64 * r as f64;
 
-            let t_seq = time(5, 30, || {
+            let t_seq = btime(5, 30, || {
                 for [u, v, w] in &cols {
                     std::hint::black_box(block_contract_native(&a, u, v, w, b));
                 }
             });
-            let t_multi = time(5, 30, || {
+            let t_multi = btime(5, 30, || {
                 std::hint::black_box(block_contract_multi(&a, &us, &vs, &ws, b, r));
             });
             let row = KernelRow {
@@ -270,15 +309,10 @@ fn main() -> anyhow::Result<()> {
     let bb = 32usize;
     let n = bb * part.m;
     let tensor = SymTensor::random(n, 7);
-    let plan = SttsvPlan::new(
-        &tensor,
-        &part,
-        ExecOpts {
-            mode: CommMode::PointToPoint,
-            backend: Backend::Native,
-            batch: true,
-        },
-    )?;
+    // Pinned to the dense-resident plan so the engine_rsweep series stays
+    // comparable with prior PRs' BENCH_kernel.json; the packed path is
+    // measured separately in E11 below.
+    let plan = SttsvPlan::new(&tensor, &part, ExecOpts { packed: false, ..Default::default() })?;
     // total owned lower-tetra blocks across processors: m(m+1)(m+2)/6
     let total_blocks = part.m * (part.m + 1) * (part.m + 2) / 6;
     let mut rng = Rng::new(8);
@@ -289,12 +323,12 @@ fn main() -> anyhow::Result<()> {
     ]);
     for r in [1usize, 2, 4, 8, 16] {
         let xs: Vec<Vec<f32>> = (0..r).map(|_| rng.normal_vec(n)).collect();
-        let t_seq = time(1, 7, || {
+        let t_seq = btime(1, 7, || {
             for x in &xs {
                 std::hint::black_box(plan.run(x).unwrap());
             }
         });
-        let t_multi = time(1, 7, || {
+        let t_multi = btime(1, 7, || {
             std::hint::black_box(plan.run_multi(&xs).unwrap());
         });
 
@@ -351,8 +385,69 @@ fn main() -> anyhow::Result<()> {
         r8.words_ratio, r8.msgs_ratio
     );
 
+    // ---- E11: packed-view vs dense-extract execution (§Perf P7) ----------
+    header("E11: zero-copy packed execution vs dense-extract (q=2, native, r=4)");
+    let mut packed_rows: Vec<PackedRow> = Vec::new();
+    let mut t5 = Table::new([
+        "b", "tensor words", "plan words (packed)", "plan words (dense)",
+        "build ms p/d", "run ms p/d", "packed/dense",
+    ]);
+    let r = 4usize;
+    for bb in [16usize, 32] {
+        let n = bb * part.m;
+        let tensor = SymTensor::random(n, 70 + bb as u64);
+        let mk = |packed: bool| {
+            SttsvPlan::new(&tensor, &part, ExecOpts { packed, ..Default::default() }).unwrap()
+        };
+        let t_build_p = btime(1, 7, || {
+            std::hint::black_box(mk(true));
+        });
+        let t_build_d = btime(1, 7, || {
+            std::hint::black_box(mk(false));
+        });
+        let plan_p = mk(true);
+        let plan_d = mk(false);
+        assert_eq!(plan_p.resident_tensor_words(), 0, "packed plan must be zero-copy");
+        let mut rng = Rng::new(71);
+        let xs: Vec<Vec<f32>> = (0..r).map(|_| rng.normal_vec(n)).collect();
+        let t_run_p = btime(1, 7, || {
+            std::hint::black_box(plan_p.run_multi(&xs).unwrap());
+        });
+        let t_run_d = btime(1, 7, || {
+            std::hint::black_box(plan_d.run_multi(&xs).unwrap());
+        });
+        let row = PackedRow {
+            b: bb,
+            r,
+            tensor_packed_words: tensor.packed_len(),
+            plan_words_packed: plan_p.resident_tensor_words(),
+            plan_words_dense: plan_d.resident_tensor_words(),
+            construct_ms_packed: t_build_p.median.as_secs_f64() * 1e3,
+            construct_ms_dense: t_build_d.median.as_secs_f64() * 1e3,
+            run_ms_packed: t_run_p.median.as_secs_f64() * 1e3,
+            run_ms_dense: t_run_d.median.as_secs_f64() * 1e3,
+            packed_over_dense: t_run_d.median.as_secs_f64() / t_run_p.median.as_secs_f64(),
+        };
+        t5.row([
+            bb.to_string(),
+            row.tensor_packed_words.to_string(),
+            row.plan_words_packed.to_string(),
+            row.plan_words_dense.to_string(),
+            format!("{:.2}/{:.2}", row.construct_ms_packed, row.construct_ms_dense),
+            format!("{:.2}/{:.2}", row.run_ms_packed, row.run_ms_dense),
+            format!("{:.2}x", row.packed_over_dense),
+        ]);
+        packed_rows.push(row);
+    }
+    t5.print();
+    println!(
+        "plan tensor memory: packed = 0 words beyond the shared SymTensor \
+         buffer (asserted); dense-extract re-materializes ~the packed \
+         footprint again as b³ copies."
+    );
+
     // ---- machine-readable output -----------------------------------------
-    let json = render_json(&kernel_rows, &engine_rows);
+    let json = render_json(&kernel_rows, &engine_rows, &packed_rows);
     std::fs::write("BENCH_kernel.json", &json)?;
     println!("\nwrote BENCH_kernel.json ({} bytes)", json.len());
 
@@ -365,8 +460,8 @@ fn main() -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Hand-rolled JSON (no serde is vendored): two arrays of flat records.
-fn render_json(kernel: &[KernelRow], engine: &[EngineRow]) -> String {
+/// Hand-rolled JSON (no serde is vendored): three arrays of flat records.
+fn render_json(kernel: &[KernelRow], engine: &[EngineRow], packed: &[PackedRow]) -> String {
     let mut s = String::new();
     s.push_str("{\n  \"bench\": \"kernel_throughput\",\n  \"kernel_rsweep\": [\n");
     for (idx, k) in kernel.iter().enumerate() {
@@ -399,6 +494,27 @@ fn render_json(kernel: &[KernelRow], engine: &[EngineRow]) -> String {
             e.words_ratio,
             e.msgs_ratio,
             if idx + 1 < engine.len() { "," } else { "" }
+        );
+    }
+    s.push_str("  ],\n  \"packed_vs_dense\": [\n");
+    for (idx, p) in packed.iter().enumerate() {
+        let _ = write!(
+            s,
+            "    {{\"b\": {}, \"r\": {}, \"tensor_packed_words\": {}, \
+             \"plan_words_packed\": {}, \"plan_words_dense\": {}, \
+             \"construct_ms_packed\": {:.4}, \"construct_ms_dense\": {:.4}, \
+             \"run_ms_packed\": {:.4}, \"run_ms_dense\": {:.4}, \
+             \"packed_over_dense\": {:.4}}}{}\n",
+            p.b,
+            p.r,
+            p.tensor_packed_words,
+            p.plan_words_packed,
+            p.plan_words_dense,
+            p.construct_ms_packed,
+            p.construct_ms_dense,
+            p.run_ms_packed,
+            p.run_ms_dense,
+            if idx + 1 < packed.len() { "," } else { "" }
         );
     }
     s.push_str("  ]\n}\n");

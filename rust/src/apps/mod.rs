@@ -215,6 +215,7 @@ mod tests {
             mode: CommMode::PointToPoint,
             backend: Backend::Native,
             batch: true,
+            packed: true,
         }
     }
 

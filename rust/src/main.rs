@@ -39,7 +39,8 @@ fn main() {
             eprintln!(
                 "usage: sttsv <tables|schedule|run|power-method|cp-gradient|mttkrp\
                  |sweep|verify|bounds> [--q N] [--b N] [--mode p2p|a2a] \
-                 [--backend native|pjrt] [--iters N] [--sqs8]"
+                 [--backend native|pjrt] [--iters N] [--sqs8] [--no-batch] \
+                 [--packed|--no-packed]"
             );
             std::process::exit(2);
         }
@@ -136,11 +137,17 @@ fn cmd_schedule(args: &Args) -> Result<()> {
 }
 
 fn exec_opts(args: &Args) -> Result<ExecOpts> {
-    Ok(ExecOpts {
-        mode: args.get("mode").unwrap_or("p2p").parse::<CommMode>()?,
-        backend: args.get("backend").unwrap_or("native").parse::<Backend>()?,
-        batch: !args.flag("no-batch"),
-    })
+    let backend = args.get("backend").unwrap_or("native").parse::<Backend>()?;
+    let mut opts = ExecOpts::for_backend(backend);
+    opts.mode = args.get("mode").unwrap_or("p2p").parse::<CommMode>()?;
+    opts.batch = !args.flag("no-batch");
+    if args.flag("packed") {
+        opts.packed = true;
+    }
+    if args.flag("no-packed") {
+        opts.packed = false;
+    }
+    Ok(opts)
 }
 
 fn cmd_run(args: &Args) -> Result<()> {

@@ -16,9 +16,14 @@
 
 mod native;
 
-pub use native::{block_contract_multi, block_contract_native, dense_sttsv_native};
+pub use native::{
+    block_contract_multi, block_contract_native, block_contract_packed,
+    block_contract_packed_multi, dense_sttsv_native, diag_block_contract_packed,
+    diag_block_contract_packed_multi, packed_ternary_mults,
+};
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::tensor::PackedBlockView;
+use anyhow::{anyhow, bail, ensure, Context, Result};
 use std::collections::HashSet;
 use std::path::PathBuf;
 use std::sync::mpsc;
@@ -384,6 +389,127 @@ impl Engine {
         Ok((ci, cj, ck))
     }
 
+    /// Zero-copy fused contraction of one lower-tetrahedral block straight
+    /// from the packed tensor buffer `t` (§Perf P7). Native dispatches to
+    /// the strided-row kernel (off-diagonal) or the symmetry-aware diagonal
+    /// kernels; PJRT has no packed artifacts, so it extracts the dense
+    /// block **on the fly** (transient, freed after the dispatch) and runs
+    /// the dense path — correctness identical, no resident copies.
+    ///
+    /// For diagonal views the panels inherit the symmetric-kernel
+    /// precondition (u == v when bi == bj, v == w when bj == bk — the
+    /// STTSV case; see [`diag_block_contract_packed`]); the native path
+    /// returns an error when it is violated.
+    pub fn block_contract_packed(
+        &self,
+        t: &[f32],
+        view: &PackedBlockView,
+        u: &[f32],
+        v: &[f32],
+        w: &[f32],
+        b: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        match self.backend {
+            Backend::Native => {
+                if view.is_off_diagonal() {
+                    Ok(block_contract_packed(t, view, u, v, w, b))
+                } else {
+                    check_diag_aliasing(view, u, v, w)?;
+                    Ok(diag_block_contract_packed(t, view, u, v, w, b))
+                }
+            }
+            Backend::Pjrt => {
+                let a = view.extract_dense(t);
+                self.block_contract(&a, u, v, w, b)
+            }
+        }
+    }
+
+    /// Multi-RHS zero-copy contraction of one packed block: the packed
+    /// counterpart of [`Engine::block_contract_multi`]. See
+    /// [`Engine::block_contract_packed`] for the per-backend strategy.
+    #[allow(clippy::too_many_arguments)]
+    pub fn block_contract_packed_multi(
+        &self,
+        t: &[f32],
+        view: &PackedBlockView,
+        us: &[f32],
+        vs: &[f32],
+        ws: &[f32],
+        b: usize,
+        r: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        debug_assert_eq!(us.len(), b * r);
+        if r == 1 {
+            return self.block_contract_packed(t, view, us, vs, ws, b);
+        }
+        match self.backend {
+            Backend::Native => {
+                if view.is_off_diagonal() {
+                    Ok(block_contract_packed_multi(t, view, us, vs, ws, b, r))
+                } else {
+                    check_diag_aliasing(view, us, vs, ws)?;
+                    Ok(diag_block_contract_packed_multi(t, view, us, vs, ws, b, r))
+                }
+            }
+            Backend::Pjrt => {
+                let a = view.extract_dense(t);
+                self.block_contract_multi(&a, us, vs, ws, b, r)
+            }
+        }
+    }
+
+    /// Batched multi-RHS contraction over a same-kind group of packed
+    /// blocks — the packed counterpart of
+    /// [`Engine::block_contract_multi_batch`]. Native loops the per-block
+    /// packed kernels (no dispatch cost to amortize); PJRT materializes
+    /// the **active group only** on the fly and issues one batched dense
+    /// dispatch, so peak transient memory is one group's blocks rather
+    /// than the whole plan's.
+    #[allow(clippy::too_many_arguments)]
+    pub fn block_contract_packed_batch(
+        &self,
+        t: &[f32],
+        views: &[PackedBlockView],
+        us: &[f32],
+        vs: &[f32],
+        ws: &[f32],
+        b: usize,
+        r: usize,
+    ) -> Result<(Vec<f32>, Vec<f32>, Vec<f32>)> {
+        let nb = views.len();
+        debug_assert_eq!(us.len(), nb * b * r);
+        match self.backend {
+            Backend::Native => {
+                let mut ci = Vec::with_capacity(nb * b * r);
+                let mut cj = Vec::with_capacity(nb * b * r);
+                let mut ck = Vec::with_capacity(nb * b * r);
+                for (s, view) in views.iter().enumerate() {
+                    let (x, y, z) = self.block_contract_packed_multi(
+                        t,
+                        view,
+                        &us[s * b * r..(s + 1) * b * r],
+                        &vs[s * b * r..(s + 1) * b * r],
+                        &ws[s * b * r..(s + 1) * b * r],
+                        b,
+                        r,
+                    )?;
+                    ci.extend(x);
+                    cj.extend(y);
+                    ck.extend(z);
+                }
+                Ok((ci, cj, ck))
+            }
+            Backend::Pjrt => {
+                let mut a = Vec::with_capacity(nb * b * b * b);
+                for view in views {
+                    a.extend(view.extract_dense(t));
+                }
+                self.block_contract_multi_batch(&a, us, vs, ws, b, nb, r)
+            }
+        }
+    }
+
     /// Column-loop fallback for the multi path: de-interleave the `(b, r)`
     /// panels, run the single-RHS kernel per column, re-interleave.
     fn multi_via_columns(
@@ -420,6 +546,27 @@ impl Engine {
             }
         }
     }
+}
+
+/// Enforce the symmetric diagonal kernels' precondition at the public
+/// Engine boundary, in release builds too: panels of equal block indices
+/// must hold equal values (see `diag_block_contract_packed`). Bitwise
+/// comparison so NaN inputs propagate like the dense path instead of
+/// tripping the check. O(b·r) — noise next to the O(b³·r) contraction.
+fn check_diag_aliasing(view: &PackedBlockView, u: &[f32], v: &[f32], w: &[f32]) -> Result<()> {
+    ensure!(
+        view.bi != view.bj || native::panels_alias(u, v),
+        "diagonal packed contraction with bi == bj requires u == v \
+         (STTSV panel aliasing); use extract_dense + the dense kernels \
+         for a general trilinear form"
+    );
+    ensure!(
+        view.bj != view.bk || native::panels_alias(v, w),
+        "diagonal packed contraction with bj == bk requires v == w \
+         (STTSV panel aliasing); use extract_dense + the dense kernels \
+         for a general trilinear form"
+    );
+    Ok(())
 }
 
 /// Shared column-loop fallback for the multi-RHS paths: de-interleave the
@@ -592,6 +739,80 @@ mod tests {
             assert_eq!(&ci[s * b * r..(s + 1) * b * r], &x[..], "block {s} ci");
             assert_eq!(&cj[s * b * r..(s + 1) * b * r], &y[..], "block {s} cj");
             assert_eq!(&ck[s * b * r..(s + 1) * b * r], &z[..], "block {s} ck");
+        }
+    }
+
+    #[test]
+    fn engine_packed_batch_matches_dense_path() {
+        // The zero-copy packed dispatch must agree with the dense-extract
+        // dispatch on a mixed group (off-diagonal + both non-central shapes
+        // + central) — bitwise on off-diagonal blocks, within fp tolerance
+        // on diagonal ones.
+        let (m, b, r) = (4usize, 5usize, 3usize);
+        let t = crate::tensor::SymTensor::random(m * b, 41);
+        let views: Vec<PackedBlockView> = [(3, 2, 0), (3, 3, 1), (3, 1, 1), (2, 2, 2)]
+            .iter()
+            .map(|&(i, j, k)| PackedBlockView::new(i, j, k, b))
+            .collect();
+        let nb = views.len();
+        let mut rng = Rng::new(42);
+        // Per-block panels with the diagonal-kernel aliasing precondition:
+        // panels of equal block indices hold equal values (as the
+        // coordinator guarantees by slicing one xbuf).
+        let mut us = Vec::with_capacity(nb * b * r);
+        let mut vs = Vec::with_capacity(nb * b * r);
+        let mut ws = Vec::with_capacity(nb * b * r);
+        for view in &views {
+            let pu = rng.normal_vec(b * r);
+            let pv = if view.bi == view.bj {
+                pu.clone()
+            } else {
+                rng.normal_vec(b * r)
+            };
+            let pw = if view.bj == view.bk {
+                pv.clone()
+            } else {
+                rng.normal_vec(b * r)
+            };
+            us.extend_from_slice(&pu);
+            vs.extend_from_slice(&pv);
+            ws.extend_from_slice(&pw);
+        }
+        let eng = Engine::new(Backend::Native).unwrap();
+        let (ci, cj, ck) = eng
+            .block_contract_packed_batch(t.packed_data(), &views, &us, &vs, &ws, b, r)
+            .unwrap();
+        let mut dense = Vec::new();
+        for v in &views {
+            dense.extend(v.extract_dense(t.packed_data()));
+        }
+        let (di, dj, dk) = eng
+            .block_contract_multi_batch(&dense, &us, &vs, &ws, b, nb, r)
+            .unwrap();
+        // Compare only the outputs the coordinator reads for each kind
+        // (packed diagonal kernels leave factor-0 outputs at zero).
+        for (s, view) in views.iter().enumerate() {
+            let rg = s * b * r..(s + 1) * b * r;
+            let reads: [bool; 3] = if view.is_off_diagonal() {
+                [true, true, true]
+            } else if view.is_central() {
+                [true, false, false]
+            } else if view.bi == view.bj {
+                [true, false, true]
+            } else {
+                [true, true, false]
+            };
+            for (o, (got, want)) in [(&ci, &di), (&cj, &dj), (&ck, &dk)].iter().enumerate() {
+                if !reads[o] {
+                    continue;
+                }
+                for (x, (g, w)) in got[rg.clone()].iter().zip(&want[rg.clone()]).enumerate() {
+                    assert!(
+                        (g - w).abs() < 1e-4 * w.abs().max(1.0),
+                        "block {s} out {o} x {x}: {g} vs {w}"
+                    );
+                }
+            }
         }
     }
 

@@ -132,6 +132,475 @@ pub fn block_contract_multi(
     (ci, cj, ck)
 }
 
+use crate::tensor::PackedBlockView;
+
+/// Whether two panels are aliases for the diagonal-kernel precondition:
+/// the same slice, or bitwise-equal contents. Bit comparison (not `==`)
+/// so NaN payloads in the input vectors don't spuriously fail the check —
+/// the kernels propagate NaN like the dense path does.
+pub(crate) fn panels_alias(a: &[f32], b: &[f32]) -> bool {
+    std::ptr::eq(a, b)
+        || (a.len() == b.len() && a.iter().zip(b).all(|(x, y)| x.to_bits() == y.to_bits()))
+}
+
+/// Zero-copy fused contraction of an **off-diagonal** block (bi > bj > bk)
+/// straight from the packed tensor buffer `t` (EXPERIMENTS.md §Perf P7).
+///
+/// Same two-sweep loop structure as [`block_contract_native`]; the b-length
+/// rows A[x, y, :] come from the contiguous packed γ-runs at
+/// [`PackedBlockView::row_base`] instead of a dense copy, so the results
+/// are bitwise identical to the dense kernel on the extracted block while
+/// the block is never materialized.
+pub fn block_contract_packed(
+    t: &[f32],
+    view: &PackedBlockView,
+    u: &[f32],
+    v: &[f32],
+    w: &[f32],
+    b: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert!(view.is_off_diagonal());
+    debug_assert_eq!(view.b, b);
+    let mut ci = vec![0.0f32; b];
+    let mut cj = vec![0.0f32; b];
+    let mut ck = vec![0.0f32; b];
+    for x in 0..b {
+        let ux = u[x];
+        let mut ci_x = 0.0f32;
+        for y in 0..b {
+            let base = view.row_base(x, y);
+            let row = &t[base..base + b];
+            let uv = ux * v[y];
+            let mut m = 0.0f32;
+            for z in 0..b {
+                m += row[z] * w[z];
+            }
+            for z in 0..b {
+                ck[z] += row[z] * uv;
+            }
+            ci_x += m * v[y];
+            cj[y] += m * ux;
+        }
+        ci[x] += ci_x;
+    }
+    (ci, cj, ck)
+}
+
+/// Multi-RHS variant of [`block_contract_packed`]: one sweep of the packed
+/// off-diagonal block serves r columns. Panel layout as in
+/// [`block_contract_multi`]; the loop structure mirrors it exactly, so the
+/// per-column results match the dense multi kernel bitwise.
+pub fn block_contract_packed_multi(
+    t: &[f32],
+    view: &PackedBlockView,
+    us: &[f32],
+    vs: &[f32],
+    ws: &[f32],
+    b: usize,
+    r: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert!(view.is_off_diagonal());
+    debug_assert_eq!(view.b, b);
+    let mut ci = vec![0.0f32; b * r];
+    let mut cj = vec![0.0f32; b * r];
+    let mut ck = vec![0.0f32; b * r];
+    let mut m = vec![0.0f32; r];
+    let mut uv = vec![0.0f32; r];
+    let mut ci_x = vec![0.0f32; r];
+    for x in 0..b {
+        let ux = &us[x * r..(x + 1) * r];
+        ci_x.fill(0.0);
+        for y in 0..b {
+            let base = view.row_base(x, y);
+            let row = &t[base..base + b];
+            let vy = &vs[y * r..(y + 1) * r];
+            for l in 0..r {
+                uv[l] = ux[l] * vy[l];
+            }
+            m.fill(0.0);
+            for z in 0..b {
+                let az = row[z];
+                let wz = &ws[z * r..(z + 1) * r];
+                for l in 0..r {
+                    m[l] += az * wz[l];
+                }
+            }
+            for z in 0..b {
+                let az = row[z];
+                let cz = &mut ck[z * r..(z + 1) * r];
+                for l in 0..r {
+                    cz[l] += az * uv[l];
+                }
+            }
+            let cjy = &mut cj[y * r..(y + 1) * r];
+            for l in 0..r {
+                ci_x[l] += m[l] * vy[l];
+                cjy[l] += m[l] * ux[l];
+            }
+        }
+        let cix = &mut ci[x * r..(x + 1) * r];
+        for l in 0..r {
+            cix[l] += ci_x[l];
+        }
+    }
+    (ci, cj, ck)
+}
+
+/// Zero-copy symmetry-aware contraction of a **diagonal** block (two or
+/// three equal block indices), iterating only the unique packed entries
+/// (α ≥ β ≥ γ as applicable) with multiplicity weights — so the executed
+/// ternary multiplications equal the paper's §7.1 per-block count
+/// ([`packed_ternary_mults`]) exactly, instead of the dense kernel's 3b³
+/// (up to ≈6× overshoot on central blocks).
+///
+/// `u`, `v`, `w` are the x-panels of the block's row blocks i, j, k.
+/// **Precondition:** panels of equal block indices must hold equal values —
+/// u == v when bi == bj, v == w when bj == bk (the STTSV case, where every
+/// panel is a slice of the same x; the coordinator passes aliased slices).
+/// The symmetry trick that lets the kernel visit each unique entry once
+/// folds the (α,β)↔(β,α) transpose through that equality; with distinct
+/// panels the result would be neither A ×₂ v ×₃ w nor its symmetrization
+/// (use the dense kernels on [`PackedBlockView::extract_dense`] for a
+/// general trilinear form). Returns (ci, cj, ck) numerically equal to the
+/// dense kernel's outputs on the extracted block, so the coordinator's
+/// per-kind factors apply unchanged; outputs whose factor is always zero
+/// for the kind stay zero.
+pub fn diag_block_contract_packed(
+    t: &[f32],
+    view: &PackedBlockView,
+    u: &[f32],
+    v: &[f32],
+    w: &[f32],
+    b: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert!(!view.is_off_diagonal());
+    debug_assert_eq!(view.b, b);
+    debug_assert!(view.bi != view.bj || panels_alias(u, v), "bi == bj requires u == v");
+    debug_assert!(view.bj != view.bk || panels_alias(v, w), "bj == bk requires v == w");
+    let mut ci = vec![0.0f32; b];
+    let mut cj = vec![0.0f32; b];
+    let mut ck = vec![0.0f32; b];
+    if view.bi == view.bj && view.bj > view.bk {
+        // (g,g,h): unique entries have α ≥ β; full-length γ-runs.
+        for a in 0..b {
+            let ua = u[a];
+            let mut ci_a = 0.0f32;
+            for be in 0..=a {
+                let base = view.row_base(a, be);
+                let row = &t[base..base + b];
+                let mut m = 0.0f32;
+                for g in 0..b {
+                    m += row[g] * w[g];
+                }
+                if a > be {
+                    // i > j > k: 3 contributions per entry (weight 2 folded)
+                    let uv = 2.0 * ua * v[be];
+                    for g in 0..b {
+                        ck[g] += row[g] * uv;
+                    }
+                    ci_a += m * v[be];
+                    ci[be] += m * ua;
+                } else {
+                    // i == j > k: 2 contributions per entry
+                    let uu = ua * v[a];
+                    for g in 0..b {
+                        ck[g] += row[g] * uu;
+                    }
+                    ci_a += m * ua;
+                }
+            }
+            ci[a] += ci_a;
+        }
+    } else if view.bi > view.bj && view.bj == view.bk {
+        // (g,h,h): unique entries have β ≥ γ; γ-runs of length β+1.
+        for a in 0..b {
+            let ua = u[a];
+            let mut ci_a = 0.0f32;
+            for be in 0..b {
+                let base = view.row_base(a, be);
+                let row = &t[base..base + be + 1];
+                let abb = row[be];
+                let uv = ua * v[be];
+                let mut m = 0.0f32;
+                for g in 0..be {
+                    m += row[g] * w[g];
+                }
+                for g in 0..be {
+                    cj[g] += row[g] * uv;
+                }
+                // β > γ entries: 3 contributions (i-weight 2 folded);
+                // β == γ entry: 2 contributions
+                ci_a += 2.0 * m * v[be] + abb * v[be] * w[be];
+                cj[be] += m * ua + abb * ua * w[be];
+            }
+            ci[a] += ci_a;
+        }
+    } else {
+        // central (g,g,g): unique entries have α ≥ β ≥ γ; all
+        // contributions land in the single row block (ci).
+        for a in 0..b {
+            let ua = u[a];
+            let mut ci_a = 0.0f32;
+            for be in 0..=a {
+                let base = view.row_base(a, be);
+                let row = &t[base..base + be + 1];
+                if a > be {
+                    let mut m = 0.0f32;
+                    for g in 0..be {
+                        m += row[g] * w[g];
+                    }
+                    // α > β > γ: 3 contributions, all weights 2
+                    let uv = 2.0 * ua * v[be];
+                    for g in 0..be {
+                        ci[g] += row[g] * uv;
+                    }
+                    ci_a += 2.0 * m * v[be];
+                    ci[be] += 2.0 * m * ua;
+                    // α > β == γ: 2 contributions
+                    let abb = row[be];
+                    ci_a += abb * v[be] * w[be];
+                    ci[be] += 2.0 * abb * ua * w[be];
+                } else {
+                    // α == β > γ: 2 contributions per entry
+                    let uu = ua * v[a];
+                    let mut m = 0.0f32;
+                    for g in 0..a {
+                        m += row[g] * w[g];
+                    }
+                    for g in 0..a {
+                        ci[g] += row[g] * uu;
+                    }
+                    ci_a += 2.0 * m * v[a];
+                    // α == β == γ: 1 contribution
+                    ci_a += row[a] * v[a] * w[a];
+                }
+            }
+            ci[a] += ci_a;
+        }
+    }
+    (ci, cj, ck)
+}
+
+/// Multi-RHS variant of [`diag_block_contract_packed`]: same unique-entry
+/// iteration, r-lane inner loops over the `(b, r)` interleaved panels.
+/// Same precondition: panels of equal block indices must hold equal values.
+pub fn diag_block_contract_packed_multi(
+    t: &[f32],
+    view: &PackedBlockView,
+    us: &[f32],
+    vs: &[f32],
+    ws: &[f32],
+    b: usize,
+    r: usize,
+) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+    debug_assert!(!view.is_off_diagonal());
+    debug_assert_eq!(view.b, b);
+    debug_assert!(view.bi != view.bj || panels_alias(us, vs), "bi == bj requires us == vs");
+    debug_assert!(view.bj != view.bk || panels_alias(vs, ws), "bj == bk requires vs == ws");
+    let mut ci = vec![0.0f32; b * r];
+    let mut cj = vec![0.0f32; b * r];
+    let mut ck = vec![0.0f32; b * r];
+    let mut m = vec![0.0f32; r];
+    let mut uv = vec![0.0f32; r];
+    let mut ci_a = vec![0.0f32; r];
+    if view.bi == view.bj && view.bj > view.bk {
+        for a in 0..b {
+            let ua = &us[a * r..(a + 1) * r];
+            ci_a.fill(0.0);
+            for be in 0..=a {
+                let base = view.row_base(a, be);
+                let row = &t[base..base + b];
+                let vb = &vs[be * r..(be + 1) * r];
+                m.fill(0.0);
+                for g in 0..b {
+                    let ag = row[g];
+                    let wg = &ws[g * r..(g + 1) * r];
+                    for l in 0..r {
+                        m[l] += ag * wg[l];
+                    }
+                }
+                if a > be {
+                    for l in 0..r {
+                        uv[l] = 2.0 * ua[l] * vb[l];
+                    }
+                    for g in 0..b {
+                        let ag = row[g];
+                        let cg = &mut ck[g * r..(g + 1) * r];
+                        for l in 0..r {
+                            cg[l] += ag * uv[l];
+                        }
+                    }
+                    let cib = &mut ci[be * r..(be + 1) * r];
+                    for l in 0..r {
+                        ci_a[l] += m[l] * vb[l];
+                        cib[l] += m[l] * ua[l];
+                    }
+                } else {
+                    for l in 0..r {
+                        uv[l] = ua[l] * vb[l];
+                    }
+                    for g in 0..b {
+                        let ag = row[g];
+                        let cg = &mut ck[g * r..(g + 1) * r];
+                        for l in 0..r {
+                            cg[l] += ag * uv[l];
+                        }
+                    }
+                    for l in 0..r {
+                        ci_a[l] += m[l] * ua[l];
+                    }
+                }
+            }
+            let cia = &mut ci[a * r..(a + 1) * r];
+            for l in 0..r {
+                cia[l] += ci_a[l];
+            }
+        }
+    } else if view.bi > view.bj && view.bj == view.bk {
+        for a in 0..b {
+            let ua = &us[a * r..(a + 1) * r];
+            ci_a.fill(0.0);
+            for be in 0..b {
+                let base = view.row_base(a, be);
+                let row = &t[base..base + be + 1];
+                let vb = &vs[be * r..(be + 1) * r];
+                let wb = &ws[be * r..(be + 1) * r];
+                let abb = row[be];
+                for l in 0..r {
+                    uv[l] = ua[l] * vb[l];
+                }
+                m.fill(0.0);
+                for g in 0..be {
+                    let ag = row[g];
+                    let wg = &ws[g * r..(g + 1) * r];
+                    for l in 0..r {
+                        m[l] += ag * wg[l];
+                    }
+                }
+                for g in 0..be {
+                    let ag = row[g];
+                    let cg = &mut cj[g * r..(g + 1) * r];
+                    for l in 0..r {
+                        cg[l] += ag * uv[l];
+                    }
+                }
+                let cjb = &mut cj[be * r..(be + 1) * r];
+                for l in 0..r {
+                    ci_a[l] += 2.0 * m[l] * vb[l] + abb * vb[l] * wb[l];
+                    cjb[l] += m[l] * ua[l] + abb * ua[l] * wb[l];
+                }
+            }
+            let cia = &mut ci[a * r..(a + 1) * r];
+            for l in 0..r {
+                cia[l] += ci_a[l];
+            }
+        }
+    } else {
+        for a in 0..b {
+            let ua = &us[a * r..(a + 1) * r];
+            ci_a.fill(0.0);
+            for be in 0..=a {
+                let base = view.row_base(a, be);
+                let row = &t[base..base + be + 1];
+                let vb = &vs[be * r..(be + 1) * r];
+                let wb = &ws[be * r..(be + 1) * r];
+                if a > be {
+                    m.fill(0.0);
+                    for g in 0..be {
+                        let ag = row[g];
+                        let wg = &ws[g * r..(g + 1) * r];
+                        for l in 0..r {
+                            m[l] += ag * wg[l];
+                        }
+                    }
+                    for l in 0..r {
+                        uv[l] = 2.0 * ua[l] * vb[l];
+                    }
+                    for g in 0..be {
+                        let ag = row[g];
+                        let cg = &mut ci[g * r..(g + 1) * r];
+                        for l in 0..r {
+                            cg[l] += ag * uv[l];
+                        }
+                    }
+                    let abb = row[be];
+                    let cib = &mut ci[be * r..(be + 1) * r];
+                    for l in 0..r {
+                        ci_a[l] += 2.0 * m[l] * vb[l] + abb * vb[l] * wb[l];
+                        cib[l] += 2.0 * m[l] * ua[l] + 2.0 * abb * ua[l] * wb[l];
+                    }
+                } else {
+                    m.fill(0.0);
+                    for g in 0..a {
+                        let ag = row[g];
+                        let wg = &ws[g * r..(g + 1) * r];
+                        for l in 0..r {
+                            m[l] += ag * wg[l];
+                        }
+                    }
+                    for l in 0..r {
+                        uv[l] = ua[l] * vb[l];
+                    }
+                    for g in 0..a {
+                        let ag = row[g];
+                        let cg = &mut ci[g * r..(g + 1) * r];
+                        for l in 0..r {
+                            cg[l] += ag * uv[l];
+                        }
+                    }
+                    let aaa = row[a];
+                    for l in 0..r {
+                        ci_a[l] += 2.0 * m[l] * vb[l];
+                        ci_a[l] += aaa * vb[l] * wb[l];
+                    }
+                }
+            }
+            let cia = &mut ci[a * r..(a + 1) * r];
+            for l in 0..r {
+                cia[l] += ci_a[l];
+            }
+        }
+    }
+    (ci, cj, ck)
+}
+
+/// Ternary multiplications the packed kernels execute for one block, per
+/// right-hand-side column — derived by walking the kernels' own loop
+/// bounds and summing one count per (unique entry, output contribution)
+/// pair. Equals [`crate::coordinator::SttsvPlan`]'s §7.1 logical
+/// accounting (`block_ternary_mults`) exactly: the packed path does not
+/// overshoot on diagonal blocks the way the dense b³ sweep does.
+pub fn packed_ternary_mults(view: &PackedBlockView) -> u64 {
+    let b = view.b as u64;
+    let mut count = 0u64;
+    if view.is_off_diagonal() {
+        for _a in 0..b {
+            for _be in 0..b {
+                count += 3 * b; // every dense row entry serves 3 outputs
+            }
+        }
+    } else if view.bi == view.bj && view.bj > view.bk {
+        for a in 0..b {
+            for be in 0..=a {
+                count += if a > be { 3 * b } else { 2 * b };
+            }
+        }
+    } else if view.bi > view.bj && view.bj == view.bk {
+        for _a in 0..b {
+            for be in 0..b {
+                count += 3 * be + 2;
+            }
+        }
+    } else {
+        for a in 0..b {
+            for be in 0..=a {
+                count += if a > be { 3 * be + 2 } else { 2 * a + 1 };
+            }
+        }
+    }
+    count
+}
+
 /// Dense STTSV y = A ×₂ x ×₃ x on an n×n×n row-major tensor (Algorithm 3).
 pub fn dense_sttsv_native(a: &[f32], x: &[f32], n: usize) -> Vec<f32> {
     let mut y = vec![0.0f32; n];
@@ -255,5 +724,190 @@ mod tests {
         assert_eq!(ci, si);
         assert_eq!(cj, sj);
         assert_eq!(ck, sk);
+    }
+
+    use crate::tensor::SymTensor;
+
+    /// (b, r) interleaved panel from per-column vectors.
+    fn interleave(cols: &[Vec<f32>], b: usize) -> Vec<f32> {
+        let r = cols.len();
+        let mut out = vec![0.0f32; b * r];
+        for (l, c) in cols.iter().enumerate() {
+            for x in 0..b {
+                out[x * r + l] = c[x];
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn packed_offdiag_is_bitwise_the_dense_kernel() {
+        // The off-diagonal packed kernel reads the same values in the same
+        // order as the dense kernel on the extracted block, so single and
+        // multi results must be bitwise identical — the zero-copy path is a
+        // pure storage change.
+        let (m, b, r) = (5usize, 6usize, 3usize);
+        let t = SymTensor::random(m * b, 31);
+        let view = PackedBlockView::new(4, 2, 1, b);
+        let dense = t.extract_block(4, 2, 1, b);
+        let mut rng = Rng::new(32);
+        let (u, v, w) = (rng.normal_vec(b), rng.normal_vec(b), rng.normal_vec(b));
+        let got = block_contract_packed(t.packed_data(), &view, &u, &v, &w, b);
+        let want = block_contract_native(&dense, &u, &v, &w, b);
+        assert_eq!(got, want);
+        let us = rng.normal_vec(b * r);
+        let vs = rng.normal_vec(b * r);
+        let ws = rng.normal_vec(b * r);
+        let got = block_contract_packed_multi(t.packed_data(), &view, &us, &vs, &ws, b, r);
+        let want = block_contract_multi(&dense, &us, &vs, &ws, b, r);
+        assert_eq!(got, want);
+    }
+
+    /// Dense f64 brute-force contraction of an extracted block, for
+    /// checking the symmetry-aware diagonal kernels.
+    fn brute(dense: &[f32], u: &[f32], v: &[f32], w: &[f32], b: usize) -> [Vec<f64>; 3] {
+        let mut ci = vec![0.0f64; b];
+        let mut cj = vec![0.0f64; b];
+        let mut ck = vec![0.0f64; b];
+        for x in 0..b {
+            for y in 0..b {
+                for z in 0..b {
+                    let a = dense[(x * b + y) * b + z] as f64;
+                    ci[x] += a * v[y] as f64 * w[z] as f64;
+                    cj[y] += a * u[x] as f64 * w[z] as f64;
+                    ck[z] += a * u[x] as f64 * v[y] as f64;
+                }
+            }
+        }
+        [ci, cj, ck]
+    }
+
+    #[test]
+    fn packed_diagonal_kernels_match_dense_contractions() {
+        // For every diagonal shape the packed kernel iterates only unique
+        // entries with multiplicity weights, yet its (ci, cj, ck) must be
+        // numerically the dense block contractions (so the coordinator's
+        // per-kind factors apply unchanged). The kind's never-used outputs
+        // stay exactly zero.
+        let (m, b) = (4usize, 7usize);
+        let t = SymTensor::random(m * b, 33);
+        let mut rng = Rng::new(34);
+        // (g,g,h): u and v alias row block g, w is row block h
+        let xg = rng.normal_vec(b);
+        let xh = rng.normal_vec(b);
+        let used_ik: &[usize] = &[0, 2];
+        let used_ij: &[usize] = &[0, 1];
+        let used_i: &[usize] = &[0];
+        for (blk, u, v, w, used) in [
+            ((3usize, 3usize, 1usize), &xg, &xg, &xh, used_ik), // cj unused
+            ((3, 1, 1), &xg, &xh, &xh, used_ij),                // ck unused
+            ((2, 2, 2), &xg, &xg, &xg, used_i),                 // only ci used
+        ] {
+            let view = PackedBlockView::new(blk.0, blk.1, blk.2, b);
+            let dense = t.extract_block(blk.0, blk.1, blk.2, b);
+            let want = brute(&dense, u, v, w, b);
+            let got = diag_block_contract_packed(t.packed_data(), &view, u, v, w, b);
+            let got = [&got.0, &got.1, &got.2];
+            for &o in used {
+                for x in 0..b {
+                    assert!(
+                        (got[o][x] as f64 - want[o][x]).abs() < 1e-4 * want[o][x].abs().max(1.0),
+                        "block {blk:?} out {o} x {x}: {} vs {}",
+                        got[o][x],
+                        want[o][x]
+                    );
+                }
+            }
+            // outputs the coordinator never reads stay identically zero
+            for o in 0..3 {
+                if !used.contains(&o) {
+                    assert!(got[o].iter().all(|&x| x == 0.0), "block {blk:?} out {o}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_diag_multi_matches_column_by_column() {
+        let (m, b, r) = (4usize, 6usize, 4usize);
+        let t = SymTensor::random(m * b, 35);
+        let mut rng = Rng::new(36);
+        for blk in [(3usize, 3usize, 0usize), (3, 0, 0), (1, 1, 1)] {
+            let view = PackedBlockView::new(blk.0, blk.1, blk.2, b);
+            // panels of equal block indices must alias (kernel precondition)
+            let ucols: Vec<Vec<f32>> = (0..r).map(|_| rng.normal_vec(b)).collect();
+            let vcols: Vec<Vec<f32>> = if blk.0 == blk.1 {
+                ucols.clone()
+            } else {
+                (0..r).map(|_| rng.normal_vec(b)).collect()
+            };
+            let wcols: Vec<Vec<f32>> = if blk.1 == blk.2 {
+                vcols.clone()
+            } else {
+                (0..r).map(|_| rng.normal_vec(b)).collect()
+            };
+            let (us, vs, ws) = (
+                interleave(&ucols, b),
+                interleave(&vcols, b),
+                interleave(&wcols, b),
+            );
+            let (ci, cj, ck) =
+                diag_block_contract_packed_multi(t.packed_data(), &view, &us, &vs, &ws, b, r);
+            for l in 0..r {
+                let (si, sj, sk) = diag_block_contract_packed(
+                    t.packed_data(),
+                    &view,
+                    &ucols[l],
+                    &vcols[l],
+                    &wcols[l],
+                    b,
+                );
+                for x in 0..b {
+                    let tol = |s: f32| 1e-4 * s.abs().max(1.0);
+                    assert!(
+                        (ci[x * r + l] - si[x]).abs() < tol(si[x]),
+                        "{blk:?} col {l} ci[{x}]"
+                    );
+                    assert!(
+                        (cj[x * r + l] - sj[x]).abs() < tol(sj[x]),
+                        "{blk:?} col {l} cj[{x}]"
+                    );
+                    assert!(
+                        (ck[x * r + l] - sk[x]).abs() < tol(sk[x]),
+                        "{blk:?} col {l} ck[{x}]"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_mult_counts_match_paper_accounting() {
+        // Executed (unique entry, contribution) pairs per packed kernel ==
+        // the §7.1 closed forms the coordinator charges (block_ternary_mults):
+        // 3b³ off-diagonal, 3b²(b−1)/2 + 2b² non-central, and
+        // b(b−1)(b−2)/2 + 2b(b−1) + b central.
+        // b = 1 spot checks (the closed forms below would underflow at
+        // bu - 2 in debug builds): one entry per kind, 3/2/2/1 contributions.
+        assert_eq!(packed_ternary_mults(&PackedBlockView::new(3, 2, 1, 1)), 3);
+        assert_eq!(packed_ternary_mults(&PackedBlockView::new(3, 3, 1, 1)), 2);
+        assert_eq!(packed_ternary_mults(&PackedBlockView::new(3, 1, 1, 1)), 2);
+        assert_eq!(packed_ternary_mults(&PackedBlockView::new(2, 2, 2, 1)), 1);
+        for b in 2..=9usize {
+            let bu = b as u64;
+            assert_eq!(packed_ternary_mults(&PackedBlockView::new(3, 2, 1, b)), 3 * bu * bu * bu);
+            assert_eq!(
+                packed_ternary_mults(&PackedBlockView::new(3, 3, 1, b)),
+                3 * bu * bu * (bu - 1) / 2 + 2 * bu * bu
+            );
+            assert_eq!(
+                packed_ternary_mults(&PackedBlockView::new(3, 1, 1, b)),
+                3 * bu * bu * (bu - 1) / 2 + 2 * bu * bu
+            );
+            assert_eq!(
+                packed_ternary_mults(&PackedBlockView::new(2, 2, 2, b)),
+                bu * (bu - 1) * (bu - 2) / 2 + 2 * bu * (bu - 1) + bu
+            );
+        }
     }
 }

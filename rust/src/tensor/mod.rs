@@ -120,35 +120,31 @@ impl SymTensor {
         self.data.len()
     }
 
+    /// The shared packed buffer (lower-tetrahedral order). Zero-copy
+    /// consumers ([`PackedBlockView`], the packed runtime kernels) contract
+    /// directly against this slice instead of materializing dense copies.
+    pub fn packed_data(&self) -> &[f32] {
+        &self.data
+    }
+
     /// Extract the dense b³ sub-block with block index (bi, bj, bk) and
     /// block size b, row-major ((α·b + β)·b + γ): entry (α, β, γ) holds the
     /// full-tensor value A[bi·b+α, bj·b+β, bk·b+γ]. This is the layout the
     /// AOT block kernels consume.
+    ///
+    /// Every sorted block index (bi ≥ bj ≥ bk — all blocks Algorithm 5
+    /// touches) takes a contiguous fast path via
+    /// [`PackedBlockView::extract_dense`]; unsorted indices fall back to the
+    /// per-element sort3 loop.
     pub fn extract_block(&self, bi: usize, bj: usize, bk: usize, b: usize) -> Vec<f32> {
+        if bi >= bj && bj >= bk {
+            return PackedBlockView::new(bi, bj, bk, b).extract_dense(&self.data);
+        }
         let mut out = vec![0.0f32; b * b * b];
-        if bi > bj && bj > bk {
-            // Off-diagonal fast path (the hot case: ~all blocks are
-            // off-diagonal): every element already satisfies i > j > k, and
-            // for fixed (i, j) the packed k-run [bk·b, bk·b + b) is
-            // contiguous — copy row-wise instead of per-element sort3+index
-            // (EXPERIMENTS.md §Perf P4).
-            for a in 0..b {
-                let i = bi * b + a;
-                let ti = tet(i);
-                for be in 0..b {
-                    let j = bj * b + be;
-                    let base = ti + tri(j) + bk * b;
-                    out[(a * b + be) * b..(a * b + be + 1) * b]
-                        .copy_from_slice(&self.data[base..base + b]);
-                }
-            }
-        } else {
-            for a in 0..b {
-                for be in 0..b {
-                    for g in 0..b {
-                        out[(a * b + be) * b + g] =
-                            self.get(bi * b + a, bj * b + be, bk * b + g);
-                    }
+        for a in 0..b {
+            for be in 0..b {
+                for g in 0..b {
+                    out[(a * b + be) * b + g] = self.get(bi * b + a, bj * b + be, bk * b + g);
                 }
             }
         }
@@ -208,6 +204,154 @@ impl SymTensor {
     pub fn rayleigh(&self, x: &[f32]) -> f32 {
         let y = self.sttsv(x);
         y.iter().zip(x).map(|(a, b)| (*a as f64) * (*b as f64)).sum::<f64>() as f32
+    }
+}
+
+/// A zero-copy view of one lower-tetrahedral sub-block (block index
+/// bi ≥ bj ≥ bk, block size b) of a packed [`SymTensor`] buffer.
+///
+/// The packed layout nests: for global indices i ≥ j ≥ k the word lives at
+/// `tet(i) + tri(j) + k`, so for any fixed (α, β) row of the block the
+/// γ-run is **contiguous** starting at `tet(bi·b+α) + tri(bj·b+β) + bk·b`
+/// ([`Self::row_base`]). Off-diagonal blocks (bi > bj > bk) expose all b²
+/// full-length rows; rows of diagonal blocks are cut by the k ≤ j
+/// constraint ([`Self::row_len`]) and, when bi == bj, exist only for
+/// α ≥ β. The packed runtime kernels contract straight over these strided
+/// rows — the plan never copies tensor data (EXPERIMENTS.md §Perf P7).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PackedBlockView {
+    pub bi: usize,
+    pub bj: usize,
+    pub bk: usize,
+    pub b: usize,
+}
+
+impl PackedBlockView {
+    /// View of block (bi, bj, bk) (must satisfy bi ≥ bj ≥ bk) at block
+    /// size b. O(1): only the coordinates are stored.
+    pub fn new(bi: usize, bj: usize, bk: usize, b: usize) -> PackedBlockView {
+        assert!(bi >= bj && bj >= bk, "block index must satisfy bi >= bj >= bk");
+        PackedBlockView { bi, bj, bk, b }
+    }
+
+    /// i > j > k strictly: all b³ entries are unique representatives.
+    #[inline]
+    pub fn is_off_diagonal(&self) -> bool {
+        self.bi > self.bj && self.bj > self.bk
+    }
+
+    /// bi == bj == bk.
+    #[inline]
+    pub fn is_central(&self) -> bool {
+        self.bi == self.bk
+    }
+
+    /// Base offset into the packed buffer of the contiguous γ-run holding
+    /// the unique entries (α, β, γ), γ < [`Self::row_len`] — globally
+    /// A[bi·b+α, bj·b+β, bk·b+γ]. Requires global i ≥ j, i.e. α ≥ β
+    /// whenever bi == bj.
+    #[inline]
+    pub fn row_base(&self, alpha: usize, beta: usize) -> usize {
+        debug_assert!(self.bi > self.bj || alpha >= beta);
+        tet(self.bi * self.b + alpha) + tri(self.bj * self.b + beta) + self.bk * self.b
+    }
+
+    /// Length of the packed γ-run at row β: the full b when bj > bk, and
+    /// β + 1 when bj == bk (cut by the k ≤ j constraint).
+    #[inline]
+    pub fn row_len(&self, beta: usize) -> usize {
+        if self.bj == self.bk {
+            beta + 1
+        } else {
+            self.b
+        }
+    }
+
+    /// Number of unique packed words the view covers (the paper's per-block
+    /// storage count: b³ off-diagonal, b²(b+1)/2 non-central diagonal,
+    /// b(b+1)(b+2)/6 central).
+    pub fn unique_len(&self) -> usize {
+        let b = self.b;
+        if self.is_off_diagonal() {
+            b * b * b
+        } else if self.is_central() {
+            b * (b + 1) * (b + 2) / 6
+        } else {
+            b * b * (b + 1) / 2
+        }
+    }
+
+    /// Materialize the dense row-major b³ block ((α·b + β)·b + γ, the layout
+    /// the dense kernels and AOT artifacts consume) from the packed buffer.
+    ///
+    /// Used as the PJRT fallback: backends without packed kernels extract
+    /// the active blocks on the fly instead of holding dense copies
+    /// resident. All four block shapes take contiguous-run copies for the
+    /// unique entries; duplicated entries of diagonal blocks are mirrored
+    /// within `out` (local index permutation, no per-element packed-index
+    /// math).
+    pub fn extract_dense(&self, t: &[f32]) -> Vec<f32> {
+        let b = self.b;
+        let mut out = vec![0.0f32; b * b * b];
+        if self.is_off_diagonal() {
+            for a in 0..b {
+                for be in 0..b {
+                    let base = self.row_base(a, be);
+                    out[(a * b + be) * b..(a * b + be + 1) * b]
+                        .copy_from_slice(&t[base..base + b]);
+                }
+            }
+        } else if self.bi == self.bj && self.bj > self.bk {
+            // (g,g,h): α ≥ β rows are contiguous; α < β mirrors (β, α).
+            for a in 0..b {
+                for be in 0..=a {
+                    let base = self.row_base(a, be);
+                    out[(a * b + be) * b..(a * b + be + 1) * b]
+                        .copy_from_slice(&t[base..base + b]);
+                }
+            }
+            for a in 0..b {
+                for be in a + 1..b {
+                    out.copy_within((be * b + a) * b..(be * b + a + 1) * b, (a * b + be) * b);
+                }
+            }
+        } else if self.bi > self.bj && self.bj == self.bk {
+            // (g,h,h): γ ≤ β runs are contiguous; γ > β mirrors (α, γ, β)
+            // within the same α-slab.
+            for a in 0..b {
+                for be in 0..b {
+                    let base = self.row_base(a, be);
+                    out[(a * b + be) * b..(a * b + be) * b + be + 1]
+                        .copy_from_slice(&t[base..base + be + 1]);
+                }
+                for be in 0..b {
+                    for g in be + 1..b {
+                        out[(a * b + be) * b + g] = out[(a * b + g) * b + be];
+                    }
+                }
+            }
+        } else {
+            // central (g,g,g): canonical α ≥ β ≥ γ runs, then symmetrize
+            // from the sorted local representative.
+            for a in 0..b {
+                for be in 0..=a {
+                    let base = self.row_base(a, be);
+                    out[(a * b + be) * b..(a * b + be) * b + be + 1]
+                        .copy_from_slice(&t[base..base + be + 1]);
+                }
+            }
+            for a in 0..b {
+                for be in 0..b {
+                    for g in 0..b {
+                        let (x, y, z) = sort3(a, be, g);
+                        if (x, y, z) != (a, be, g) {
+                            out[(a * b + be) * b + g] = out[(x * b + y) * b + z];
+                        }
+                    }
+                }
+            }
+        }
+        out
     }
 }
 
@@ -285,6 +429,99 @@ mod tests {
                 }
             }
         }
+    }
+
+    /// Slow per-element reference for extract_block (what the pre-fast-path
+    /// code computed for every non-(bi>bj>bk) block).
+    fn extract_block_slow(t: &SymTensor, bi: usize, bj: usize, bk: usize, b: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; b * b * b];
+        for a in 0..b {
+            for be in 0..b {
+                for g in 0..b {
+                    out[(a * b + be) * b + g] = t.get(bi * b + a, bj * b + be, bk * b + g);
+                }
+            }
+        }
+        out
+    }
+
+    #[test]
+    fn extract_block_fast_paths_cover_all_sorted_kinds() {
+        // Off-diagonal, both non-central diagonal shapes, and the central
+        // block all take the contiguous-run path; values must equal the
+        // per-element slow path exactly.
+        let b = 5;
+        let t = SymTensor::random(5 * b, 17);
+        for (bi, bj, bk) in [(3, 2, 0), (4, 4, 1), (4, 2, 2), (2, 2, 2), (0, 0, 0)] {
+            assert_eq!(
+                t.extract_block(bi, bj, bk, b),
+                extract_block_slow(&t, bi, bj, bk, b),
+                "block ({bi},{bj},{bk})"
+            );
+        }
+        // unsorted block indices still work via the slow path
+        assert_eq!(
+            t.extract_block(1, 0, 1, b),
+            extract_block_slow(&t, 1, 0, 1, b)
+        );
+    }
+
+    #[test]
+    fn packed_view_rows_are_the_packed_entries() {
+        let b = 4;
+        let t = SymTensor::random(5 * b, 19);
+        let data = t.packed_data();
+        // off-diagonal: every (α, β) row is the contiguous γ-run of uniques
+        let v = PackedBlockView::new(3, 1, 0, b);
+        for a in 0..b {
+            for be in 0..b {
+                let base = v.row_base(a, be);
+                assert_eq!(v.row_len(be), b);
+                for g in 0..b {
+                    assert_eq!(data[base + g], t.get(3 * b + a, b + be, g));
+                }
+            }
+        }
+        // (g,h,h): run length β+1, entries are the j ≥ k uniques
+        let v = PackedBlockView::new(2, 1, 1, b);
+        for a in 0..b {
+            for be in 0..b {
+                let base = v.row_base(a, be);
+                assert_eq!(v.row_len(be), be + 1);
+                for g in 0..=be {
+                    assert_eq!(data[base + g], t.get(2 * b + a, b + be, b + g));
+                }
+            }
+        }
+        // central: rows exist for α ≥ β only
+        let v = PackedBlockView::new(2, 2, 2, b);
+        for a in 0..b {
+            for be in 0..=a {
+                let base = v.row_base(a, be);
+                for g in 0..=be {
+                    assert_eq!(data[base + g], t.get(2 * b + a, 2 * b + be, 2 * b + g));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn packed_view_unique_len_formulas() {
+        let b = 6usize;
+        assert_eq!(PackedBlockView::new(3, 2, 1, b).unique_len(), b * b * b);
+        assert_eq!(PackedBlockView::new(3, 3, 1, b).unique_len(), b * b * (b + 1) / 2);
+        assert_eq!(PackedBlockView::new(3, 1, 1, b).unique_len(), b * b * (b + 1) / 2);
+        assert_eq!(
+            PackedBlockView::new(3, 3, 3, b).unique_len(),
+            b * (b + 1) * (b + 2) / 6
+        );
+        // unique lengths over all blocks tile the packed tensor exactly
+        let m = 4;
+        let total: usize = (0..m)
+            .flat_map(|i| (0..=i).flat_map(move |j| (0..=j).map(move |k| (i, j, k))))
+            .map(|(i, j, k)| PackedBlockView::new(i, j, k, b).unique_len())
+            .sum();
+        assert_eq!(total, packed_len(m * b));
     }
 
     #[test]

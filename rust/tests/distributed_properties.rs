@@ -13,13 +13,19 @@
 //!     independent oracle calls column-by-column across all three block
 //!     kinds and both comm modes, with words exactly r× and messages
 //!     independent of r.
+//! P6: the zero-copy packed path and the dense-extract path agree on
+//!     random partitions for r ∈ {1, 4}, and the packed plan holds no
+//!     dense tensor copies.
+//! P7: the ternary multiplications the packed kernels execute equal the
+//!     §7.1 logical accounting (`block_ternary_mults`) summed per
+//!     processor — the packed path never overshoots on diagonal blocks.
 
 use sttsv::coordinator::{run_comm_only, run_sttsv_opts, CommMode, ExecOpts, SttsvPlan};
-use sttsv::partition::TetraPartition;
-use sttsv::runtime::Backend;
+use sttsv::partition::{classify, BlockKind, TetraPartition};
+use sttsv::runtime::{packed_ternary_mults, Backend};
 use sttsv::schedule::CommSchedule;
 use sttsv::steiner::{spherical, sqs8};
-use sttsv::tensor::SymTensor;
+use sttsv::tensor::{PackedBlockView, SymTensor};
 use sttsv::util::proptest::check;
 use sttsv::util::rng::Rng;
 
@@ -47,10 +53,11 @@ fn p1_distributed_equals_sequential_oracle() {
                 CommMode::AllToAll
             };
             let batch = rng.below(2) == 0;
+            let packed = rng.below(2) == 0;
             let seed = rng.next_u64();
-            (part_idx, b, mode, batch, seed)
+            (part_idx, b, mode, batch, packed, seed)
         },
-        |&(part_idx, b, mode, batch, seed)| {
+        |&(part_idx, b, mode, batch, packed, seed)| {
             let part = &pool[part_idx];
             let n = b * part.m;
             let tensor = SymTensor::random(n, seed);
@@ -61,7 +68,7 @@ fn p1_distributed_equals_sequential_oracle() {
                 &tensor,
                 &x,
                 part,
-                ExecOpts { mode, backend: Backend::Native, batch },
+                ExecOpts { mode, backend: Backend::Native, batch, packed },
             )
             .map_err(|e| e.to_string())?;
             let scale = want.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
@@ -125,17 +132,8 @@ fn p3_total_ternary_mults_invariant() {
             let tensor = SymTensor::random(n, seed);
             let mut rng = Rng::new(seed);
             let x = rng.normal_vec(n);
-            let rep = run_sttsv_opts(
-                &tensor,
-                &x,
-                part,
-                ExecOpts {
-                    mode: CommMode::PointToPoint,
-                    backend: Backend::Native,
-                    batch: true,
-                },
-            )
-            .map_err(|e| e.to_string())?;
+            let rep = run_sttsv_opts(&tensor, &x, part, ExecOpts::default())
+                .map_err(|e| e.to_string())?;
             let want = (n * n * (n + 1) / 2) as u64;
             if rep.total_ternary_mults() != want {
                 return Err(format!(
@@ -179,17 +177,7 @@ fn load_balance_within_paper_slack() {
         let tensor = SymTensor::random(n, 3);
         let mut rng = Rng::new(4);
         let x = rng.normal_vec(n);
-        let rep = run_sttsv_opts(
-            &tensor,
-            &x,
-            &part,
-            ExecOpts {
-                mode: CommMode::PointToPoint,
-                backend: Backend::Native,
-                batch: true,
-            },
-        )
-        .unwrap();
+        let rep = run_sttsv_opts(&tensor, &x, &part, ExecOpts::default()).unwrap();
         let max = rep.max_ternary_mults() as f64;
         let mean = rep.total_ternary_mults() as f64 / part.p as f64;
         assert!(max / mean < 1.15, "q={q}: max/mean = {}", max / mean);
@@ -219,10 +207,11 @@ fn p5_run_multi_equals_r_independent_oracles() {
                 CommMode::AllToAll
             };
             let batch = rng.below(2) == 0;
+            let packed = rng.below(2) == 0;
             let seed = rng.next_u64();
-            (part_idx, b, r, mode, batch, seed)
+            (part_idx, b, r, mode, batch, packed, seed)
         },
-        |&(part_idx, b, r, mode, batch, seed)| {
+        |&(part_idx, b, r, mode, batch, packed, seed)| {
             let part = &pool[part_idx];
             let n = b * part.m;
             let tensor = SymTensor::random(n, seed);
@@ -231,7 +220,7 @@ fn p5_run_multi_equals_r_independent_oracles() {
             let plan = SttsvPlan::new(
                 &tensor,
                 part,
-                ExecOpts { mode, backend: Backend::Native, batch },
+                ExecOpts { mode, backend: Backend::Native, batch, packed },
             )
             .map_err(|e| e.to_string())?;
             let rep = plan.run_multi(&xs).map_err(|e| e.to_string())?;
@@ -269,4 +258,122 @@ fn p5_run_multi_equals_r_independent_oracles() {
             Ok(())
         },
     );
+}
+
+#[test]
+fn p6_packed_path_matches_dense_extract_on_random_partitions() {
+    // The zero-copy packed plan (contract in place against the shared
+    // SymTensor buffer) and the dense-extract plan must agree within 1e-4
+    // column-by-column for r ∈ {1, 4} on random partitions, block sizes,
+    // and comm modes — and the packed plan must hold no dense copies.
+    let pool = partition_pool();
+    check(
+        "packed == dense-extract",
+        0xBACC,
+        10,
+        |rng: &mut Rng| {
+            let part_idx = rng.below(pool.len());
+            let b = 2 + rng.below(6); // 2..=7
+            let r = [1usize, 4][rng.below(2)];
+            let mode = if rng.below(2) == 0 {
+                CommMode::PointToPoint
+            } else {
+                CommMode::AllToAll
+            };
+            let batch = rng.below(2) == 0;
+            let seed = rng.next_u64();
+            (part_idx, b, r, mode, batch, seed)
+        },
+        |&(part_idx, b, r, mode, batch, seed)| {
+            let part = &pool[part_idx];
+            let n = b * part.m;
+            let tensor = SymTensor::random(n, seed);
+            let mut rng = Rng::new(seed ^ 0x7777);
+            let xs: Vec<Vec<f32>> = (0..r).map(|_| rng.normal_vec(n)).collect();
+            let packed_plan = SttsvPlan::new(
+                &tensor,
+                part,
+                ExecOpts { mode, backend: Backend::Native, batch, packed: true },
+            )
+            .map_err(|e| e.to_string())?;
+            if packed_plan.resident_tensor_words() != 0 {
+                return Err(format!(
+                    "packed plan copied {} tensor words",
+                    packed_plan.resident_tensor_words()
+                ));
+            }
+            let dense_plan = SttsvPlan::new(
+                &tensor,
+                part,
+                ExecOpts { mode, backend: Backend::Native, batch, packed: false },
+            )
+            .map_err(|e| e.to_string())?;
+            let yp = packed_plan.run_multi(&xs).map_err(|e| e.to_string())?;
+            let yd = dense_plan.run_multi(&xs).map_err(|e| e.to_string())?;
+            for l in 0..r {
+                let scale = yd.ys[l].iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+                for i in 0..n {
+                    if (yp.ys[l][i] - yd.ys[l][i]).abs() > 1e-4 * scale {
+                        return Err(format!(
+                            "col {l} i={i}: packed {} vs dense {} (scale {scale})",
+                            yp.ys[l][i], yd.ys[l][i]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn p7_packed_executed_mults_equal_logical_accounting_per_proc() {
+    // Per processor, the ternary multiplications the packed kernels
+    // actually execute (packed_ternary_mults: one per unique entry per
+    // output contribution, walked from the kernels' loop bounds) must equal
+    // the §7.1 logical accounting the coordinator charges
+    // (block_ternary_mults sums) — i.e. the packed path's executed flops
+    // ARE the paper's counts, with no dense overshoot on diagonal blocks.
+    for sys in [spherical(2).unwrap(), spherical(3).unwrap(), sqs8()] {
+        let part = TetraPartition::from_steiner(&sys).unwrap();
+        for b in [3usize, 6] {
+            let n = b * part.m;
+            let tensor = SymTensor::random(n, 0xBEEF);
+            let mut rng = Rng::new(0xF00D);
+            let x = rng.normal_vec(n);
+            let plan = SttsvPlan::new(&tensor, &part, ExecOpts::default()).unwrap();
+            let rep = plan.run(&x).unwrap();
+            for p in 0..part.p {
+                let executed: u64 = part
+                    .owned_blocks(p)
+                    .iter()
+                    .map(|&(i, j, k)| packed_ternary_mults(&PackedBlockView::new(i, j, k, b)))
+                    .sum();
+                assert_eq!(
+                    executed, rep.per_proc[p].ternary_mults,
+                    "m={} b={b} proc {p}",
+                    part.m
+                );
+            }
+            // and the central-block check that motivated the kernels: the
+            // dense sweep would execute 3b³ on every block regardless of
+            // kind, overshooting wherever a diagonal block is owned.
+            for p in 0..part.p {
+                let has_diag = part
+                    .owned_blocks(p)
+                    .iter()
+                    .any(|&(i, j, k)| classify(i, j, k) != BlockKind::OffDiagonal);
+                let dense_would: u64 =
+                    3 * (b as u64).pow(3) * part.owned_blocks(p).len() as u64;
+                if has_diag {
+                    assert!(
+                        rep.per_proc[p].ternary_mults < dense_would,
+                        "proc {p}: packed {} !< dense {}",
+                        rep.per_proc[p].ternary_mults,
+                        dense_would
+                    );
+                }
+            }
+        }
+    }
 }

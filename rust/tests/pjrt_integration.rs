@@ -109,26 +109,31 @@ fn distributed_sttsv_on_pjrt_backend_q2() {
     let mut rng = Rng::new(8);
     let x = rng.normal_vec(n);
     let want = tensor.sttsv(&x);
+    // packed = true exercises the on-the-fly group-extraction fallback
+    // (no resident dense copies); packed = false the resident dense path.
     for batch in [false, true] {
-        let rep = run_sttsv_opts(
-            &tensor,
-            &x,
-            &part,
-            ExecOpts {
-                mode: CommMode::PointToPoint,
-                backend: Backend::Pjrt,
-                batch,
-            },
-        )
-        .unwrap();
-        let scale = want.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
-        for i in 0..n {
-            assert!(
-                (rep.y[i] - want[i]).abs() < 2e-3 * scale,
-                "batch={batch} i={i}: {} vs {}",
-                rep.y[i],
-                want[i]
-            );
+        for packed in [false, true] {
+            let rep = run_sttsv_opts(
+                &tensor,
+                &x,
+                &part,
+                ExecOpts {
+                    mode: CommMode::PointToPoint,
+                    backend: Backend::Pjrt,
+                    batch,
+                    packed,
+                },
+            )
+            .unwrap();
+            let scale = want.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+            for i in 0..n {
+                assert!(
+                    (rep.y[i] - want[i]).abs() < 2e-3 * scale,
+                    "batch={batch} packed={packed} i={i}: {} vs {}",
+                    rep.y[i],
+                    want[i]
+                );
+            }
         }
     }
 }
@@ -152,6 +157,7 @@ fn pjrt_and_native_backends_agree_through_power_method() {
         mode: CommMode::PointToPoint,
         backend,
         batch: true,
+        packed: false,
     };
     let rp = power_method(&tensor, &part, &x0, 40, 1e-6, opts(Backend::Pjrt)).unwrap();
     let rn = power_method(&tensor, &part, &x0, 40, 1e-6, opts(Backend::Native)).unwrap();
