@@ -1,6 +1,7 @@
 # Top-level convenience targets (the code's "run `make artifacts`" pointers).
 
-.PHONY: artifacts artifacts-quick test pytest bench bench-smoke
+.PHONY: artifacts artifacts-quick test test-release-asserts pytest bench \
+	bench-smoke bench-overlap
 
 # AOT-lower the JAX/Pallas kernels (incl. the multi-RHS block_multi_* set)
 # to HLO text artifacts for the Rust PJRT backend.
@@ -14,14 +15,26 @@ artifacts-quick:
 test:
 	cd rust && cargo build --release && cargo test -q
 
+# Release-codegen tests with debug assertions on: runs the
+# payload-accounting and panel-aliasing debug_asserts under the same
+# optimizations the benches use (mirrors the CI rust-release-asserts job).
+test-release-asserts:
+	cd rust && RUSTFLAGS="-C debug-assertions" cargo test -q --release
+
 pytest:
 	cd python && python -m pytest tests/ -q
 
-# Kernel-throughput r-sweep + E11 packed-vs-dense; writes
-# rust/BENCH_kernel.json.
+# Kernel-throughput r-sweep + E11 packed-vs-dense + E12 overlap-vs-phased;
+# writes rust/BENCH_kernel.json.
 bench:
 	cd rust && cargo bench --bench kernel_throughput
 
 # Fast variant (what CI runs): every path executes, fewer samples.
 bench-smoke:
 	cd rust && STTSV_BENCH_SMOKE=1 cargo bench --bench kernel_throughput
+
+# Targeted E12 overlap-vs-phased series only (quick sampling), asserting
+# comm-cost invariance and steady-state zero allocations inline.
+bench-overlap:
+	cd rust && STTSV_BENCH_SMOKE=1 STTSV_BENCH_SECTION=e12 \
+		cargo bench --bench kernel_throughput

@@ -72,9 +72,13 @@ fn main() -> anyhow::Result<()> {
     let mut t2 = Table::new(["backend", "batch", "median ms"]);
     for backend in [Backend::Native, Backend::Pjrt] {
         for batch in [false, true] {
+            // overlap: false — the overlap pipeline always dispatches per
+            // block, which would make the batched-vs-per-block comparison
+            // measure identical code; pin the phased path it ablates.
             let opts = ExecOpts {
                 mode: CommMode::PointToPoint,
                 batch,
+                overlap: false,
                 ..ExecOpts::for_backend(backend)
             };
             if run_sttsv_opts(&tensor, &x, &part, opts).is_err() {

@@ -12,9 +12,14 @@
 //! engine level (`SttsvPlan::run_multi` vs r sequential `run` calls,
 //! including the exact r×-words / constant-messages comm check).
 //!
-//! New in this PR, the E11 series (§Perf P7): plan-resident tensor words
-//! and end-to-end throughput of the zero-copy packed execution path vs the
-//! dense-extract path, including plan-construction time.
+//! The E11 series (§Perf P7): plan-resident tensor words and end-to-end
+//! throughput of the zero-copy packed execution path vs the dense-extract
+//! path, including plan-construction time.
+//!
+//! New in this PR, the E12 series (§Perf P8): overlapped-pipeline vs
+//! phased wall-clock and peak in-flight payload bytes across a P sweep at
+//! fixed n, with the comm-cost invariance and the steady-state
+//! zero-allocation property asserted inline.
 //!
 //! Emits a machine-readable `BENCH_kernel.json` next to the package root so
 //! the perf trajectory is tracked across PRs.
@@ -23,7 +28,8 @@
 //!
 //! Set `STTSV_BENCH_SMOKE=1` (as CI does) to cut warmup/sample counts for a
 //! quick smoke run: numbers are rougher but every code path still executes
-//! and BENCH_kernel.json is still written.
+//! and BENCH_kernel.json is still written. Set `STTSV_BENCH_SECTION=e12`
+//! (as `make bench-overlap` does) to run only the E12 overlap series.
 
 use std::fmt::Write as _;
 
@@ -33,7 +39,7 @@ use sttsv::partition::TetraPartition;
 use sttsv::runtime::{
     artifacts_dir, block_contract_multi, block_contract_native, Backend, Engine,
 };
-use sttsv::steiner::spherical;
+use sttsv::steiner::{spherical, sqs8, trivial, SteinerSystem};
 use sttsv::tensor::SymTensor;
 use sttsv::util::rng::Rng;
 use sttsv::util::table::Table;
@@ -120,6 +126,21 @@ struct PackedRow {
     packed_over_dense: f64,
 }
 
+/// One JSON record of the E12 overlap-vs-phased series (§Perf P8).
+struct OverlapRow {
+    p: usize,
+    b: usize,
+    r: usize,
+    phased_ms: f64,
+    overlap_ms: f64,
+    /// phased / overlap wall-clock (>1 = overlap faster)
+    overlap_speedup: f64,
+    phased_peak_inflight_bytes: u64,
+    overlap_peak_inflight_bytes: u64,
+    /// fresh payload allocations on a warmed plan (asserted 0)
+    steady_fresh_allocs: u64,
+}
+
 /// Smoke mode (STTSV_BENCH_SMOKE=1, used by CI): scale down a
 /// (warmup, samples) pair so every path runs but quickly.
 fn reps(warmup: usize, samples: usize) -> (usize, usize) {
@@ -136,7 +157,114 @@ fn btime<F: FnMut()>(warmup: usize, samples: usize, f: F) -> sttsv::bench::Timin
     time(w, s, f)
 }
 
+/// E12 (§Perf P8): overlapped pipeline vs phased execution at fixed
+/// n = 120 over the Steiner-realizable processor counts nearest the
+/// 4/8/16 sweep targets — trivial S(4,3,3) (P = 4), spherical q = 2
+/// (P = 10), SQS(8) (P = 14). Wall-clock is machine-dependent; the
+/// comm-cost invariance (per-processor words AND messages exactly equal
+/// between modes) and the steady-state zero-allocation property are
+/// asserted inline, so a passing bench run certifies both.
+fn bench_e12() -> anyhow::Result<Vec<OverlapRow>> {
+    header("E12: overlapped pipeline vs phased (fixed n = 120, native packed, r = 4)");
+    let r = 4usize;
+    let n = 120usize;
+    let mut rows = Vec::new();
+    let mut t = Table::new([
+        "P",
+        "b",
+        "phased ms",
+        "overlap ms",
+        "overlap speedup",
+        "peak inflight KiB p/o",
+        "steady allocs",
+    ]);
+    let systems: [(&str, SteinerSystem); 3] = [
+        ("S(4,3,3)", trivial(4)?),
+        ("spherical q=2", spherical(2)?),
+        ("SQS(8)", sqs8()),
+    ];
+    for (label, sys) in systems {
+        let part = TetraPartition::from_steiner(&sys)?;
+        assert_eq!(n % part.m, 0, "{label}: m must divide the fixed n");
+        let b = n / part.m;
+        let tensor = SymTensor::random(n, 120 + part.p as u64);
+        let mut rng = Rng::new(121);
+        let xs: Vec<Vec<f32>> = (0..r).map(|_| rng.normal_vec(n)).collect();
+        let plan_overlap = SttsvPlan::new(&tensor, &part, ExecOpts::default())?;
+        let plan_phased = SttsvPlan::new(
+            &tensor,
+            &part,
+            ExecOpts { overlap: false, ..Default::default() },
+        )?;
+        // Warm both plans' pools and grab the in-flight peaks, then assert
+        // comm-cost invariance and the steady-state zero-alloc property.
+        let rep_o = plan_overlap.run_multi(&xs)?;
+        let rep_p = plan_phased.run_multi(&xs)?;
+        for p in 0..part.p {
+            assert_eq!(
+                rep_o.per_proc[p].stats, rep_p.per_proc[p].stats,
+                "{label} proc {p}: overlap must be comm-cost invariant"
+            );
+        }
+        let rep_o2 = plan_overlap.run_multi(&xs)?;
+        assert_eq!(
+            rep_o2.fresh_payload_allocs, 0,
+            "{label}: warm overlap run allocated payload buffers"
+        );
+        let t_p = btime(1, 7, || {
+            std::hint::black_box(plan_phased.run_multi(&xs).unwrap());
+        });
+        let t_o = btime(1, 7, || {
+            std::hint::black_box(plan_overlap.run_multi(&xs).unwrap());
+        });
+        let row = OverlapRow {
+            p: part.p,
+            b,
+            r,
+            phased_ms: t_p.median.as_secs_f64() * 1e3,
+            overlap_ms: t_o.median.as_secs_f64() * 1e3,
+            overlap_speedup: t_p.median.as_secs_f64() / t_o.median.as_secs_f64(),
+            phased_peak_inflight_bytes: rep_p.peak_inflight_words * 4,
+            overlap_peak_inflight_bytes: rep_o.peak_inflight_words * 4,
+            steady_fresh_allocs: rep_o2.fresh_payload_allocs,
+        };
+        t.row([
+            format!("{} ({label})", part.p),
+            b.to_string(),
+            format!("{:.2}", row.phased_ms),
+            format!("{:.2}", row.overlap_ms),
+            format!("{:.2}x", row.overlap_speedup),
+            format!(
+                "{:.1}/{:.1}",
+                row.phased_peak_inflight_bytes as f64 / 1024.0,
+                row.overlap_peak_inflight_bytes as f64 / 1024.0
+            ),
+            row.steady_fresh_allocs.to_string(),
+        ]);
+        rows.push(row);
+    }
+    t.print();
+    println!(
+        "acceptance: per-proc words AND messages asserted exactly equal \
+         between modes (comm-cost invariance); warm-plan payload \
+         allocations asserted 0; wall-clock target is overlap <= phased at \
+         P >= 8 on multi-core (machine-dependent; recorded in \
+         BENCH_kernel.json)."
+    );
+    Ok(rows)
+}
+
 fn main() -> anyhow::Result<()> {
+    // `make bench-overlap` runs only the E12 overlap series. It writes a
+    // separate file so a targeted run never clobbers the full sweep's
+    // BENCH_kernel.json (the tracked perf-trajectory record).
+    if std::env::var("STTSV_BENCH_SECTION").as_deref() == Ok("e12") {
+        let overlap_rows = bench_e12()?;
+        let json = render_json(&[], &[], &[], &overlap_rows);
+        std::fs::write("BENCH_overlap.json", &json)?;
+        println!("\nwrote BENCH_overlap.json ({} bytes; E12 section only)", json.len());
+        return Ok(());
+    }
     header("E10: fused block-contraction kernel throughput");
     let have_pjrt = artifacts_dir().join("manifest.txt").exists();
     let pjrt = if have_pjrt {
@@ -309,10 +437,14 @@ fn main() -> anyhow::Result<()> {
     let bb = 32usize;
     let n = bb * part.m;
     let tensor = SymTensor::random(n, 7);
-    // Pinned to the dense-resident plan so the engine_rsweep series stays
-    // comparable with prior PRs' BENCH_kernel.json; the packed path is
-    // measured separately in E11 below.
-    let plan = SttsvPlan::new(&tensor, &part, ExecOpts { packed: false, ..Default::default() })?;
+    // Pinned to the dense-resident PHASED plan so the engine_rsweep series
+    // keeps measuring the same code path as prior PRs' BENCH_kernel.json;
+    // the packed path is measured in E11 and the overlap pipeline in E12.
+    let plan = SttsvPlan::new(
+        &tensor,
+        &part,
+        ExecOpts { packed: false, overlap: false, ..Default::default() },
+    )?;
     // total owned lower-tetra blocks across processors: m(m+1)(m+2)/6
     let total_blocks = part.m * (part.m + 1) * (part.m + 2) / 6;
     let mut rng = Rng::new(8);
@@ -446,8 +578,11 @@ fn main() -> anyhow::Result<()> {
          footprint again as b³ copies."
     );
 
+    // ---- E12: overlapped pipeline vs phased (§Perf P8) -------------------
+    let overlap_rows = bench_e12()?;
+
     // ---- machine-readable output -----------------------------------------
-    let json = render_json(&kernel_rows, &engine_rows, &packed_rows);
+    let json = render_json(&kernel_rows, &engine_rows, &packed_rows, &overlap_rows);
     std::fs::write("BENCH_kernel.json", &json)?;
     println!("\nwrote BENCH_kernel.json ({} bytes)", json.len());
 
@@ -460,8 +595,13 @@ fn main() -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Hand-rolled JSON (no serde is vendored): three arrays of flat records.
-fn render_json(kernel: &[KernelRow], engine: &[EngineRow], packed: &[PackedRow]) -> String {
+/// Hand-rolled JSON (no serde is vendored): four arrays of flat records.
+fn render_json(
+    kernel: &[KernelRow],
+    engine: &[EngineRow],
+    packed: &[PackedRow],
+    overlap: &[OverlapRow],
+) -> String {
     let mut s = String::new();
     s.push_str("{\n  \"bench\": \"kernel_throughput\",\n  \"kernel_rsweep\": [\n");
     for (idx, k) in kernel.iter().enumerate() {
@@ -514,7 +654,29 @@ fn render_json(kernel: &[KernelRow], engine: &[EngineRow], packed: &[PackedRow])
             p.construct_ms_dense,
             p.run_ms_packed,
             p.run_ms_dense,
+            p.packed_over_dense,
             if idx + 1 < packed.len() { "," } else { "" }
+        );
+    }
+    s.push_str("  ],\n  \"overlap_vs_phased\": [\n");
+    for (idx, o) in overlap.iter().enumerate() {
+        let _ = write!(
+            s,
+            "    {{\"p\": {}, \"b\": {}, \"r\": {}, \"phased_ms\": {:.4}, \
+             \"overlap_ms\": {:.4}, \"overlap_speedup\": {:.4}, \
+             \"phased_peak_inflight_bytes\": {}, \
+             \"overlap_peak_inflight_bytes\": {}, \
+             \"steady_fresh_allocs\": {}}}{}\n",
+            o.p,
+            o.b,
+            o.r,
+            o.phased_ms,
+            o.overlap_ms,
+            o.overlap_speedup,
+            o.phased_peak_inflight_bytes,
+            o.overlap_peak_inflight_bytes,
+            o.steady_fresh_allocs,
+            if idx + 1 < overlap.len() { "," } else { "" }
         );
     }
     s.push_str("  ]\n}\n");

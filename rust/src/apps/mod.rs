@@ -216,6 +216,7 @@ mod tests {
             backend: Backend::Native,
             batch: true,
             packed: true,
+            overlap: true,
         }
     }
 

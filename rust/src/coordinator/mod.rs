@@ -33,15 +33,30 @@
 //! the symmetry-aware diagonal kernels execute exactly the §7.1 ternary
 //! multiplication counts. Dense-extract mode (`packed: false`) keeps the
 //! previous behavior and the resident layout AOT artifacts consume.
+//!
+//! **Overlapped pipeline execution** ([`ExecOpts::overlap`], the default;
+//! §Perf P8): the three barriered phases collapse into one event loop per
+//! worker. Every phase-1 gather message leaves up front over the
+//! nonblocking, buffer-reusing simulator API ([`Comm::isend`] /
+//! [`Comm::recv_into`]); blocks are contracted the moment their three
+//! row-block panels are complete (dependency counters precomputed in the
+//! plan, so locally-complete blocks start before any message lands); and
+//! each phase-3 reduce message streams out the moment the destination
+//! portions it carries absorb their last local contribution. The α-β-γ
+//! model cost is **invariant** — per-processor words and messages are
+//! exactly those of the phased path (property P8 asserts equality) — only
+//! idle time is removed. The phased path (`--no-overlap`) remains as the
+//! deterministic oracle.
 
 pub mod baselines;
 
 use crate::partition::{classify, BlockKind, TetraPartition};
-use crate::runtime::{Backend, Engine};
+use crate::runtime::{lanes_axpy, Backend, Engine};
 use crate::schedule::CommSchedule;
-use crate::simulator::{self, Comm, CommStats};
+use crate::simulator::{self, BufPool, Comm, CommStats};
 use crate::tensor::{PackedBlockView, SymTensor};
 use anyhow::{bail, ensure, Result};
+use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// How vector data moves between processors.
@@ -86,6 +101,19 @@ pub struct ExecOpts {
     /// consume resident). On the PJRT backend the packed path extracts the
     /// active group on the fly per dispatch instead.
     pub packed: bool,
+    /// Overlapped pipeline execution (§Perf P8, the default): fire every
+    /// phase-1 send up front over the nonblocking buffer-reusing comm API,
+    /// contract blocks as their panels complete, and stream each phase-3
+    /// reduce message as soon as its destination portions are final.
+    /// Per-processor words and messages are exactly the phased path's (the
+    /// model cost is invariant; asserted by property P8) and the
+    /// steady-state hot path performs zero per-message payload
+    /// allocations. Implies per-block dispatch (`batch` is ignored).
+    /// `overlap: false` (CLI `--no-overlap`) keeps the stepped
+    /// gather → compute → reduce path — the bitwise-deterministic oracle;
+    /// overlap accumulates phase-3 partials in arrival order, so its
+    /// results are reproducible only up to f32 summation order.
+    pub overlap: bool,
 }
 
 impl Default for ExecOpts {
@@ -95,19 +123,24 @@ impl Default for ExecOpts {
             backend: Backend::Native,
             batch: true,
             packed: true,
+            overlap: true,
         }
     }
 }
 
 impl ExecOpts {
-    /// Defaults appropriate for a backend: zero-copy packed execution on
-    /// Native; resident dense-extract on PJRT, whose artifacts consume the
-    /// dense layout — the packed fallback would re-extract every block per
-    /// dispatch, repaying the O(n³) copy on every run instead of once.
+    /// Defaults appropriate for a backend: zero-copy packed execution and
+    /// the overlapped pipeline on Native; resident dense-extract and the
+    /// phased path on PJRT — its AOT artifacts are shaped for the batched
+    /// per-kind dispatch (the packed fallback would re-extract every block
+    /// per dispatch, and the overlap worker's per-block dispatch would
+    /// forfeit that batching). `--overlap` still forces the pipeline on
+    /// PJRT explicitly.
     pub fn for_backend(backend: Backend) -> ExecOpts {
         ExecOpts {
             backend,
             packed: backend == Backend::Native,
+            overlap: backend == Backend::Native,
             ..Default::default()
         }
     }
@@ -131,6 +164,14 @@ pub struct SttsvReport {
     pub per_proc: Vec<ProcReport>,
     /// Communication steps per vector phase.
     pub steps_per_phase: usize,
+    /// Peak payload words simultaneously in flight across all processors
+    /// (overlap trades higher occupancy for the removed barriers; the
+    /// word/message model cost is unchanged).
+    pub peak_inflight_words: u64,
+    /// Payload buffers freshly allocated during this run — 0 once the
+    /// plan's per-processor pools are warm (the steady-state
+    /// zero-allocation hot path; §Perf P8).
+    pub fresh_payload_allocs: u64,
     pub elapsed: Duration,
 }
 
@@ -164,6 +205,11 @@ pub struct SttsvMultiReport {
     pub per_proc: Vec<ProcReport>,
     /// Communication steps per vector phase (independent of r).
     pub steps_per_phase: usize,
+    /// Peak payload words simultaneously in flight across all processors.
+    pub peak_inflight_words: u64,
+    /// Payload buffers freshly allocated during this run — 0 once the
+    /// plan's per-processor pools are warm (§Perf P8).
+    pub fresh_payload_allocs: u64,
     pub elapsed: Duration,
 }
 
@@ -366,6 +412,202 @@ pub struct SttsvPlan<'a> {
     /// this to address their slot-indexed gather/accumulate buffers instead
     /// of hashing row-block ids.
     slot_of: Vec<Vec<usize>>,
+    /// overlap[p]: precomputed readiness/streaming metadata for the §Perf
+    /// P8 pipeline worker (panel waits, block dependencies, per-slot
+    /// contribution counts, phase-3 release counters).
+    overlap: Vec<OverlapMeta>,
+    /// Per-processor payload-buffer pools lent to every run: message
+    /// buffers recycle across runs, so repeated `run`/`run_multi` calls on
+    /// one plan perform zero per-message heap allocations at steady state.
+    pools: Vec<Mutex<BufPool>>,
+}
+
+/// Overlap-mode tags: one gather and one reduce message per ordered peer
+/// pair, so `(from, tag)` uniquely keys every in-flight message.
+const TAG_GATHER: u64 = 0;
+const TAG_REDUCE: u64 = 1;
+
+/// One peer transfer of the overlap pipeline. The same row blocks travel
+/// in both directions (sharing is symmetric), so a single link describes
+/// the outgoing and the incoming message to/from `peer` in each phase.
+struct PeerLink {
+    peer: usize,
+    /// Shared row blocks, in the phased payload order (sorted R_p order).
+    row_blocks: Vec<usize>,
+    /// All-to-All only: fixed message size in r = 1 words (zero-padded, the
+    /// §7.2.2 uniform buffer). 0 = exact point-to-point payload.
+    pad_words: usize,
+}
+
+impl PeerLink {
+    /// r = 1 words of the message this link *receives* in `tag`'s phase:
+    /// gather segments are sized by the sender's portions, reduce segments
+    /// by the receiver's own portions.
+    fn recv_words(&self, part: &TetraPartition, b: usize, me: usize, tag: u64) -> usize {
+        if self.pad_words != 0 {
+            return self.pad_words;
+        }
+        self.row_blocks
+            .iter()
+            .map(|&i| {
+                let owner = if tag == TAG_GATHER { self.peer } else { me };
+                part.portion(i, owner, b).len()
+            })
+            .sum()
+    }
+}
+
+/// Per-processor metadata driving the overlap worker, derived once from
+/// the partition + comm mode at plan construction: which arrivals complete
+/// which x panels, which panels gate which blocks, how many local block
+/// contributions finalize each y panel, and which finalizations release
+/// which outgoing phase-3 messages. The counter vectors are templates,
+/// cloned into mutable run state per execution.
+struct OverlapMeta {
+    links: Vec<PeerLink>,
+    /// peer rank -> index into `links` (`usize::MAX` = no link).
+    peer_link: Vec<usize>,
+    /// panel_waits[s]: incoming phase-1 transfers covering slot s.
+    panel_waits: Vec<u32>,
+    /// block_deps[bid]: distinct gated slots among the block's three row
+    /// blocks; 0 = locally complete, contractable before any arrival.
+    block_deps: Vec<u32>,
+    /// slot -> blocks gated on that panel's completion.
+    slot_blocks: Vec<Vec<u32>>,
+    /// slot_contribs[s]: owned blocks contributing (nonzero factor) to s.
+    slot_contribs: Vec<u32>,
+    /// slot -> links whose phase-3 message covers that slot.
+    slot_links: Vec<Vec<u32>>,
+    /// p3_waits[li]: slots of link li still awaiting local contributions
+    /// (the message streams out the moment this reaches 0).
+    p3_waits: Vec<u32>,
+    /// Flattened owned blocks as (group, index-in-group), in group order.
+    blocks: Vec<(u32, u32)>,
+    /// Max r = 1 words of any single incoming message (scratch sizing).
+    max_recv_words: usize,
+}
+
+/// Build one processor's overlap metadata. The link set reproduces the
+/// phased message set exactly — point-to-point links are taken verbatim
+/// from the `CommSchedule` transfer set (same peers, same row-block
+/// order, by construction rather than by a parallel re-derivation);
+/// All-to-All links exist for every peer with the fixed padded buffer —
+/// so words and messages per processor are identical to the phased path.
+fn build_overlap_meta(
+    part: &TetraPartition,
+    sched: &CommSchedule,
+    me: usize,
+    b: usize,
+    mode: CommMode,
+    groups: &[Group],
+    slots: &[usize],
+) -> OverlapMeta {
+    let nslots = part.r_p[me].len();
+    let mut links = Vec::new();
+    let mut peer_link = vec![usize::MAX; part.p];
+    match mode {
+        CommMode::PointToPoint => {
+            // Incoming transfers mirror the outgoing ones (sharing is
+            // symmetric and r_p lists are sorted, so both directions carry
+            // the same sorted row-block set — `CommSchedule::validate`
+            // checks exactly this), so one link per outgoing transfer
+            // describes both directions.
+            for xf in sched.xfers.iter().filter(|xf| xf.from == me) {
+                peer_link[xf.to] = links.len();
+                links.push(PeerLink {
+                    peer: xf.to,
+                    row_blocks: xf.row_blocks.clone(),
+                    pad_words: 0,
+                });
+            }
+        }
+        CommMode::AllToAll => {
+            let pad = 2 * b.div_ceil(part.lambda1());
+            for round in 1..part.p {
+                let peer = (me + round) % part.p;
+                let shared: Vec<usize> = part.r_p[me]
+                    .iter()
+                    .copied()
+                    .filter(|i| part.r_p[peer].contains(i))
+                    .collect();
+                peer_link[peer] = links.len();
+                links.push(PeerLink { peer, row_blocks: shared, pad_words: pad });
+            }
+        }
+    }
+
+    let mut panel_waits = vec![0u32; nslots];
+    for link in &links {
+        for &i in &link.row_blocks {
+            panel_waits[slots[i]] += 1;
+        }
+    }
+
+    let mut blocks = Vec::new();
+    let mut block_deps = Vec::new();
+    let mut slot_blocks = vec![Vec::new(); nslots];
+    let mut slot_contribs = vec![0u32; nslots];
+    for (g, group) in groups.iter().enumerate() {
+        for (s, view) in group.views.iter().enumerate() {
+            let bid = blocks.len() as u32;
+            blocks.push((g as u32, s as u32));
+            let (i, j, k) = (view.bi, view.bj, view.bk);
+            let mut dep_slots = [slots[i], slots[j], slots[k]];
+            dep_slots.sort_unstable();
+            let mut deps = 0u32;
+            let mut prev = usize::MAX;
+            for &sl in &dep_slots {
+                if sl == prev {
+                    continue; // diagonal block: repeated row block
+                }
+                prev = sl;
+                if panel_waits[sl] > 0 {
+                    deps += 1;
+                    slot_blocks[sl].push(bid);
+                }
+            }
+            block_deps.push(deps);
+            let (fi, fj, fk) = factors(classify(i, j, k), i, j, k);
+            for (idx, f) in [(i, fi), (j, fj), (k, fk)] {
+                if f != 0.0 {
+                    slot_contribs[slots[idx]] += 1;
+                }
+            }
+        }
+    }
+
+    let mut slot_links = vec![Vec::new(); nslots];
+    let mut p3_waits = vec![0u32; links.len()];
+    for (li, link) in links.iter().enumerate() {
+        for &i in &link.row_blocks {
+            let s = slots[i];
+            slot_links[s].push(li as u32);
+            if slot_contribs[s] > 0 {
+                p3_waits[li] += 1;
+            }
+        }
+    }
+
+    let max_recv_words = links
+        .iter()
+        .flat_map(|link| {
+            [TAG_GATHER, TAG_REDUCE].map(|tag| link.recv_words(part, b, me, tag))
+        })
+        .max()
+        .unwrap_or(0);
+
+    OverlapMeta {
+        links,
+        peer_link,
+        panel_waits,
+        block_deps,
+        slot_blocks,
+        slot_contribs,
+        slot_links,
+        p3_waits,
+        blocks,
+        max_recv_words,
+    }
 }
 
 impl<'a> SttsvPlan<'a> {
@@ -419,6 +661,16 @@ impl<'a> SttsvPlan<'a> {
                 .map(|s| s.expect("plan builder thread panicked"))
                 .unzip()
         };
+        // The readiness metadata only serves the pipeline worker; phased
+        // plans skip building it. The buffer pools serve both paths.
+        let overlap = if opts.overlap {
+            (0..part.p)
+                .map(|p| build_overlap_meta(part, &sched, p, b, opts.mode, &groups[p], &slot_of[p]))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        let pools = (0..part.p).map(|_| Mutex::new(BufPool::new())).collect();
         Ok(SttsvPlan {
             tensor,
             part,
@@ -429,6 +681,8 @@ impl<'a> SttsvPlan<'a> {
             engine,
             groups,
             slot_of,
+            overlap,
+            pools,
         })
     }
 
@@ -449,12 +703,20 @@ impl<'a> SttsvPlan<'a> {
     /// special case of [`SttsvPlan::run_multi`], preserving the paper's
     /// per-vector communication counts exactly.
     pub fn run(&self, x: &[f32]) -> Result<SttsvReport> {
-        let SttsvMultiReport { mut ys, per_proc, steps_per_phase, elapsed } =
-            self.run_multi(&[x])?;
+        let SttsvMultiReport {
+            mut ys,
+            per_proc,
+            steps_per_phase,
+            peak_inflight_words,
+            fresh_payload_allocs,
+            elapsed,
+        } = self.run_multi(&[x])?;
         Ok(SttsvReport {
             y: ys.pop().expect("r = 1 result column"),
             per_proc,
             steps_per_phase,
+            peak_inflight_words,
+            fresh_payload_allocs,
             elapsed,
         })
     }
@@ -482,8 +744,14 @@ impl<'a> SttsvPlan<'a> {
             Duration,
             Vec<(usize, std::ops::Range<usize>, Vec<f32>)>,
         );
-        let outs: Vec<ProcOut> =
-            simulator::run(part.p, |comm| self.worker(comm, &views))?;
+        let (outs, metrics): (Vec<ProcOut>, simulator::RunMetrics) =
+            simulator::run_ext(part.p, Some(&self.pools), |comm| {
+                if self.opts.overlap {
+                    self.worker_overlap(comm, &views)
+                } else {
+                    self.worker(comm, &views)
+                }
+            })?;
 
         // Assemble ys from the final portions (each (i, sub-range) once;
         // portion payloads are (len, r) interleaved panels).
@@ -517,6 +785,8 @@ impl<'a> SttsvPlan<'a> {
             ys,
             per_proc,
             steps_per_phase,
+            peak_inflight_words: metrics.peak_inflight_words,
+            fresh_payload_allocs: metrics.fresh_payload_allocs,
             elapsed: started.elapsed(),
         })
     }
@@ -558,6 +828,7 @@ impl<'a> SttsvPlan<'a> {
                 }
             }
         }
+        let mut bufs = ExchangeBufs::default();
         exchange(
             comm,
             part,
@@ -567,18 +838,19 @@ impl<'a> SttsvPlan<'a> {
             opts.mode,
             0,
             // pack: my own portion of each shared row block (all r columns)
-            |i, _to, xbuf: &Vec<f32>| {
+            |i, _to, xbuf: &Vec<f32>, out: &mut Vec<f32>| {
                 let s = slots[i];
                 let rg = part.portion(i, me, b);
-                xbuf[(s * b + rg.start) * r..(s * b + rg.end) * r].to_vec()
+                out.extend_from_slice(&xbuf[(s * b + rg.start) * r..(s * b + rg.end) * r]);
             },
             // unpack: sender's portion of row block i
-            |i, from, data, xbuf: &mut Vec<f32>| {
+            |i, from, data: &[f32], xbuf: &mut Vec<f32>| {
                 let s = slots[i];
                 let rg = part.portion(i, from, b);
-                xbuf[(s * b + rg.start) * r..(s * b + rg.end) * r].copy_from_slice(&data);
+                xbuf[(s * b + rg.start) * r..(s * b + rg.end) * r].copy_from_slice(data);
             },
             &mut xbuf,
+            &mut bufs,
         )?;
 
         // ---- phase 2: local ternary multiplications -----------------------
@@ -624,24 +896,8 @@ impl<'a> SttsvPlan<'a> {
                     mults += r as u64 * block_ternary_mults(kind, b as u64);
                 }
             } else {
-                for (s, view) in group.views.iter().enumerate() {
-                    let (i, j, k) = (view.bi, view.bj, view.bk);
-                    let kind = classify(i, j, k);
-                    let us = &xbuf[slots[i] * panel..(slots[i] + 1) * panel];
-                    let vs = &xbuf[slots[j] * panel..(slots[j] + 1) * panel];
-                    let ws = &xbuf[slots[k] * panel..(slots[k] + 1) * panel];
-                    let (ci, cj, ck) = if opts.packed {
-                        self.engine
-                            .block_contract_packed_multi(tdata, view, us, vs, ws, b, r)?
-                    } else {
-                        let a = &group.a[s * b * b * b..(s + 1) * b * b * b];
-                        self.engine.block_contract_multi(a, us, vs, ws, b, r)?
-                    };
-                    let (fi, fj, fk) = factors(kind, i, j, k);
-                    axpy_panel(&mut ybuf, slots[i], panel, fi, &ci);
-                    axpy_panel(&mut ybuf, slots[j], panel, fj, &cj);
-                    axpy_panel(&mut ybuf, slots[k], panel, fk, &ck);
-                    mults += r as u64 * block_ternary_mults(kind, b as u64);
+                for s in 0..group.views.len() {
+                    mults += self.contract_one(me, group, s, &xbuf, &mut ybuf, r)?;
                 }
             }
         }
@@ -657,13 +913,13 @@ impl<'a> SttsvPlan<'a> {
             opts.mode,
             1,
             // pack: MY partial of the DESTINATION's portion of row block i
-            |i, to, ybuf: &Vec<f32>| {
+            |i, to, ybuf: &Vec<f32>, out: &mut Vec<f32>| {
                 let s = slots[i];
                 let rg = part.portion(i, to, b);
-                ybuf[(s * b + rg.start) * r..(s * b + rg.end) * r].to_vec()
+                out.extend_from_slice(&ybuf[(s * b + rg.start) * r..(s * b + rg.end) * r]);
             },
             // unpack: add sender's partial of MY portion
-            |i, _from, data, ybuf: &mut Vec<f32>| {
+            |i, _from, data: &[f32], ybuf: &mut Vec<f32>| {
                 let s = slots[i];
                 let rg = part.portion(i, me, b);
                 let dst = &mut ybuf[(s * b + rg.start) * r..(s * b + rg.end) * r];
@@ -672,6 +928,7 @@ impl<'a> SttsvPlan<'a> {
                 }
             },
             &mut ybuf,
+            &mut bufs,
         )?;
 
         // Final owned portions of y (interleaved r-deep panels).
@@ -687,28 +944,349 @@ impl<'a> SttsvPlan<'a> {
 
         Ok((comm.stats, mults, compute_time, portions))
     }
+
+    /// Contract one owned block (per-block dispatch) and accumulate its
+    /// weighted contributions into `ybuf`. Shared by the phased
+    /// (non-batched) path and the overlap pipeline; returns the charged
+    /// §7.1 ternary multiplications.
+    fn contract_one(
+        &self,
+        me: usize,
+        group: &Group,
+        idx: usize,
+        xbuf: &[f32],
+        ybuf: &mut [f32],
+        r: usize,
+    ) -> Result<u64> {
+        let b = self.b;
+        let panel = b * r;
+        let slots = &self.slot_of[me];
+        let view = &group.views[idx];
+        let (i, j, k) = (view.bi, view.bj, view.bk);
+        let kind = classify(i, j, k);
+        let us = &xbuf[slots[i] * panel..(slots[i] + 1) * panel];
+        let vs = &xbuf[slots[j] * panel..(slots[j] + 1) * panel];
+        let ws = &xbuf[slots[k] * panel..(slots[k] + 1) * panel];
+        let (ci, cj, ck) = if self.opts.packed {
+            let tdata = self.tensor.packed_data();
+            self.engine
+                .block_contract_packed_multi(tdata, view, us, vs, ws, b, r)?
+        } else {
+            let a = &group.a[idx * b * b * b..(idx + 1) * b * b * b];
+            self.engine.block_contract_multi(a, us, vs, ws, b, r)?
+        };
+        let (fi, fj, fk) = factors(kind, i, j, k);
+        axpy_panel(ybuf, slots[i], panel, fi, &ci);
+        axpy_panel(ybuf, slots[j], panel, fj, &cj);
+        axpy_panel(ybuf, slots[k], panel, fk, &ck);
+        Ok(r as u64 * block_ternary_mults(kind, b as u64))
+    }
+
+    /// One simulated processor executing the §Perf P8 overlapped pipeline
+    /// for r packed columns: no phase barriers, no steps. Every gather
+    /// message leaves up front; arrivals are drained between per-block
+    /// contractions (blocks start the moment their three panels complete,
+    /// locally-complete blocks immediately); each reduce message streams
+    /// out the moment the destination portions it carries absorb their
+    /// last local contribution. Per-processor words and messages equal the
+    /// phased path's exactly — same message set, same payload layout.
+    fn worker_overlap(
+        &self,
+        comm: &mut Comm,
+        xs: &[&[f32]],
+    ) -> Result<(
+        CommStats,
+        u64,
+        Duration,
+        Vec<(usize, std::ops::Range<usize>, Vec<f32>)>,
+    )> {
+        let me = comm.rank;
+        let part = self.part;
+        let b = self.b;
+        let r = xs.len();
+        let slots = &self.slot_of[me];
+        let nslots = part.r_p[me].len();
+        let panel = b * r;
+        let meta = &self.overlap[me];
+        let groups = &self.groups[me];
+
+        // Own x portions (the only panel data not arriving by message).
+        let mut xbuf = vec![0.0f32; nslots * panel];
+        for (s, &i) in part.r_p[me].iter().enumerate() {
+            for off in part.portion(i, me, b) {
+                let dst = (s * b + off) * r;
+                for (l, x) in xs.iter().enumerate() {
+                    xbuf[dst + l] = x[i * b + off];
+                }
+            }
+        }
+
+        let ctx = PipeCtx { part, slots, b, r, me };
+        let mut st = PipeState {
+            meta,
+            panel_waits: meta.panel_waits.clone(),
+            block_deps: meta.block_deps.clone(),
+            slot_contribs: meta.slot_contribs.clone(),
+            p3_waits: meta.p3_waits.clone(),
+            ready: (0..meta.blocks.len() as u32)
+                .filter(|&bid| meta.block_deps[bid as usize] == 0)
+                .collect(),
+            p1_left: meta.links.len(),
+            p3_left: meta.links.len(),
+            blocks_left: meta.blocks.len(),
+            xbuf,
+            ybuf: vec![0.0f32; nslots * panel],
+            scratch: vec![0.0f32; meta.max_recv_words * r],
+            payload: Vec::new(),
+        };
+
+        // Phase-1 burst: every gather message is in flight before any
+        // compute starts (isend never blocks; buffers come from the pool).
+        for link in &meta.links {
+            st.payload.clear();
+            for &i in &link.row_blocks {
+                let s = slots[i];
+                let rg = part.portion(i, me, b);
+                st.payload
+                    .extend_from_slice(&st.xbuf[(s * b + rg.start) * r..(s * b + rg.end) * r]);
+            }
+            if link.pad_words != 0 {
+                debug_assert!(st.payload.len() <= link.pad_words * r);
+                st.payload.resize(link.pad_words * r, 0.0);
+            }
+            comm.isend(link.peer, TAG_GATHER, &st.payload)?;
+        }
+        // Reduce links whose every slot is contribution-free (their ybuf
+        // segments are final zeros) stream immediately.
+        for li in 0..meta.links.len() {
+            if st.p3_waits[li] == 0 {
+                st.send_reduce(comm, &ctx, li)?;
+            }
+        }
+
+        let mut mults: u64 = 0;
+        let mut compute_time = Duration::ZERO;
+        while st.p1_left > 0 || st.p3_left > 0 || st.blocks_left > 0 {
+            // Drain everything that has already arrived (cheap, nonblocking).
+            while let Some((from, tag)) = comm.try_recv() {
+                st.recv_one(comm, &ctx, from, tag)?;
+            }
+            if let Some(bid) = st.ready.pop() {
+                let (g, idx) = st.meta.blocks[bid as usize];
+                let group = &groups[g as usize];
+                let t0 = Instant::now();
+                mults += self.contract_one(me, group, idx as usize, &st.xbuf, &mut st.ybuf, r)?;
+                compute_time += t0.elapsed();
+                st.note_block_done(comm, &ctx, &group.views[idx as usize])?;
+            } else if st.p1_left > 0 || st.p3_left > 0 {
+                // Nothing contractable: block until the next arrival.
+                let (from, tag) = comm.recv_any()?;
+                st.recv_one(comm, &ctx, from, tag)?;
+            } else {
+                bail!(
+                    "overlap pipeline stalled on processor {me}: {} blocks \
+                     gated with no pending messages",
+                    st.blocks_left
+                );
+            }
+        }
+        debug_assert!(
+            st.p3_waits.iter().all(|&w| w == u32::MAX),
+            "phase-3 message never streamed"
+        );
+
+        // Final owned portions of y (interleaved r-deep panels).
+        let portions: Vec<(usize, std::ops::Range<usize>, Vec<f32>)> = part.r_p[me]
+            .iter()
+            .enumerate()
+            .map(|(s, &i)| {
+                let rg = part.portion(i, me, b);
+                let vals = st.ybuf[(s * b + rg.start) * r..(s * b + rg.end) * r].to_vec();
+                (i, rg, vals)
+            })
+            .collect();
+
+        Ok((comm.stats, mults, compute_time, portions))
+    }
 }
 
-/// ybuf[slot panel] += f · c over one contiguous (b, r) panel.
+/// Immutable per-worker context threaded through the pipeline state
+/// methods (keeps their signatures manageable).
+struct PipeCtx<'a> {
+    part: &'a TetraPartition,
+    slots: &'a [usize],
+    b: usize,
+    r: usize,
+    me: usize,
+}
+
+/// Mutable state of one overlap-pipeline worker: the readiness counters
+/// (cloned from the plan's [`OverlapMeta`] templates), the panel buffers,
+/// and the reusable pack/receive scratch.
+struct PipeState<'a> {
+    meta: &'a OverlapMeta,
+    panel_waits: Vec<u32>,
+    block_deps: Vec<u32>,
+    slot_contribs: Vec<u32>,
+    /// Per link: slots still awaiting contributions; `u32::MAX` = sent.
+    p3_waits: Vec<u32>,
+    ready: Vec<u32>,
+    p1_left: usize,
+    p3_left: usize,
+    blocks_left: usize,
+    xbuf: Vec<f32>,
+    ybuf: Vec<f32>,
+    scratch: Vec<f32>,
+    payload: Vec<f32>,
+}
+
+impl PipeState<'_> {
+    /// Consume one arrived message: deliver into `xbuf` (gather) or
+    /// accumulate into `ybuf` (reduce), then advance the readiness
+    /// counters — newly complete panels release gated blocks.
+    fn recv_one(&mut self, comm: &mut Comm, ctx: &PipeCtx, from: usize, tag: u64) -> Result<()> {
+        let meta = self.meta;
+        let li = *meta
+            .peer_link
+            .get(from)
+            .ok_or_else(|| anyhow::anyhow!("message from out-of-range rank {from}"))?;
+        ensure!(li != usize::MAX, "unexpected message from peer {from}");
+        let link = &meta.links[li];
+        let words = link.recv_words(ctx.part, ctx.b, ctx.me, tag) * ctx.r;
+        comm.recv_into(from, tag, &mut self.scratch[..words])?;
+        let mut off = 0usize;
+        match tag {
+            TAG_GATHER => {
+                for &i in &link.row_blocks {
+                    let s = ctx.slots[i];
+                    let rg = ctx.part.portion(i, from, ctx.b);
+                    let len = rg.len() * ctx.r;
+                    self.xbuf[(s * ctx.b + rg.start) * ctx.r..(s * ctx.b + rg.end) * ctx.r]
+                        .copy_from_slice(&self.scratch[off..off + len]);
+                    off += len;
+                    self.panel_waits[s] -= 1;
+                    if self.panel_waits[s] == 0 {
+                        for &bid in &meta.slot_blocks[s] {
+                            self.block_deps[bid as usize] -= 1;
+                            if self.block_deps[bid as usize] == 0 {
+                                self.ready.push(bid);
+                            }
+                        }
+                    }
+                }
+                self.p1_left -= 1;
+            }
+            TAG_REDUCE => {
+                for &i in &link.row_blocks {
+                    let s = ctx.slots[i];
+                    let rg = ctx.part.portion(i, ctx.me, ctx.b);
+                    let len = rg.len() * ctx.r;
+                    let dst = &mut self.ybuf
+                        [(s * ctx.b + rg.start) * ctx.r..(s * ctx.b + rg.end) * ctx.r];
+                    for (o, v) in dst.iter_mut().zip(&self.scratch[off..off + len]) {
+                        *o += v;
+                    }
+                    off += len;
+                }
+                self.p3_left -= 1;
+            }
+            other => bail!("unknown overlap tag {other} from {from}"),
+        }
+        // Payload accounting: the segments must tile the message exactly,
+        // up to the All-to-All zero padding.
+        debug_assert!(
+            off == words || (link.pad_words != 0 && off <= words),
+            "unpacked {off} of {words} words from {from} tag {tag}"
+        );
+        Ok(())
+    }
+
+    /// Record a finished block contraction: decrement the contribution
+    /// counters of the slots it fed, and stream every phase-3 message whose
+    /// last awaited slot just finalized.
+    fn note_block_done(
+        &mut self,
+        comm: &mut Comm,
+        ctx: &PipeCtx,
+        view: &PackedBlockView,
+    ) -> Result<()> {
+        let meta = self.meta;
+        let (i, j, k) = (view.bi, view.bj, view.bk);
+        let (fi, fj, fk) = factors(classify(i, j, k), i, j, k);
+        for (idx, f) in [(i, fi), (j, fj), (k, fk)] {
+            if f == 0.0 {
+                continue;
+            }
+            let s = ctx.slots[idx];
+            self.slot_contribs[s] -= 1;
+            if self.slot_contribs[s] == 0 {
+                for &li in &meta.slot_links[s] {
+                    let li = li as usize;
+                    self.p3_waits[li] -= 1;
+                    if self.p3_waits[li] == 0 {
+                        self.send_reduce(comm, ctx, li)?;
+                    }
+                }
+            }
+        }
+        self.blocks_left -= 1;
+        Ok(())
+    }
+
+    /// Stream the phase-3 reduce message of link `li`: my partials of the
+    /// destination's portions, packed in the phased segment order.
+    fn send_reduce(&mut self, comm: &mut Comm, ctx: &PipeCtx, li: usize) -> Result<()> {
+        let meta = self.meta;
+        let link = &meta.links[li];
+        debug_assert_eq!(self.p3_waits[li], 0);
+        self.p3_waits[li] = u32::MAX; // sent sentinel
+        self.payload.clear();
+        for &i in &link.row_blocks {
+            let s = ctx.slots[i];
+            let rg = ctx.part.portion(i, link.peer, ctx.b);
+            self.payload.extend_from_slice(
+                &self.ybuf[(s * ctx.b + rg.start) * ctx.r..(s * ctx.b + rg.end) * ctx.r],
+            );
+        }
+        if link.pad_words != 0 {
+            debug_assert!(self.payload.len() <= link.pad_words * ctx.r);
+            self.payload.resize(link.pad_words * ctx.r, 0.0);
+        }
+        comm.isend(link.peer, TAG_REDUCE, &self.payload)
+    }
+}
+
+/// ybuf[slot panel] += f · c over one contiguous (b, r) panel (vectorized
+/// lane helper; bitwise identical to the scalar loop it replaced).
 fn axpy_panel(ybuf: &mut [f32], slot: usize, panel: usize, f: f32, c: &[f32]) {
     if f == 0.0 {
         return;
     }
-    let dst = &mut ybuf[slot * panel..(slot + 1) * panel];
-    for (o, v) in dst.iter_mut().zip(c) {
-        *o += f * v;
-    }
+    lanes_axpy(&mut ybuf[slot * panel..(slot + 1) * panel], f, c);
+}
+
+/// Reusable buffers for the phased [`exchange`] path: one payload staging
+/// buffer (cleared and re-packed per message, sent through the pooled
+/// [`Comm::isend`]) and one receive scratch buffer (filled by
+/// [`Comm::recv_into`], unpacked from borrowed sub-slices). Hoisted to the
+/// caller so both vector phases share them — after warm-up the phased path
+/// performs zero per-message heap allocations, like the overlap pipeline.
+#[derive(Default)]
+struct ExchangeBufs {
+    payload: Vec<f32>,
+    scratch: Vec<f32>,
 }
 
 /// Execute one vector-exchange phase under the chosen comm mode, with
 /// `r` words per vector coordinate (r-deep column packing; r = 1 is the
 /// paper's single-vector accounting).
 ///
-/// `pack(i, to)` produces the payload segment for shared row block `i`
-/// destined to processor `to`; `unpack(i, from, data, state)` consumes a
-/// received segment. Payload layout: segments concatenated in the sorted
-/// order of the transfer's shared row blocks, each segment an interleaved
-/// (portion_len, r) panel.
+/// `pack(i, to, state, out)` appends the payload segment for shared row
+/// block `i` destined to processor `to` onto `out`; `unpack(i, from, data,
+/// state)` consumes a received segment borrowed from the receive scratch —
+/// no per-segment allocation on either side. Payload layout: segments
+/// concatenated in the sorted order of the transfer's shared row blocks,
+/// each segment an interleaved (portion_len, r) panel.
 #[allow(clippy::too_many_arguments)]
 fn exchange<S>(
     comm: &mut Comm,
@@ -718,11 +1296,20 @@ fn exchange<S>(
     r: usize,
     mode: CommMode,
     phase: u64,
-    mut pack: impl FnMut(usize, usize, &S) -> Vec<f32>,
-    mut unpack: impl FnMut(usize, usize, Vec<f32>, &mut S),
+    mut pack: impl FnMut(usize, usize, &S, &mut Vec<f32>),
+    mut unpack: impl FnMut(usize, usize, &[f32], &mut S),
     state: &mut S,
+    bufs: &mut ExchangeBufs,
 ) -> Result<()> {
     let me = comm.rank;
+    // phase 0 payload: sender's portion; phase 1: receiver's portion
+    let seg_words = |i: usize, from: usize| {
+        r * if phase == 0 {
+            part.portion(i, from, b).len()
+        } else {
+            part.portion(i, me, b).len()
+        }
+    };
     match mode {
         CommMode::PointToPoint => {
             for (si, step) in sched.steps.iter().enumerate() {
@@ -731,11 +1318,11 @@ fn exchange<S>(
                 for &xi in step {
                     let xf = &sched.xfers[xi];
                     if xf.from == me {
-                        let mut payload = Vec::new();
+                        bufs.payload.clear();
                         for &i in &xf.row_blocks {
-                            payload.extend(pack(i, xf.to, state));
+                            pack(i, xf.to, state, &mut bufs.payload);
                         }
-                        comm.send(xf.to, tag, payload)?;
+                        comm.isend(xf.to, tag, &bufs.payload)?;
                     }
                     if xf.to == me {
                         incoming = Some(xi);
@@ -743,20 +1330,16 @@ fn exchange<S>(
                 }
                 if let Some(xi) = incoming {
                     let xf = &sched.xfers[xi];
-                    let data = comm.recv(xf.from, tag)?;
+                    let words: usize = xf.row_blocks.iter().map(|&i| seg_words(i, xf.from)).sum();
+                    bufs.scratch.resize(words, 0.0);
+                    comm.recv_into(xf.from, tag, &mut bufs.scratch[..words])?;
                     let mut off = 0usize;
                     for &i in &xf.row_blocks {
-                        // phase 0 payload: sender's portion; phase 1: my portion
-                        let len = r * if phase == 0 {
-                            part.portion(i, xf.from, b).len()
-                        } else {
-                            part.portion(i, me, b).len()
-                        };
-                        let seg = data[off..off + len].to_vec();
+                        let len = seg_words(i, xf.from);
+                        unpack(i, xf.from, &bufs.scratch[off..off + len], state);
                         off += len;
-                        unpack(i, xf.from, seg, state);
                     }
-                    debug_assert_eq!(off, data.len());
+                    debug_assert_eq!(off, words);
                 }
                 comm.barrier();
             }
@@ -778,30 +1361,27 @@ fn exchange<S>(
                     .copied()
                     .filter(|i| part.r_p[to].contains(i))
                     .collect();
-                let mut payload = Vec::with_capacity(buf_words);
+                bufs.payload.clear();
                 for &i in &shared_out {
-                    payload.extend(pack(i, to, state));
+                    pack(i, to, state, &mut bufs.payload);
                 }
-                payload.resize(buf_words, 0.0);
-                comm.send(to, tag, payload)?;
+                bufs.payload.resize(buf_words, 0.0);
+                comm.isend(to, tag, &bufs.payload)?;
 
                 let shared_in: Vec<usize> = part.r_p[me]
                     .iter()
                     .copied()
                     .filter(|i| part.r_p[from].contains(i))
                     .collect();
-                let data = comm.recv(from, tag)?;
+                bufs.scratch.resize(buf_words, 0.0);
+                comm.recv_into(from, tag, &mut bufs.scratch[..buf_words])?;
                 let mut off = 0usize;
                 for &i in &shared_in {
-                    let len = r * if phase == 0 {
-                        part.portion(i, from, b).len()
-                    } else {
-                        part.portion(i, me, b).len()
-                    };
-                    let seg = data[off..off + len].to_vec();
+                    let len = seg_words(i, from);
+                    unpack(i, from, &bufs.scratch[off..off + len], state);
                     off += len;
-                    unpack(i, from, seg, state);
                 }
+                debug_assert!(off <= buf_words);
                 comm.barrier();
             }
         }
@@ -829,6 +1409,7 @@ pub fn run_comm_only_multi(
     let outs = simulator::run(part.p, |comm| {
         let me = comm.rank;
         let mut state = ();
+        let mut bufs = ExchangeBufs::default();
         for phase in 0..2u64 {
             exchange(
                 comm,
@@ -838,16 +1419,17 @@ pub fn run_comm_only_multi(
                 r,
                 mode,
                 phase,
-                |i, to, _state| {
+                |i, to, _state: &(), out: &mut Vec<f32>| {
                     let rg = if phase == 0 {
                         part.portion(i, me, b)
                     } else {
                         part.portion(i, to, b)
                     };
-                    vec![0.0f32; rg.len() * r]
+                    out.resize(out.len() + rg.len() * r, 0.0);
                 },
                 |_, _, _, _| {},
                 &mut state,
+                &mut bufs,
             )?;
         }
         Ok(comm.stats)
@@ -882,19 +1464,22 @@ mod tests {
     #[test]
     fn algorithm5_matches_oracle_q2_p2p() {
         let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
-        for batch in [false, true] {
-            for packed in [false, true] {
-                check_matches_oracle(
-                    &part,
-                    8,
-                    ExecOpts {
-                        mode: CommMode::PointToPoint,
-                        backend: Backend::Native,
-                        batch,
-                        packed,
-                    },
-                    7,
-                );
+        for overlap in [false, true] {
+            for batch in [false, true] {
+                for packed in [false, true] {
+                    check_matches_oracle(
+                        &part,
+                        8,
+                        ExecOpts {
+                            mode: CommMode::PointToPoint,
+                            backend: Backend::Native,
+                            batch,
+                            packed,
+                            overlap,
+                        },
+                        7,
+                    );
+                }
             }
         }
     }
@@ -939,10 +1524,18 @@ mod tests {
             let xs: Vec<Vec<f32>> = (0..r).map(|_| rng.normal_vec(n)).collect();
             for batch in [false, true] {
                 for packed in [false, true] {
+                    // overlap: false pins the phased batched/unbatched
+                    // dispatch paths; overlap equivalence is property P8.
                     let plan = SttsvPlan::new(
                         &tensor,
                         &part,
-                        ExecOpts { mode, backend: Backend::Native, batch, packed },
+                        ExecOpts {
+                            mode,
+                            backend: Backend::Native,
+                            batch,
+                            packed,
+                            overlap: false,
+                        },
                     )
                     .unwrap();
                     let rep = plan.run_multi(&xs).unwrap();
@@ -1233,6 +1826,125 @@ mod tests {
             assert_eq!(a.stats.sent_words, d.stats.sent_words, "proc {p} words");
             assert_eq!(a.stats.sent_msgs, d.stats.sent_msgs, "proc {p} msgs");
             assert_eq!(a.ternary_mults, d.ternary_mults, "proc {p} mults");
+        }
+    }
+
+    #[test]
+    fn overlap_is_comm_cost_invariant_and_matches_phased() {
+        // Acceptance for §Perf P8: the pipeline may reorder every arrival
+        // and interleave compute with communication, but per-processor
+        // words AND messages must equal the phased path exactly, in both
+        // comm modes — the α-β-γ model cost is invariant — and the results
+        // agree within f32 reassociation tolerance. b = 7 exercises uneven
+        // portions.
+        for mode in [CommMode::PointToPoint, CommMode::AllToAll] {
+            let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+            let b = 7usize;
+            let n = b * part.m;
+            let tensor = SymTensor::random(n, 301);
+            let mut rng = Rng::new(302);
+            let x = rng.normal_vec(n);
+            let phased = SttsvPlan::new(
+                &tensor,
+                &part,
+                ExecOpts { mode, overlap: false, ..Default::default() },
+            )
+            .unwrap()
+            .run(&x)
+            .unwrap();
+            let overlap = SttsvPlan::new(
+                &tensor,
+                &part,
+                ExecOpts { mode, overlap: true, ..Default::default() },
+            )
+            .unwrap()
+            .run(&x)
+            .unwrap();
+            for p in 0..part.p {
+                let (a, o) = (&phased.per_proc[p].stats, &overlap.per_proc[p].stats);
+                assert_eq!(a, o, "{mode:?} proc {p} comm stats");
+                assert_eq!(
+                    phased.per_proc[p].ternary_mults, overlap.per_proc[p].ternary_mults,
+                    "{mode:?} proc {p} mults"
+                );
+            }
+            let scale = phased.y.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+            for i in 0..n {
+                assert!(
+                    (overlap.y[i] - phased.y[i]).abs() < 1e-4 * scale,
+                    "{mode:?} i={i}: overlap {} vs phased {}",
+                    overlap.y[i],
+                    phased.y[i]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn steady_state_runs_allocate_no_payload_buffers() {
+        // The plan lends per-processor buffer pools to every run: the first
+        // run warms them (one allocation per simultaneously-in-flight
+        // message), every later run must allocate NOTHING on the payload
+        // path — overlap and phased alike (§Perf P8 acceptance).
+        let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+        let b = 6usize;
+        let n = b * part.m;
+        let tensor = SymTensor::random(n, 303);
+        let mut rng = Rng::new(304);
+        let x = rng.normal_vec(n);
+        for overlap in [true, false] {
+            let plan = SttsvPlan::new(
+                &tensor,
+                &part,
+                ExecOpts { overlap, ..Default::default() },
+            )
+            .unwrap();
+            let first = plan.run(&x).unwrap();
+            assert!(first.fresh_payload_allocs > 0, "cold pools must allocate");
+            for round in 0..2 {
+                let rep = plan.run(&x).unwrap();
+                assert_eq!(
+                    rep.fresh_payload_allocs, 0,
+                    "overlap={overlap} round {round}: steady-state run allocated"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn overlap_matches_phased_for_multi_rhs_and_matches_dry_run() {
+        // run_multi through the pipeline: column-exact within tolerance,
+        // comm equal to the phased dry-run prediction (words r×, messages
+        // r-independent).
+        let part = TetraPartition::from_steiner(&sqs8()).unwrap();
+        let b = 5usize;
+        let n = b * part.m;
+        let tensor = SymTensor::random(n, 305);
+        let mut rng = Rng::new(306);
+        let r = 3usize;
+        let xs: Vec<Vec<f32>> = (0..r).map(|_| rng.normal_vec(n)).collect();
+        let plan = SttsvPlan::new(&tensor, &part, ExecOpts::default()).unwrap();
+        assert!(plan.opts.overlap, "overlap must be the default");
+        let rep = plan.run_multi(&xs).unwrap();
+        for (l, x) in xs.iter().enumerate() {
+            let want = tensor.sttsv(x);
+            let scale = want.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+            for i in 0..n {
+                assert!(
+                    (rep.ys[l][i] - want[i]).abs() < 3e-3 * scale,
+                    "col {l} i={i}: {} vs {}",
+                    rep.ys[l][i],
+                    want[i]
+                );
+            }
+        }
+        let dry = run_comm_only(&part, b, CommMode::PointToPoint).unwrap();
+        for p in 0..part.p {
+            let s = &rep.per_proc[p].stats;
+            assert_eq!(s.sent_words, r as u64 * dry[p].sent_words, "proc {p} words");
+            assert_eq!(s.sent_msgs, dry[p].sent_msgs, "proc {p} msgs");
+            assert_eq!(s.recv_words, r as u64 * dry[p].recv_words, "proc {p} recv words");
+            assert_eq!(s.recv_msgs, dry[p].recv_msgs, "proc {p} recv msgs");
         }
     }
 }

@@ -40,7 +40,7 @@ fn main() {
                 "usage: sttsv <tables|schedule|run|power-method|cp-gradient|mttkrp\
                  |sweep|verify|bounds> [--q N] [--b N] [--mode p2p|a2a] \
                  [--backend native|pjrt] [--iters N] [--sqs8] [--no-batch] \
-                 [--packed|--no-packed]"
+                 [--packed|--no-packed] [--overlap|--no-overlap]"
             );
             std::process::exit(2);
         }
@@ -147,6 +147,12 @@ fn exec_opts(args: &Args) -> Result<ExecOpts> {
     if args.flag("no-packed") {
         opts.packed = false;
     }
+    if args.flag("overlap") {
+        opts.overlap = true;
+    }
+    if args.flag("no-overlap") {
+        opts.overlap = false;
+    }
     Ok(opts)
 }
 
@@ -177,6 +183,11 @@ fn cmd_run(args: &Args) -> Result<()> {
         rep.max_sent_words(),
         rep.max_recv_words(),
         rep.steps_per_phase
+    );
+    println!(
+        "runtime: peak in-flight payload {} words, {} fresh payload allocs \
+         (0 on a warm plan)",
+        rep.peak_inflight_words, rep.fresh_payload_allocs
     );
     println!(
         "lower bound (Thm 1): {} w; algorithm closed form: {} w",

@@ -21,6 +21,7 @@ pub use native::{
     block_contract_packed_multi, dense_sttsv_native, diag_block_contract_packed,
     diag_block_contract_packed_multi, packed_ternary_mults,
 };
+pub(crate) use native::lanes_axpy;
 
 use crate::tensor::PackedBlockView;
 use anyhow::{anyhow, bail, ensure, Context, Result};

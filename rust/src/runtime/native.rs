@@ -56,6 +56,208 @@ pub fn block_contract_native(
     (ci, cj, ck)
 }
 
+/// Lane width of the elementwise panel helpers below: wide enough for one
+/// AVX2 f32 vector (or two NEON ones); the remainder runs scalar.
+const LANES: usize = 8;
+
+/// Elementwise helpers for the multi-RHS inner `l`-loops (and the
+/// coordinator's `axpy_panel`): each runs over `chunks_exact(LANES)` with a
+/// scalar remainder so LLVM emits full-width SIMD regardless of how `r`
+/// aligns, while performing exactly the same per-lane arithmetic (same
+/// association, no FMA contraction) as the scalar loops they replaced —
+/// results are **bitwise identical**, pinned by the kernel tests
+/// (`multi_rhs_matches_column_by_column`, `multi_rhs_r1_is_the_single_kernel`,
+/// `packed_offdiag_is_bitwise_the_dense_kernel`).
+///
+/// dst[l] += s · a[l]
+#[inline]
+pub(crate) fn lanes_axpy(dst: &mut [f32], s: f32, a: &[f32]) {
+    debug_assert_eq!(dst.len(), a.len());
+    let mut dc = dst.chunks_exact_mut(LANES);
+    let mut ac = a.chunks_exact(LANES);
+    for (d, a) in dc.by_ref().zip(ac.by_ref()) {
+        for (o, x) in d.iter_mut().zip(a) {
+            *o += s * x;
+        }
+    }
+    for (o, x) in dc.into_remainder().iter_mut().zip(ac.remainder()) {
+        *o += s * x;
+    }
+}
+
+/// dst[l] = a[l] · b[l]
+#[inline]
+fn lanes_set_mul(dst: &mut [f32], a: &[f32], b: &[f32]) {
+    debug_assert!(dst.len() == a.len() && dst.len() == b.len());
+    let mut dc = dst.chunks_exact_mut(LANES);
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for ((d, a), b) in dc.by_ref().zip(ac.by_ref()).zip(bc.by_ref()) {
+        for ((o, x), y) in d.iter_mut().zip(a).zip(b) {
+            *o = x * y;
+        }
+    }
+    for ((o, x), y) in dc
+        .into_remainder()
+        .iter_mut()
+        .zip(ac.remainder())
+        .zip(bc.remainder())
+    {
+        *o = x * y;
+    }
+}
+
+/// dst[l] = (s · a[l]) · b[l]
+#[inline]
+fn lanes_set_mul_s(dst: &mut [f32], s: f32, a: &[f32], b: &[f32]) {
+    debug_assert!(dst.len() == a.len() && dst.len() == b.len());
+    let mut dc = dst.chunks_exact_mut(LANES);
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for ((d, a), b) in dc.by_ref().zip(ac.by_ref()).zip(bc.by_ref()) {
+        for ((o, x), y) in d.iter_mut().zip(a).zip(b) {
+            *o = s * x * y;
+        }
+    }
+    for ((o, x), y) in dc
+        .into_remainder()
+        .iter_mut()
+        .zip(ac.remainder())
+        .zip(bc.remainder())
+    {
+        *o = s * x * y;
+    }
+}
+
+/// dst[l] += a[l] · b[l]
+#[inline]
+fn lanes_mul_add(dst: &mut [f32], a: &[f32], b: &[f32]) {
+    debug_assert!(dst.len() == a.len() && dst.len() == b.len());
+    let mut dc = dst.chunks_exact_mut(LANES);
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for ((d, a), b) in dc.by_ref().zip(ac.by_ref()).zip(bc.by_ref()) {
+        for ((o, x), y) in d.iter_mut().zip(a).zip(b) {
+            *o += x * y;
+        }
+    }
+    for ((o, x), y) in dc
+        .into_remainder()
+        .iter_mut()
+        .zip(ac.remainder())
+        .zip(bc.remainder())
+    {
+        *o += x * y;
+    }
+}
+
+/// dst[l] += (s · a[l]) · b[l]
+#[inline]
+fn lanes_mul_add_s(dst: &mut [f32], s: f32, a: &[f32], b: &[f32]) {
+    debug_assert!(dst.len() == a.len() && dst.len() == b.len());
+    let mut dc = dst.chunks_exact_mut(LANES);
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for ((d, a), b) in dc.by_ref().zip(ac.by_ref()).zip(bc.by_ref()) {
+        for ((o, x), y) in d.iter_mut().zip(a).zip(b) {
+            *o += s * x * y;
+        }
+    }
+    for ((o, x), y) in dc
+        .into_remainder()
+        .iter_mut()
+        .zip(ac.remainder())
+        .zip(bc.remainder())
+    {
+        *o += s * x * y;
+    }
+}
+
+/// dst[l] += (s · a[l]) · b[l] + (t · c[l]) · d[l] — the fused two-term
+/// update of the diagonal kernels; the single composite addition per lane
+/// is preserved (splitting it would change the rounding).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+fn lanes_mul_add2_s(dst: &mut [f32], s: f32, a: &[f32], b: &[f32], t: f32, c: &[f32], d: &[f32]) {
+    debug_assert!(dst.len() == a.len() && dst.len() == b.len());
+    debug_assert!(dst.len() == c.len() && dst.len() == d.len());
+    let mut oc = dst.chunks_exact_mut(LANES);
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    let mut cc = c.chunks_exact(LANES);
+    let mut ec = d.chunks_exact(LANES);
+    for ((((o, a), b), c), e) in oc
+        .by_ref()
+        .zip(ac.by_ref())
+        .zip(bc.by_ref())
+        .zip(cc.by_ref())
+        .zip(ec.by_ref())
+    {
+        for ((((o, x), y), z), w) in o.iter_mut().zip(a).zip(b).zip(c).zip(e) {
+            *o += s * x * y + t * z * w;
+        }
+    }
+    for ((((o, x), y), z), w) in oc
+        .into_remainder()
+        .iter_mut()
+        .zip(ac.remainder())
+        .zip(bc.remainder())
+        .zip(cc.remainder())
+        .zip(ec.remainder())
+    {
+        *o += s * x * y + t * z * w;
+    }
+}
+
+/// dst[l] += a[l] · b[l] + (t · c[l]) · d[l]
+#[inline]
+fn lanes_mul_add2(dst: &mut [f32], a: &[f32], b: &[f32], t: f32, c: &[f32], d: &[f32]) {
+    debug_assert!(dst.len() == a.len() && dst.len() == b.len());
+    debug_assert!(dst.len() == c.len() && dst.len() == d.len());
+    let mut oc = dst.chunks_exact_mut(LANES);
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    let mut cc = c.chunks_exact(LANES);
+    let mut ec = d.chunks_exact(LANES);
+    for ((((o, a), b), c), e) in oc
+        .by_ref()
+        .zip(ac.by_ref())
+        .zip(bc.by_ref())
+        .zip(cc.by_ref())
+        .zip(ec.by_ref())
+    {
+        for ((((o, x), y), z), w) in o.iter_mut().zip(a).zip(b).zip(c).zip(e) {
+            *o += x * y + t * z * w;
+        }
+    }
+    for ((((o, x), y), z), w) in oc
+        .into_remainder()
+        .iter_mut()
+        .zip(ac.remainder())
+        .zip(bc.remainder())
+        .zip(cc.remainder())
+        .zip(ec.remainder())
+    {
+        *o += x * y + t * z * w;
+    }
+}
+
+/// dst[l] += a[l]
+#[inline]
+fn lanes_add(dst: &mut [f32], a: &[f32]) {
+    debug_assert_eq!(dst.len(), a.len());
+    let mut dc = dst.chunks_exact_mut(LANES);
+    let mut ac = a.chunks_exact(LANES);
+    for (d, a) in dc.by_ref().zip(ac.by_ref()) {
+        for (o, x) in d.iter_mut().zip(a) {
+            *o += x;
+        }
+    }
+    for (o, x) in dc.into_remainder().iter_mut().zip(ac.remainder()) {
+        *o += x;
+    }
+}
+
 /// Multi-RHS fused ternary block contraction: one sweep of the b³ block
 /// serves r right-hand-side columns.
 ///
@@ -98,36 +300,20 @@ pub fn block_contract_multi(
         for y in 0..b {
             let row = &a[(x * b + y) * b..(x * b + y + 1) * b];
             let vy = &vs[y * r..(y + 1) * r];
-            for l in 0..r {
-                uv[l] = ux[l] * vy[l];
-            }
+            lanes_set_mul(&mut uv, ux, vy);
             m.fill(0.0);
             // Same two-sweep structure as the single-RHS kernel (§Perf P2),
             // with the scalar A element broadcast across the r lanes.
             for z in 0..b {
-                let az = row[z];
-                let wz = &ws[z * r..(z + 1) * r];
-                for l in 0..r {
-                    m[l] += az * wz[l];
-                }
+                lanes_axpy(&mut m, row[z], &ws[z * r..(z + 1) * r]);
             }
             for z in 0..b {
-                let az = row[z];
-                let cz = &mut ck[z * r..(z + 1) * r];
-                for l in 0..r {
-                    cz[l] += az * uv[l];
-                }
+                lanes_axpy(&mut ck[z * r..(z + 1) * r], row[z], &uv);
             }
-            let cjy = &mut cj[y * r..(y + 1) * r];
-            for l in 0..r {
-                ci_x[l] += m[l] * vy[l];
-                cjy[l] += m[l] * ux[l];
-            }
+            lanes_mul_add(&mut ci_x, &m, vy);
+            lanes_mul_add(&mut cj[y * r..(y + 1) * r], &m, ux);
         }
-        let cix = &mut ci[x * r..(x + 1) * r];
-        for l in 0..r {
-            cix[l] += ci_x[l];
-        }
+        lanes_add(&mut ci[x * r..(x + 1) * r], &ci_x);
     }
     (ci, cj, ck)
 }
@@ -214,34 +400,18 @@ pub fn block_contract_packed_multi(
             let base = view.row_base(x, y);
             let row = &t[base..base + b];
             let vy = &vs[y * r..(y + 1) * r];
-            for l in 0..r {
-                uv[l] = ux[l] * vy[l];
-            }
+            lanes_set_mul(&mut uv, ux, vy);
             m.fill(0.0);
             for z in 0..b {
-                let az = row[z];
-                let wz = &ws[z * r..(z + 1) * r];
-                for l in 0..r {
-                    m[l] += az * wz[l];
-                }
+                lanes_axpy(&mut m, row[z], &ws[z * r..(z + 1) * r]);
             }
             for z in 0..b {
-                let az = row[z];
-                let cz = &mut ck[z * r..(z + 1) * r];
-                for l in 0..r {
-                    cz[l] += az * uv[l];
-                }
+                lanes_axpy(&mut ck[z * r..(z + 1) * r], row[z], &uv);
             }
-            let cjy = &mut cj[y * r..(y + 1) * r];
-            for l in 0..r {
-                ci_x[l] += m[l] * vy[l];
-                cjy[l] += m[l] * ux[l];
-            }
+            lanes_mul_add(&mut ci_x, &m, vy);
+            lanes_mul_add(&mut cj[y * r..(y + 1) * r], &m, ux);
         }
-        let cix = &mut ci[x * r..(x + 1) * r];
-        for l in 0..r {
-            cix[l] += ci_x[l];
-        }
+        lanes_add(&mut ci[x * r..(x + 1) * r], &ci_x);
     }
     (ci, cj, ck)
 }
@@ -413,48 +583,24 @@ pub fn diag_block_contract_packed_multi(
                 let vb = &vs[be * r..(be + 1) * r];
                 m.fill(0.0);
                 for g in 0..b {
-                    let ag = row[g];
-                    let wg = &ws[g * r..(g + 1) * r];
-                    for l in 0..r {
-                        m[l] += ag * wg[l];
-                    }
+                    lanes_axpy(&mut m, row[g], &ws[g * r..(g + 1) * r]);
                 }
                 if a > be {
-                    for l in 0..r {
-                        uv[l] = 2.0 * ua[l] * vb[l];
-                    }
+                    lanes_set_mul_s(&mut uv, 2.0, ua, vb);
                     for g in 0..b {
-                        let ag = row[g];
-                        let cg = &mut ck[g * r..(g + 1) * r];
-                        for l in 0..r {
-                            cg[l] += ag * uv[l];
-                        }
+                        lanes_axpy(&mut ck[g * r..(g + 1) * r], row[g], &uv);
                     }
-                    let cib = &mut ci[be * r..(be + 1) * r];
-                    for l in 0..r {
-                        ci_a[l] += m[l] * vb[l];
-                        cib[l] += m[l] * ua[l];
-                    }
+                    lanes_mul_add(&mut ci_a, &m, vb);
+                    lanes_mul_add(&mut ci[be * r..(be + 1) * r], &m, ua);
                 } else {
-                    for l in 0..r {
-                        uv[l] = ua[l] * vb[l];
-                    }
+                    lanes_set_mul(&mut uv, ua, vb);
                     for g in 0..b {
-                        let ag = row[g];
-                        let cg = &mut ck[g * r..(g + 1) * r];
-                        for l in 0..r {
-                            cg[l] += ag * uv[l];
-                        }
+                        lanes_axpy(&mut ck[g * r..(g + 1) * r], row[g], &uv);
                     }
-                    for l in 0..r {
-                        ci_a[l] += m[l] * ua[l];
-                    }
+                    lanes_mul_add(&mut ci_a, &m, ua);
                 }
             }
-            let cia = &mut ci[a * r..(a + 1) * r];
-            for l in 0..r {
-                cia[l] += ci_a[l];
-            }
+            lanes_add(&mut ci[a * r..(a + 1) * r], &ci_a);
         }
     } else if view.bi > view.bj && view.bj == view.bk {
         for a in 0..b {
@@ -466,34 +612,18 @@ pub fn diag_block_contract_packed_multi(
                 let vb = &vs[be * r..(be + 1) * r];
                 let wb = &ws[be * r..(be + 1) * r];
                 let abb = row[be];
-                for l in 0..r {
-                    uv[l] = ua[l] * vb[l];
-                }
+                lanes_set_mul(&mut uv, ua, vb);
                 m.fill(0.0);
                 for g in 0..be {
-                    let ag = row[g];
-                    let wg = &ws[g * r..(g + 1) * r];
-                    for l in 0..r {
-                        m[l] += ag * wg[l];
-                    }
+                    lanes_axpy(&mut m, row[g], &ws[g * r..(g + 1) * r]);
                 }
                 for g in 0..be {
-                    let ag = row[g];
-                    let cg = &mut cj[g * r..(g + 1) * r];
-                    for l in 0..r {
-                        cg[l] += ag * uv[l];
-                    }
+                    lanes_axpy(&mut cj[g * r..(g + 1) * r], row[g], &uv);
                 }
-                let cjb = &mut cj[be * r..(be + 1) * r];
-                for l in 0..r {
-                    ci_a[l] += 2.0 * m[l] * vb[l] + abb * vb[l] * wb[l];
-                    cjb[l] += m[l] * ua[l] + abb * ua[l] * wb[l];
-                }
+                lanes_mul_add2_s(&mut ci_a, 2.0, &m, vb, abb, vb, wb);
+                lanes_mul_add2(&mut cj[be * r..(be + 1) * r], &m, ua, abb, ua, wb);
             }
-            let cia = &mut ci[a * r..(a + 1) * r];
-            for l in 0..r {
-                cia[l] += ci_a[l];
-            }
+            lanes_add(&mut ci[a * r..(a + 1) * r], &ci_a);
         }
     } else {
         for a in 0..b {
@@ -507,58 +637,38 @@ pub fn diag_block_contract_packed_multi(
                 if a > be {
                     m.fill(0.0);
                     for g in 0..be {
-                        let ag = row[g];
-                        let wg = &ws[g * r..(g + 1) * r];
-                        for l in 0..r {
-                            m[l] += ag * wg[l];
-                        }
+                        lanes_axpy(&mut m, row[g], &ws[g * r..(g + 1) * r]);
                     }
-                    for l in 0..r {
-                        uv[l] = 2.0 * ua[l] * vb[l];
-                    }
+                    lanes_set_mul_s(&mut uv, 2.0, ua, vb);
                     for g in 0..be {
-                        let ag = row[g];
-                        let cg = &mut ci[g * r..(g + 1) * r];
-                        for l in 0..r {
-                            cg[l] += ag * uv[l];
-                        }
+                        lanes_axpy(&mut ci[g * r..(g + 1) * r], row[g], &uv);
                     }
                     let abb = row[be];
-                    let cib = &mut ci[be * r..(be + 1) * r];
-                    for l in 0..r {
-                        ci_a[l] += 2.0 * m[l] * vb[l] + abb * vb[l] * wb[l];
-                        cib[l] += 2.0 * m[l] * ua[l] + 2.0 * abb * ua[l] * wb[l];
-                    }
+                    lanes_mul_add2_s(&mut ci_a, 2.0, &m, vb, abb, vb, wb);
+                    lanes_mul_add2_s(
+                        &mut ci[be * r..(be + 1) * r],
+                        2.0,
+                        &m,
+                        ua,
+                        2.0 * abb,
+                        ua,
+                        wb,
+                    );
                 } else {
                     m.fill(0.0);
                     for g in 0..a {
-                        let ag = row[g];
-                        let wg = &ws[g * r..(g + 1) * r];
-                        for l in 0..r {
-                            m[l] += ag * wg[l];
-                        }
+                        lanes_axpy(&mut m, row[g], &ws[g * r..(g + 1) * r]);
                     }
-                    for l in 0..r {
-                        uv[l] = ua[l] * vb[l];
-                    }
+                    lanes_set_mul(&mut uv, ua, vb);
                     for g in 0..a {
-                        let ag = row[g];
-                        let cg = &mut ci[g * r..(g + 1) * r];
-                        for l in 0..r {
-                            cg[l] += ag * uv[l];
-                        }
+                        lanes_axpy(&mut ci[g * r..(g + 1) * r], row[g], &uv);
                     }
                     let aaa = row[a];
-                    for l in 0..r {
-                        ci_a[l] += 2.0 * m[l] * vb[l];
-                        ci_a[l] += aaa * vb[l] * wb[l];
-                    }
+                    lanes_mul_add_s(&mut ci_a, 2.0, &m, vb);
+                    lanes_mul_add_s(&mut ci_a, aaa, vb, wb);
                 }
             }
-            let cia = &mut ci[a * r..(a + 1) * r];
-            for l in 0..r {
-                cia[l] += ci_a[l];
-            }
+            lanes_add(&mut ci[a * r..(a + 1) * r], &ci_a);
         }
     }
     (ci, cj, ck)

@@ -11,11 +11,28 @@
 //! This simulator is the faithful substitute for a physical MPI cluster:
 //! the paper's claims are word counts per processor in an abstract model,
 //! and the simulator measures them exactly (see DESIGN.md §5).
+//!
+//! Two communication APIs share the counters (§Perf P8):
+//!
+//! * **Blocking** ([`Comm::send`] / [`Comm::recv`]) — the original stepped
+//!   API. Each message owns a freshly allocated `Vec<f32>`.
+//! * **Nonblocking, buffer-reusing** ([`Comm::isend`], [`Comm::try_recv`],
+//!   [`Comm::recv_any`], [`Comm::recv_into`]) — the MPI
+//!   `Isend`/`Iprobe`/`Recv`-into-registered-buffer shape. `isend` copies
+//!   the borrowed payload into a buffer drawn from a per-processor
+//!   [`BufPool`]; the receiver delivers straight into a caller slice and
+//!   adopts the in-flight buffer into its own pool (ownership migrates
+//!   with the message — since every protocol here sends and receives the
+//!   same number of messages per processor, pools stay balanced and the
+//!   steady state performs **zero per-message heap allocations**, with no
+//!   return-channel race against early worker teardown). Word/message
+//!   accounting is identical to the blocking API (asserted in tests).
 
 pub mod cost;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, ensure, Result};
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Barrier, Mutex};
 
 /// Per-processor communication counters.
@@ -36,6 +53,112 @@ impl CommStats {
     }
 }
 
+/// A pool of reusable payload buffers (one per processor). Buffers are
+/// drawn best-fit by [`Comm::isend`], travel with the packet, and are
+/// adopted into the *receiver's* pool on delivery (symmetric protocols
+/// keep the pools balanced); `fresh_allocs` counts every buffer
+/// allocation or capacity growth the pool had to perform — zero on a
+/// warmed-up pool. Lend pools across repeated [`run_ext`] calls (as
+/// `coordinator::SttsvPlan` does) to make iterative workloads
+/// allocation-free on the communication hot path.
+#[derive(Debug, Default)]
+pub struct BufPool {
+    bufs: Vec<Vec<f32>>,
+    fresh_allocs: u64,
+}
+
+impl BufPool {
+    pub fn new() -> Self {
+        BufPool::default()
+    }
+
+    /// Buffers currently parked in the pool.
+    pub fn len(&self) -> usize {
+        self.bufs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bufs.is_empty()
+    }
+
+    /// Total buffer allocations (or capacity growths) this pool has ever
+    /// had to perform.
+    pub fn fresh_allocs(&self) -> u64 {
+        self.fresh_allocs
+    }
+
+    fn take(&mut self, cap: usize) -> Vec<f32> {
+        // Best fit: the smallest pooled buffer whose capacity already
+        // covers `cap`. The full exchange protocols send and receive the
+        // same multiset of message sizes per processor per run, so a warm
+        // pool always holds an adequate buffer and the steady state is
+        // free of allocations AND growth reallocations; a too-small pick
+        // would reallocate inside the caller's extend, which is why growth
+        // is counted here — `fresh_allocs == 0` means zero payload heap
+        // activity, not just zero pool misses. Pools hold at most a few
+        // dozen buffers, so the scan is noise.
+        let mut best: Option<(usize, usize)> = None; // (index, capacity)
+        for (i, b) in self.bufs.iter().enumerate() {
+            let c = b.capacity();
+            if c >= cap {
+                match best {
+                    Some((_, bc)) if bc <= c => {}
+                    _ => best = Some((i, c)),
+                }
+            }
+        }
+        match best {
+            Some((i, _)) => self.bufs.swap_remove(i),
+            None => {
+                self.fresh_allocs += 1;
+                match self.bufs.pop() {
+                    Some(mut b) => {
+                        b.reserve(cap);
+                        b
+                    }
+                    None => Vec::with_capacity(cap),
+                }
+            }
+        }
+    }
+
+    fn put(&mut self, mut buf: Vec<f32>) {
+        buf.clear();
+        self.bufs.push(buf);
+    }
+}
+
+/// Cross-processor gauge of payload words currently in flight (sent, not
+/// yet delivered), with a high-water mark — the E12 "peak in-flight
+/// payload" metric. Overlap trades higher in-flight occupancy for the
+/// removed barriers; the model cost (words, messages) is unchanged.
+#[derive(Debug, Default)]
+struct InflightGauge {
+    current: AtomicU64,
+    peak: AtomicU64,
+}
+
+impl InflightGauge {
+    fn add(&self, words: u64) {
+        let now = self.current.fetch_add(words, Ordering::Relaxed) + words;
+        self.peak.fetch_max(now, Ordering::Relaxed);
+    }
+
+    fn sub(&self, words: u64) {
+        self.current.fetch_sub(words, Ordering::Relaxed);
+    }
+}
+
+/// Whole-run metrics reported by [`run_ext`].
+#[derive(Debug, Default, Clone, Copy)]
+pub struct RunMetrics {
+    /// Max total payload words simultaneously in flight at any instant.
+    pub peak_inflight_words: u64,
+    /// Payload buffers freshly allocated during this run (0 when every
+    /// `isend` was served from a warmed-up [`BufPool`]).
+    pub fresh_payload_allocs: u64,
+}
+
 struct Packet {
     from: usize,
     tag: u64,
@@ -50,35 +173,122 @@ pub struct Comm {
     pub p: usize,
     senders: Vec<mpsc::Sender<Packet>>,
     inbox: mpsc::Receiver<Packet>,
-    /// Out-of-order buffer: packets received while waiting for another tag.
-    stash: HashMap<(usize, u64), Vec<f32>>,
+    /// Out-of-order buffer: packets received while waiting for another key.
+    stash: HashMap<(usize, u64), Packet>,
+    pool: BufPool,
+    inflight: Arc<InflightGauge>,
     barrier: Arc<Barrier>,
     /// Word/message counters for this processor.
     pub stats: CommStats,
 }
 
 impl Comm {
-    /// Send `data` to processor `to` with a matching `tag`.
+    /// Send `data` to processor `to` with a matching `tag` (allocating
+    /// variant: the caller-built `Vec` becomes the in-flight buffer).
     pub fn send(&mut self, to: usize, tag: u64, data: Vec<f32>) -> Result<()> {
         debug_assert_ne!(to, self.rank, "self-send is a bug in the algorithm");
         self.stats.sent_words += data.len() as u64;
         self.stats.sent_msgs += 1;
+        self.inflight.add(data.len() as u64);
         self.senders[to]
-            .send(Packet {
-                from: self.rank,
-                tag,
-                data,
-            })
+            .send(Packet { from: self.rank, tag, data })
+            .map_err(|_| anyhow!("processor {to} hung up"))
+    }
+
+    /// Nonblocking send from a borrowed slice: the payload is copied into a
+    /// reusable buffer from this processor's pool (zero allocations once
+    /// the pool is warm) and handed to `to`'s mailbox. Never blocks;
+    /// identical word/message accounting to [`Comm::send`].
+    pub fn isend(&mut self, to: usize, tag: u64, data: &[f32]) -> Result<()> {
+        debug_assert_ne!(to, self.rank, "self-send is a bug in the algorithm");
+        let mut buf = self.pool.take(data.len());
+        buf.extend_from_slice(data);
+        self.stats.sent_words += data.len() as u64;
+        self.stats.sent_msgs += 1;
+        self.inflight.add(data.len() as u64);
+        self.senders[to]
+            .send(Packet { from: self.rank, tag, data: buf })
             .map_err(|_| anyhow!("processor {to} hung up"))
     }
 
     /// Blocking receive of the message from `from` with `tag` (out-of-order
-    /// deliveries are stashed).
+    /// deliveries are stashed). Allocating variant: ownership of the
+    /// payload moves to the caller, so the buffer leaves the pool system.
     pub fn recv(&mut self, from: usize, tag: u64) -> Result<Vec<f32>> {
-        if let Some(data) = self.stash.remove(&(from, tag)) {
-            self.stats.recv_words += data.len() as u64;
-            self.stats.recv_msgs += 1;
-            return Ok(data);
+        let pkt = self.wait_for(from, tag)?;
+        self.stats.recv_words += pkt.data.len() as u64;
+        self.stats.recv_msgs += 1;
+        self.inflight.sub(pkt.data.len() as u64);
+        Ok(pkt.data)
+    }
+
+    /// Blocking receive delivered straight into `dst`, which must be
+    /// exactly the message length; the in-flight buffer is adopted into
+    /// this processor's pool for reuse by later `isend`s. Word/message
+    /// accounting identical to [`Comm::recv`].
+    pub fn recv_into(&mut self, from: usize, tag: u64, dst: &mut [f32]) -> Result<()> {
+        let pkt = self.wait_for(from, tag)?;
+        ensure!(
+            pkt.data.len() == dst.len(),
+            "recv_into from {from} tag {tag}: payload {} words, caller expected {}",
+            pkt.data.len(),
+            dst.len()
+        );
+        dst.copy_from_slice(&pkt.data);
+        self.stats.recv_words += pkt.data.len() as u64;
+        self.stats.recv_msgs += 1;
+        self.inflight.sub(pkt.data.len() as u64);
+        self.pool.put(pkt.data);
+        Ok(())
+    }
+
+    /// Nonblocking poll: drains every packet currently in the mailbox into
+    /// the stash and reports the `(from, tag)` of one available message, or
+    /// `None` when nothing has arrived. Consume the reported message with
+    /// [`Comm::recv_into`] (or [`Comm::recv`]) before polling again.
+    pub fn try_recv(&mut self) -> Option<(usize, u64)> {
+        while let Ok(pkt) = self.inbox.try_recv() {
+            self.stash_insert(pkt);
+        }
+        self.stash.keys().next().copied()
+    }
+
+    /// Blocking wait for *any* message: returns the `(from, tag)` of an
+    /// available packet (stashed first, then the mailbox). Like
+    /// [`Comm::try_recv`], does not consume the message.
+    pub fn recv_any(&mut self) -> Result<(usize, u64)> {
+        if let Some(&key) = self.stash.keys().next() {
+            return Ok(key);
+        }
+        let pkt = self
+            .inbox
+            .recv()
+            .map_err(|_| anyhow!("inbox closed while waiting for any message"))?;
+        let key = (pkt.from, pkt.tag);
+        self.stash_insert(pkt);
+        Ok(key)
+    }
+
+    /// Stash an out-of-order packet. A `(from, tag)` key must identify at
+    /// most one in-flight message at a time (true for every protocol here:
+    /// the stepped exchanges use per-step tags, the overlap pipeline one
+    /// gather + one reduce per ordered pair); a duplicate would silently
+    /// replace the first payload, so it trips a debug assertion (running
+    /// in CI's release-with-debug-assertions job too).
+    fn stash_insert(&mut self, pkt: Packet) {
+        let key = (pkt.from, pkt.tag);
+        let prev = self.stash.insert(key, pkt);
+        debug_assert!(
+            prev.is_none(),
+            "duplicate in-flight message key (from {}, tag {})",
+            key.0,
+            key.1
+        );
+    }
+
+    fn wait_for(&mut self, from: usize, tag: u64) -> Result<Packet> {
+        if let Some(pkt) = self.stash.remove(&(from, tag)) {
+            return Ok(pkt);
         }
         loop {
             let pkt = self
@@ -86,11 +296,9 @@ impl Comm {
                 .recv()
                 .map_err(|_| anyhow!("inbox closed while waiting for {from}:{tag}"))?;
             if pkt.from == from && pkt.tag == tag {
-                self.stats.recv_words += pkt.data.len() as u64;
-                self.stats.recv_msgs += 1;
-                return Ok(pkt.data);
+                return Ok(pkt);
             }
-            self.stash.insert((pkt.from, pkt.tag), pkt.data);
+            self.stash_insert(pkt);
         }
     }
 
@@ -107,7 +315,27 @@ where
     R: Send,
     F: Fn(&mut Comm) -> Result<R> + Send + Sync,
 {
+    run_ext(p, None, body).map(|(out, _)| out)
+}
+
+/// [`run`] with run-level metrics, optionally lending per-processor
+/// [`BufPool`]s so payload buffers survive across runs (the steady-state
+/// zero-allocation path for iterative callers). `pools`, when provided,
+/// must have exactly `p` entries; each worker locks only its own slot, at
+/// entry and exit.
+pub fn run_ext<R, F>(
+    p: usize,
+    pools: Option<&[Mutex<BufPool>]>,
+    body: F,
+) -> Result<(Vec<R>, RunMetrics)>
+where
+    R: Send,
+    F: Fn(&mut Comm) -> Result<R> + Send + Sync,
+{
     assert!(p >= 1);
+    if let Some(ps) = pools {
+        assert_eq!(ps.len(), p, "one BufPool per processor");
+    }
     let mut senders = Vec::with_capacity(p);
     let mut inboxes = Vec::with_capacity(p);
     for _ in 0..p {
@@ -116,32 +344,54 @@ where
         inboxes.push(Some(rx));
     }
     let barrier = Arc::new(Barrier::new(p));
+    let inflight = Arc::new(InflightGauge::default());
+    let fresh = AtomicU64::new(0);
     let results: Vec<Mutex<Option<Result<R>>>> = (0..p).map(|_| Mutex::new(None)).collect();
     let body = &body;
+    let fresh_ref = &fresh;
 
     std::thread::scope(|scope| {
         for (rank, inbox) in inboxes.iter_mut().enumerate() {
             let senders = senders.clone();
             let barrier = barrier.clone();
+            let inflight = inflight.clone();
             let inbox = inbox.take().unwrap();
             let slot = &results[rank];
             scope.spawn(move || {
+                let pool = match pools {
+                    Some(ps) => std::mem::take(&mut *ps[rank].lock().unwrap()),
+                    None => BufPool::new(),
+                };
+                let fresh_before = pool.fresh_allocs;
                 let mut comm = Comm {
                     rank,
                     p,
                     senders,
                     inbox,
                     stash: HashMap::new(),
+                    pool,
+                    inflight,
                     barrier,
                     stats: CommStats::default(),
                 };
                 let out = body(&mut comm);
+                // Teardown: publish the per-run allocation delta, then MERGE
+                // the pool back into the lent slot (append, don't overwrite:
+                // if a second run on the same plan raced us and took an
+                // empty pool, overwriting would drop its buffers — merging
+                // keeps every buffer and the cumulative counter correct).
+                fresh_ref.fetch_add(comm.pool.fresh_allocs - fresh_before, Ordering::Relaxed);
+                if let Some(ps) = pools {
+                    let mut lent = ps[rank].lock().unwrap();
+                    lent.fresh_allocs += comm.pool.fresh_allocs;
+                    lent.bufs.append(&mut comm.pool.bufs);
+                }
                 *slot.lock().unwrap() = Some(out);
             });
         }
     });
 
-    results
+    let out: Result<Vec<R>> = results
         .into_iter()
         .enumerate()
         .map(|(rank, slot)| {
@@ -149,7 +399,12 @@ where
                 .unwrap()
                 .ok_or_else(|| anyhow!("processor {rank} produced no result"))?
         })
-        .collect()
+        .collect();
+    let metrics = RunMetrics {
+        peak_inflight_words: inflight.peak.load(Ordering::Relaxed),
+        fresh_payload_allocs: fresh.into_inner(),
+    };
+    Ok((out?, metrics))
 }
 
 #[cfg(test)]
@@ -236,5 +491,125 @@ mod tests {
         })
         .unwrap();
         assert!(out.iter().all(|&v| v == p as f32));
+    }
+
+    /// Comm-only ring exchange over the nonblocking API (no tensor, no
+    /// compute): every rank isends to both neighbors, then drains arrivals
+    /// with try_recv/recv_any + recv_into. Used to pin (a) stats parity
+    /// with the blocking API and (b) steady-state buffer reuse.
+    fn nonblocking_ring(p: usize, words: usize, pools: &[Mutex<BufPool>]) -> Vec<CommStats> {
+        let (out, _) = run_ext(p, Some(pools), |comm| {
+            let me = comm.rank;
+            let next = (me + 1) % comm.p;
+            let prev = (me + comm.p - 1) % comm.p;
+            let payload = vec![me as f32; words];
+            comm.isend(next, 1, &payload)?;
+            comm.isend(prev, 2, &payload)?;
+            let mut pending = 2;
+            let mut buf = vec![0.0f32; words];
+            while pending > 0 {
+                let (from, tag) = match comm.try_recv() {
+                    Some(key) => key,
+                    None => comm.recv_any()?,
+                };
+                comm.recv_into(from, tag, &mut buf)?;
+                assert!(buf.iter().all(|&v| v == from as f32));
+                pending -= 1;
+            }
+            Ok(comm.stats)
+        })
+        .unwrap();
+        out
+    }
+
+    #[test]
+    fn nonblocking_api_matches_blocking_stats() {
+        // Identical exchange pattern through both APIs: per-rank CommStats
+        // must be exactly equal (the §Perf P8 accounting invariant).
+        let (p, words) = (5usize, 17usize);
+        let blocking = run(p, |comm| {
+            let me = comm.rank;
+            let next = (me + 1) % comm.p;
+            let prev = (me + comm.p - 1) % comm.p;
+            comm.send(next, 1, vec![me as f32; words])?;
+            comm.send(prev, 2, vec![me as f32; words])?;
+            comm.recv(prev, 1)?;
+            comm.recv(next, 2)?;
+            Ok(comm.stats)
+        })
+        .unwrap();
+        let pools: Vec<Mutex<BufPool>> = (0..p).map(|_| Mutex::new(BufPool::new())).collect();
+        let nonblocking = nonblocking_ring(p, words, &pools);
+        assert_eq!(blocking, nonblocking);
+    }
+
+    #[test]
+    fn warm_pools_make_isend_allocation_free() {
+        // First run allocates one buffer per in-flight message; with the
+        // pools lent across runs, the second run allocates nothing.
+        let (p, words) = (4usize, 33usize);
+        let pools: Vec<Mutex<BufPool>> = (0..p).map(|_| Mutex::new(BufPool::new())).collect();
+        nonblocking_ring(p, words, &pools);
+        let before: u64 = pools.iter().map(|pl| pl.lock().unwrap().fresh_allocs()).sum();
+        assert!(before > 0, "cold run must have allocated buffers");
+        let (_, metrics) = run_ext(p, Some(&pools), |comm| {
+            let me = comm.rank;
+            let next = (me + 1) % comm.p;
+            let prev = (me + comm.p - 1) % comm.p;
+            let payload = vec![me as f32; words];
+            comm.isend(next, 1, &payload)?;
+            comm.isend(prev, 2, &payload)?;
+            let mut buf = vec![0.0f32; words];
+            comm.recv_into(prev, 1, &mut buf)?;
+            comm.recv_into(next, 2, &mut buf)?;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(
+            metrics.fresh_payload_allocs, 0,
+            "warmed pools must serve every isend without allocating"
+        );
+    }
+
+    #[test]
+    fn recv_into_rejects_wrong_length() {
+        let err = run(2, |comm| {
+            if comm.rank == 0 {
+                comm.isend(1, 0, &[1.0, 2.0, 3.0])?;
+                Ok(())
+            } else {
+                let mut buf = vec![0.0f32; 2]; // wrong: message has 3 words
+                comm.recv_into(0, 0, &mut buf)
+            }
+        });
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn inflight_peak_tracks_unconsumed_payloads() {
+        // Rank 0 sends 3 messages of 10 words before rank 1 consumes any:
+        // the peak in-flight gauge must reach at least 30 words.
+        let pools: Vec<Mutex<BufPool>> = (0..2).map(|_| Mutex::new(BufPool::new())).collect();
+        let (_, metrics) = run_ext(2, Some(&pools), |comm| {
+            if comm.rank == 0 {
+                for tag in 0..3u64 {
+                    comm.isend(1, tag, &[0.5f32; 10])?;
+                }
+                comm.barrier();
+            } else {
+                comm.barrier(); // all three are in flight now
+                let mut buf = vec![0.0f32; 10];
+                for tag in 0..3u64 {
+                    comm.recv_into(0, tag, &mut buf)?;
+                }
+            }
+            Ok(())
+        })
+        .unwrap();
+        assert!(
+            metrics.peak_inflight_words >= 30,
+            "peak {} < 30",
+            metrics.peak_inflight_words
+        );
     }
 }

@@ -145,6 +145,31 @@ impl SteinerSystem {
     }
 }
 
+/// The trivial Steiner (m, 3, 3) system: every 3-subset of points is its
+/// own block, so each 3-subset lies in exactly one block by construction.
+/// Exists for every m ≥ 3 with P = C(m, 3) blocks — it fills in processor
+/// counts the named families skip (e.g. P = 4 at m = 4, which the E12
+/// overlap bench sweeps; m = 5 reproduces the spherical q = 2 system).
+/// Not communication-efficient at scale (λ₁ = (m−1)(m−2)/2 processors
+/// share every row block), but the partition machinery is
+/// family-agnostic. Note the tetrahedral partition additionally needs
+/// m(m−1) divisible by C(m, 3) for the balanced diagonal assignment —
+/// m ∈ {3, 4, 5} qualify.
+pub fn trivial(m: usize) -> Result<SteinerSystem> {
+    if m < 3 {
+        bail!("trivial Steiner system needs m >= 3 points, got {m}");
+    }
+    let mut blocks = Vec::new();
+    for a in 0..m {
+        for b in a + 1..m {
+            for c in b + 1..m {
+                blocks.push(vec![a, b, c]);
+            }
+        }
+    }
+    SteinerSystem::new(m, 3, blocks)
+}
+
 /// The unique Steiner quadruple system S(3, 4, 8): points are the vectors of
 /// F₂³ (ids 0..8), blocks are the 14 affine planes {a, b, c, a⊕b⊕c}.
 ///
@@ -196,6 +221,34 @@ mod tests {
                 assert!(shared == 0 || shared == 2, "blocks {i},{j} share {shared}");
             }
         }
+    }
+
+    #[test]
+    fn trivial_systems_verify() {
+        for m in [3usize, 4, 5, 6] {
+            let s = trivial(m).unwrap();
+            assert_eq!(s.m, m);
+            assert_eq!(s.r, 3);
+            assert_eq!(s.num_blocks(), m * (m - 1) * (m - 2) / 6);
+            s.verify().unwrap();
+        }
+        assert!(trivial(2).is_err());
+    }
+
+    #[test]
+    fn trivial_m4_partitions_into_p4() {
+        // The P = 4 instance the E12 overlap bench uses: 4 processors, 3
+        // non-central diagonal blocks each, all 20 lower-tetra blocks
+        // covered once (partition verify), schedulable.
+        let part = crate::partition::TetraPartition::from_steiner(&trivial(4).unwrap()).unwrap();
+        assert_eq!((part.m, part.p), (4, 4));
+        part.verify().unwrap();
+        for p in 0..part.p {
+            assert_eq!(part.n_p[p].len(), 3);
+            assert_eq!(part.offdiag_blocks(p).len(), 1);
+        }
+        let sched = crate::schedule::CommSchedule::build(&part).unwrap();
+        sched.validate(&part).unwrap();
     }
 
     #[test]

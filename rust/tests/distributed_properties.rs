@@ -19,6 +19,12 @@
 //! P7: the ternary multiplications the packed kernels execute equal the
 //!     §7.1 logical accounting (`block_ternary_mults`) summed per
 //!     processor — the packed path never overshoots on diagonal blocks.
+//! P8: the overlapped pipeline matches the phased oracle within 1e-4 on
+//!     random partitions/modes for r ∈ {1, 4} AND its per-processor
+//!     CommStats (words and messages, sent and received) are *exactly*
+//!     equal to the phased path's in both PointToPoint and AllToAll — the
+//!     α-β-γ model cost is invariant under overlap; steady-state reruns
+//!     allocate zero payload buffers.
 
 use sttsv::coordinator::{run_comm_only, run_sttsv_opts, CommMode, ExecOpts, SttsvPlan};
 use sttsv::partition::{classify, BlockKind, TetraPartition};
@@ -54,10 +60,11 @@ fn p1_distributed_equals_sequential_oracle() {
             };
             let batch = rng.below(2) == 0;
             let packed = rng.below(2) == 0;
+            let overlap = rng.below(2) == 0;
             let seed = rng.next_u64();
-            (part_idx, b, mode, batch, packed, seed)
+            (part_idx, b, mode, batch, packed, overlap, seed)
         },
-        |&(part_idx, b, mode, batch, packed, seed)| {
+        |&(part_idx, b, mode, batch, packed, overlap, seed)| {
             let part = &pool[part_idx];
             let n = b * part.m;
             let tensor = SymTensor::random(n, seed);
@@ -68,7 +75,7 @@ fn p1_distributed_equals_sequential_oracle() {
                 &tensor,
                 &x,
                 part,
-                ExecOpts { mode, backend: Backend::Native, batch, packed },
+                ExecOpts { mode, backend: Backend::Native, batch, packed, overlap },
             )
             .map_err(|e| e.to_string())?;
             let scale = want.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
@@ -208,10 +215,11 @@ fn p5_run_multi_equals_r_independent_oracles() {
             };
             let batch = rng.below(2) == 0;
             let packed = rng.below(2) == 0;
+            let overlap = rng.below(2) == 0;
             let seed = rng.next_u64();
-            (part_idx, b, r, mode, batch, packed, seed)
+            (part_idx, b, r, mode, batch, packed, overlap, seed)
         },
-        |&(part_idx, b, r, mode, batch, packed, seed)| {
+        |&(part_idx, b, r, mode, batch, packed, overlap, seed)| {
             let part = &pool[part_idx];
             let n = b * part.m;
             let tensor = SymTensor::random(n, seed);
@@ -220,7 +228,7 @@ fn p5_run_multi_equals_r_independent_oracles() {
             let plan = SttsvPlan::new(
                 &tensor,
                 part,
-                ExecOpts { mode, backend: Backend::Native, batch, packed },
+                ExecOpts { mode, backend: Backend::Native, batch, packed, overlap },
             )
             .map_err(|e| e.to_string())?;
             let rep = plan.run_multi(&xs).map_err(|e| e.to_string())?;
@@ -281,10 +289,11 @@ fn p6_packed_path_matches_dense_extract_on_random_partitions() {
                 CommMode::AllToAll
             };
             let batch = rng.below(2) == 0;
+            let overlap = rng.below(2) == 0;
             let seed = rng.next_u64();
-            (part_idx, b, r, mode, batch, seed)
+            (part_idx, b, r, mode, batch, overlap, seed)
         },
-        |&(part_idx, b, r, mode, batch, seed)| {
+        |&(part_idx, b, r, mode, batch, overlap, seed)| {
             let part = &pool[part_idx];
             let n = b * part.m;
             let tensor = SymTensor::random(n, seed);
@@ -293,7 +302,7 @@ fn p6_packed_path_matches_dense_extract_on_random_partitions() {
             let packed_plan = SttsvPlan::new(
                 &tensor,
                 part,
-                ExecOpts { mode, backend: Backend::Native, batch, packed: true },
+                ExecOpts { mode, backend: Backend::Native, batch, packed: true, overlap },
             )
             .map_err(|e| e.to_string())?;
             if packed_plan.resident_tensor_words() != 0 {
@@ -305,7 +314,7 @@ fn p6_packed_path_matches_dense_extract_on_random_partitions() {
             let dense_plan = SttsvPlan::new(
                 &tensor,
                 part,
-                ExecOpts { mode, backend: Backend::Native, batch, packed: false },
+                ExecOpts { mode, backend: Backend::Native, batch, packed: false, overlap },
             )
             .map_err(|e| e.to_string())?;
             let yp = packed_plan.run_multi(&xs).map_err(|e| e.to_string())?;
@@ -375,5 +384,145 @@ fn p7_packed_executed_mults_equal_logical_accounting_per_proc() {
                 }
             }
         }
+    }
+}
+
+#[test]
+fn p8_overlap_matches_phased_and_comm_cost_is_invariant() {
+    // The overlapped pipeline may reorder arrivals and interleave compute
+    // with communication arbitrarily, but it must (a) agree with the
+    // phased oracle within 1e-4 column-by-column for r ∈ {1, 4}, (b)
+    // produce EXACTLY equal per-processor CommStats — all four counters —
+    // in both PointToPoint and AllToAll, and (c) allocate zero payload
+    // buffers once its plan's pools are warm.
+    let pool = partition_pool();
+    check(
+        "overlap == phased + exact comm",
+        0x0E12,
+        10,
+        |rng: &mut Rng| {
+            let part_idx = rng.below(pool.len());
+            let b = 2 + rng.below(6); // 2..=7, including non-divisible-by-λ₁
+            let r = [1usize, 4][rng.below(2)];
+            let mode = if rng.below(2) == 0 {
+                CommMode::PointToPoint
+            } else {
+                CommMode::AllToAll
+            };
+            let seed = rng.next_u64();
+            (part_idx, b, r, mode, seed)
+        },
+        |&(part_idx, b, r, mode, seed)| {
+            let part = &pool[part_idx];
+            let n = b * part.m;
+            let tensor = SymTensor::random(n, seed);
+            let mut rng = Rng::new(seed ^ 0xE12);
+            let xs: Vec<Vec<f32>> = (0..r).map(|_| rng.normal_vec(n)).collect();
+            let phased_plan = SttsvPlan::new(
+                &tensor,
+                part,
+                ExecOpts { mode, overlap: false, ..Default::default() },
+            )
+            .map_err(|e| e.to_string())?;
+            let overlap_plan = SttsvPlan::new(
+                &tensor,
+                part,
+                ExecOpts { mode, overlap: true, ..Default::default() },
+            )
+            .map_err(|e| e.to_string())?;
+            let ph = phased_plan.run_multi(&xs).map_err(|e| e.to_string())?;
+            let ov = overlap_plan.run_multi(&xs).map_err(|e| e.to_string())?;
+            for l in 0..r {
+                let scale = ph.ys[l].iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+                for i in 0..n {
+                    if (ov.ys[l][i] - ph.ys[l][i]).abs() > 1e-4 * scale {
+                        return Err(format!(
+                            "col {l} i={i}: overlap {} vs phased {} (scale {scale})",
+                            ov.ys[l][i], ph.ys[l][i]
+                        ));
+                    }
+                }
+            }
+            for p in 0..part.p {
+                let (a, o) = (&ph.per_proc[p].stats, &ov.per_proc[p].stats);
+                if a != o {
+                    return Err(format!(
+                        "proc {p}: phased {a:?} != overlap {o:?} (model cost \
+                         must be invariant)"
+                    ));
+                }
+            }
+            // steady state: the warmed plan re-runs without allocating
+            let again = overlap_plan.run_multi(&xs).map_err(|e| e.to_string())?;
+            if again.fresh_payload_allocs != 0 {
+                return Err(format!(
+                    "warm overlap run allocated {} payload buffers",
+                    again.fresh_payload_allocs
+                ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn p8_nonblocking_comm_dry_run_matches_blocking_counters() {
+    // Comm-only exercise of the nonblocking API (no tensor, no compute):
+    // replay the Theorem 6 phase-1 transfer set once through
+    // isend/try_recv/recv_into and once through the blocking send/recv,
+    // and require identical per-processor counters. Payload sizes are the
+    // real portion sizes, so this doubles as a dry run of the overlap
+    // pipeline's message layout.
+    use sttsv::simulator::{self, BufPool};
+    use std::sync::Mutex;
+    for q in [2u64, 3] {
+        let part = TetraPartition::from_steiner(&spherical(q).unwrap()).unwrap();
+        let sched = CommSchedule::build(&part).unwrap();
+        let b = 7usize; // uneven portions
+        let xfers = &sched.xfers;
+        let blocking = simulator::run(part.p, |comm| {
+            let me = comm.rank;
+            for (xi, xf) in xfers.iter().enumerate() {
+                if xf.from == me {
+                    comm.send(xf.to, xi as u64, vec![0.5; xf.words(&part, b)])?;
+                }
+            }
+            for (xi, xf) in xfers.iter().enumerate() {
+                if xf.to == me {
+                    comm.recv(xf.from, xi as u64)?;
+                }
+            }
+            Ok(comm.stats)
+        })
+        .unwrap();
+        let pools: Vec<Mutex<BufPool>> =
+            (0..part.p).map(|_| Mutex::new(BufPool::new())).collect();
+        let (nonblocking, metrics) = simulator::run_ext(part.p, Some(&pools), |comm| {
+            let me = comm.rank;
+            let payload = vec![0.5f32; b]; // max portion size
+            let mut expected = 0usize;
+            for (xi, xf) in xfers.iter().enumerate() {
+                if xf.from == me {
+                    comm.isend(xf.to, xi as u64, &payload[..xf.words(&part, b)])?;
+                }
+                if xf.to == me {
+                    expected += 1;
+                }
+            }
+            let mut scratch = vec![0.0f32; b];
+            while expected > 0 {
+                let (from, tag) = match comm.try_recv() {
+                    Some(key) => key,
+                    None => comm.recv_any()?,
+                };
+                let words = xfers[tag as usize].words(&part, b);
+                comm.recv_into(from, tag, &mut scratch[..words])?;
+                expected -= 1;
+            }
+            Ok(comm.stats)
+        })
+        .unwrap();
+        assert_eq!(blocking, nonblocking, "q={q}");
+        assert!(metrics.peak_inflight_words > 0, "q={q}");
     }
 }
