@@ -1,7 +1,7 @@
 # Top-level convenience targets (the code's "run `make artifacts`" pointers).
 
 .PHONY: artifacts artifacts-quick test test-release-asserts pytest bench \
-	bench-smoke bench-overlap
+	bench-smoke bench-overlap bench-e2e bench-e2e-smoke
 
 # AOT-lower the JAX/Pallas kernels (incl. the multi-RHS block_multi_* set)
 # to HLO text artifacts for the Rust PJRT backend.
@@ -38,3 +38,14 @@ bench-smoke:
 bench-overlap:
 	cd rust && STTSV_BENCH_SMOKE=1 STTSV_BENCH_SECTION=e12 \
 		cargo bench --bench kernel_throughput
+
+# E13 end-to-end power method: resident session vs host-centric loop
+# across P in {4, 10, 14}; writes rust/BENCH_e2e.json (per-iteration wall
+# clock + comm words) and asserts resident = host + collectives exactly.
+bench-e2e:
+	cd rust && cargo bench --bench e2e_power_method
+
+# Fast variant (what CI runs): smaller n, fewer iterations and samples;
+# every path and every comm assertion still executes.
+bench-e2e-smoke:
+	cd rust && STTSV_BENCH_SMOKE=1 cargo bench --bench e2e_power_method

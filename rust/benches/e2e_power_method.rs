@@ -1,75 +1,174 @@
-//! Bench: end-to-end higher-order power method (DESIGN.md E8) — wall-clock
-//! and per-iteration communication through the full distributed stack, on
-//! both backends when artifacts are available.
+//! Bench E13: end-to-end higher-order power method, **iteration-resident
+//! session vs host-centric loop**, across P ∈ {4, 10, 14} at a fixed
+//! problem size — wall-clock per iteration, counted comm words per
+//! iteration (one STTSV + O(log P) collective words for the resident
+//! path; one STTSV plus 2n *uncounted* host↔worker vector words for the
+//! host loop). Emits `BENCH_e2e.json` (the tracked perf-trajectory
+//! record).
 //!
-//!     cargo bench --bench e2e_power_method
+//!     cargo bench --bench e2e_power_method            # full sampling
+//!     STTSV_BENCH_SMOKE=1 cargo bench ...             # CI fast path
+//!
+//! The comm identity `resident = host + collectives` is asserted
+//! per-processor on every row (the session itself additionally asserts it
+//! per iteration).
 
-use sttsv::apps::power_method;
+use std::fmt::Write as _;
+
+use sttsv::apps::{power_method, power_method_host};
 use sttsv::bench::{header, time};
-use sttsv::bounds;
 use sttsv::coordinator::{CommMode, ExecOpts};
 use sttsv::partition::TetraPartition;
-use sttsv::runtime::{artifacts_dir, Backend};
-use sttsv::steiner::spherical;
+use sttsv::simulator::allreduce_stats;
+use sttsv::steiner::{spherical, sqs8, trivial, SteinerSystem};
 use sttsv::tensor::{linalg, SymTensor};
 use sttsv::util::rng::Rng;
 use sttsv::util::table::Table;
 
-fn main() -> anyhow::Result<()> {
-    header("E8: end-to-end power method (odeco tensor, planted λ = 5, 2, 1)");
-    let q = 2u64;
-    let part = TetraPartition::from_steiner(&spherical(q)?)?;
-    let mut backends = vec![Backend::Native];
-    if artifacts_dir().join("manifest.txt").exists() {
-        backends.push(Backend::Pjrt);
-    } else {
-        println!("(PJRT rows skipped: run `make artifacts`)");
-    }
+struct E13Row {
+    p: usize,
+    n: usize,
+    b: usize,
+    iters: usize,
+    resident_ms_per_iter: f64,
+    host_ms_per_iter: f64,
+    sttsv_words_per_iter: u64,
+    collective_words_per_iter: u64,
+    resident_words_per_iter: u64,
+    host_vector_words_per_iter: u64,
+}
 
+fn render_json(rows: &[E13Row]) -> String {
+    let mut s = String::new();
+    s.push_str("{\n  \"bench\": \"e2e_power_method\",\n  \"resident_vs_host\": [\n");
+    for (idx, r) in rows.iter().enumerate() {
+        let _ = write!(
+            s,
+            "    {{\"p\": {}, \"n\": {}, \"b\": {}, \"iters\": {}, \
+             \"resident_ms_per_iter\": {:.4}, \"host_ms_per_iter\": {:.4}, \
+             \"sttsv_words_per_iter\": {}, \"collective_words_per_iter\": {}, \
+             \"resident_words_per_iter\": {}, \
+             \"host_vector_words_per_iter\": {}}}{}\n",
+            r.p,
+            r.n,
+            r.b,
+            r.iters,
+            r.resident_ms_per_iter,
+            r.host_ms_per_iter,
+            r.sttsv_words_per_iter,
+            r.collective_words_per_iter,
+            r.resident_words_per_iter,
+            r.host_vector_words_per_iter,
+            if idx + 1 < rows.len() { "," } else { "" }
+        );
+    }
+    s.push_str("  ]\n}\n");
+    s
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("STTSV_BENCH_SMOKE").is_ok();
+    header("E13: resident vs host-centric power method (odeco, planted λ = 5, 2, 1)");
+    // Steiner systems giving P = 4 (trivial S(4,3,3)), 10 (spherical q=2),
+    // 14 (SQS(8)); block sizes chosen so n is identical across rows.
+    let systems: Vec<SteinerSystem> = vec![trivial(4)?, spherical(2)?, sqs8()];
+    let n = if smoke { 40 } else { 120 };
+    let iters = if smoke { 4 } else { 12 };
+    let (warmup, samples) = if smoke { (0, 1) } else { (1, 3) };
+
+    let mut rows = Vec::new();
     let mut t = Table::new([
-        "backend", "n", "iters", "lambda", "align", "words/iter/proc", "LB/iter",
-        "median wall ms",
+        "P", "n", "iters", "res ms/it", "host ms/it", "sttsv w/it", "coll w/it",
+        "host vec w/it",
     ]);
-    for &backend in &backends {
-        for b in [8usize, 16, 32] {
-            let n = b * part.m;
-            let (tensor, cols) = SymTensor::odeco(n, &[5.0, 2.0, 1.0], 7);
-            let mut rng = Rng::new(8);
-            let mut x0 = cols[0].clone();
-            for v in x0.iter_mut() {
-                *v += 0.25 * rng.normal_f32();
-            }
-            let opts = ExecOpts {
-                mode: CommMode::PointToPoint,
-                ..ExecOpts::for_backend(backend)
-            };
-            let rep = power_method(&tensor, &part, &x0, 40, 1e-6, opts)?;
-            let align = linalg::dot(&rep.x, &cols[0]).abs();
-            let words = rep.comm.iter().map(|s| s.sent_words).max().unwrap()
-                / rep.iters.len() as u64;
-            let timing = time(0, 3, || {
-                let r = power_method(&tensor, &part, &x0, 10, 0.0, opts).unwrap();
-                std::hint::black_box(r);
-            });
-            t.row([
-                format!("{backend:?}"),
-                n.to_string(),
-                rep.iters.len().to_string(),
-                format!("{:.5}", rep.lambda),
-                format!("{:.5}", align),
-                words.to_string(),
-                format!("{:.1}", bounds::lower_bound_words(n, part.p)),
-                format!("{:.1}", timing.median_ms() / 10.0),
-            ]);
-            assert!((rep.lambda - 5.0).abs() < 5e-2);
-            assert!(align > 0.999);
+    for sys in &systems {
+        let part = TetraPartition::from_steiner(sys)?;
+        assert_eq!(n % part.m, 0, "n must split into m = {} blocks", part.m);
+        let b = n / part.m;
+        let (tensor, cols) = SymTensor::odeco(n, &[5.0, 2.0, 1.0], 7);
+        let mut rng = Rng::new(8);
+        let mut x0 = cols[0].clone();
+        for v in x0.iter_mut() {
+            *v += 0.25 * rng.normal_f32();
         }
+        let opts = ExecOpts { mode: CommMode::PointToPoint, ..Default::default() };
+
+        // tol = 0 pins both drivers to exactly `iters` iterations.
+        let res = power_method(&tensor, &part, &x0, iters, 0.0, opts)?;
+        let host = power_method_host(&tensor, &part, &x0, iters, 0.0, opts)?;
+        assert_eq!(res.iters.len(), iters);
+        assert_eq!(host.iters.len(), iters);
+        if !smoke {
+            assert!((res.lambda - 5.0).abs() < 5e-2, "resident lambda {}", res.lambda);
+            let align = linalg::dot(&res.x, &cols[0]).abs();
+            assert!(align > 0.999, "resident alignment {align}");
+        }
+
+        // Per-iteration comm: resident must be exactly host + collectives,
+        // processor by processor.
+        let res_it = &res.iters[0].comm;
+        let host_it = &host.iters[0].comm;
+        for p in 0..part.p {
+            let mut want = host_it[p];
+            want.absorb(&allreduce_stats(part.p, p, 2));
+            want.absorb(&allreduce_stats(part.p, p, 1));
+            assert_eq!(res_it[p], want, "P={} proc {p}", part.p);
+        }
+        // Report all three comm columns at the single busiest resident
+        // rank, so the emitted row satisfies the asserted identity
+        // resident = sttsv + collectives exactly (per-rank maxima taken
+        // independently need not sum).
+        let busiest = (0..part.p)
+            .max_by_key(|&p| res_it[p].sent_words)
+            .unwrap();
+        let resident_words = res_it[busiest].sent_words;
+        let sttsv_words = host_it[busiest].sent_words;
+        let coll_words = allreduce_stats(part.p, busiest, 2).sent_words
+            + allreduce_stats(part.p, busiest, 1).sent_words;
+        assert_eq!(resident_words, sttsv_words + coll_words);
+
+        let res_timing = time(warmup, samples, || {
+            let r = power_method(&tensor, &part, &x0, iters, 0.0, opts).unwrap();
+            std::hint::black_box(r);
+        });
+        let host_timing = time(warmup, samples, || {
+            let r = power_method_host(&tensor, &part, &x0, iters, 0.0, opts).unwrap();
+            std::hint::black_box(r);
+        });
+        let row = E13Row {
+            p: part.p,
+            n,
+            b,
+            iters,
+            resident_ms_per_iter: res_timing.median_ms() / iters as f64,
+            host_ms_per_iter: host_timing.median_ms() / iters as f64,
+            sttsv_words_per_iter: sttsv_words,
+            collective_words_per_iter: coll_words,
+            resident_words_per_iter: resident_words,
+            host_vector_words_per_iter: 2 * n as u64,
+        };
+        t.row([
+            part.p.to_string(),
+            n.to_string(),
+            iters.to_string(),
+            format!("{:.2}", row.resident_ms_per_iter),
+            format!("{:.2}", row.host_ms_per_iter),
+            row.sttsv_words_per_iter.to_string(),
+            row.collective_words_per_iter.to_string(),
+            row.host_vector_words_per_iter.to_string(),
+        ]);
+        rows.push(row);
     }
     t.print();
     println!(
-        "eigenpair recovered on every row; comm per iteration equals the \
-         closed form (2(n(q+1)/(q²+1) − n/P)); wall column is per power \
-         iteration (10-iter run / 10)."
+        "resident counted comm/iter = one STTSV + O(log P) collective words \
+         (asserted per processor); the host loop additionally moves 2n \
+         host↔worker vector words per iteration that the α-β-γ model never \
+         sees, and re-spawns its P workers every iteration."
     );
+
+    let json = render_json(&rows);
+    std::fs::write("BENCH_e2e.json", &json)?;
+    println!("\nwrote BENCH_e2e.json ({} bytes)", json.len());
     Ok(())
 }

@@ -2,57 +2,101 @@
 //! coordinator: the higher-order power method (Algorithm 1) for tensor
 //! Z-eigenpairs, and the symmetric CP gradient (Algorithm 2).
 //!
-//! Both multi-column workloads (CP gradient, symmetric MTTKRP) run their r
-//! STTSVs through [`SttsvPlan::run_multi`]: one sweep of the distributed
+//! Both iterative drivers run as **iteration-resident solver sessions**
+//! ([`SolverSession`]): the P workers are spawned once per solve, keep
+//! their portion of the iterate across iterations, and reduce every
+//! per-iteration scalar (λ = x·y, ‖y‖, δ, ‖∇‖, the Gram matrix) by
+//! recursive-doubling allreduce — the full vector never returns to the
+//! host between iterations, and there is **no dense O(n³) host work per
+//! iteration** (the old Rayleigh-quotient fallback is deleted; a
+//! regression test counts dense-oracle invocations). Per-iteration comm
+//! is exactly one STTSV plus O(log P) scalar-allreduce words, asserted by
+//! the session and recorded per iteration in the reports.
+//!
+//! Multi-column workloads (CP gradient/sweeps, symmetric MTTKRP) run
+//! their r STTSVs through the batched pass: one sweep of the distributed
 //! tensor serves all r columns, with messages packed r words deep — words
 //! scale as r× one STTSV but message counts (latency) do not grow with r.
+//!
+//! [`power_method_host`] keeps the pre-session host-centric loop (one
+//! `plan.run` per iteration, scalars on the host) as the baseline the E13
+//! bench compares against; it computes λ = x·y from the vectors it
+//! already holds, never from a dense tensor sweep.
 
+use crate::coordinator::session::SolverSession;
 use crate::coordinator::{ExecOpts, SttsvPlan};
 use crate::partition::TetraPartition;
 use crate::simulator::CommStats;
 use crate::tensor::{linalg, SymTensor};
 use anyhow::Result;
 
-/// One power-method iteration record.
-#[derive(Debug, Clone)]
-pub struct PowerIter {
-    /// ||y|| before normalization (converges to |λ|).
-    pub norm: f32,
-    /// Rayleigh quotient estimate λ = A ×₁ x ×₂ x ×₃ x.
-    pub lambda: f32,
-    /// ||x_{t} − x_{t−1}||, the convergence criterion.
-    pub delta: f32,
-}
+pub use crate::coordinator::session::{CpIter, PowerIter};
 
 /// Full power-method report.
 #[derive(Debug, Clone)]
 pub struct PowerReport {
-    /// Final eigenvalue estimate.
+    /// Final eigenvalue estimate (λ = x·y of the last iteration).
     pub lambda: f32,
     /// Final unit eigenvector estimate.
     pub x: Vec<f32>,
-    /// Per-iteration convergence log.
+    /// Per-iteration convergence log, each entry carrying its own
+    /// per-processor communication record.
     pub iters: Vec<PowerIter>,
-    /// Aggregated per-processor comm over all distributed STTSV calls.
+    /// Aggregated per-processor comm over the whole solve (STTSV +
+    /// collectives for the resident path; STTSV only for the host loop).
     pub comm: Vec<CommStats>,
     /// Communication steps per STTSV vector phase.
     pub steps_per_phase: usize,
 }
 
-fn add_stats(acc: &mut [CommStats], per_proc: &[crate::coordinator::ProcReport]) {
-    for (a, r) in acc.iter_mut().zip(per_proc) {
-        a.sent_words += r.stats.sent_words;
-        a.recv_words += r.stats.recv_words;
-        a.sent_msgs += r.stats.sent_msgs;
-        a.recv_msgs += r.stats.recv_msgs;
+/// Sum per-iteration per-processor records into whole-solve totals.
+fn total_comm<'a>(p: usize, iters: impl Iterator<Item = &'a [CommStats]>) -> Vec<CommStats> {
+    let mut acc = vec![CommStats::default(); p];
+    for iter_comm in iters {
+        for (a, s) in acc.iter_mut().zip(iter_comm) {
+            a.absorb(s);
+        }
     }
+    acc
 }
 
-/// Higher-order power method (Algorithm 1): iterate y = A ×₂ x ×₃ x,
-/// x = y/||y||, until ||Δx|| < tol or `max_iters`. Every iteration's STTSV
-/// runs through the full distributed stack (partition → schedule →
-/// simulator → block kernels).
+/// Higher-order power method (Algorithm 1), iteration-resident: ONE
+/// simulator session runs the whole solve — workers keep their iterate
+/// portions across iterations, λ = x·y and ‖y‖ travel as a fused 2-word
+/// allreduce, δ as a 1-word allreduce that doubles as the unanimous
+/// convergence decision. Per-iteration comm = one STTSV + O(log P) scalar
+/// words (asserted inside the session).
 pub fn power_method(
+    tensor: &SymTensor,
+    part: &TetraPartition,
+    x0: &[f32],
+    max_iters: usize,
+    tol: f32,
+    opts: ExecOpts,
+) -> Result<PowerReport> {
+    // The plan (schedule + owner-compute block state) is built once; the
+    // session then never touches host-resident vectors again (§Perf P9).
+    let plan = SttsvPlan::new(tensor, part, opts)?;
+    let solve = SolverSession::new(&plan).power_method(x0, max_iters, tol)?;
+    let comm = total_comm(part.p, solve.iters.iter().map(|it| it.comm.as_slice()));
+    let lambda = solve.iters.last().map(|i| i.lambda).unwrap_or(0.0);
+    Ok(PowerReport {
+        lambda,
+        x: solve.x,
+        iters: solve.iters,
+        comm,
+        steps_per_phase: solve.steps_per_phase,
+    })
+}
+
+/// Host-centric power method baseline: one `plan.run` per iteration, all
+/// scalar arithmetic on the host-resident full vectors. λ = x·y before
+/// normalization — O(n) from data the iteration already produced; the
+/// dense O(n³) `tensor.sttsv` Rayleigh re-evaluation this loop used to
+/// perform is gone (regression-tested). This is the E13 comparison
+/// baseline: identical per-iteration STTSV comm, but the full vector
+/// crosses the host boundary twice per iteration.
+pub fn power_method_host(
     tensor: &SymTensor,
     part: &TetraPartition,
     x0: &[f32],
@@ -62,18 +106,16 @@ pub fn power_method(
 ) -> Result<PowerReport> {
     let mut x = x0.to_vec();
     linalg::normalize(&mut x);
-    let mut iters = Vec::new();
-    let mut comm: Vec<CommStats> = vec![CommStats::default(); part.p];
+    let mut iters: Vec<PowerIter> = Vec::new();
     let mut steps_per_phase = 0;
 
-    // The plan (schedule + extracted owner-compute blocks) is built once;
-    // each iteration only moves vector data (§Perf P5).
     let plan = SttsvPlan::new(tensor, part, opts)?;
     for _ in 0..max_iters {
         let rep = plan.run(&x)?;
         steps_per_phase = rep.steps_per_phase;
-        add_stats(&mut comm, &rep.per_proc);
+        let iter_comm: Vec<CommStats> = rep.per_proc.iter().map(|r| r.stats).collect();
         let mut y = rep.y;
+        let lambda = linalg::dot(&x, &y);
         let norm = linalg::normalize(&mut y);
         let delta = x
             .iter()
@@ -84,14 +126,14 @@ pub fn power_method(
             })
             .sum::<f64>()
             .sqrt() as f32;
-        let lambda = linalg::dot(&tensor.sttsv(&y), &y);
         x = y;
-        iters.push(PowerIter { norm, lambda, delta });
+        iters.push(PowerIter { norm, lambda, delta, comm: iter_comm });
         if delta < tol {
             break;
         }
     }
     let lambda = iters.last().map(|i| i.lambda).unwrap_or(0.0);
+    let comm = total_comm(part.p, iters.iter().map(|it| it.comm.as_slice()));
     Ok(PowerReport {
         lambda,
         x,
@@ -106,55 +148,79 @@ pub fn power_method(
 pub struct CpGradReport {
     /// The gradient matrix Y ∈ R^{n×r}, column-major (columns = y_ℓ).
     pub grad: Vec<Vec<f32>>,
-    /// Per-processor comm of the ONE batched r-column distributed STTSV.
+    /// Per-processor comm of the solve: ONE batched r-column distributed
+    /// STTSV plus the r²-word Gram and 1-word ‖∇‖ allreduces.
     pub comm: Vec<CommStats>,
 }
 
 /// Symmetric CP gradient (Algorithm 2): for factor matrix X (columns x_ℓ),
 ///   G = (XᵀX) ∗ (XᵀX);  y_ℓ = A ×₂ x_ℓ ×₃ x_ℓ;  ∇ = X·G − Y.
-/// The r STTSVs (the bottleneck) run as ONE batched multi-RHS pass through
-/// the distributed stack — each owned tensor block is swept once for all r
-/// columns and every message carries all r columns' coordinates; the r×r
-/// Gram arithmetic is O(nr²) local work (as in the paper, where only STTSV
-/// is analyzed).
+/// Runs as a one-sweep resident session: the r STTSVs (the bottleneck) are
+/// ONE batched multi-RHS pass, the Gram matrix is an r²-word allreduce of
+/// portion-local partial dots, and the gradient is assembled from the
+/// workers' owned portions — the factor matrix crosses the host boundary
+/// once in, once out.
 pub fn cp_gradient(
     tensor: &SymTensor,
     part: &TetraPartition,
     x_cols: &[Vec<f32>],
     opts: ExecOpts,
 ) -> Result<CpGradReport> {
-    let n = tensor.n;
-    let r = x_cols.len();
-    if r == 0 {
+    if x_cols.is_empty() {
         // Empty factor matrix: nothing to compute or communicate.
         return Ok(CpGradReport { grad: Vec::new(), comm: vec![CommStats::default(); part.p] });
     }
-    // G = (XᵀX) ∗ (XᵀX) elementwise
-    let mut g = vec![vec![0.0f32; r]; r];
-    for a in 0..r {
-        for bb in 0..r {
-            let d = linalg::dot(&x_cols[a], &x_cols[bb]);
-            g[a][bb] = d * d;
-        }
-    }
-    // Y via ONE batched distributed STTSV over all r columns
     let plan = SttsvPlan::new(tensor, part, opts)?;
-    let rep = plan.run_multi(x_cols)?;
-    let mut comm: Vec<CommStats> = vec![CommStats::default(); part.p];
-    add_stats(&mut comm, &rep.per_proc);
-    let ys = rep.ys;
-    // ∇_ℓ = Σ_a x_a·G[a][ℓ] − y_ℓ
-    let mut grad = vec![vec![0.0f32; n]; r];
-    for l in 0..r {
-        for i in 0..n {
-            let mut v = 0.0f32;
-            for a in 0..r {
-                v += x_cols[a][i] * g[a][l];
-            }
-            grad[l][i] = v - ys[l][i];
-        }
+    // max_sweeps = 1, step = 0: exactly one distributed gradient evaluation.
+    let solve = SolverSession::new(&plan).cp_sweeps(x_cols, 1, 0.0, 0.0)?;
+    let comm = solve.per_proc.iter().map(|pr| pr.stats).collect();
+    Ok(CpGradReport { grad: solve.grad_cols, comm })
+}
+
+/// Resident multi-sweep CP report.
+#[derive(Debug, Clone)]
+pub struct CpAlsReport {
+    /// Factor columns after the last executed sweep.
+    pub x_cols: Vec<Vec<f32>>,
+    /// Per-sweep gradient norms + per-processor comm.
+    pub iters: Vec<CpIter>,
+    /// Aggregated per-processor comm over the whole solve.
+    pub comm: Vec<CommStats>,
+    pub steps_per_phase: usize,
+}
+
+/// Multi-sweep resident symmetric CP driver (the Algorithm 2 workload
+/// made iterative): inside ONE simulator session, repeat — batched
+/// r-column STTSV, Gram allreduce (r² words), portion-local gradient step
+/// X ← X − η·∇ — until ‖∇‖ < tol or `sweeps` exhausted. Per-sweep comm is
+/// one r-deep STTSV plus O(log P) scalar words (asserted in the session);
+/// the factor matrix stays distributed for the whole descent.
+pub fn cp_als_sweep(
+    tensor: &SymTensor,
+    part: &TetraPartition,
+    x0_cols: &[Vec<f32>],
+    sweeps: usize,
+    step: f32,
+    tol: f32,
+    opts: ExecOpts,
+) -> Result<CpAlsReport> {
+    if x0_cols.is_empty() {
+        return Ok(CpAlsReport {
+            x_cols: Vec::new(),
+            iters: Vec::new(),
+            comm: vec![CommStats::default(); part.p],
+            steps_per_phase: 0,
+        });
     }
-    Ok(CpGradReport { grad, comm })
+    let plan = SttsvPlan::new(tensor, part, opts)?;
+    let solve = SolverSession::new(&plan).cp_sweeps(x0_cols, sweeps, step, tol)?;
+    let comm = solve.per_proc.iter().map(|pr| pr.stats).collect();
+    Ok(CpAlsReport {
+        x_cols: solve.x_cols,
+        iters: solve.iters,
+        comm,
+        steps_per_phase: solve.steps_per_phase,
+    })
 }
 
 /// Mode-1 symmetric MTTKRP (paper §8, future work realized here):
@@ -177,14 +243,49 @@ pub fn symmetric_mttkrp(
     }
     let plan = SttsvPlan::new(tensor, part, opts)?;
     let rep = plan.run_multi(x_cols)?;
-    let mut comm: Vec<CommStats> = vec![CommStats::default(); part.p];
-    add_stats(&mut comm, &rep.per_proc);
+    let comm = rep.per_proc.iter().map(|pr| pr.stats).collect();
     Ok((rep.ys, comm))
 }
 
-/// The CP objective f(X) = ||A − Σ_ℓ x_ℓ⊗x_ℓ⊗x_ℓ||² / 6 evaluated densely
-/// (test helper for finite-difference gradient checks).
+/// The CP objective f(X) = ||A − Σ_ℓ x_ℓ⊗x_ℓ⊗x_ℓ||² / 6, evaluated over
+/// the packed unique entries only: each lower-tetrahedral (i ≥ j ≥ k)
+/// residual is weighted by its orbit size (6 for i > j > k, 3 on
+/// non-central diagonals, 1 at i = j = k), walking the `SymTensor` packed
+/// buffer in layout order — n(n+1)(n+2)/6·r work instead of the dense
+/// n³·r triple loop (whose `#[cfg(test)]` twin remains as the oracle).
 pub fn cp_objective(tensor: &SymTensor, x_cols: &[Vec<f32>]) -> f64 {
+    let n = tensor.n;
+    let data = tensor.packed_data();
+    let mut err = 0.0f64;
+    let mut idx = 0usize;
+    for i in 0..n {
+        for j in 0..=i {
+            for k in 0..=j {
+                let mut model = 0.0f64;
+                for xl in x_cols {
+                    model += xl[i] as f64 * xl[j] as f64 * xl[k] as f64;
+                }
+                let d = data[idx] as f64 - model;
+                idx += 1;
+                let w = if i == j && j == k {
+                    1.0
+                } else if i == j || j == k {
+                    3.0
+                } else {
+                    6.0
+                };
+                err += w * d * d;
+            }
+        }
+    }
+    debug_assert_eq!(idx, data.len());
+    err / 6.0
+}
+
+/// Dense n³ twin of [`cp_objective`] — the finite-difference oracle the
+/// packed sweep is checked against.
+#[cfg(test)]
+fn cp_objective_dense(tensor: &SymTensor, x_cols: &[Vec<f32>]) -> f64 {
     let n = tensor.n;
     let mut err = 0.0f64;
     for i in 0..n {
@@ -238,8 +339,67 @@ mod tests {
         assert!(align > 0.999, "alignment={align}");
         // convergence log is monotone-ish and ends small
         assert!(rep.iters.last().unwrap().delta < 1e-6);
-        // comm happened on every processor
+        // comm happened on every processor, and per-iteration records sum
+        // to the whole-solve totals
         assert!(rep.comm.iter().all(|s| s.sent_words > 0));
+        for p in 0..part.p {
+            let per_iter_sum: u64 = rep.iters.iter().map(|it| it.comm[p].sent_words).sum();
+            assert_eq!(per_iter_sum, rep.comm[p].sent_words, "proc {p}");
+        }
+    }
+
+    #[test]
+    fn resident_and_host_power_methods_agree() {
+        let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+        let b = 5;
+        let n = b * part.m;
+        let (tensor, cols) = SymTensor::odeco(n, &[5.0, 2.0, 1.0], 33);
+        let mut rng = Rng::new(34);
+        let mut x0: Vec<f32> = cols[0].clone();
+        for v in x0.iter_mut() {
+            *v += 0.2 * rng.normal_f32();
+        }
+        // tol = 0 pins the iteration count to exactly k on both paths
+        let k = 8;
+        let res = power_method(&tensor, &part, &x0, k, 0.0, opts()).unwrap();
+        let host = power_method_host(&tensor, &part, &x0, k, 0.0, opts()).unwrap();
+        assert_eq!(res.iters.len(), k);
+        assert_eq!(host.iters.len(), k);
+        for (t, (a, b)) in res.iters.iter().zip(&host.iters).enumerate() {
+            assert!((a.lambda - b.lambda).abs() < 1e-4, "iter {t} lambda");
+            assert!((a.norm - b.norm).abs() < 1e-4 * b.norm.abs().max(1.0), "iter {t} norm");
+            assert!((a.delta - b.delta).abs() < 1e-4, "iter {t} delta");
+        }
+        for i in 0..n {
+            assert!((res.x[i] - host.x[i]).abs() < 1e-4, "x[{i}]");
+        }
+    }
+
+    #[test]
+    fn iterative_apps_never_invoke_the_dense_oracle() {
+        // Regression for the O(n³)-per-iteration host Rayleigh quotient:
+        // after the plan is built, neither the resident session nor the
+        // host-centric baseline may fall back to tensor.sttsv.
+        let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+        let b = 4;
+        let n = b * part.m;
+        let (tensor, cols) = SymTensor::odeco(n, &[3.0, 1.0], 35);
+        let x0 = cols[0].clone();
+        let before = tensor.dense_sttsv_invocations();
+        power_method(&tensor, &part, &x0, 6, 0.0, opts()).unwrap();
+        power_method_host(&tensor, &part, &x0, 6, 0.0, opts()).unwrap();
+        let mut rng = Rng::new(36);
+        // small columns keep the fixed-step descent numerically tame
+        let x_cols: Vec<Vec<f32>> = (0..2)
+            .map(|_| rng.normal_vec(n).iter().map(|v| 0.3 * v).collect())
+            .collect();
+        cp_gradient(&tensor, &part, &x_cols, opts()).unwrap();
+        cp_als_sweep(&tensor, &part, &x_cols, 3, 0.01, 0.0, opts()).unwrap();
+        assert_eq!(
+            tensor.dense_sttsv_invocations(),
+            before,
+            "an iterative app fell back to the dense O(n³) host oracle"
+        );
     }
 
     #[test]
@@ -300,5 +460,45 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn packed_cp_objective_equals_dense_oracle() {
+        let n = 9;
+        let tensor = SymTensor::random(n, 71);
+        let mut rng = Rng::new(72);
+        let x_cols: Vec<Vec<f32>> = (0..3).map(|_| rng.normal_vec(n)).collect();
+        let packed = cp_objective(&tensor, &x_cols);
+        let dense = cp_objective_dense(&tensor, &x_cols);
+        assert!(
+            (packed - dense).abs() < 1e-9 * dense.abs().max(1.0),
+            "packed {packed} vs dense {dense}"
+        );
+    }
+
+    #[test]
+    fn cp_als_sweep_descends_the_objective() {
+        let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+        let b = 3;
+        let n = b * part.m;
+        let (tensor, cols) = SymTensor::odeco(n, &[3.0, 1.5], 43);
+        let mut rng = Rng::new(44);
+        // start near the planted factors so plain gradient descent descends
+        let x0: Vec<Vec<f32>> = cols
+            .iter()
+            .take(2)
+            .zip([3.0f32, 1.5])
+            .map(|(c, lam)| {
+                let s = lam.cbrt();
+                c.iter().map(|v| s * v + 0.05 * rng.normal_f32()).collect()
+            })
+            .collect();
+        let f0 = cp_objective(&tensor, &x0);
+        let rep = cp_als_sweep(&tensor, &part, &x0, 25, 0.05, 0.0, opts()).unwrap();
+        assert_eq!(rep.iters.len(), 25);
+        let f1 = cp_objective(&tensor, &rep.x_cols);
+        assert!(f1 < 0.25 * f0, "objective did not descend: {f0} -> {f1}");
+        // gradient norms descend too
+        assert!(rep.iters.last().unwrap().gnorm < rep.iters[0].gnorm);
     }
 }

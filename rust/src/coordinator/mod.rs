@@ -47,13 +47,23 @@
 //! exactly those of the phased path (property P8 asserts equality) — only
 //! idle time is removed. The phased path (`--no-overlap`) remains as the
 //! deterministic oracle.
+//!
+//! **Iteration-resident solver sessions** ([`session::SolverSession`]):
+//! both worker bodies are factored into per-iteration *sweeps* over
+//! portion-local [`WorkerState`] panels, so iterative drivers (power
+//! method, CP sweeps) keep the vector distributed across iterations —
+//! workers are spawned once per solve, scalar reductions travel as
+//! recursive-doubling allreduces, and `run`/`run_multi` are the thin
+//! one-iteration sessions (seed → one sweep → collect), preserving the
+//! oracle path bit for bit.
 
 pub mod baselines;
+pub mod session;
 
 use crate::partition::{classify, BlockKind, TetraPartition};
 use crate::runtime::{lanes_axpy, Backend, Engine};
 use crate::schedule::CommSchedule;
-use crate::simulator::{self, BufPool, Comm, CommStats};
+use crate::simulator::{self, BufPool, Comm, CommStats, TAG_COLL_BASE};
 use crate::tensor::{PackedBlockView, SymTensor};
 use anyhow::{bail, ensure, Result};
 use std::sync::Mutex;
@@ -745,42 +755,23 @@ impl<'a> SttsvPlan<'a> {
             Vec<(usize, std::ops::Range<usize>, Vec<f32>)>,
         );
         let (outs, metrics): (Vec<ProcOut>, simulator::RunMetrics) =
-            simulator::run_ext(part.p, Some(&self.pools), |comm| {
-                if self.opts.overlap {
-                    self.worker_overlap(comm, &views)
-                } else {
-                    self.worker(comm, &views)
-                }
-            })?;
+            simulator::run_ext(part.p, Some(&self.pools), |comm| self.worker(comm, &views))?;
 
         // Assemble ys from the final portions (each (i, sub-range) once;
         // portion payloads are (len, r) interleaved panels).
-        let mut ys = vec![vec![0.0f32; self.n]; r];
-        let mut covered = vec![false; self.n];
         let mut per_proc = Vec::with_capacity(part.p);
+        let mut portions_all = Vec::with_capacity(part.p);
         for (stats, mults, ct, portions) in outs {
-            for (i, range, vals) in portions {
-                for (t, off) in range.enumerate() {
-                    let g = i * b + off;
-                    ensure!(!covered[g], "y[{g}] produced twice");
-                    covered[g] = true;
-                    for (l, ycol) in ys.iter_mut().enumerate() {
-                        ycol[g] = vals[t * r + l];
-                    }
-                }
-            }
+            portions_all.push(portions);
             per_proc.push(ProcReport {
                 stats,
                 ternary_mults: mults,
                 compute_time: ct,
             });
         }
-        ensure!(covered.iter().all(|&c| c), "y not fully covered");
+        let ys = assemble_columns(self.n, b, r, portions_all)?;
 
-        let steps_per_phase = match self.opts.mode {
-            CommMode::PointToPoint => self.sched.num_steps(),
-            CommMode::AllToAll => part.p - 1,
-        };
+        let steps_per_phase = self.steps_per_phase();
         Ok(SttsvMultiReport {
             ys,
             per_proc,
@@ -791,14 +782,12 @@ impl<'a> SttsvPlan<'a> {
         })
     }
 
-    /// One simulated processor executing Algorithm 5 for r packed columns.
-    ///
-    /// All per-worker vector state lives in two dense slot-indexed buffers
-    /// (`xbuf`, `ybuf`) of shape (|R_p|, b, r): slot s holds the (b, r)
-    /// interleaved panel of row block `part.r_p[me][s]`. Portion sub-ranges
-    /// are contiguous slices of a panel, so message pack/unpack are plain
-    /// copies and kernels consume panels in place — no HashMap lookups on
-    /// the hot path.
+    /// One simulated processor executing Algorithm 5 for r packed columns:
+    /// a thin one-iteration session — seed the own portions from the
+    /// host-resident input vectors, run exactly one sweep (phased or
+    /// overlapped per the plan's options), collect the owned result
+    /// portions. Resident sessions ([`session::SolverSession`]) run the
+    /// same sweeps in a loop without re-seeding.
     fn worker(
         &self,
         comm: &mut Comm,
@@ -810,25 +799,115 @@ impl<'a> SttsvPlan<'a> {
         Vec<(usize, std::ops::Range<usize>, Vec<f32>)>,
     )> {
         let me = comm.rank;
-        let part = self.part;
+        let r = xs.len();
+        let mut st = self.worker_state(me, r);
+        self.seed_own(me, xs, &mut st.xbuf);
+        let (mults, compute_time) = self.sweep(comm, &mut st)?;
+        Ok((comm.stats, mults, compute_time, self.owned_portions(me, &st.ybuf, r)))
+    }
+
+    /// Communication steps per vector phase under this plan's comm mode.
+    pub(crate) fn steps_per_phase(&self) -> usize {
+        match self.opts.mode {
+            CommMode::PointToPoint => self.sched.num_steps(),
+            CommMode::AllToAll => self.part.p - 1,
+        }
+    }
+
+    /// Fresh per-worker vector state for an r-column session on processor
+    /// `me`. `run`/`run_multi` build one per call; resident sessions keep
+    /// one alive across iterations.
+    pub(crate) fn worker_state(&self, me: usize, r: usize) -> WorkerState {
+        let panel_words = self.part.r_p[me].len() * self.b * r;
+        WorkerState {
+            r,
+            xbuf: vec![0.0f32; panel_words],
+            ybuf: vec![0.0f32; panel_words],
+            bufs: ExchangeBufs::default(),
+        }
+    }
+
+    /// Write processor `me`'s own x portions (all r columns, interleaved)
+    /// into `xbuf` from host-resident full vectors — the iteration-0
+    /// seeding. Resident sessions never touch host vectors again: later
+    /// iterates are produced portion-locally inside the simulator.
+    pub(crate) fn seed_own(&self, me: usize, xs: &[&[f32]], xbuf: &mut [f32]) {
         let b = self.b;
         let r = xs.len();
-        let opts = self.opts;
-        let slots = &self.slot_of[me];
-        let nslots = part.r_p[me].len();
-        let panel = b * r;
-
-        // ---- phase 1: gather r-deep row-block panels x[i], i ∈ R_p --------
-        let mut xbuf = vec![0.0f32; nslots * panel];
-        for (s, &i) in part.r_p[me].iter().enumerate() {
-            for off in part.portion(i, me, b) {
+        for (s, &i) in self.part.r_p[me].iter().enumerate() {
+            for off in self.part.portion(i, me, b) {
                 let dst = (s * b + off) * r;
                 for (l, x) in xs.iter().enumerate() {
                     xbuf[dst + l] = x[i * b + off];
                 }
             }
         }
-        let mut bufs = ExchangeBufs::default();
+    }
+
+    /// Index ranges, in the interleaved (|R_p|, b, r) panel space, of the
+    /// portions processor `me` owns — the coordinates it is canonical for
+    /// (portions tile each row block across Q_i, so global ownership is
+    /// exact and disjoint). Sessions reduce their scalars over these.
+    pub(crate) fn own_ranges(&self, me: usize, r: usize) -> Vec<std::ops::Range<usize>> {
+        let b = self.b;
+        self.part.r_p[me]
+            .iter()
+            .enumerate()
+            .map(|(s, &i)| {
+                let rg = self.part.portion(i, me, b);
+                (s * b + rg.start) * r..(s * b + rg.end) * r
+            })
+            .collect()
+    }
+
+    /// Extract processor `me`'s owned portions of a panel buffer as
+    /// (row block, sub-range, interleaved values) triples — the per-worker
+    /// output [`assemble_columns`] consumes.
+    pub(crate) fn owned_portions(
+        &self,
+        me: usize,
+        buf: &[f32],
+        r: usize,
+    ) -> Vec<(usize, std::ops::Range<usize>, Vec<f32>)> {
+        let b = self.b;
+        self.part.r_p[me]
+            .iter()
+            .enumerate()
+            .map(|(s, &i)| {
+                let rg = self.part.portion(i, me, b);
+                let vals = buf[(s * b + rg.start) * r..(s * b + rg.end) * r].to_vec();
+                (i, rg, vals)
+            })
+            .collect()
+    }
+
+    /// One full STTSV sweep over `st`, phased or overlapped per the plan's
+    /// options: phase 1 gathers from the own portions already in `st.xbuf`
+    /// (foreign panel segments are refreshed by the exchange before any
+    /// use), phase 2 contracts, phase 3 leaves the fully reduced owned
+    /// portions in `st.ybuf`. Returns (charged ternary mults, compute
+    /// time).
+    pub(crate) fn sweep(&self, comm: &mut Comm, st: &mut WorkerState) -> Result<(u64, Duration)> {
+        if self.opts.overlap {
+            self.sweep_overlap(comm, st)
+        } else {
+            self.sweep_phased(comm, st)
+        }
+    }
+
+    /// The stepped gather → compute → reduce sweep (the deterministic
+    /// oracle path), operating on portion-local panels in `st`.
+    fn sweep_phased(&self, comm: &mut Comm, st: &mut WorkerState) -> Result<(u64, Duration)> {
+        let me = comm.rank;
+        let part = self.part;
+        let b = self.b;
+        let r = st.r;
+        let opts = self.opts;
+        let slots = &self.slot_of[me];
+        let panel = b * r;
+        debug_assert_eq!(st.xbuf.len(), part.r_p[me].len() * panel);
+
+        // ---- phase 1: gather r-deep row-block panels x[i], i ∈ R_p --------
         exchange(
             comm,
             part,
@@ -849,8 +928,8 @@ impl<'a> SttsvPlan<'a> {
                 let rg = part.portion(i, from, b);
                 xbuf[(s * b + rg.start) * r..(s * b + rg.end) * r].copy_from_slice(data);
             },
-            &mut xbuf,
-            &mut bufs,
+            &mut st.xbuf,
+            &mut st.bufs,
         )?;
 
         // ---- phase 2: local ternary multiplications -----------------------
@@ -859,7 +938,9 @@ impl<'a> SttsvPlan<'a> {
         // packed buffer; dense-extract mode sweeps the plan's b³ copies.
         let compute_start = Instant::now();
         let tdata = self.tensor.packed_data();
-        let mut ybuf = vec![0.0f32; nslots * panel];
+        for v in st.ybuf.iter_mut() {
+            *v = 0.0;
+        }
         let mut mults: u64 = 0;
 
         // Concatenated per-group panels only pay off when the batch is one
@@ -875,9 +956,9 @@ impl<'a> SttsvPlan<'a> {
                 let mut ws = Vec::with_capacity(nb * panel);
                 for view in &group.views {
                     let (i, j, k) = (view.bi, view.bj, view.bk);
-                    us.extend_from_slice(&xbuf[slots[i] * panel..(slots[i] + 1) * panel]);
-                    vs.extend_from_slice(&xbuf[slots[j] * panel..(slots[j] + 1) * panel]);
-                    ws.extend_from_slice(&xbuf[slots[k] * panel..(slots[k] + 1) * panel]);
+                    us.extend_from_slice(&st.xbuf[slots[i] * panel..(slots[i] + 1) * panel]);
+                    vs.extend_from_slice(&st.xbuf[slots[j] * panel..(slots[j] + 1) * panel]);
+                    ws.extend_from_slice(&st.xbuf[slots[k] * panel..(slots[k] + 1) * panel]);
                 }
                 let (cis, cjs, cks) = if opts.packed {
                     self.engine
@@ -890,14 +971,32 @@ impl<'a> SttsvPlan<'a> {
                     let (i, j, k) = (view.bi, view.bj, view.bk);
                     let kind = classify(i, j, k);
                     let (fi, fj, fk) = factors(kind, i, j, k);
-                    axpy_panel(&mut ybuf, slots[i], panel, fi, &cis[s * panel..(s + 1) * panel]);
-                    axpy_panel(&mut ybuf, slots[j], panel, fj, &cjs[s * panel..(s + 1) * panel]);
-                    axpy_panel(&mut ybuf, slots[k], panel, fk, &cks[s * panel..(s + 1) * panel]);
+                    axpy_panel(
+                        &mut st.ybuf,
+                        slots[i],
+                        panel,
+                        fi,
+                        &cis[s * panel..(s + 1) * panel],
+                    );
+                    axpy_panel(
+                        &mut st.ybuf,
+                        slots[j],
+                        panel,
+                        fj,
+                        &cjs[s * panel..(s + 1) * panel],
+                    );
+                    axpy_panel(
+                        &mut st.ybuf,
+                        slots[k],
+                        panel,
+                        fk,
+                        &cks[s * panel..(s + 1) * panel],
+                    );
                     mults += r as u64 * block_ternary_mults(kind, b as u64);
                 }
             } else {
                 for s in 0..group.views.len() {
-                    mults += self.contract_one(me, group, s, &xbuf, &mut ybuf, r)?;
+                    mults += self.contract_one(me, group, s, &st.xbuf, &mut st.ybuf, r)?;
                 }
             }
         }
@@ -927,22 +1026,11 @@ impl<'a> SttsvPlan<'a> {
                     *o += v;
                 }
             },
-            &mut ybuf,
-            &mut bufs,
+            &mut st.ybuf,
+            &mut st.bufs,
         )?;
 
-        // Final owned portions of y (interleaved r-deep panels).
-        let portions: Vec<(usize, std::ops::Range<usize>, Vec<f32>)> = part.r_p[me]
-            .iter()
-            .enumerate()
-            .map(|(s, &i)| {
-                let rg = part.portion(i, me, b);
-                let vals = ybuf[(s * b + rg.start) * r..(s * b + rg.end) * r].to_vec();
-                (i, rg, vals)
-            })
-            .collect();
-
-        Ok((comm.stats, mults, compute_time, portions))
+        Ok((mults, compute_time))
     }
 
     /// Contract one owned block (per-block dispatch) and accumulate its
@@ -982,45 +1070,30 @@ impl<'a> SttsvPlan<'a> {
         Ok(r as u64 * block_ternary_mults(kind, b as u64))
     }
 
-    /// One simulated processor executing the §Perf P8 overlapped pipeline
-    /// for r packed columns: no phase barriers, no steps. Every gather
-    /// message leaves up front; arrivals are drained between per-block
-    /// contractions (blocks start the moment their three panels complete,
-    /// locally-complete blocks immediately); each reduce message streams
-    /// out the moment the destination portions it carries absorb their
-    /// last local contribution. Per-processor words and messages equal the
-    /// phased path's exactly — same message set, same payload layout.
-    fn worker_overlap(
-        &self,
-        comm: &mut Comm,
-        xs: &[&[f32]],
-    ) -> Result<(
-        CommStats,
-        u64,
-        Duration,
-        Vec<(usize, std::ops::Range<usize>, Vec<f32>)>,
-    )> {
+    /// The §Perf P8 overlapped pipeline sweep for r packed columns: no
+    /// phase barriers, no steps. Every gather message leaves up front;
+    /// arrivals are drained between per-block contractions (blocks start
+    /// the moment their three panels complete, locally-complete blocks
+    /// immediately); each reduce message streams out the moment the
+    /// destination portions it carries absorb their last local
+    /// contribution. Per-processor words and messages equal the phased
+    /// path's exactly — same message set, same payload layout. The event
+    /// loop polls with the sweep-tag filter, so a racing session peer's
+    /// collective traffic waits in the stash untouched.
+    fn sweep_overlap(&self, comm: &mut Comm, wst: &mut WorkerState) -> Result<(u64, Duration)> {
         let me = comm.rank;
         let part = self.part;
         let b = self.b;
-        let r = xs.len();
+        let r = wst.r;
         let slots = &self.slot_of[me];
-        let nslots = part.r_p[me].len();
         let panel = b * r;
         let meta = &self.overlap[me];
         let groups = &self.groups[me];
+        debug_assert_eq!(wst.xbuf.len(), part.r_p[me].len() * panel);
 
-        // Own x portions (the only panel data not arriving by message).
-        let mut xbuf = vec![0.0f32; nslots * panel];
-        for (s, &i) in part.r_p[me].iter().enumerate() {
-            for off in part.portion(i, me, b) {
-                let dst = (s * b + off) * r;
-                for (l, x) in xs.iter().enumerate() {
-                    xbuf[dst + l] = x[i * b + off];
-                }
-            }
+        for v in wst.ybuf.iter_mut() {
+            *v = 0.0;
         }
-
         let ctx = PipeCtx { part, slots, b, r, me };
         let mut st = PipeState {
             meta,
@@ -1034,8 +1107,8 @@ impl<'a> SttsvPlan<'a> {
             p1_left: meta.links.len(),
             p3_left: meta.links.len(),
             blocks_left: meta.blocks.len(),
-            xbuf,
-            ybuf: vec![0.0f32; nslots * panel],
+            xbuf: std::mem::take(&mut wst.xbuf),
+            ybuf: std::mem::take(&mut wst.ybuf),
             scratch: vec![0.0f32; meta.max_recv_words * r],
             payload: Vec::new(),
         };
@@ -1067,8 +1140,9 @@ impl<'a> SttsvPlan<'a> {
         let mut mults: u64 = 0;
         let mut compute_time = Duration::ZERO;
         while st.p1_left > 0 || st.p3_left > 0 || st.blocks_left > 0 {
-            // Drain everything that has already arrived (cheap, nonblocking).
-            while let Some((from, tag)) = comm.try_recv() {
+            // Drain every sweep message that has already arrived (cheap,
+            // nonblocking; collective tags stay stashed for the session).
+            while let Some((from, tag)) = comm.try_recv_matching(|t| t < TAG_COLL_BASE) {
                 st.recv_one(comm, &ctx, from, tag)?;
             }
             if let Some(bid) = st.ready.pop() {
@@ -1079,8 +1153,8 @@ impl<'a> SttsvPlan<'a> {
                 compute_time += t0.elapsed();
                 st.note_block_done(comm, &ctx, &group.views[idx as usize])?;
             } else if st.p1_left > 0 || st.p3_left > 0 {
-                // Nothing contractable: block until the next arrival.
-                let (from, tag) = comm.recv_any()?;
+                // Nothing contractable: block until the next sweep arrival.
+                let (from, tag) = comm.recv_any_matching(|t| t < TAG_COLL_BASE)?;
                 st.recv_one(comm, &ctx, from, tag)?;
             } else {
                 bail!(
@@ -1095,19 +1169,102 @@ impl<'a> SttsvPlan<'a> {
             "phase-3 message never streamed"
         );
 
-        // Final owned portions of y (interleaved r-deep panels).
-        let portions: Vec<(usize, std::ops::Range<usize>, Vec<f32>)> = part.r_p[me]
-            .iter()
-            .enumerate()
-            .map(|(s, &i)| {
-                let rg = part.portion(i, me, b);
-                let vals = st.ybuf[(s * b + rg.start) * r..(s * b + rg.end) * r].to_vec();
-                (i, rg, vals)
-            })
-            .collect();
-
-        Ok((comm.stats, mults, compute_time, portions))
+        let PipeState { xbuf, ybuf, .. } = st;
+        wst.xbuf = xbuf;
+        wst.ybuf = ybuf;
+        Ok((mults, compute_time))
     }
+
+    /// Closed-form per-processor communication of ONE r-deep STTSV under
+    /// this plan's comm mode — pure accounting over the schedule's
+    /// transfer set (point-to-point) or the §7.2.2 padded uniform buffers
+    /// (All-to-All); no simulator run. Matches the measured per-processor
+    /// `CommStats` of `run`/`run_multi` exactly in both execution modes
+    /// (tested against the comm-only dry run), so resident sessions assert
+    /// their per-iteration invariant against it cheaply.
+    pub fn expected_proc_stats(&self, r: usize) -> Vec<CommStats> {
+        let part = self.part;
+        let b = self.b;
+        let mut out = vec![CommStats::default(); part.p];
+        match self.opts.mode {
+            CommMode::PointToPoint => {
+                for xf in &self.sched.xfers {
+                    // phase-1 payload: the sender's portions of the shared
+                    // row blocks; phase-3 payload: the receiver's.
+                    let w1: usize = xf
+                        .row_blocks
+                        .iter()
+                        .map(|&i| part.portion(i, xf.from, b).len())
+                        .sum();
+                    let w3: usize = xf
+                        .row_blocks
+                        .iter()
+                        .map(|&i| part.portion(i, xf.to, b).len())
+                        .sum();
+                    let words = ((w1 + w3) * r) as u64;
+                    out[xf.from].sent_words += words;
+                    out[xf.from].sent_msgs += 2;
+                    out[xf.to].recv_words += words;
+                    out[xf.to].recv_msgs += 2;
+                }
+            }
+            CommMode::AllToAll => {
+                let pad = 2 * b.div_ceil(part.lambda1());
+                let words = (2 * (part.p - 1) * pad * r) as u64;
+                let msgs = 2 * (part.p - 1) as u64;
+                for s in out.iter_mut() {
+                    *s = CommStats {
+                        sent_words: words,
+                        recv_words: words,
+                        sent_msgs: msgs,
+                        recv_msgs: msgs,
+                    };
+                }
+            }
+        }
+        out
+    }
+}
+
+/// Per-worker vector state that persists across the sweeps of a resident
+/// session (and lives for exactly one sweep under `run`/`run_multi`): the
+/// slot-indexed interleaved (|R_p|, b, r) gather panel `xbuf` — whose own
+/// portions are the worker's canonical piece of the iterate, with foreign
+/// segments refreshed by every sweep's phase-1 exchange — the accumulate
+/// panel `ybuf`, and the phased path's reusable exchange buffers.
+pub(crate) struct WorkerState {
+    pub(crate) r: usize,
+    pub(crate) xbuf: Vec<f32>,
+    pub(crate) ybuf: Vec<f32>,
+    bufs: ExchangeBufs,
+}
+
+/// Assemble full result columns from per-processor owned portions: every
+/// global coordinate must be produced by exactly one processor (portion
+/// ownership is a partition of 0..n). Portion payloads are (len, r)
+/// interleaved panels.
+pub(crate) fn assemble_columns(
+    n: usize,
+    b: usize,
+    r: usize,
+    per_proc: Vec<Vec<(usize, std::ops::Range<usize>, Vec<f32>)>>,
+) -> Result<Vec<Vec<f32>>> {
+    let mut ys = vec![vec![0.0f32; n]; r];
+    let mut covered = vec![false; n];
+    for portions in per_proc {
+        for (i, range, vals) in portions {
+            for (t, off) in range.enumerate() {
+                let g = i * b + off;
+                ensure!(!covered[g], "coordinate {g} produced twice");
+                covered[g] = true;
+                for (l, ycol) in ys.iter_mut().enumerate() {
+                    ycol[g] = vals[t * r + l];
+                }
+            }
+        }
+    }
+    ensure!(covered.iter().all(|&c| c), "result vector not fully covered");
+    Ok(ys)
 }
 
 /// Immutable per-worker context threaded through the pipeline state
@@ -1907,6 +2064,25 @@ mod tests {
                     rep.fresh_payload_allocs, 0,
                     "overlap={overlap} round {round}: steady-state run allocated"
                 );
+            }
+        }
+    }
+
+    #[test]
+    fn expected_proc_stats_matches_comm_only_dry_run() {
+        // The pure-accounting closed form resident sessions assert against
+        // must reproduce the measured dry-run counters exactly — both comm
+        // modes, uneven portions (λ₁ ∤ b), r ∈ {1, 3}.
+        let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+        let b = 7usize;
+        let n = b * part.m;
+        let tensor = SymTensor::random(n, 401);
+        for mode in [CommMode::PointToPoint, CommMode::AllToAll] {
+            let plan =
+                SttsvPlan::new(&tensor, &part, ExecOpts { mode, ..Default::default() }).unwrap();
+            for r in [1usize, 3] {
+                let want = run_comm_only_multi(&part, b, mode, r).unwrap();
+                assert_eq!(plan.expected_proc_stats(r), want, "mode {mode:?} r={r}");
             }
         }
     }

@@ -1,0 +1,539 @@
+//! Iteration-resident solver sessions: the drivers the STTSV kernel
+//! exists to serve, run *inside* the simulated machine.
+//!
+//! The paper's motivating algorithms — the higher-order power method
+//! (Algorithm 1) and gradient-based symmetric CP (Algorithm 2) — are
+//! iterative, and an optimal per-kernel distribution only pays off when
+//! the surrounding iteration keeps data in the optimal layout. A
+//! [`SolverSession`] therefore spawns the P workers **once per solve**:
+//! each worker owns its tensor blocks *and* its portion of the iterate
+//! across iterations, and loops
+//!
+//! ```text
+//! sweep (gather → contract → reduce)      one STTSV, phased or overlapped
+//! scalar collectives                      λ = x·y, ‖y‖² — one allreduce
+//! normalize / update, δ                   portion-local + one allreduce
+//! converge-or-continue                    unanimous, from the δ allreduce
+//! ```
+//!
+//! entirely on the simulator. The δ allreduce doubles as the session's
+//! control channel: recursive doubling is bitwise deterministic across
+//! ranks ([`simulator::allreduce_sum`](crate::simulator::Comm::allreduce_sum)),
+//! so every worker observes the identical global δ and takes the identical
+//! branch — no host round trip, no designated root.
+//!
+//! **Communication invariant** (asserted on every iteration of every
+//! session): per-iteration per-processor comm equals exactly one
+//! r-deep STTSV ([`SttsvPlan::expected_proc_stats`]) plus the O(log P)
+//! scalar-allreduce words of [`allreduce_stats`]. Host↔worker
+//! full-vector traffic after the iteration-0 seeding is **zero words**:
+//! the host sees the iterate again only in the final assembled result.
+//! Property P9 cross-checks a k-iteration session against k independent
+//! `plan.run` calls plus host arithmetic.
+
+use super::{assemble_columns, ProcReport, SttsvPlan};
+use crate::simulator::{self, allreduce_stats, CommStats};
+use crate::tensor::linalg;
+use anyhow::{ensure, Result};
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::time::Duration;
+
+/// One resident power-method iteration record.
+#[derive(Debug, Clone)]
+pub struct PowerIter {
+    /// ‖y‖ before normalization (converges to |λ|).
+    pub norm: f32,
+    /// Rayleigh quotient λ = x·y at the unit iterate x (computed from the
+    /// distributed owned portions — never from a dense host sweep).
+    pub lambda: f32,
+    /// ‖x_t − x_{t−1}‖, the convergence criterion.
+    pub delta: f32,
+    /// Per-processor communication of THIS iteration: one STTSV plus the
+    /// two scalar allreduces. Identical on every iteration of a session.
+    pub comm: Vec<CommStats>,
+}
+
+/// Raw outcome of a resident power solve ([`crate::apps::power_method`]
+/// wraps this in its `PowerReport`).
+#[derive(Debug, Clone)]
+pub struct PowerSolve {
+    /// Final unit iterate, assembled from the workers' owned portions.
+    pub x: Vec<f32>,
+    pub iters: Vec<PowerIter>,
+    /// Whole-solve per-processor totals (STTSV + collectives).
+    pub per_proc: Vec<ProcReport>,
+    pub steps_per_phase: usize,
+    /// Simulator worker entries observed: P — one spawn per solve, however
+    /// many iterations ran (asserted) — or 0 for a zero-iteration solve.
+    pub worker_spawns: usize,
+}
+
+/// One resident CP sweep record.
+#[derive(Debug, Clone)]
+pub struct CpIter {
+    /// ‖∇f(X)‖ over all r columns at the sweep's pre-update X.
+    pub gnorm: f32,
+    /// Per-processor communication of THIS sweep: one r-deep STTSV plus an
+    /// r²-word and a 1-word allreduce.
+    pub comm: Vec<CommStats>,
+}
+
+/// Raw outcome of a resident CP solve.
+#[derive(Debug, Clone)]
+pub struct CpSolve {
+    /// Final factor columns after the last executed update.
+    pub x_cols: Vec<Vec<f32>>,
+    /// Gradient columns at the last executed sweep's pre-update X.
+    pub grad_cols: Vec<Vec<f32>>,
+    pub iters: Vec<CpIter>,
+    pub per_proc: Vec<ProcReport>,
+    pub steps_per_phase: usize,
+    /// Simulator worker entries observed: P — one spawn per solve
+    /// (asserted) — or 0 for a zero-sweep solve.
+    pub worker_spawns: usize,
+}
+
+/// Per-worker output of the resident power loop.
+struct PowerWorkerOut {
+    stats: CommStats,
+    mults: u64,
+    compute: Duration,
+    /// (norm, lambda, delta) per iteration — identical across ranks (all
+    /// three derive from bitwise-deterministic allreduces).
+    scalars: Vec<(f32, f32, f32)>,
+    per_iter: Vec<CommStats>,
+    portions: Vec<(usize, std::ops::Range<usize>, Vec<f32>)>,
+}
+
+/// Per-worker output of the resident CP loop.
+struct CpWorkerOut {
+    stats: CommStats,
+    mults: u64,
+    compute: Duration,
+    gnorms: Vec<f32>,
+    per_iter: Vec<CommStats>,
+    x_portions: Vec<(usize, std::ops::Range<usize>, Vec<f32>)>,
+    grad_portions: Vec<(usize, std::ops::Range<usize>, Vec<f32>)>,
+}
+
+/// All-zero per-processor reports for the degenerate zero-iteration solve.
+fn zero_proc_reports(p: usize) -> Vec<ProcReport> {
+    (0..p)
+        .map(|_| ProcReport {
+            stats: CommStats::default(),
+            ternary_mults: 0,
+            compute_time: Duration::ZERO,
+        })
+        .collect()
+}
+
+/// An iteration-resident solve bound to a prepared [`SttsvPlan`]: the
+/// tensor distribution, schedule, and buffer pools are the plan's; the
+/// session adds the driver loops that keep the *vector* distributed too.
+pub struct SolverSession<'p, 't> {
+    plan: &'p SttsvPlan<'t>,
+}
+
+impl<'p, 't> SolverSession<'p, 't> {
+    pub fn new(plan: &'p SttsvPlan<'t>) -> SolverSession<'p, 't> {
+        SolverSession { plan }
+    }
+
+    /// Resident higher-order power method (Algorithm 1): iterate
+    /// y = A ×₂ x ×₃ x, λ = x·y, x ← y/‖y‖ until ‖Δx‖ < tol or
+    /// `max_iters`, with every per-iteration quantity — λ, ‖y‖, δ —
+    /// reduced from the workers' owned portions. The input `x0` is
+    /// normalized host-side and seeds the workers once; after that the
+    /// full vector never crosses the host boundary until the final
+    /// assembly.
+    pub fn power_method(&self, x0: &[f32], max_iters: usize, tol: f32) -> Result<PowerSolve> {
+        let plan = self.plan;
+        let part = plan.part;
+        ensure!(x0.len() == plan.n, "x0 length {} != n {}", x0.len(), plan.n);
+        let mut seed_vec = x0.to_vec();
+        linalg::normalize(&mut seed_vec);
+        if max_iters == 0 {
+            // Zero iterations: nothing to solve or communicate — return
+            // the normalized seed (matching the pre-session apps API).
+            return Ok(PowerSolve {
+                x: seed_vec,
+                iters: Vec::new(),
+                per_proc: zero_proc_reports(part.p),
+                steps_per_phase: plan.steps_per_phase(),
+                worker_spawns: 0,
+            });
+        }
+        let seed = seed_vec.as_slice();
+        let entries = AtomicUsize::new(0);
+
+        let (outs, _metrics) = simulator::run_ext(part.p, Some(&plan.pools), |comm| {
+            entries.fetch_add(1, Ordering::Relaxed);
+            let me = comm.rank;
+            let mut st = plan.worker_state(me, 1);
+            plan.seed_own(me, &[seed], &mut st.xbuf);
+            let ranges = plan.own_ranges(me, 1);
+            let mut scalars = Vec::new();
+            let mut per_iter = Vec::new();
+            let mut mults = 0u64;
+            let mut compute = Duration::ZERO;
+            for _ in 0..max_iters {
+                let before = comm.stats;
+                let (m, ct) = plan.sweep(comm, &mut st)?;
+                mults += m;
+                compute += ct;
+                // λ = x·y and ‖y‖² from the owned portions only, fused
+                // into one 2-word allreduce.
+                let (mut lam, mut nrm2) = (0.0f64, 0.0f64);
+                for rg in &ranges {
+                    for idx in rg.clone() {
+                        let (xv, yv) = (st.xbuf[idx] as f64, st.ybuf[idx] as f64);
+                        lam += xv * yv;
+                        nrm2 += yv * yv;
+                    }
+                }
+                let mut s = [lam as f32, nrm2 as f32];
+                comm.allreduce_sum(&mut s)?;
+                let (lambda, norm) = (s[0], s[1].sqrt());
+                let inv = if norm > 0.0 { 1.0 / norm } else { 0.0 };
+                // Normalize portion-locally, accumulating ‖Δx‖² on the fly.
+                let mut d2 = 0.0f64;
+                for rg in &ranges {
+                    for idx in rg.clone() {
+                        let xn = st.ybuf[idx] * inv;
+                        let d = (xn - st.xbuf[idx]) as f64;
+                        d2 += d * d;
+                        st.xbuf[idx] = xn;
+                    }
+                }
+                // The δ allreduce is the session's control channel: every
+                // rank receives the identical bits and branches identically.
+                let delta = comm.allreduce_scalar(d2 as f32)?.sqrt();
+                scalars.push((norm, lambda, delta));
+                per_iter.push(comm.stats.since(&before));
+                if delta < tol {
+                    break;
+                }
+            }
+            let portions = plan.owned_portions(me, &st.xbuf, 1);
+            Ok(PowerWorkerOut {
+                stats: comm.stats,
+                mults,
+                compute,
+                scalars,
+                per_iter,
+                portions,
+            })
+        })?;
+
+        let worker_spawns = entries.load(Ordering::Relaxed);
+        ensure!(
+            worker_spawns == part.p,
+            "resident session must spawn each worker exactly once per solve"
+        );
+        let k = outs[0].scalars.len();
+        for (p, o) in outs.iter().enumerate() {
+            ensure!(
+                o.scalars.len() == k && o.per_iter.len() == k,
+                "worker {p} ran {} iterations, worker 0 ran {k} — the \
+                 convergence decision was not unanimous",
+                o.scalars.len()
+            );
+        }
+        // The acceptance invariant: every iteration of every processor
+        // moved exactly one phased-STTSV's words plus the collective
+        // closed form — nothing else (in particular, no per-iteration
+        // host gather/broadcast exists to move).
+        let expected_sttsv = plan.expected_proc_stats(1);
+        let mut iters = Vec::with_capacity(k);
+        for t in 0..k {
+            let comm: Vec<CommStats> = outs.iter().map(|o| o.per_iter[t]).collect();
+            for (p, c) in comm.iter().enumerate() {
+                let mut want = expected_sttsv[p];
+                want.absorb(&allreduce_stats(part.p, p, 2));
+                want.absorb(&allreduce_stats(part.p, p, 1));
+                ensure!(
+                    *c == want,
+                    "iteration {t} proc {p}: comm {c:?} != one STTSV + \
+                     O(log P) collectives {want:?}"
+                );
+            }
+            let (norm, lambda, delta) = outs[0].scalars[t];
+            iters.push(PowerIter { norm, lambda, delta, comm });
+        }
+        let per_proc: Vec<ProcReport> = outs
+            .iter()
+            .map(|o| ProcReport {
+                stats: o.stats,
+                ternary_mults: o.mults,
+                compute_time: o.compute,
+            })
+            .collect();
+        let portions = outs.into_iter().map(|o| o.portions).collect();
+        let mut cols = assemble_columns(plan.n, plan.b, 1, portions)?;
+        let x = cols.pop().expect("one result column");
+        Ok(PowerSolve {
+            x,
+            iters,
+            per_proc,
+            steps_per_phase: plan.steps_per_phase(),
+            worker_spawns,
+        })
+    }
+
+    /// Resident multi-sweep symmetric CP driver (Algorithm 2 iterated):
+    /// each sweep computes Y = A ×₂ x_ℓ ×₃ x_ℓ for all r columns as ONE
+    /// batched STTSV, reduces the Gram matrix XᵀX by an r²-word allreduce
+    /// (then squares it elementwise: G = (XᵀX) ∗ (XᵀX)), forms the
+    /// gradient ∇_ℓ = X·G[:,ℓ] − y_ℓ portion-locally, and takes the step
+    /// X ← X − η·∇. Stops when ‖∇‖ < tol (a 1-word allreduce — the
+    /// session's control channel) or after `max_sweeps`. With
+    /// `max_sweeps = 1, step = 0` this is exactly Algorithm 2: one
+    /// distributed gradient evaluation.
+    pub fn cp_sweeps(
+        &self,
+        x0_cols: &[Vec<f32>],
+        max_sweeps: usize,
+        step: f32,
+        tol: f32,
+    ) -> Result<CpSolve> {
+        let plan = self.plan;
+        let part = plan.part;
+        let r = x0_cols.len();
+        ensure!(r >= 1, "cp_sweeps needs at least one factor column");
+        for (l, x) in x0_cols.iter().enumerate() {
+            ensure!(x.len() == plan.n, "x0[{l}] length {} != n {}", x.len(), plan.n);
+        }
+        if max_sweeps == 0 {
+            // Zero sweeps: the factor matrix is untouched and no gradient
+            // was evaluated.
+            return Ok(CpSolve {
+                x_cols: x0_cols.to_vec(),
+                grad_cols: Vec::new(),
+                iters: Vec::new(),
+                per_proc: zero_proc_reports(part.p),
+                steps_per_phase: plan.steps_per_phase(),
+                worker_spawns: 0,
+            });
+        }
+        let views: Vec<&[f32]> = x0_cols.iter().map(|x| x.as_slice()).collect();
+        let entries = AtomicUsize::new(0);
+
+        let (outs, _metrics) = simulator::run_ext(part.p, Some(&plan.pools), |comm| {
+            entries.fetch_add(1, Ordering::Relaxed);
+            let me = comm.rank;
+            let mut st = plan.worker_state(me, r);
+            plan.seed_own(me, &views, &mut st.xbuf);
+            let ranges = plan.own_ranges(me, r);
+            let mut gbuf = vec![0.0f32; st.xbuf.len()];
+            let mut tmp = vec![0.0f32; r];
+            let mut gnorms = Vec::new();
+            let mut per_iter = Vec::new();
+            let mut mults = 0u64;
+            let mut compute = Duration::ZERO;
+            for _ in 0..max_sweeps {
+                let before = comm.stats;
+                // One r-deep batched STTSV: ybuf[·, ℓ] = A ×₂ x_ℓ ×₃ x_ℓ.
+                let (m, ct) = plan.sweep(comm, &mut st)?;
+                mults += m;
+                compute += ct;
+                // Gram partials from owned coordinates, one r² allreduce,
+                // then the elementwise square: G = (XᵀX) ∗ (XᵀX).
+                let mut gram64 = vec![0.0f64; r * r];
+                for rg in &ranges {
+                    let mut base = rg.start;
+                    while base < rg.end {
+                        for a in 0..r {
+                            let xa = st.xbuf[base + a] as f64;
+                            for l in 0..r {
+                                gram64[a * r + l] += xa * st.xbuf[base + l] as f64;
+                            }
+                        }
+                        base += r;
+                    }
+                }
+                let mut gram: Vec<f32> = gram64.iter().map(|&v| v as f32).collect();
+                comm.allreduce_sum(&mut gram)?;
+                for v in gram.iter_mut() {
+                    *v *= *v;
+                }
+                // ∇_ℓ = Σ_a x_a·G[a][ℓ] − y_ℓ and the step, portion-local.
+                let mut gn2 = 0.0f64;
+                for rg in &ranges {
+                    let mut base = rg.start;
+                    while base < rg.end {
+                        for (l, t) in tmp.iter_mut().enumerate() {
+                            let mut v = 0.0f32;
+                            for a in 0..r {
+                                v += st.xbuf[base + a] * gram[a * r + l];
+                            }
+                            *t = v - st.ybuf[base + l];
+                        }
+                        for (l, &g) in tmp.iter().enumerate() {
+                            gbuf[base + l] = g;
+                            gn2 += (g as f64) * (g as f64);
+                            st.xbuf[base + l] -= step * g;
+                        }
+                        base += r;
+                    }
+                }
+                let gnorm = comm.allreduce_scalar(gn2 as f32)?.sqrt();
+                gnorms.push(gnorm);
+                per_iter.push(comm.stats.since(&before));
+                if gnorm < tol {
+                    break;
+                }
+            }
+            let x_portions = plan.owned_portions(me, &st.xbuf, r);
+            let grad_portions = plan.owned_portions(me, &gbuf, r);
+            Ok(CpWorkerOut {
+                stats: comm.stats,
+                mults,
+                compute,
+                gnorms,
+                per_iter,
+                x_portions,
+                grad_portions,
+            })
+        })?;
+
+        let worker_spawns = entries.load(Ordering::Relaxed);
+        ensure!(
+            worker_spawns == part.p,
+            "resident session must spawn each worker exactly once per solve"
+        );
+        let k = outs[0].gnorms.len();
+        for (p, o) in outs.iter().enumerate() {
+            ensure!(
+                o.gnorms.len() == k && o.per_iter.len() == k,
+                "worker {p} ran {} sweeps, worker 0 ran {k} — the \
+                 convergence decision was not unanimous",
+                o.gnorms.len()
+            );
+        }
+        let expected_sttsv = plan.expected_proc_stats(r);
+        let mut iters = Vec::with_capacity(k);
+        for t in 0..k {
+            let comm: Vec<CommStats> = outs.iter().map(|o| o.per_iter[t]).collect();
+            for (p, c) in comm.iter().enumerate() {
+                let mut want = expected_sttsv[p];
+                want.absorb(&allreduce_stats(part.p, p, r * r));
+                want.absorb(&allreduce_stats(part.p, p, 1));
+                ensure!(
+                    *c == want,
+                    "sweep {t} proc {p}: comm {c:?} != one r-deep STTSV + \
+                     O(log P) collectives {want:?}"
+                );
+            }
+            iters.push(CpIter { gnorm: outs[0].gnorms[t], comm });
+        }
+        let per_proc: Vec<ProcReport> = outs
+            .iter()
+            .map(|o| ProcReport {
+                stats: o.stats,
+                ternary_mults: o.mults,
+                compute_time: o.compute,
+            })
+            .collect();
+        let mut x_all = Vec::with_capacity(part.p);
+        let mut g_all = Vec::with_capacity(part.p);
+        for o in outs {
+            x_all.push(o.x_portions);
+            g_all.push(o.grad_portions);
+        }
+        let x_cols = assemble_columns(plan.n, plan.b, r, x_all)?;
+        let grad_cols = assemble_columns(plan.n, plan.b, r, g_all)?;
+        Ok(CpSolve {
+            x_cols,
+            grad_cols,
+            iters,
+            per_proc,
+            steps_per_phase: plan.steps_per_phase(),
+            worker_spawns,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{CommMode, ExecOpts};
+    use crate::partition::TetraPartition;
+    use crate::steiner::spherical;
+    use crate::tensor::SymTensor;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn resident_power_method_converges_and_comm_is_iteration_invariant() {
+        let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+        let b = 6usize;
+        let n = b * part.m;
+        let (tensor, cols) = SymTensor::odeco(n, &[5.0, 2.0, 1.0], 61);
+        let mut rng = Rng::new(62);
+        let mut x0 = cols[0].clone();
+        for v in x0.iter_mut() {
+            *v += 0.2 * rng.normal_f32();
+        }
+        let plan = SttsvPlan::new(&tensor, &part, ExecOpts::default()).unwrap();
+        let solve = SolverSession::new(&plan).power_method(&x0, 60, 1e-6).unwrap();
+        assert_eq!(solve.worker_spawns, part.p);
+        let last = solve.iters.last().unwrap();
+        assert!((last.lambda - 5.0).abs() < 1e-2, "lambda={}", last.lambda);
+        assert!(last.delta < 1e-6);
+        let align = crate::tensor::linalg::dot(&solve.x, &cols[0]).abs();
+        assert!(align > 0.999, "alignment={align}");
+        // every iteration's per-proc comm is identical (the session already
+        // asserted it equals STTSV + collectives exactly).
+        for it in &solve.iters {
+            assert_eq!(it.comm, solve.iters[0].comm);
+        }
+    }
+
+    #[test]
+    fn resident_power_method_runs_in_alltoall_mode_too() {
+        let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+        let b = 5usize;
+        let n = b * part.m;
+        let (tensor, cols) = SymTensor::odeco(n, &[4.0, 1.0], 63);
+        let mut rng = Rng::new(64);
+        let mut x0 = cols[0].clone();
+        for v in x0.iter_mut() {
+            *v += 0.2 * rng.normal_f32();
+        }
+        let plan = SttsvPlan::new(
+            &tensor,
+            &part,
+            ExecOpts { mode: CommMode::AllToAll, ..Default::default() },
+        )
+        .unwrap();
+        let solve = SolverSession::new(&plan).power_method(&x0, 40, 1e-6).unwrap();
+        assert!((solve.iters.last().unwrap().lambda - 4.0).abs() < 2e-2);
+    }
+
+    #[test]
+    fn resident_cp_sweeps_reduce_the_gradient_norm() {
+        let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+        let b = 3usize;
+        let n = b * part.m;
+        let (tensor, cols) = SymTensor::odeco(n, &[3.0, 1.5], 65);
+        let mut rng = Rng::new(66);
+        // start near the planted factors so plain gradient descent descends
+        let x0: Vec<Vec<f32>> = cols
+            .iter()
+            .take(2)
+            .zip([3.0f32, 1.5])
+            .map(|(c, lam)| {
+                let s = lam.cbrt();
+                c.iter().map(|v| s * v + 0.05 * rng.normal_f32()).collect()
+            })
+            .collect();
+        let plan = SttsvPlan::new(&tensor, &part, ExecOpts::default()).unwrap();
+        let solve = SolverSession::new(&plan).cp_sweeps(&x0, 25, 0.05, 0.0).unwrap();
+        assert_eq!(solve.worker_spawns, part.p);
+        let first = solve.iters.first().unwrap().gnorm;
+        let last = solve.iters.last().unwrap().gnorm;
+        assert!(
+            last < 0.5 * first,
+            "gradient norm did not descend: {first} -> {last}"
+        );
+    }
+}

@@ -5,7 +5,10 @@
 //!   schedule      regenerate Figure 1 (the 12-step schedule) or any q's
 //!   run           one distributed STTSV; verify vs oracle; print comm
 //!   power-method  Algorithm 1 end to end on an odeco tensor
+//!                 (iteration-resident session by default; --no-resident
+//!                 selects the host-centric per-iteration baseline)
 //!   cp-gradient   Algorithm 2 end to end
+//!   cp-als        resident multi-sweep CP gradient descent
 //!   sweep         comm-cost sweep vs the Theorem 1 lower bound
 //!   verify        exhaustive invariant checks for a given q
 //!   bounds        print the paper's closed-form costs
@@ -31,16 +34,18 @@ fn main() {
         Some("run") => cmd_run(&args),
         Some("power-method") => cmd_power_method(&args),
         Some("cp-gradient") => cmd_cp_gradient(&args),
+        Some("cp-als") => cmd_cp_als(&args),
         Some("mttkrp") => cmd_mttkrp(&args),
         Some("sweep") => cmd_sweep(&args),
         Some("verify") => cmd_verify(&args),
         Some("bounds") => cmd_bounds(&args),
         _ => {
             eprintln!(
-                "usage: sttsv <tables|schedule|run|power-method|cp-gradient|mttkrp\
-                 |sweep|verify|bounds> [--q N] [--b N] [--mode p2p|a2a] \
+                "usage: sttsv <tables|schedule|run|power-method|cp-gradient|cp-als\
+                 |mttkrp|sweep|verify|bounds> [--q N] [--b N] [--mode p2p|a2a] \
                  [--backend native|pjrt] [--iters N] [--sqs8] [--no-batch] \
-                 [--packed|--no-packed] [--overlap|--no-overlap]"
+                 [--packed|--no-packed] [--overlap|--no-overlap] \
+                 [--resident|--no-resident]"
             );
             std::process::exit(2);
         }
@@ -208,7 +213,11 @@ fn cmd_power_method(args: &Args) -> Result<()> {
     let n = b * part.m;
     let iters: usize = args.get_or("iters", 50usize);
     let opts = exec_opts(args)?;
-    println!("higher-order power method on {label}: n={n}, {opts:?}");
+    let resident = !args.flag("no-resident");
+    println!(
+        "higher-order power method on {label}: n={n}, {} driver, {opts:?}",
+        if resident { "iteration-resident" } else { "host-centric" }
+    );
     let lambdas = [5.0f32, 2.0, 1.0];
     let (tensor, cols) = SymTensor::odeco(n, &lambdas, args.get_or("seed", 7u64));
     let mut rng = Rng::new(args.get_or("seed", 7u64) + 1);
@@ -216,10 +225,16 @@ fn cmd_power_method(args: &Args) -> Result<()> {
     for v in x0.iter_mut() {
         *v += 0.25 * rng.normal_f32();
     }
-    let rep = apps::power_method(&tensor, &part, &x0, iters, 1e-6, opts)?;
+    let rep = if resident {
+        apps::power_method(&tensor, &part, &x0, iters, 1e-6, opts)?
+    } else {
+        apps::power_method_host(&tensor, &part, &x0, iters, 1e-6, opts)?
+    };
     for (t, it) in rep.iters.iter().enumerate() {
+        let iter_sent = it.comm.iter().map(|s| s.sent_words).max().unwrap_or(0);
         println!(
-            "iter {:>3}: ||y|| = {:<10.6} lambda = {:<10.6} delta = {:.3e}",
+            "iter {:>3}: ||y|| = {:<10.6} lambda = {:<10.6} delta = {:.3e}  \
+             comm {iter_sent} w/proc",
             t + 1,
             it.norm,
             it.lambda,
@@ -233,11 +248,57 @@ fn cmd_power_method(args: &Args) -> Result<()> {
     );
     let max_sent = rep.comm.iter().map(|s| s.sent_words).max().unwrap();
     println!(
-        "total comm over {} iters: max sent/proc = {} words ({} per iter)",
+        "total comm over {} iters: max sent/proc = {} words ({} per iter{})",
         rep.iters.len(),
         max_sent,
-        max_sent / rep.iters.len() as u64
+        max_sent / rep.iters.len() as u64,
+        if resident {
+            "; STTSV + O(log P) collective words, zero host vector traffic"
+        } else {
+            "; plus 2n host↔worker vector words per iteration, uncounted"
+        }
     );
+    Ok(())
+}
+
+fn cmd_cp_als(args: &Args) -> Result<()> {
+    let (part, label) = partition_for(args)?;
+    let b: usize = args.get_or("b", 4usize);
+    let n = b * part.m;
+    let r: usize = args.get_or("r", 2usize);
+    let sweeps: usize = args.get_or("sweeps", 25usize);
+    let step: f32 = args.get_or("step", 0.05f32);
+    let opts = exec_opts(args)?;
+    println!(
+        "resident CP gradient descent on {label}: n={n}, r={r}, {sweeps} sweeps, \
+         step {step}, {opts:?}"
+    );
+    let lambdas: Vec<f32> = (0..r).map(|l| (r - l) as f32).collect();
+    let (tensor, cols) = SymTensor::odeco(n, &lambdas, args.get_or("seed", 17u64));
+    let mut rng = Rng::new(args.get_or("seed", 17u64) + 1);
+    // perturbed planted factors: a basin where plain gradient descent works
+    let x0: Vec<Vec<f32>> = cols
+        .iter()
+        .zip(&lambdas)
+        .map(|(c, lam)| {
+            let s = lam.cbrt();
+            c.iter().map(|v| s * v + 0.05 * rng.normal_f32()).collect()
+        })
+        .collect();
+    let f0 = apps::cp_objective(&tensor, &x0);
+    let rep = apps::cp_als_sweep(&tensor, &part, &x0, sweeps, step, 1e-6, opts)?;
+    for (t, it) in rep.iters.iter().enumerate() {
+        let iter_sent = it.comm.iter().map(|s| s.sent_words).max().unwrap_or(0);
+        println!("sweep {:>3}: ||grad|| = {:.3e}  comm {iter_sent} w/proc", t + 1, it.gnorm);
+    }
+    let f1 = apps::cp_objective(&tensor, &rep.x_cols);
+    println!(
+        "objective: {f0:.6} -> {f1:.6} ({:.1}% reduced) over {} resident sweeps",
+        100.0 * (1.0 - f1 / f0),
+        rep.iters.len()
+    );
+    let max_sent = rep.comm.iter().map(|s| s.sent_words).max().unwrap();
+    println!("comm: max sent/proc = {max_sent} words total (vector never left the workers)");
     Ok(())
 }
 

@@ -27,6 +27,20 @@
 //!   steady state performs **zero per-message heap allocations**, with no
 //!   return-channel race against early worker teardown). Word/message
 //!   accounting is identical to the blocking API (asserted in tests).
+//!
+//! **Collectives** (§Perf P9): [`Comm::allreduce_sum`] /
+//! [`Comm::allreduce_scalar`] implement recursive-doubling allreduce over
+//! the same counted fabric — O(log P) messages of `width` words per
+//! processor, closed form in [`allreduce_stats`]. Results are *bitwise
+//! identical on every rank* (each rank combines the same operand tree, and
+//! f32 addition is commutative), which is what lets resident solver
+//! sessions take the converge-or-continue branch unanimously with no host
+//! round trip. Collective tags live above [`TAG_COLL_BASE`] and are
+//! sequence-numbered per processor, so they never collide with algorithm
+//! traffic; the tag-filtered polling variants
+//! ([`Comm::try_recv_matching`] / [`Comm::recv_any_matching`]) let an
+//! event-loop worker drain its own messages while a faster peer's
+//! collective traffic waits in the stash.
 
 pub mod cost;
 
@@ -50,6 +64,76 @@ impl CommStats {
     /// Total words moved through this processor's NIC.
     pub fn total_words(&self) -> u64 {
         self.sent_words + self.recv_words
+    }
+
+    /// Accumulate another counter set into this one — THE aggregation
+    /// primitive (iteration totals, bench sums); replaces the hand-rolled
+    /// four-field loops that used to live in `apps` and the benches.
+    pub fn absorb(&mut self, other: &CommStats) {
+        self.sent_words += other.sent_words;
+        self.recv_words += other.recv_words;
+        self.sent_msgs += other.sent_msgs;
+        self.recv_msgs += other.recv_msgs;
+    }
+
+    /// Counter delta since an earlier snapshot of the same processor's
+    /// stats (used for per-iteration accounting in resident sessions).
+    pub fn since(&self, earlier: &CommStats) -> CommStats {
+        CommStats {
+            sent_words: self.sent_words - earlier.sent_words,
+            recv_words: self.recv_words - earlier.recv_words,
+            sent_msgs: self.sent_msgs - earlier.sent_msgs,
+            recv_msgs: self.recv_msgs - earlier.recv_msgs,
+        }
+    }
+}
+
+/// Collective tags live at and above this value; all point-to-point
+/// algorithm traffic (stepped exchange tags, overlap gather/reduce tags)
+/// stays below it, so `tag < TAG_COLL_BASE` cleanly separates the two
+/// streams for the tag-filtered polling APIs.
+pub const TAG_COLL_BASE: u64 = 1 << 32;
+
+/// Largest power of two ≤ p (the recursive-doubling core size).
+fn pow2_floor(p: usize) -> usize {
+    let mut pp = 1usize;
+    while pp * 2 <= p {
+        pp *= 2;
+    }
+    pp
+}
+
+/// Closed-form per-rank cost of ONE [`Comm::allreduce_sum`] over `width`
+/// words on `p` processors (recursive doubling with the standard
+/// fold-in/fold-out for non-powers of two):
+///
+/// * ranks ≥ 2^⌊log₂P⌋ (the "extra" ranks): 1 message each way;
+/// * ranks < P − 2^⌊log₂P⌋ (partners of an extra rank): ⌊log₂P⌋ + 1
+///   messages each way;
+/// * all other ranks: ⌊log₂P⌋ messages each way;
+///
+/// each message `width` words. Asserted equal to the measured counters in
+/// the simulator tests, and the "O(log P) scalar words" term of the
+/// resident-session per-iteration invariant (§Perf P9).
+pub fn allreduce_stats(p: usize, rank: usize, width: usize) -> CommStats {
+    if p <= 1 {
+        return CommStats::default();
+    }
+    let pp = pow2_floor(p);
+    let rem = p - pp;
+    let lg = pp.trailing_zeros() as u64;
+    let msgs = if rank >= pp {
+        1
+    } else if rank < rem {
+        lg + 1
+    } else {
+        lg
+    };
+    CommStats {
+        sent_words: msgs * width as u64,
+        recv_words: msgs * width as u64,
+        sent_msgs: msgs,
+        recv_msgs: msgs,
     }
 }
 
@@ -178,6 +262,13 @@ pub struct Comm {
     pool: BufPool,
     inflight: Arc<InflightGauge>,
     barrier: Arc<Barrier>,
+    /// Sequence number for collective tags: every collective call on this
+    /// processor consumes one tag above [`TAG_COLL_BASE`]. All processors
+    /// issue collectives in the same program order, so the tags agree
+    /// across ranks and every collective instance keys its messages
+    /// uniquely — back-to-back allreduces between the same pair can never
+    /// collide, however far one rank races ahead.
+    coll_seq: u64,
     /// Word/message counters for this processor.
     pub stats: CommStats,
 }
@@ -247,26 +338,100 @@ impl Comm {
     /// `None` when nothing has arrived. Consume the reported message with
     /// [`Comm::recv_into`] (or [`Comm::recv`]) before polling again.
     pub fn try_recv(&mut self) -> Option<(usize, u64)> {
+        self.try_recv_matching(|_| true)
+    }
+
+    /// [`Comm::try_recv`] restricted to tags satisfying `pred`:
+    /// non-matching arrivals are stashed (not lost) but never reported.
+    /// Event-loop workers poll with `|t| t < TAG_COLL_BASE` so a faster
+    /// peer's collective traffic waits in the stash instead of derailing
+    /// the sweep protocol.
+    pub fn try_recv_matching(&mut self, pred: impl Fn(u64) -> bool) -> Option<(usize, u64)> {
         while let Ok(pkt) = self.inbox.try_recv() {
             self.stash_insert(pkt);
         }
-        self.stash.keys().next().copied()
+        self.stash.keys().find(|&&(_, t)| pred(t)).copied()
     }
 
     /// Blocking wait for *any* message: returns the `(from, tag)` of an
     /// available packet (stashed first, then the mailbox). Like
     /// [`Comm::try_recv`], does not consume the message.
     pub fn recv_any(&mut self) -> Result<(usize, u64)> {
-        if let Some(&key) = self.stash.keys().next() {
+        self.recv_any_matching(|_| true)
+    }
+
+    /// [`Comm::recv_any`] restricted to tags satisfying `pred`: blocks
+    /// until a matching message is available, stashing (never dropping)
+    /// non-matching arrivals along the way.
+    pub fn recv_any_matching(&mut self, pred: impl Fn(u64) -> bool) -> Result<(usize, u64)> {
+        if let Some(key) = self.stash.keys().find(|&&(_, t)| pred(t)).copied() {
             return Ok(key);
         }
-        let pkt = self
-            .inbox
-            .recv()
-            .map_err(|_| anyhow!("inbox closed while waiting for any message"))?;
-        let key = (pkt.from, pkt.tag);
-        self.stash_insert(pkt);
-        Ok(key)
+        loop {
+            let pkt = self
+                .inbox
+                .recv()
+                .map_err(|_| anyhow!("inbox closed while waiting for any message"))?;
+            let key = (pkt.from, pkt.tag);
+            self.stash_insert(pkt);
+            if pred(key.1) {
+                return Ok(key);
+            }
+        }
+    }
+
+    /// Recursive-doubling allreduce: every processor ends with the
+    /// element-wise sum of all P `buf` contributions, **bitwise identical
+    /// on every rank** (each rank combines the same operand tree; f32
+    /// addition is commutative). Non-powers of two use the standard
+    /// fold-in/fold-out. Cost per rank is [`allreduce_stats`] exactly:
+    /// O(log P) messages of `buf.len()` words, fully counted in
+    /// [`Comm::stats`]. All processors must call collectives in the same
+    /// program order (tags are sequence-numbered per processor).
+    pub fn allreduce_sum(&mut self, buf: &mut [f32]) -> Result<()> {
+        let tag = TAG_COLL_BASE + self.coll_seq;
+        self.coll_seq += 1;
+        if self.p == 1 {
+            return Ok(());
+        }
+        let me = self.rank;
+        let pp = pow2_floor(self.p);
+        let rem = self.p - pp;
+        if me >= pp {
+            // Extra rank: fold into the partner, receive the final sum —
+            // no combine scratch needed on this branch.
+            self.isend(me - pp, tag, buf)?;
+            self.recv_into(me - pp, tag, buf)?;
+            return Ok(());
+        }
+        let mut scratch = vec![0.0f32; buf.len()];
+        if me < rem {
+            self.recv_into(me + pp, tag, &mut scratch)?;
+            for (b, s) in buf.iter_mut().zip(&scratch) {
+                *b += s;
+            }
+        }
+        let mut mask = 1usize;
+        while mask < pp {
+            let partner = me ^ mask;
+            self.isend(partner, tag, buf)?;
+            self.recv_into(partner, tag, &mut scratch)?;
+            for (b, s) in buf.iter_mut().zip(&scratch) {
+                *b += s;
+            }
+            mask <<= 1;
+        }
+        if me < rem {
+            self.isend(me + pp, tag, buf)?;
+        }
+        Ok(())
+    }
+
+    /// One-word [`Comm::allreduce_sum`]: the global sum of `v`.
+    pub fn allreduce_scalar(&mut self, v: f32) -> Result<f32> {
+        let mut buf = [v];
+        self.allreduce_sum(&mut buf)?;
+        Ok(buf[0])
     }
 
     /// Stash an out-of-order packet. A `(from, tag)` key must identify at
@@ -372,6 +537,7 @@ where
                     pool,
                     inflight,
                     barrier,
+                    coll_seq: 0,
                     stats: CommStats::default(),
                 };
                 let out = body(&mut comm);
@@ -583,6 +749,102 @@ mod tests {
             }
         });
         assert!(err.is_err());
+    }
+
+    #[test]
+    fn allreduce_matches_closed_form_and_is_rank_deterministic() {
+        // Recursive-doubling allreduce on powers of two and awkward P
+        // alike: (a) every rank ends with the same bits, (b) the value is
+        // the true sum, (c) per-rank CommStats equal the allreduce_stats
+        // closed form — the collective side of the §Perf P9 invariant.
+        for p in [2usize, 3, 4, 5, 7, 10, 14, 16] {
+            for width in [1usize, 3] {
+                let out = run(p, |comm| {
+                    let mut buf: Vec<f32> = (0..width)
+                        .map(|w| 1.0 + 0.25 * (comm.rank * width + w) as f32)
+                        .collect();
+                    comm.allreduce_sum(&mut buf)?;
+                    Ok((buf, comm.stats))
+                })
+                .unwrap();
+                for w in 0..width {
+                    let want: f32 =
+                        (0..p).map(|r| 1.0 + 0.25 * (r * width + w) as f32).sum();
+                    assert!(
+                        (out[0].0[w] - want).abs() < 1e-3 * want.abs().max(1.0),
+                        "p={p} width={width} w={w}: {} vs {want}",
+                        out[0].0[w]
+                    );
+                }
+                for (rank, (buf, stats)) in out.iter().enumerate() {
+                    assert_eq!(
+                        buf, &out[0].0,
+                        "p={p} width={width}: rank {rank} result differs bitwise"
+                    );
+                    assert_eq!(
+                        *stats,
+                        allreduce_stats(p, rank, width),
+                        "p={p} width={width} rank {rank} stats"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn back_to_back_allreduces_use_distinct_tags() {
+        // Two immediately successive collectives between the same partner
+        // pairs must not collide even when one rank races ahead: the
+        // per-processor tag sequence keys every instance uniquely.
+        let p = 6;
+        let out = run(p, |comm| {
+            let a = comm.allreduce_scalar(1.0)?;
+            let b = comm.allreduce_scalar(comm.rank as f32)?;
+            Ok((a, b))
+        })
+        .unwrap();
+        let rank_sum = (p * (p - 1) / 2) as f32;
+        for (a, b) in out {
+            assert_eq!(a, p as f32);
+            assert_eq!(b, rank_sum);
+        }
+    }
+
+    #[test]
+    fn tag_filtered_polling_leaves_collective_traffic_stashed() {
+        // A collective-tagged message from a racing peer must be invisible
+        // to a sweep's tag-filtered drain, yet stay available for a later
+        // targeted receive.
+        run(2, |comm| {
+            if comm.rank == 0 {
+                comm.isend(1, TAG_COLL_BASE + 7, &[1.0, 2.0])?;
+                comm.barrier();
+            } else {
+                comm.barrier(); // sender's isend happens-before its barrier
+                // Unfiltered poll sees it (draining it into the stash)...
+                let key = comm.try_recv();
+                assert_eq!(key, Some((0, TAG_COLL_BASE + 7)));
+                // ...the sweep-tag filter does not...
+                assert!(comm.try_recv_matching(|t| t < TAG_COLL_BASE).is_none());
+                // ...and the targeted receive still consumes it.
+                let mut buf = [0.0f32; 2];
+                comm.recv_into(0, TAG_COLL_BASE + 7, &mut buf)?;
+                assert_eq!(buf, [1.0, 2.0]);
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn commstats_absorb_and_since_are_inverse() {
+        let a = CommStats { sent_words: 5, recv_words: 7, sent_msgs: 2, recv_msgs: 3 };
+        let b = CommStats { sent_words: 11, recv_words: 13, sent_msgs: 4, recv_msgs: 5 };
+        let mut acc = a;
+        acc.absorb(&b);
+        assert_eq!(acc.since(&a), b);
+        assert_eq!(acc.since(&b), a);
+        assert_eq!(acc.total_words(), a.total_words() + b.total_words());
     }
 
     #[test]

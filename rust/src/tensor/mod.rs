@@ -9,10 +9,27 @@ pub mod linalg;
 use crate::util::rng::Rng;
 
 /// Packed fully-symmetric tensor of dimension n × n × n.
-#[derive(Debug, Clone)]
+#[derive(Debug)]
 pub struct SymTensor {
     pub n: usize,
     data: Vec<f32>,
+    /// How many times the O(n³) sequential oracles ([`SymTensor::sttsv`],
+    /// [`SymTensor::rayleigh`]) ran on THIS instance — regression
+    /// instrumentation: the distributed apps must never fall back to a
+    /// dense host sweep once their plan is built (asserted in apps tests).
+    dense_sttsv_calls: std::sync::atomic::AtomicU64,
+}
+
+impl Clone for SymTensor {
+    fn clone(&self) -> SymTensor {
+        // The oracle-call counter is per-instance instrumentation, not
+        // tensor state: clones start at zero.
+        SymTensor {
+            n: self.n,
+            data: self.data.clone(),
+            dense_sttsv_calls: std::sync::atomic::AtomicU64::new(0),
+        }
+    }
 }
 
 /// Number of packed entries for dimension n: n(n+1)(n+2)/6.
@@ -52,6 +69,7 @@ impl SymTensor {
         SymTensor {
             n,
             data: vec![0.0; packed_len(n)],
+            dense_sttsv_calls: std::sync::atomic::AtomicU64::new(0),
         }
     }
 
@@ -61,6 +79,7 @@ impl SymTensor {
         SymTensor {
             n,
             data: (0..packed_len(n)).map(|_| rng.normal_f32()).collect(),
+            dense_sttsv_calls: std::sync::atomic::AtomicU64::new(0),
         }
     }
 
@@ -167,6 +186,8 @@ impl SymTensor {
     /// accumulation for a trustworthy reference.
     pub fn sttsv(&self, x: &[f32]) -> Vec<f32> {
         assert_eq!(x.len(), self.n);
+        self.dense_sttsv_calls
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         let mut y = vec![0.0f64; self.n];
         let mut idx = 0usize;
         for i in 0..self.n {
@@ -204,6 +225,15 @@ impl SymTensor {
     pub fn rayleigh(&self, x: &[f32]) -> f32 {
         let y = self.sttsv(x);
         y.iter().zip(x).map(|(a, b)| (*a as f64) * (*b as f64)).sum::<f64>() as f32
+    }
+
+    /// How many times the O(n³) sequential oracles ran on this instance.
+    /// The distributed iterative apps must leave this untouched after
+    /// their plan is built — λ, norms, and deltas all come from the
+    /// distributed owned portions (regression-tested in `apps`).
+    pub fn dense_sttsv_invocations(&self) -> u64 {
+        self.dense_sttsv_calls
+            .load(std::sync::atomic::Ordering::Relaxed)
     }
 }
 

@@ -25,13 +25,25 @@
 //!     equal to the phased path's in both PointToPoint and AllToAll — the
 //!     α-β-γ model cost is invariant under overlap; steady-state reruns
 //!     allocate zero payload buffers.
+//! P9: a k-iteration resident solver session equals k independent
+//!     `plan.run`/`plan.run_multi` calls plus host scalar arithmetic
+//!     (values within 1e-4), while its per-processor CommStats equal
+//!     EXACTLY k × one phased STTSV + k × the recursive-doubling
+//!     collective closed form — in both comm modes, for the power driver
+//!     (r = 1) and the CP driver (r = 4); workers are spawned once per
+//!     solve, and no host↔worker vector traffic exists between
+//!     iterations for the comm counters to miss.
 
-use sttsv::coordinator::{run_comm_only, run_sttsv_opts, CommMode, ExecOpts, SttsvPlan};
+use sttsv::coordinator::session::SolverSession;
+use sttsv::coordinator::{
+    run_comm_only, run_comm_only_multi, run_sttsv_opts, CommMode, ExecOpts, SttsvPlan,
+};
 use sttsv::partition::{classify, BlockKind, TetraPartition};
 use sttsv::runtime::{packed_ternary_mults, Backend};
 use sttsv::schedule::CommSchedule;
+use sttsv::simulator::{allreduce_stats, CommStats};
 use sttsv::steiner::{spherical, sqs8};
-use sttsv::tensor::{PackedBlockView, SymTensor};
+use sttsv::tensor::{linalg, PackedBlockView, SymTensor};
 use sttsv::util::proptest::check;
 use sttsv::util::rng::Rng;
 
@@ -463,6 +475,220 @@ fn p8_overlap_matches_phased_and_comm_cost_is_invariant() {
             Ok(())
         },
     );
+}
+
+#[test]
+fn p9_resident_power_session_equals_k_host_runs() {
+    // A k-iteration resident session must reproduce, within f32
+    // reassociation tolerance, exactly what k independent plan.run calls
+    // plus host scalar arithmetic produce — and its comm must be exactly
+    // k × (one phased STTSV + the collective closed form), per processor,
+    // in both comm modes.
+    for mode in [CommMode::PointToPoint, CommMode::AllToAll] {
+        let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+        let b = 6usize;
+        let n = b * part.m;
+        let (tensor, cols) = SymTensor::odeco(n, &[5.0, 2.0, 1.0], 0x911);
+        let mut rng = Rng::new(0x912);
+        let mut x0 = cols[0].clone();
+        for v in x0.iter_mut() {
+            *v += 0.2 * rng.normal_f32();
+        }
+        let k = 6usize;
+        let plan =
+            SttsvPlan::new(&tensor, &part, ExecOpts { mode, ..Default::default() }).unwrap();
+        // tol = 0 pins the session to exactly k iterations.
+        let solve = SolverSession::new(&plan).power_method(&x0, k, 0.0).unwrap();
+        assert_eq!(solve.iters.len(), k, "{mode:?}");
+        assert_eq!(solve.worker_spawns, part.p, "{mode:?}");
+
+        // Host-centric replica: k independent plan.run calls.
+        let mut x = x0.clone();
+        linalg::normalize(&mut x);
+        for t in 0..k {
+            let rep = plan.run(&x).unwrap();
+            let mut y = rep.y;
+            let lambda = linalg::dot(&x, &y);
+            let norm = linalg::normalize(&mut y);
+            let delta = x
+                .iter()
+                .zip(&y)
+                .map(|(a, b)| {
+                    let d = a - b;
+                    (d * d) as f64
+                })
+                .sum::<f64>()
+                .sqrt() as f32;
+            let it = &solve.iters[t];
+            assert!(
+                (it.lambda - lambda).abs() < 1e-4 * lambda.abs().max(1.0),
+                "{mode:?} iter {t}: lambda {} vs host {lambda}",
+                it.lambda
+            );
+            assert!(
+                (it.norm - norm).abs() < 1e-4 * norm.abs().max(1.0),
+                "{mode:?} iter {t}: norm {} vs host {norm}",
+                it.norm
+            );
+            assert!(
+                (it.delta - delta).abs() < 1e-4,
+                "{mode:?} iter {t}: delta {} vs host {delta}",
+                it.delta
+            );
+            x = y;
+        }
+        for i in 0..n {
+            assert!(
+                (solve.x[i] - x[i]).abs() < 1e-4,
+                "{mode:?} x[{i}]: resident {} vs host {}",
+                solve.x[i],
+                x[i]
+            );
+        }
+
+        // Comm: session totals == k × (phased STTSV dry run + collectives).
+        let dry = run_comm_only(&part, b, mode).unwrap();
+        for p in 0..part.p {
+            let mut per_iter = dry[p];
+            per_iter.absorb(&allreduce_stats(part.p, p, 2));
+            per_iter.absorb(&allreduce_stats(part.p, p, 1));
+            let mut want = CommStats::default();
+            for _ in 0..k {
+                want.absorb(&per_iter);
+            }
+            assert_eq!(
+                solve.per_proc[p].stats, want,
+                "{mode:?} proc {p}: session comm != k × (STTSV + collectives)"
+            );
+        }
+    }
+}
+
+#[test]
+fn p9_resident_cp_session_equals_k_host_multi_runs() {
+    // The r = 4 instance: a k-sweep resident CP session vs k independent
+    // plan.run_multi calls + host Gram/gradient arithmetic — values within
+    // 1e-4, comm exactly k × (one r-deep STTSV + r²-word and 1-word
+    // allreduces), in both comm modes.
+    for mode in [CommMode::PointToPoint, CommMode::AllToAll] {
+        let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+        let b = 4usize;
+        let n = b * part.m;
+        let r = 4usize;
+        let tensor = SymTensor::random(n, 0x921);
+        let mut rng = Rng::new(0x922);
+        // Small columns keep ‖XᵀX‖ modest so the fixed step is stable over
+        // the k sweeps (the test pins session == host equality, not
+        // convergence).
+        let x0: Vec<Vec<f32>> = (0..r)
+            .map(|_| rng.normal_vec(n).iter().map(|v| 0.3 * v).collect())
+            .collect();
+        let k = 4usize;
+        let step = 0.01f32;
+        let plan =
+            SttsvPlan::new(&tensor, &part, ExecOpts { mode, ..Default::default() }).unwrap();
+        let solve = SolverSession::new(&plan).cp_sweeps(&x0, k, step, 0.0).unwrap();
+        assert_eq!(solve.iters.len(), k, "{mode:?}");
+        assert_eq!(solve.worker_spawns, part.p, "{mode:?}");
+
+        // Host replica.
+        let mut x = x0.clone();
+        let mut last_grad: Vec<Vec<f32>> = Vec::new();
+        for t in 0..k {
+            let rep = plan.run_multi(&x).unwrap();
+            let mut gram = vec![0.0f32; r * r];
+            for a in 0..r {
+                for l in 0..r {
+                    let d = linalg::dot(&x[a], &x[l]);
+                    gram[a * r + l] = d * d;
+                }
+            }
+            let mut gn2 = 0.0f64;
+            let mut grad = vec![vec![0.0f32; n]; r];
+            for l in 0..r {
+                for i in 0..n {
+                    let mut v = 0.0f32;
+                    for a in 0..r {
+                        v += x[a][i] * gram[a * r + l];
+                    }
+                    let g = v - rep.ys[l][i];
+                    grad[l][i] = g;
+                    gn2 += (g as f64) * (g as f64);
+                }
+            }
+            for l in 0..r {
+                for i in 0..n {
+                    x[l][i] -= step * grad[l][i];
+                }
+            }
+            let gnorm = gn2.sqrt() as f32;
+            let it = &solve.iters[t];
+            assert!(
+                (it.gnorm - gnorm).abs() < 1e-4 * gnorm.abs().max(1.0),
+                "{mode:?} sweep {t}: gnorm {} vs host {gnorm}",
+                it.gnorm
+            );
+            last_grad = grad;
+        }
+        for l in 0..r {
+            let scale = x[l].iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+            for i in 0..n {
+                assert!(
+                    (solve.x_cols[l][i] - x[l][i]).abs() < 1e-4 * scale,
+                    "{mode:?} x[{l}][{i}]: resident {} vs host {}",
+                    solve.x_cols[l][i],
+                    x[l][i]
+                );
+                assert!(
+                    (solve.grad_cols[l][i] - last_grad[l][i]).abs() < 1e-3 * scale.max(10.0),
+                    "{mode:?} grad[{l}][{i}]: resident {} vs host {}",
+                    solve.grad_cols[l][i],
+                    last_grad[l][i]
+                );
+            }
+        }
+
+        // Comm: totals == k × (r-deep STTSV dry run + collectives).
+        let dry = run_comm_only_multi(&part, b, mode, r).unwrap();
+        for p in 0..part.p {
+            let mut per_iter = dry[p];
+            per_iter.absorb(&allreduce_stats(part.p, p, r * r));
+            per_iter.absorb(&allreduce_stats(part.p, p, 1));
+            let mut want = CommStats::default();
+            for _ in 0..k {
+                want.absorb(&per_iter);
+            }
+            assert_eq!(
+                solve.per_proc[p].stats, want,
+                "{mode:?} proc {p}: session comm != k × (r-deep STTSV + collectives)"
+            );
+        }
+    }
+}
+
+#[test]
+fn p9_collectives_match_recursive_doubling_closed_form() {
+    // Integration-level twin of the simulator unit test, at the partition
+    // sizes the sessions actually use (P = 4, 10, 14, 30): measured
+    // allreduce counters == allreduce_stats for the session widths.
+    use sttsv::simulator;
+    for p in [4usize, 10, 14, 30] {
+        for width in [1usize, 2, 16] {
+            let out = simulator::run(p, |comm| {
+                let mut buf = vec![comm.rank as f32 + 0.5; width];
+                comm.allreduce_sum(&mut buf)?;
+                Ok((buf, comm.stats))
+            })
+            .unwrap();
+            let want: f32 = (0..p).map(|r| r as f32 + 0.5).sum();
+            for (rank, (buf, stats)) in out.iter().enumerate() {
+                assert!(buf.iter().all(|&v| (v - want).abs() < 1e-2 * want),
+                    "p={p} width={width} rank={rank}");
+                assert_eq!(buf, &out[0].0, "p={p} rank {rank}: not bitwise identical");
+                assert_eq!(*stats, allreduce_stats(p, rank, width), "p={p} rank {rank}");
+            }
+        }
+    }
 }
 
 #[test]
