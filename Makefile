@@ -1,7 +1,7 @@
 # Top-level convenience targets (the code's "run `make artifacts`" pointers).
 
 .PHONY: artifacts artifacts-quick test test-release-asserts pytest bench \
-	bench-smoke bench-overlap bench-e2e bench-e2e-smoke
+	bench-smoke bench-overlap bench-compiled bench-e2e bench-e2e-smoke
 
 # AOT-lower the JAX/Pallas kernels (incl. the multi-RHS block_multi_* set)
 # to HLO text artifacts for the Rust PJRT backend.
@@ -37,6 +37,14 @@ bench-smoke:
 # comm-cost invariance and steady-state zero allocations inline.
 bench-overlap:
 	cd rust && STTSV_BENCH_SMOKE=1 STTSV_BENCH_SECTION=e12 \
+		cargo bench --bench kernel_throughput
+
+# Targeted E14 compiled-vs-interpreted series only (quick sampling):
+# sweep-program throughput vs the packed interpreter and 1-vs-4 compute
+# threads, asserting bitwise equality and comm/mults invariance inline.
+# Writes rust/BENCH_compiled.json.
+bench-compiled:
+	cd rust && STTSV_BENCH_SMOKE=1 STTSV_BENCH_SECTION=e14 \
 		cargo bench --bench kernel_throughput
 
 # E13 end-to-end power method: resident session vs host-centric loop

@@ -16,10 +16,18 @@
 //! throughput of the zero-copy packed execution path vs the dense-extract
 //! path, including plan-construction time.
 //!
-//! New in this PR, the E12 series (§Perf P8): overlapped-pipeline vs
-//! phased wall-clock and peak in-flight payload bytes across a P sweep at
-//! fixed n, with the comm-cost invariance and the steady-state
-//! zero-allocation property asserted inline.
+//! The E12 series (§Perf P8): overlapped-pipeline vs phased wall-clock
+//! and peak in-flight payload bytes across a P sweep at fixed n, with the
+//! comm-cost invariance and the steady-state zero-allocation property
+//! asserted inline.
+//!
+//! New in this PR, the E14 series (§Perf P10): plan-compiled branch-free
+//! sweep programs (register-tiled microkernels over precompiled run
+//! descriptors) vs the packed interpreter, and 1 vs 4 intra-worker
+//! compute threads, at fixed n = 120 across P ∈ {4, 10, 14} — with
+//! bitwise equality and exact comm/mults invariance asserted inline.
+//! `STTSV_BENCH_SECTION=e14` (`make bench-compiled`) runs only this
+//! series, writing BENCH_compiled.json.
 //!
 //! Emits a machine-readable `BENCH_kernel.json` next to the package root so
 //! the perf trajectory is tracked across PRs.
@@ -141,6 +149,26 @@ struct OverlapRow {
     steady_fresh_allocs: u64,
 }
 
+/// One JSON record of the E14 compiled-vs-interpreted series (§Perf P10).
+/// GF/s are computed from the CHARGED ternary mults (2 flops per
+/// (unique entry, contribution) pair, the §7.1 accounting both paths
+/// execute exactly), so the two columns are directly comparable.
+struct CompiledRow {
+    p: usize,
+    b: usize,
+    r: usize,
+    interp_ms: f64,
+    compiled_ms: f64,
+    pool4_ms: f64,
+    interp_gflops: f64,
+    compiled_gflops: f64,
+    pool4_gflops: f64,
+    /// interpreted / compiled wall-clock (>1 = compiled faster)
+    compiled_speedup: f64,
+    /// compiled single-thread / 4-thread wall-clock (>1 = pool scales)
+    pool_scaling: f64,
+}
+
 /// Smoke mode (STTSV_BENCH_SMOKE=1, used by CI): scale down a
 /// (warmup, samples) pair so every path runs but quickly.
 fn reps(warmup: usize, samples: usize) -> (usize, usize) {
@@ -190,12 +218,13 @@ fn bench_e12() -> anyhow::Result<Vec<OverlapRow>> {
         let tensor = SymTensor::random(n, 120 + part.p as u64);
         let mut rng = Rng::new(121);
         let xs: Vec<Vec<f32>> = (0..r).map(|_| rng.normal_vec(n)).collect();
-        let plan_overlap = SttsvPlan::new(&tensor, &part, ExecOpts::default())?;
-        let plan_phased = SttsvPlan::new(
-            &tensor,
-            &part,
-            ExecOpts { overlap: false, ..Default::default() },
-        )?;
+        // compiled: false pins this series to the packed interpreter it
+        // has measured since E12 was introduced (like E10/E11); the
+        // compiled executor's delta is E14's business.
+        let overlap_opts = ExecOpts { compiled: false, ..Default::default() };
+        let plan_overlap = SttsvPlan::new(&tensor, &part, overlap_opts)?;
+        let phased_opts = ExecOpts { overlap: false, compiled: false, ..Default::default() };
+        let plan_phased = SttsvPlan::new(&tensor, &part, phased_opts)?;
         // Warm both plans' pools and grab the in-flight peaks, then assert
         // comm-cost invariance and the steady-state zero-alloc property.
         let rep_o = plan_overlap.run_multi(&xs)?;
@@ -254,15 +283,153 @@ fn bench_e12() -> anyhow::Result<Vec<OverlapRow>> {
     Ok(rows)
 }
 
+/// E14 (§Perf P10): plan-compiled branch-free sweep programs vs the PR 2
+/// packed interpreter, and the 1- vs 4-thread intra-worker compute pool,
+/// at fixed n = 120 across the Steiner-realizable P ∈ {4, 10, 14}. The
+/// phased path is measured (deterministic; E12 already covers overlap),
+/// with bitwise equality at compute_threads = 1 and exact comm/mults
+/// invariance asserted inline — a passing run certifies the §Perf P10
+/// acceptance alongside the numbers.
+fn bench_e14() -> anyhow::Result<Vec<CompiledRow>> {
+    header("E14: compiled sweep programs vs packed interpreter (fixed n = 120, phased)");
+    let n = 120usize;
+    let mut rows = Vec::new();
+    let mut t = Table::new([
+        "P",
+        "b",
+        "r",
+        "interp ms",
+        "compiled ms",
+        "pool4 ms",
+        "interp GF/s",
+        "compiled GF/s",
+        "compiled speedup",
+        "pool 1->4 scaling",
+    ]);
+    let systems: [(&str, SteinerSystem); 3] = [
+        ("S(4,3,3)", trivial(4)?),
+        ("spherical q=2", spherical(2)?),
+        ("SQS(8)", sqs8()),
+    ];
+    for (label, sys) in systems {
+        let part = TetraPartition::from_steiner(&sys)?;
+        assert_eq!(n % part.m, 0, "{label}: m must divide the fixed n");
+        let b = n / part.m;
+        let tensor = SymTensor::random(n, 140 + part.p as u64);
+        let mut rng = Rng::new(141);
+        let interp_opts = ExecOpts { overlap: false, compiled: false, ..Default::default() };
+        let interp_plan = SttsvPlan::new(&tensor, &part, interp_opts)?;
+        let compiled_opts = ExecOpts { overlap: false, ..Default::default() };
+        let compiled_plan = SttsvPlan::new(&tensor, &part, compiled_opts)?;
+        let pool_opts = ExecOpts { overlap: false, compute_threads: 4, ..Default::default() };
+        let pool_plan = SttsvPlan::new(&tensor, &part, pool_opts)?;
+        for r in [1usize, 4] {
+            let xs: Vec<Vec<f32>> = (0..r).map(|_| rng.normal_vec(n)).collect();
+            // Warm the pools and certify the invariants once per config.
+            let ri = interp_plan.run_multi(&xs)?;
+            let rc = compiled_plan.run_multi(&xs)?;
+            let rp = pool_plan.run_multi(&xs)?;
+            for p in 0..part.p {
+                assert_eq!(
+                    ri.per_proc[p].stats, rc.per_proc[p].stats,
+                    "{label} r={r} proc {p}: compiled changed comm"
+                );
+                assert_eq!(
+                    ri.per_proc[p].stats, rp.per_proc[p].stats,
+                    "{label} r={r} proc {p}: pool changed comm"
+                );
+                assert_eq!(
+                    ri.per_proc[p].ternary_mults, rc.per_proc[p].ternary_mults,
+                    "{label} r={r} proc {p}: charged mults diverged"
+                );
+                assert_eq!(
+                    ri.per_proc[p].ternary_mults, rp.per_proc[p].ternary_mults,
+                    "{label} r={r} proc {p}: pool changed charged mults"
+                );
+            }
+            for (l, col) in ri.ys.iter().enumerate() {
+                for i in 0..n {
+                    assert_eq!(
+                        col[i].to_bits(),
+                        rc.ys[l][i].to_bits(),
+                        "{label} r={r} col {l} i={i}: compiled not bitwise on phased"
+                    );
+                }
+            }
+            // 2 flops (mul + add) per charged ternary contribution.
+            let flops = 2.0 * ri.per_proc.iter().map(|pr| pr.ternary_mults).sum::<u64>() as f64;
+            let t_i = btime(1, 7, || {
+                std::hint::black_box(interp_plan.run_multi(&xs).unwrap());
+            });
+            let t_c = btime(1, 7, || {
+                std::hint::black_box(compiled_plan.run_multi(&xs).unwrap());
+            });
+            let t_p = btime(1, 7, || {
+                std::hint::black_box(pool_plan.run_multi(&xs).unwrap());
+            });
+            let row = CompiledRow {
+                p: part.p,
+                b,
+                r,
+                interp_ms: t_i.median.as_secs_f64() * 1e3,
+                compiled_ms: t_c.median.as_secs_f64() * 1e3,
+                pool4_ms: t_p.median.as_secs_f64() * 1e3,
+                interp_gflops: gflops(flops, &t_i),
+                compiled_gflops: gflops(flops, &t_c),
+                pool4_gflops: gflops(flops, &t_p),
+                compiled_speedup: t_i.median.as_secs_f64() / t_c.median.as_secs_f64(),
+                pool_scaling: t_c.median.as_secs_f64() / t_p.median.as_secs_f64(),
+            };
+            t.row([
+                format!("{} ({label})", part.p),
+                b.to_string(),
+                r.to_string(),
+                format!("{:.2}", row.interp_ms),
+                format!("{:.2}", row.compiled_ms),
+                format!("{:.2}", row.pool4_ms),
+                format!("{:.3}", row.interp_gflops),
+                format!("{:.3}", row.compiled_gflops),
+                format!("{:.2}x", row.compiled_speedup),
+                format!("{:.2}x", row.pool_scaling),
+            ]);
+            rows.push(row);
+        }
+    }
+    t.print();
+    for row in &rows {
+        let verdict = if row.compiled_speedup >= 1.3 { "PASS" } else { "BELOW TARGET" };
+        println!(
+            "acceptance (P={}, r={}): compiled = {:.2}x interpreter (target >= 1.3x \
+             single-threaded): {verdict}; pool 1->4 scaling {:.2}x",
+            row.p, row.r, row.compiled_speedup, row.pool_scaling
+        );
+    }
+    println!(
+        "invariants asserted inline: bitwise-equal results at compute_threads = 1 \
+         (phased), per-proc words/messages/charged mults exactly equal across \
+         interpreter, compiled, and pooled runs. Wall-clock is machine-dependent \
+         — recorded in the JSON either way."
+    );
+    Ok(rows)
+}
+
 fn main() -> anyhow::Result<()> {
-    // `make bench-overlap` runs only the E12 overlap series. It writes a
-    // separate file so a targeted run never clobbers the full sweep's
-    // BENCH_kernel.json (the tracked perf-trajectory record).
+    // `make bench-overlap` / `make bench-compiled` run one targeted
+    // series each, writing separate files so a targeted run never
+    // clobbers the full sweep's BENCH_kernel.json (the tracked
+    // perf-trajectory record).
     if std::env::var("STTSV_BENCH_SECTION").as_deref() == Ok("e12") {
         let overlap_rows = bench_e12()?;
-        let json = render_json(&[], &[], &[], &overlap_rows);
+        let json = render_json(&[], &[], &[], &overlap_rows, &[]);
         std::fs::write("BENCH_overlap.json", &json)?;
         println!("\nwrote BENCH_overlap.json ({} bytes; E12 section only)", json.len());
+        return Ok(());
+    }
+    if std::env::var("STTSV_BENCH_SECTION").as_deref() == Ok("e14") {
+        let compiled_rows = bench_e14()?;
+        let json = render_json(&[], &[], &[], &[], &compiled_rows);
+        std::fs::write("BENCH_compiled.json", &json)?;
+        println!("\nwrote BENCH_compiled.json ({} bytes; E14 section only)", json.len());
         return Ok(());
     }
     header("E10: fused block-contraction kernel throughput");
@@ -528,8 +695,11 @@ fn main() -> anyhow::Result<()> {
     for bb in [16usize, 32] {
         let n = bb * part.m;
         let tensor = SymTensor::random(n, 70 + bb as u64);
+        // compiled: false pins this series to the PR 2 packed INTERPRETER
+        // it has always measured; the compiled delta is E14's business.
         let mk = |packed: bool| {
-            SttsvPlan::new(&tensor, &part, ExecOpts { packed, ..Default::default() }).unwrap()
+            let opts = ExecOpts { packed, compiled: false, ..Default::default() };
+            SttsvPlan::new(&tensor, &part, opts).unwrap()
         };
         let t_build_p = btime(1, 7, || {
             std::hint::black_box(mk(true));
@@ -581,8 +751,11 @@ fn main() -> anyhow::Result<()> {
     // ---- E12: overlapped pipeline vs phased (§Perf P8) -------------------
     let overlap_rows = bench_e12()?;
 
+    // ---- E14: compiled sweep programs vs interpreter (§Perf P10) ---------
+    let compiled_rows = bench_e14()?;
+
     // ---- machine-readable output -----------------------------------------
-    let json = render_json(&kernel_rows, &engine_rows, &packed_rows, &overlap_rows);
+    let json = render_json(&kernel_rows, &engine_rows, &packed_rows, &overlap_rows, &compiled_rows);
     std::fs::write("BENCH_kernel.json", &json)?;
     println!("\nwrote BENCH_kernel.json ({} bytes)", json.len());
 
@@ -595,12 +768,13 @@ fn main() -> anyhow::Result<()> {
     Ok(())
 }
 
-/// Hand-rolled JSON (no serde is vendored): four arrays of flat records.
+/// Hand-rolled JSON (no serde is vendored): five arrays of flat records.
 fn render_json(
     kernel: &[KernelRow],
     engine: &[EngineRow],
     packed: &[PackedRow],
     overlap: &[OverlapRow],
+    compiled: &[CompiledRow],
 ) -> String {
     let mut s = String::new();
     s.push_str("{\n  \"bench\": \"kernel_throughput\",\n  \"kernel_rsweep\": [\n");
@@ -677,6 +851,29 @@ fn render_json(
             o.overlap_peak_inflight_bytes,
             o.steady_fresh_allocs,
             if idx + 1 < overlap.len() { "," } else { "" }
+        );
+    }
+    s.push_str("  ],\n  \"compiled_vs_interpreted\": [\n");
+    for (idx, c) in compiled.iter().enumerate() {
+        let _ = write!(
+            s,
+            "    {{\"p\": {}, \"b\": {}, \"r\": {}, \"interp_ms\": {:.4}, \
+             \"compiled_ms\": {:.4}, \"pool4_ms\": {:.4}, \
+             \"interp_gflops\": {:.4}, \"compiled_gflops\": {:.4}, \
+             \"pool4_gflops\": {:.4}, \"compiled_speedup\": {:.4}, \
+             \"pool_scaling\": {:.4}}}{}\n",
+            c.p,
+            c.b,
+            c.r,
+            c.interp_ms,
+            c.compiled_ms,
+            c.pool4_ms,
+            c.interp_gflops,
+            c.compiled_gflops,
+            c.pool4_gflops,
+            c.compiled_speedup,
+            c.pool_scaling,
+            if idx + 1 < compiled.len() { "," } else { "" }
         );
     }
     s.push_str("  ]\n}\n");

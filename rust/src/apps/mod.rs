@@ -18,6 +18,12 @@
 //! tensor serves all r columns, with messages packed r words deep — words
 //! scale as r× one STTSV but message counts (latency) do not grow with r.
 //!
+//! On default options every sweep executes the plan's **compiled sweep
+//! programs** (§Perf P10) through the register-tiled microkernels, with
+//! `ExecOpts::compute_threads` optionally fanning each worker's stream
+//! over an intra-worker compute pool — neither changes a word, message,
+//! or charged ternary mult of the accounting above.
+//!
 //! [`power_method_host`] keeps the pre-session host-centric loop (one
 //! `plan.run` per iteration, scalars on the host) as the baseline the E13
 //! bench compares against; it computes λ = x·y from the vectors it
@@ -318,6 +324,7 @@ mod tests {
             batch: true,
             packed: true,
             overlap: true,
+            ..Default::default()
         }
     }
 

@@ -60,12 +60,13 @@
 pub mod baselines;
 pub mod session;
 
-use crate::partition::{classify, BlockKind, TetraPartition};
-use crate::runtime::{lanes_axpy, Backend, Engine};
+use crate::partition::{block_ternary_mults, classify, factors, BlockKind, TetraPartition};
+use crate::runtime::{exec_block_runs, lanes_add, lanes_axpy, Backend, Engine, RunDesc};
 use crate::schedule::CommSchedule;
 use crate::simulator::{self, BufPool, Comm, CommStats, TAG_COLL_BASE};
 use crate::tensor::{PackedBlockView, SymTensor};
 use anyhow::{bail, ensure, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
@@ -91,6 +92,26 @@ impl std::str::FromStr for CommMode {
 }
 
 /// Execution options for [`run_sttsv_opts`].
+///
+/// ## Flag interactions ([`ExecOpts::normalize`])
+///
+/// The flags are not fully independent; [`SttsvPlan::new`] normalizes its
+/// options through this single table instead of each path re-deriving the
+/// rules ad hoc:
+///
+/// | flags                          | effect                              |
+/// |--------------------------------|-------------------------------------|
+/// | `overlap` (any backend)        | per-block dispatch; `batch` ignored |
+/// | `Pjrt` + `packed`              | per-dispatch extraction, 0 resident |
+/// | `compiled` + (`Pjrt` or dense) | `compiled` cleared (programs replay |
+/// |                                | the packed Native kernels only)     |
+/// | `compute_threads` w/o compiled | clamped to 1 (the pool splits       |
+/// |                                | compiled descriptor streams)        |
+/// | `compute_threads = 0`          | clamped to 1                        |
+///
+/// Post-conditions are debug-asserted in `normalize`; downgrades (e.g.
+/// requesting `compiled` on PJRT) are silent, matching how `batch` has
+/// always been ignored under `overlap`.
 #[derive(Debug, Clone, Copy)]
 pub struct ExecOpts {
     pub mode: CommMode,
@@ -124,6 +145,25 @@ pub struct ExecOpts {
     /// overlap accumulates phase-3 partials in arrival order, so its
     /// results are reproducible only up to f32 summation order.
     pub overlap: bool,
+    /// Compile each worker's packed-block geometry into a branch-free
+    /// [`SweepProgram`] at plan build (§Perf P10, the default on the
+    /// packed Native path): the per-row `tet/tri` offset arithmetic and
+    /// the α≥β≥γ multiplicity branching are resolved once, and sweeps
+    /// replay the descriptor stream through register-tiled multi-RHS
+    /// microkernels — bitwise identical to the interpreted kernels at
+    /// `compute_threads = 1`. Requires `packed` + the Native backend
+    /// (cleared by [`ExecOpts::normalize`] otherwise); `--no-compiled`
+    /// keeps the per-sweep interpreter.
+    pub compiled: bool,
+    /// Intra-worker compute pool width (CLI `--compute-threads N`): split
+    /// a worker's compiled descriptor stream across N scoped threads with
+    /// privatized output panels and a deterministic ordered reduction.
+    /// Communication counters and charged ternary mults are invariant;
+    /// results leave the bitwise oracle only through the reduction's
+    /// f32 regrouping (deterministic for a fixed N on the phased path).
+    /// Default 1 — every oracle stays bit-for-bit. Requires `compiled`
+    /// (clamped to 1 otherwise).
+    pub compute_threads: usize,
 }
 
 impl Default for ExecOpts {
@@ -134,6 +174,8 @@ impl Default for ExecOpts {
             batch: true,
             packed: true,
             overlap: true,
+            compiled: true,
+            compute_threads: 1,
         }
     }
 }
@@ -151,8 +193,33 @@ impl ExecOpts {
             backend,
             packed: backend == Backend::Native,
             overlap: backend == Backend::Native,
+            compiled: backend == Backend::Native,
             ..Default::default()
         }
+    }
+
+    /// Canonicalize flag interactions (the table in the struct docs):
+    /// `compiled` requires the packed Native path, the compute pool
+    /// requires `compiled`, and `compute_threads` is at least 1.
+    /// [`SttsvPlan::new`] normalizes its options through here so every
+    /// execution path reads one consistent rule set.
+    pub fn normalize(mut self) -> ExecOpts {
+        if self.compute_threads == 0 {
+            self.compute_threads = 1;
+        }
+        if self.backend != Backend::Native || !self.packed {
+            // Sweep programs replay the packed Native kernels; PJRT and
+            // dense-extract plans keep their interpreted dispatch.
+            self.compiled = false;
+        }
+        if !self.compiled {
+            // The pool splits compiled descriptor streams; without a
+            // program there is nothing to split.
+            self.compute_threads = 1;
+        }
+        debug_assert!(self.compute_threads >= 1);
+        debug_assert!(!self.compiled || (self.packed && self.backend == Backend::Native));
+        self
     }
 }
 
@@ -249,35 +316,6 @@ impl SttsvMultiReport {
     /// columns): r · n²(n+1)/2.
     pub fn total_ternary_mults(&self) -> u64 {
         self.per_proc.iter().map(|r| r.ternary_mults).sum()
-    }
-}
-
-/// Scaling factors (α, β, γ) applied to (ci, cj, ck) per block kind — the
-/// multiplicity bookkeeping of Algorithm 5 lines 17–27.
-fn factors(kind: BlockKind, i: usize, j: usize, k: usize) -> (f32, f32, f32) {
-    match kind {
-        BlockKind::OffDiagonal => (2.0, 2.0, 2.0),
-        BlockKind::NonCentralDiagonal => {
-            if i == j {
-                // (a,a,b): y[a] += 2·ci, y[b] += 1·ck
-                (2.0, 0.0, 1.0)
-            } else {
-                debug_assert_eq!(j, k);
-                // (a,b,b): y[a] += 1·ci, y[b] += 2·cj
-                (1.0, 2.0, 0.0)
-            }
-        }
-        BlockKind::CentralDiagonal => (1.0, 0.0, 0.0),
-    }
-}
-
-/// Logical ternary multiplications for a block of size b (paper §7.1),
-/// per right-hand-side column.
-fn block_ternary_mults(kind: BlockKind, b: u64) -> u64 {
-    match kind {
-        BlockKind::OffDiagonal => 3 * b * b * b,
-        BlockKind::NonCentralDiagonal => 3 * b * b * (b - 1) / 2 + 2 * b * b,
-        BlockKind::CentralDiagonal => b * (b - 1) * (b - 2) / 2 + 2 * b * (b - 1) + b,
     }
 }
 
@@ -430,6 +468,15 @@ pub struct SttsvPlan<'a> {
     /// buffers recycle across runs, so repeated `run`/`run_multi` calls on
     /// one plan perform zero per-message heap allocations at steady state.
     pools: Vec<Mutex<BufPool>>,
+    /// programs[p]: the §Perf P10 compiled sweep program — built once at
+    /// plan construction and replayed by every sweep of every run and
+    /// resident session. Empty when `opts.compiled` is off (normalized
+    /// away on PJRT / dense-extract plans).
+    programs: Vec<SweepProgram>,
+    /// How many sweep programs were ever built for this plan — regression
+    /// instrumentation mirroring `SymTensor::dense_sttsv_invocations`:
+    /// stays exactly P (or 0 uncompiled) however many sweeps run.
+    program_builds: AtomicU64,
 }
 
 /// Overlap-mode tags: one gather and one reduce message per ordered peer
@@ -620,6 +667,120 @@ fn build_overlap_meta(
     }
 }
 
+/// A compiled, branch-free sweep program for one processor (§Perf P10):
+/// every owned block flattened at plan-build time into a stream of
+/// contiguous-run descriptors ([`RunDesc`]) plus a per-block header with
+/// the pre-resolved panel slots, multiplicity factors, and §7.1 charge.
+/// Sweeps replay the stream through the register-tiled microkernels
+/// ([`exec_block_runs`]) instead of re-deriving packed offsets and
+/// multiplicity branches every iteration. Blocks appear in the same
+/// group-major order as the interpreted sweep AND [`OverlapMeta::blocks`],
+/// so the overlap pipeline's readiness block ids index [`Self::blocks`]
+/// directly.
+pub struct SweepProgram {
+    blocks: Vec<BlockProg>,
+    descs: Vec<RunDesc>,
+    /// All block ids in execution order — the phased sweep's pool input.
+    all: Vec<u32>,
+}
+
+/// One block of a [`SweepProgram`]: its descriptor range plus everything
+/// the accumulation loop would otherwise recompute per sweep.
+struct BlockProg {
+    dstart: u32,
+    dend: u32,
+    si: u32,
+    sj: u32,
+    sk: u32,
+    fi: f32,
+    fj: f32,
+    fk: f32,
+    /// §7.1 ternary-mult charge per RHS column — equal by construction to
+    /// the descriptor stream's executed count (debug-asserted below,
+    /// unit-tested in `compiled_program_charges_equal_descriptor_mults`).
+    mults: u64,
+}
+
+/// Flatten one processor's owned blocks into a sweep program. `builds`
+/// is the plan's build-count instrumentation: resident sessions must
+/// reuse one program across all iterations (asserted in session tests,
+/// mirroring the dense-oracle counter of §Perf P9).
+fn build_program(
+    groups: &[Group],
+    slots: &[usize],
+    b: usize,
+    builds: &AtomicU64,
+) -> SweepProgram {
+    let mut blocks = Vec::new();
+    let mut descs: Vec<RunDesc> = Vec::new();
+    for group in groups {
+        for view in &group.views {
+            let dstart = descs.len();
+            let mut mults = 0u64;
+            view.for_each_run(|run| {
+                mults += run.ternary_mults();
+                descs.push(RunDesc::compile(&run));
+            });
+            let (i, j, k) = (view.bi, view.bj, view.bk);
+            let kind = classify(i, j, k);
+            debug_assert_eq!(
+                mults,
+                block_ternary_mults(kind, b as u64),
+                "descriptor stream charge diverged from the §7.1 accounting"
+            );
+            let (fi, fj, fk) = factors(kind, i, j, k);
+            blocks.push(BlockProg {
+                dstart: dstart as u32,
+                dend: descs.len() as u32,
+                si: slots[i] as u32,
+                sj: slots[j] as u32,
+                sk: slots[k] as u32,
+                fi,
+                fj,
+                fk,
+                mults,
+            });
+        }
+    }
+    builds.fetch_add(1, Ordering::Relaxed);
+    let all = (0..blocks.len() as u32).collect();
+    SweepProgram { blocks, descs, all }
+}
+
+/// Split `bids` into at most `threads` contiguous chunks with balanced
+/// §7.1 charge — the compute pool's deterministic work assignment (no
+/// work stealing, so the ordered reduction is reproducible for a fixed
+/// thread count).
+fn balance_chunks(
+    prog: &SweepProgram,
+    bids: &[u32],
+    threads: usize,
+) -> Vec<std::ops::Range<usize>> {
+    let total: u64 = bids.iter().map(|&b| prog.blocks[b as usize].mults).sum();
+    let mut out = Vec::with_capacity(threads);
+    let mut start = 0usize;
+    let mut acc = 0u64;
+    let mut done = 0u64;
+    for (i, &bid) in bids.iter().enumerate() {
+        let w = prog.blocks[bid as usize].mults;
+        let chunks_left = (threads - out.len()) as u64;
+        let fair = (total - done).div_ceil(chunks_left);
+        // Close the current chunk BEFORE absorbing a block that would
+        // push it past its fair share (never leaving a chunk empty), so
+        // a dominant block late in the order still gets its own chunk
+        // instead of collapsing everything into one.
+        if acc + w > fair && i > start && out.len() + 1 < threads {
+            out.push(start..i);
+            start = i;
+            done += acc;
+            acc = 0;
+        }
+        acc += w;
+    }
+    out.push(start..bids.len());
+    out
+}
+
 impl<'a> SttsvPlan<'a> {
     /// Prepare a plan: validate shapes, build the schedule, and build every
     /// processor's block state (grouped by kind for batched dispatch). The
@@ -630,6 +791,15 @@ impl<'a> SttsvPlan<'a> {
         part: &'a TetraPartition,
         opts: ExecOpts,
     ) -> Result<SttsvPlan<'a>> {
+        let mut opts = opts.normalize();
+        if opts.compiled && u32::try_from(tensor.packed_len()).is_err() {
+            // RunDesc packs offsets as u32 (16 GiB of packed words);
+            // beyond that the interpreter — which has no such bound —
+            // keeps serving, instead of a panic out of a Result-returning
+            // constructor.
+            opts.compiled = false;
+            opts.compute_threads = 1;
+        }
         let n = tensor.n;
         ensure!(
             n % part.m == 0,
@@ -681,6 +851,22 @@ impl<'a> SttsvPlan<'a> {
             Vec::new()
         };
         let pools = (0..part.p).map(|_| Mutex::new(BufPool::new())).collect();
+        // Compile the sweep programs last: group-major block order matches
+        // both the interpreted phased sweep and the overlap metadata, so
+        // overlap readiness ids index program blocks directly.
+        let program_builds = AtomicU64::new(0);
+        let programs: Vec<SweepProgram> = if opts.compiled {
+            (0..part.p)
+                .map(|p| build_program(&groups[p], &slot_of[p], b, &program_builds))
+                .collect()
+        } else {
+            Vec::new()
+        };
+        if opts.overlap {
+            for (prog, meta) in programs.iter().zip(&overlap) {
+                debug_assert_eq!(prog.blocks.len(), meta.blocks.len());
+            }
+        }
         Ok(SttsvPlan {
             tensor,
             part,
@@ -693,7 +879,134 @@ impl<'a> SttsvPlan<'a> {
             slot_of,
             overlap,
             pools,
+            programs,
+            program_builds,
         })
+    }
+
+    /// How many sweep programs this plan ever compiled: P on a compiled
+    /// plan, 0 otherwise — and **invariant across sweeps**: resident
+    /// sessions replay the same programs every iteration (asserted in the
+    /// session tests, mirroring the §Perf P9 dense-oracle counter).
+    pub fn sweep_program_builds(&self) -> u64 {
+        self.program_builds.load(Ordering::Relaxed)
+    }
+
+    /// The compiled program of processor `me`, when this plan compiles.
+    fn program(&self, me: usize) -> Option<&SweepProgram> {
+        self.programs.get(me)
+    }
+
+    /// Execute program blocks sequentially in the given order into `out`,
+    /// reusing the caller's 3·(b·r) scratch for the per-block output
+    /// panels. Bitwise identical to dispatching the interpreted packed
+    /// kernels block by block (same kernels' arithmetic, same per-block
+    /// scale-and-accumulate). Returns the charged mults (all r columns).
+    fn exec_blocks_seq(
+        &self,
+        prog: &SweepProgram,
+        bids: impl Iterator<Item = usize>,
+        xbuf: &[f32],
+        out: &mut [f32],
+        r: usize,
+        cscr: &mut [f32],
+    ) -> u64 {
+        let b = self.b;
+        let panel = b * r;
+        let tdata = self.tensor.packed_data();
+        debug_assert_eq!(cscr.len(), 3 * panel);
+        let (ci, rest) = cscr.split_at_mut(panel);
+        let (cj, ck) = rest.split_at_mut(panel);
+        let mut mults = 0u64;
+        for bid in bids {
+            let blk = &prog.blocks[bid];
+            let (si, sj, sk) = (blk.si as usize, blk.sj as usize, blk.sk as usize);
+            ci.fill(0.0);
+            cj.fill(0.0);
+            ck.fill(0.0);
+            exec_block_runs(
+                tdata,
+                &prog.descs[blk.dstart as usize..blk.dend as usize],
+                &xbuf[si * panel..(si + 1) * panel],
+                &xbuf[sj * panel..(sj + 1) * panel],
+                &xbuf[sk * panel..(sk + 1) * panel],
+                ci,
+                cj,
+                ck,
+                r,
+            );
+            axpy_panel(out, si, panel, blk.fi, ci);
+            axpy_panel(out, sj, panel, blk.fj, cj);
+            axpy_panel(out, sk, panel, blk.fk, ck);
+            mults += r as u64 * blk.mults;
+        }
+        mults
+    }
+
+    /// Execute program blocks through the intra-worker compute pool:
+    /// `bids` split into charge-balanced contiguous chunks, chunk 0 on the
+    /// calling thread straight into `out`, the rest on scoped threads into
+    /// privatized panels, then a deterministic ordered reduction
+    /// (chunk-order `out += panel`). Communication counters and charged
+    /// mults are untouched; only the f32 accumulation regrouping differs
+    /// from the sequential oracle. The privatized panels and per-thread
+    /// block scratch live in the worker's [`PoolBufs`] and are reused
+    /// across batches and sweeps — after warm-up the pool allocates
+    /// nothing per call (the scoped thread spawns remain, ~µs each,
+    /// amortized over a chunk's contraction work).
+    #[allow(clippy::too_many_arguments)]
+    fn exec_blocks_pooled(
+        &self,
+        prog: &SweepProgram,
+        bids: &[u32],
+        xbuf: &[f32],
+        out: &mut [f32],
+        r: usize,
+        cscr: &mut [f32],
+        pool: &mut PoolBufs,
+    ) -> u64 {
+        let threads = self.opts.compute_threads.clamp(1, bids.len().max(1));
+        // Fanning out pays a fixed cost — (threads−1) thread spawns plus a
+        // zero + ordered-reduce pass over each privatized ybuf-length
+        // panel — so small batches (common when the overlap loop drains a
+        // couple of ready blocks at a time) run inline: the contraction
+        // work must dominate the panel traffic by a healthy margin.
+        let work: u64 = bids.iter().map(|&x| prog.blocks[x as usize].mults).sum();
+        let fixed = 4 * (threads as u64) * (out.len() as u64);
+        if work.saturating_mul(r as u64) < fixed {
+            let seq = bids.iter().map(|&x| x as usize);
+            return self.exec_blocks_seq(prog, seq, xbuf, out, r, cscr);
+        }
+        let mut chunks = balance_chunks(prog, bids, threads);
+        chunks.retain(|c| !c.is_empty());
+        if chunks.len() <= 1 {
+            let seq = bids.iter().map(|&x| x as usize);
+            return self.exec_blocks_seq(prog, seq, xbuf, out, r, cscr);
+        }
+        let extra = chunks.len() - 1;
+        pool.prepare(extra, out.len(), 3 * self.b * r);
+        let mut mults = 0u64;
+        std::thread::scope(|scope| {
+            let panels = pool.panels[..extra].iter_mut();
+            let scratches = pool.scratch[..extra].iter_mut();
+            let counters = pool.mults[..extra].iter_mut();
+            for (((chunk, panel), scr), m) in
+                chunks[1..].iter().zip(panels).zip(scratches).zip(counters)
+            {
+                let chunk_bids = &bids[chunk.clone()];
+                scope.spawn(move || {
+                    let seq = chunk_bids.iter().map(|&x| x as usize);
+                    *m = self.exec_blocks_seq(prog, seq, xbuf, panel, r, scr);
+                });
+            }
+            let seq = bids[chunks[0].clone()].iter().map(|&x| x as usize);
+            mults = self.exec_blocks_seq(prog, seq, xbuf, out, r, cscr);
+        });
+        for (panel, m) in pool.panels[..extra].iter().zip(&pool.mults[..extra]) {
+            lanes_add(out, panel);
+            mults += *m;
+        }
+        mults
     }
 
     /// Tensor words copied into the plan: one dense b³ copy per owned
@@ -824,6 +1137,14 @@ impl<'a> SttsvPlan<'a> {
             xbuf: vec![0.0f32; panel_words],
             ybuf: vec![0.0f32; panel_words],
             bufs: ExchangeBufs::default(),
+            // per-block output panels of the compiled executor, reused
+            // across every sweep of a resident session
+            cscr: if self.programs.is_empty() {
+                Vec::new()
+            } else {
+                vec![0.0f32; 3 * self.b * r]
+            },
+            pool: PoolBufs::default(),
         }
     }
 
@@ -943,6 +1264,35 @@ impl<'a> SttsvPlan<'a> {
         }
         let mut mults: u64 = 0;
 
+        // Compiled path (§Perf P10): replay the plan-built descriptor
+        // stream — block order identical to the interpreted per-block loop
+        // below, so `compute_threads = 1` is bitwise the interpreter.
+        if let Some(prog) = self.program(me) {
+            mults = if self.opts.compute_threads > 1 {
+                self.exec_blocks_pooled(
+                    prog,
+                    &prog.all,
+                    &st.xbuf,
+                    &mut st.ybuf,
+                    r,
+                    &mut st.cscr,
+                    &mut st.pool,
+                )
+            } else {
+                self.exec_blocks_seq(
+                    prog,
+                    0..prog.blocks.len(),
+                    &st.xbuf,
+                    &mut st.ybuf,
+                    r,
+                    &mut st.cscr,
+                )
+            };
+            let compute_time = compute_start.elapsed();
+            self.reduce_phase(comm, st)?;
+            return Ok((mults, compute_time));
+        }
+
         // Concatenated per-group panels only pay off when the batch is one
         // real dispatch (PJRT artifacts, dense batched kernels). The Native
         // packed "batch" is a loop over per-block kernels anyway, so it
@@ -1002,14 +1352,27 @@ impl<'a> SttsvPlan<'a> {
         }
         let compute_time = compute_start.elapsed();
 
-        // ---- phase 3: scatter-reduce y ------------------------------------
+        self.reduce_phase(comm, st)?;
+
+        Ok((mults, compute_time))
+    }
+
+    /// Phase 3 of the phased sweep: scatter-reduce y over the schedule so
+    /// each worker ends with its fully reduced owned portions in `ybuf`.
+    /// Shared by the interpreted and compiled phase-2 paths.
+    fn reduce_phase(&self, comm: &mut Comm, st: &mut WorkerState) -> Result<()> {
+        let me = comm.rank;
+        let part = self.part;
+        let b = self.b;
+        let r = st.r;
+        let slots = &self.slot_of[me];
         exchange(
             comm,
             part,
             &self.sched,
             b,
             r,
-            opts.mode,
+            self.opts.mode,
             1,
             // pack: MY partial of the DESTINATION's portion of row block i
             |i, to, ybuf: &Vec<f32>, out: &mut Vec<f32>| {
@@ -1028,9 +1391,7 @@ impl<'a> SttsvPlan<'a> {
             },
             &mut st.ybuf,
             &mut st.bufs,
-        )?;
-
-        Ok((mults, compute_time))
+        )
     }
 
     /// Contract one owned block (per-block dispatch) and accumulate its
@@ -1145,13 +1506,55 @@ impl<'a> SttsvPlan<'a> {
             while let Some((from, tag)) = comm.try_recv_matching(|t| t < TAG_COLL_BASE) {
                 st.recv_one(comm, &ctx, from, tag)?;
             }
-            if let Some(bid) = st.ready.pop() {
-                let (g, idx) = st.meta.blocks[bid as usize];
-                let group = &groups[g as usize];
+            if !st.ready.is_empty() {
                 let t0 = Instant::now();
-                mults += self.contract_one(me, group, idx as usize, &st.xbuf, &mut st.ybuf, r)?;
-                compute_time += t0.elapsed();
-                st.note_block_done(comm, &ctx, &group.views[idx as usize])?;
+                match self.program(me) {
+                    Some(prog) if self.opts.compute_threads > 1 && st.ready.len() > 1 => {
+                        // Compute pool: contract the whole drained ready
+                        // set in parallel (program block ids == overlap
+                        // block ids by construction), then stream the
+                        // phase-3 releases in the drained order.
+                        let batch = std::mem::take(&mut st.ready);
+                        mults += self.exec_blocks_pooled(
+                            prog,
+                            &batch,
+                            &st.xbuf,
+                            &mut st.ybuf,
+                            r,
+                            &mut wst.cscr,
+                            &mut wst.pool,
+                        );
+                        compute_time += t0.elapsed();
+                        for &bid in &batch {
+                            let (g, idx) = st.meta.blocks[bid as usize];
+                            let view = &groups[g as usize].views[idx as usize];
+                            st.note_block_done(comm, &ctx, view)?;
+                        }
+                    }
+                    Some(prog) => {
+                        let bid = st.ready.pop().expect("ready nonempty");
+                        mults += self.exec_blocks_seq(
+                            prog,
+                            std::iter::once(bid as usize),
+                            &st.xbuf,
+                            &mut st.ybuf,
+                            r,
+                            &mut wst.cscr,
+                        );
+                        compute_time += t0.elapsed();
+                        let (g, idx) = st.meta.blocks[bid as usize];
+                        st.note_block_done(comm, &ctx, &groups[g as usize].views[idx as usize])?;
+                    }
+                    None => {
+                        let bid = st.ready.pop().expect("ready nonempty");
+                        let (g, idx) = st.meta.blocks[bid as usize];
+                        let group = &groups[g as usize];
+                        mults +=
+                            self.contract_one(me, group, idx as usize, &st.xbuf, &mut st.ybuf, r)?;
+                        compute_time += t0.elapsed();
+                        st.note_block_done(comm, &ctx, &group.views[idx as usize])?;
+                    }
+                }
             } else if st.p1_left > 0 || st.p3_left > 0 {
                 // Nothing contractable: block until the next sweep arrival.
                 let (from, tag) = comm.recv_any_matching(|t| t < TAG_COLL_BASE)?;
@@ -1237,6 +1640,45 @@ pub(crate) struct WorkerState {
     pub(crate) xbuf: Vec<f32>,
     pub(crate) ybuf: Vec<f32>,
     bufs: ExchangeBufs,
+    /// Compiled-path scratch: the 3·(b·r) per-block output panels
+    /// ([`SttsvPlan::exec_blocks_seq`]); empty on interpreted plans.
+    cscr: Vec<f32>,
+    /// Compute-pool buffers, reused across batches and sweeps.
+    pool: PoolBufs,
+}
+
+/// Reusable intra-worker compute-pool buffers, one entry per extra pool
+/// thread: privatized output panels, per-thread block scratch, and the
+/// per-chunk mult counters. Lazily sized on the first pooled batch and
+/// reused across batches and sweeps — zero steady-state allocations,
+/// like the worker's exchange buffers and `cscr` (the per-batch cost
+/// that remains is re-zeroing the panels, which accumulation needs
+/// anyway).
+#[derive(Default)]
+struct PoolBufs {
+    panels: Vec<Vec<f32>>,
+    scratch: Vec<Vec<f32>>,
+    mults: Vec<u64>,
+}
+
+impl PoolBufs {
+    /// Make `extra` zeroed panels of `panel_len` words, scratches of
+    /// `scr_len` words, and mult counters ready for one pooled batch.
+    fn prepare(&mut self, extra: usize, panel_len: usize, scr_len: usize) {
+        while self.panels.len() < extra {
+            self.panels.push(Vec::new());
+            self.scratch.push(Vec::new());
+        }
+        self.mults.clear();
+        self.mults.resize(extra, 0);
+        for p in &mut self.panels[..extra] {
+            p.clear();
+            p.resize(panel_len, 0.0);
+        }
+        for s in &mut self.scratch[..extra] {
+            s.resize(scr_len, 0.0);
+        }
+    }
 }
 
 /// Assemble full result columns from per-processor owned portions: every
@@ -1624,18 +2066,22 @@ mod tests {
         for overlap in [false, true] {
             for batch in [false, true] {
                 for packed in [false, true] {
-                    check_matches_oracle(
-                        &part,
-                        8,
-                        ExecOpts {
-                            mode: CommMode::PointToPoint,
-                            backend: Backend::Native,
-                            batch,
-                            packed,
-                            overlap,
-                        },
-                        7,
-                    );
+                    for compiled in [false, true] {
+                        check_matches_oracle(
+                            &part,
+                            8,
+                            ExecOpts {
+                                mode: CommMode::PointToPoint,
+                                backend: Backend::Native,
+                                batch,
+                                packed,
+                                overlap,
+                                compiled,
+                                ..Default::default()
+                            },
+                            7,
+                        );
+                    }
                 }
             }
         }
@@ -1692,6 +2138,10 @@ mod tests {
                             batch,
                             packed,
                             overlap: false,
+                            // pin the INTERPRETED dispatch paths; the
+                            // compiled path's equivalence is property P10
+                            compiled: false,
+                            ..Default::default()
                         },
                     )
                     .unwrap();
@@ -2066,6 +2516,179 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn compiled_phased_is_bitwise_the_interpreter() {
+        // §Perf P10 acceptance (deterministic half): on the phased path at
+        // compute_threads = 1, the compiled sweep program must reproduce
+        // the interpreted packed plan BIT FOR BIT — same kernels'
+        // arithmetic replayed from precompiled descriptors, same block
+        // order, same reduce order — for r ∈ {1, 4} in both comm modes,
+        // with per-processor words, messages, and charged mults exactly
+        // equal. b = 7 exercises uneven portions.
+        for mode in [CommMode::PointToPoint, CommMode::AllToAll] {
+            let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+            let b = 7usize;
+            let n = b * part.m;
+            let tensor = SymTensor::random(n, 501);
+            let mut rng = Rng::new(502);
+            let compiled_plan = SttsvPlan::new(
+                &tensor,
+                &part,
+                ExecOpts { mode, overlap: false, ..Default::default() },
+            )
+            .unwrap();
+            assert_eq!(compiled_plan.sweep_program_builds(), part.p as u64);
+            assert_eq!(compiled_plan.resident_tensor_words(), 0);
+            let interp_plan = SttsvPlan::new(
+                &tensor,
+                &part,
+                ExecOpts { mode, overlap: false, compiled: false, ..Default::default() },
+            )
+            .unwrap();
+            assert_eq!(interp_plan.sweep_program_builds(), 0);
+            for r in [1usize, 4] {
+                let xs: Vec<Vec<f32>> = (0..r).map(|_| rng.normal_vec(n)).collect();
+                let rc = compiled_plan.run_multi(&xs).unwrap();
+                let ri = interp_plan.run_multi(&xs).unwrap();
+                for l in 0..r {
+                    for i in 0..n {
+                        assert_eq!(
+                            rc.ys[l][i].to_bits(),
+                            ri.ys[l][i].to_bits(),
+                            "{mode:?} r={r} col {l} i={i}: compiled {} vs interpreted {}",
+                            rc.ys[l][i],
+                            ri.ys[l][i]
+                        );
+                    }
+                }
+                for p in 0..part.p {
+                    assert_eq!(
+                        rc.per_proc[p].stats, ri.per_proc[p].stats,
+                        "{mode:?} r={r} proc {p} comm"
+                    );
+                    assert_eq!(
+                        rc.per_proc[p].ternary_mults, ri.per_proc[p].ternary_mults,
+                        "{mode:?} r={r} proc {p} mults"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compute_pool_is_comm_invariant_and_matches_sequential() {
+        // The intra-worker pool may regroup the f32 block accumulation
+        // (privatized panels + ordered reduction) but must not move a
+        // single word or message, must charge identical mults, and must
+        // agree with the single-threaded oracle within reassociation
+        // tolerance — phased and overlap, r ∈ {1, 4}.
+        let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+        let b = 6usize;
+        let n = b * part.m;
+        let tensor = SymTensor::random(n, 503);
+        let mut rng = Rng::new(504);
+        for overlap in [false, true] {
+            let seq_opts = ExecOpts { overlap, ..Default::default() };
+            let seq_plan = SttsvPlan::new(&tensor, &part, seq_opts).unwrap();
+            let pool_opts = ExecOpts { overlap, compute_threads: 4, ..Default::default() };
+            let pool_plan = SttsvPlan::new(&tensor, &part, pool_opts).unwrap();
+            for r in [1usize, 4] {
+                let xs: Vec<Vec<f32>> = (0..r).map(|_| rng.normal_vec(n)).collect();
+                let rs = seq_plan.run_multi(&xs).unwrap();
+                let rp = pool_plan.run_multi(&xs).unwrap();
+                for p in 0..part.p {
+                    assert_eq!(
+                        rs.per_proc[p].stats, rp.per_proc[p].stats,
+                        "overlap={overlap} r={r} proc {p}: pool moved comm"
+                    );
+                    assert_eq!(
+                        rs.per_proc[p].ternary_mults, rp.per_proc[p].ternary_mults,
+                        "overlap={overlap} r={r} proc {p} mults"
+                    );
+                }
+                for l in 0..r {
+                    let scale = rs.ys[l].iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+                    for i in 0..n {
+                        assert!(
+                            (rp.ys[l][i] - rs.ys[l][i]).abs() < 1e-4 * scale,
+                            "overlap={overlap} r={r} col {l} i={i}: pool {} vs seq {}",
+                            rp.ys[l][i],
+                            rs.ys[l][i]
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn compiled_program_charges_equal_descriptor_mults() {
+        // Extends P7 to the compiled path: the per-block §7.1 charge the
+        // program stores == the descriptor stream's executed count == the
+        // kernels' own loop-bound walk, for every owned block.
+        let part = TetraPartition::from_steiner(&sqs8()).unwrap();
+        let b = 5usize;
+        let tensor = SymTensor::random(b * part.m, 505);
+        let plan = SttsvPlan::new(&tensor, &part, ExecOpts::default()).unwrap();
+        for p in 0..part.p {
+            let prog = &plan.programs[p];
+            for blk in &prog.blocks {
+                let executed: u64 = prog.descs[blk.dstart as usize..blk.dend as usize]
+                    .iter()
+                    .map(|d| {
+                        let run = crate::tensor::PackedRun {
+                            cls: d.cls,
+                            base: d.base as usize,
+                            len: d.len as usize,
+                            alpha: d.x as usize,
+                            beta: d.y as usize,
+                            flush: d.flush,
+                        };
+                        run.ternary_mults()
+                    })
+                    .sum();
+                assert_eq!(executed, blk.mults, "proc {p}");
+            }
+            // and the per-processor total matches the charged accounting
+            let total: u64 = prog.blocks.iter().map(|bl| bl.mults).sum();
+            let charged: u64 = part
+                .owned_blocks(p)
+                .iter()
+                .map(|&(i, j, k)| block_ternary_mults(classify(i, j, k), b as u64))
+                .sum();
+            assert_eq!(total, charged, "proc {p}");
+        }
+    }
+
+    #[test]
+    fn normalize_canonicalizes_flag_interactions() {
+        // The ExecOpts::normalize table: compiled requires packed Native;
+        // the pool requires compiled; compute_threads >= 1.
+        let o = ExecOpts { backend: Backend::Pjrt, ..Default::default() }.normalize();
+        assert!(!o.compiled, "PJRT cannot execute sweep programs");
+        assert_eq!(o.compute_threads, 1);
+        let o = ExecOpts { packed: false, compute_threads: 8, ..Default::default() }.normalize();
+        assert!(!o.compiled, "dense-extract plans stay interpreted");
+        assert_eq!(o.compute_threads, 1, "pool requires a compiled program");
+        let o = ExecOpts { compute_threads: 0, ..Default::default() }.normalize();
+        assert_eq!(o.compute_threads, 1);
+        let o = ExecOpts { compute_threads: 4, ..Default::default() }.normalize();
+        assert!(o.compiled);
+        assert_eq!(o.compute_threads, 4);
+        // plans normalize on construction: a PJRT-flagged compiled request
+        // builds no programs (and still runs, via the interpreter)
+        let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+        let tensor = SymTensor::random(4 * part.m, 507);
+        let plan = SttsvPlan::new(
+            &tensor,
+            &part,
+            ExecOpts { packed: false, compute_threads: 4, ..Default::default() },
+        )
+        .unwrap();
+        assert_eq!(plan.sweep_program_builds(), 0);
+        assert!(plan.programs.is_empty());
     }
 
     #[test]

@@ -22,6 +22,14 @@
 //! so every worker observes the identical global δ and takes the identical
 //! branch — no host round trip, no designated root.
 //!
+//! On compiled plans (§Perf P10, the default) every sweep of every
+//! iteration replays the plan's precompiled [`SweepProgram`]s — the
+//! packed-block geometry is flattened exactly once per solve, however
+//! many iterations run ([`SttsvPlan::sweep_program_builds`] stays at P;
+//! regression-tested below).
+//!
+//! [`SweepProgram`]: crate::coordinator::SweepProgram
+//!
 //! **Communication invariant** (asserted on every iteration of every
 //! session): per-iteration per-processor comm equals exactly one
 //! r-deep STTSV ([`SttsvPlan::expected_proc_stats`]) plus the O(log P)
@@ -507,6 +515,45 @@ mod tests {
         .unwrap();
         let solve = SolverSession::new(&plan).power_method(&x0, 40, 1e-6).unwrap();
         assert!((solve.iters.last().unwrap().lambda - 4.0).abs() < 2e-2);
+    }
+
+    #[test]
+    fn resident_session_reuses_one_compiled_program() {
+        // Build-count instrumentation (mirroring the §Perf P9 dense-oracle
+        // counter): a compiled plan flattens each worker's geometry ONCE;
+        // k resident iterations — power and CP, phased and overlap — must
+        // replay those P programs without ever rebuilding.
+        let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+        let b = 4usize;
+        let n = b * part.m;
+        let (tensor, cols) = SymTensor::odeco(n, &[4.0, 1.5], 71);
+        let mut rng = Rng::new(72);
+        let mut x0 = cols[0].clone();
+        for v in x0.iter_mut() {
+            *v += 0.2 * rng.normal_f32();
+        }
+        for overlap in [false, true] {
+            let opts = ExecOpts { overlap, ..Default::default() };
+            let plan = SttsvPlan::new(&tensor, &part, opts).unwrap();
+            assert_eq!(plan.sweep_program_builds(), part.p as u64);
+            let solve = SolverSession::new(&plan).power_method(&x0, 6, 0.0).unwrap();
+            assert_eq!(solve.iters.len(), 6);
+            assert_eq!(
+                plan.sweep_program_builds(),
+                part.p as u64,
+                "overlap={overlap}: power sweeps rebuilt programs"
+            );
+            let x0_cols: Vec<Vec<f32>> = (0..2)
+                .map(|_| rng.normal_vec(n).iter().map(|v| 0.3 * v).collect())
+                .collect();
+            let solve = SolverSession::new(&plan).cp_sweeps(&x0_cols, 4, 0.01, 0.0).unwrap();
+            assert_eq!(solve.iters.len(), 4);
+            assert_eq!(
+                plan.sweep_program_builds(),
+                part.p as u64,
+                "overlap={overlap}: CP sweeps rebuilt programs"
+            );
+        }
     }
 
     #[test]

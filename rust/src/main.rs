@@ -45,7 +45,15 @@ fn main() {
                  |mttkrp|sweep|verify|bounds> [--q N] [--b N] [--mode p2p|a2a] \
                  [--backend native|pjrt] [--iters N] [--sqs8] [--no-batch] \
                  [--packed|--no-packed] [--overlap|--no-overlap] \
-                 [--resident|--no-resident]"
+                 [--compiled|--no-compiled] [--compute-threads N] \
+                 [--resident|--no-resident]\n\
+                 \n\
+                 --compiled       execute plan-compiled branch-free sweep programs \
+                 (default on the packed native path; --no-compiled keeps the \
+                 per-sweep interpreter)\n\
+                 --compute-threads N  split each worker's compiled descriptor \
+                 stream over N intra-worker threads (default 1 = bitwise \
+                 oracle; comm counters are invariant for any N)"
             );
             std::process::exit(2);
         }
@@ -157,6 +165,23 @@ fn exec_opts(args: &Args) -> Result<ExecOpts> {
     }
     if args.flag("no-overlap") {
         opts.overlap = false;
+    }
+    if args.flag("compiled") {
+        opts.compiled = true;
+    }
+    if args.flag("no-compiled") {
+        opts.compiled = false;
+    }
+    opts.compute_threads = args.get_or("compute-threads", opts.compute_threads);
+    // Plans normalize flag interactions themselves; surface the one
+    // silent downgrade a user could plausibly trip over.
+    if opts.compute_threads > 1 && opts.normalize().compute_threads == 1 {
+        eprintln!(
+            "warning: --compute-threads {} ignored — the compute pool \
+             requires the compiled packed native path (drop --no-compiled/\
+             --no-packed/--backend pjrt, or see --compiled)",
+            opts.compute_threads
+        );
     }
     Ok(opts)
 }

@@ -35,6 +35,41 @@ pub fn classify(i: usize, j: usize, k: usize) -> BlockKind {
     }
 }
 
+/// Scaling factors (α, β, γ) applied to a block's three contraction
+/// outputs (ci, cj, ck) — the multiplicity bookkeeping of Algorithm 5
+/// lines 17–27. Lives next to [`classify`] so the coordinator's
+/// accumulation loops, the overlap readiness metadata, and the compiled
+/// sweep-program builder all read one source of truth.
+pub fn factors(kind: BlockKind, i: usize, j: usize, k: usize) -> (f32, f32, f32) {
+    match kind {
+        BlockKind::OffDiagonal => (2.0, 2.0, 2.0),
+        BlockKind::NonCentralDiagonal => {
+            if i == j {
+                // (a,a,b): y[a] += 2·ci, y[b] += 1·ck
+                (2.0, 0.0, 1.0)
+            } else {
+                debug_assert_eq!(j, k);
+                // (a,b,b): y[a] += 1·ci, y[b] += 2·cj
+                (1.0, 2.0, 0.0)
+            }
+        }
+        BlockKind::CentralDiagonal => (1.0, 0.0, 0.0),
+    }
+}
+
+/// Logical ternary multiplications for a block of size b (paper §7.1),
+/// per right-hand-side column. The same counts fall out of the packed
+/// kernels' loop bounds ([`crate::runtime::packed_ternary_mults`]) and of
+/// the compiled descriptor streams (`PackedRun::ternary_mults` sums —
+/// unit-tested equal in the coordinator), so charged == executed.
+pub fn block_ternary_mults(kind: BlockKind, b: u64) -> u64 {
+    match kind {
+        BlockKind::OffDiagonal => 3 * b * b * b,
+        BlockKind::NonCentralDiagonal => 3 * b * b * (b - 1) / 2 + 2 * b * b,
+        BlockKind::CentralDiagonal => b * (b - 1) * (b - 2) / 2 + 2 * b * (b - 1) + b,
+    }
+}
+
 /// The tetrahedral block defined by an index subset R (paper §6):
 /// TB₃(R) = {(i,j,k) : i,j,k ∈ R, i > j > k}, in lexicographic order.
 pub fn tb3(r: &[usize]) -> Vec<(usize, usize, usize)> {
@@ -283,6 +318,19 @@ mod tests {
         assert_eq!(classify(3, 3, 1), BlockKind::NonCentralDiagonal);
         assert_eq!(classify(3, 1, 1), BlockKind::NonCentralDiagonal);
         assert_eq!(classify(2, 2, 2), BlockKind::CentralDiagonal);
+    }
+
+    #[test]
+    fn factors_and_mults_per_kind() {
+        assert_eq!(factors(BlockKind::OffDiagonal, 3, 2, 1), (2.0, 2.0, 2.0));
+        assert_eq!(factors(BlockKind::NonCentralDiagonal, 3, 3, 1), (2.0, 0.0, 1.0));
+        assert_eq!(factors(BlockKind::NonCentralDiagonal, 3, 1, 1), (1.0, 2.0, 0.0));
+        assert_eq!(factors(BlockKind::CentralDiagonal, 2, 2, 2), (1.0, 0.0, 0.0));
+        // §7.1 per-block counts at b = 4: 3b³, 3b²(b−1)/2 + 2b², and
+        // b(b−1)(b−2)/2 + 2b(b−1) + b.
+        assert_eq!(block_ternary_mults(BlockKind::OffDiagonal, 4), 192);
+        assert_eq!(block_ternary_mults(BlockKind::NonCentralDiagonal, 4), 104);
+        assert_eq!(block_ternary_mults(BlockKind::CentralDiagonal, 4), 40);
     }
 
     #[test]

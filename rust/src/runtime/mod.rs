@@ -19,9 +19,9 @@ mod native;
 pub use native::{
     block_contract_multi, block_contract_native, block_contract_packed,
     block_contract_packed_multi, dense_sttsv_native, diag_block_contract_packed,
-    diag_block_contract_packed_multi, packed_ternary_mults,
+    diag_block_contract_packed_multi, exec_block_runs, packed_ternary_mults, RunDesc,
 };
-pub(crate) use native::lanes_axpy;
+pub(crate) use native::{lanes_add, lanes_axpy};
 
 use crate::tensor::PackedBlockView;
 use anyhow::{anyhow, bail, ensure, Context, Result};

@@ -244,7 +244,7 @@ fn lanes_mul_add2(dst: &mut [f32], a: &[f32], b: &[f32], t: f32, c: &[f32], d: &
 
 /// dst[l] += a[l]
 #[inline]
-fn lanes_add(dst: &mut [f32], a: &[f32]) {
+pub(crate) fn lanes_add(dst: &mut [f32], a: &[f32]) {
     debug_assert_eq!(dst.len(), a.len());
     let mut dc = dst.chunks_exact_mut(LANES);
     let mut ac = a.chunks_exact(LANES);
@@ -674,6 +674,337 @@ pub fn diag_block_contract_packed_multi(
     (ci, cj, ck)
 }
 
+use crate::tensor::{PackedRun, RunClass};
+
+/// One flattened run descriptor of a compiled sweep program (§Perf P10):
+/// the branch-free record the plan compiles each [`PackedRun`] into at
+/// build time. `base` is the packed offset of the γ-run, `len` the prefix
+/// the m/axpy inner loops sweep (Ghh/Central classes also read the tail
+/// entry at `base + len`), and (`x`, `y`) the block-local u/v panel rows.
+/// 12 bytes — a worker's whole stream stays cache-resident.
+#[derive(Debug, Clone, Copy)]
+pub struct RunDesc {
+    pub base: u32,
+    pub len: u16,
+    pub x: u16,
+    pub y: u16,
+    pub cls: RunClass,
+    pub flush: bool,
+}
+
+impl RunDesc {
+    /// Compile one enumerated run. Panics if the packed offset exceeds
+    /// u32 (a > 16 GiB tensor — beyond the simulator's scope).
+    pub fn compile(run: &PackedRun) -> RunDesc {
+        RunDesc {
+            base: u32::try_from(run.base).expect("packed offset exceeds u32"),
+            len: u16::try_from(run.len).expect("block size exceeds u16"),
+            x: u16::try_from(run.alpha).expect("block size exceeds u16"),
+            y: u16::try_from(run.beta).expect("block size exceeds u16"),
+            cls: run.cls,
+            flush: run.flush,
+        }
+    }
+}
+
+/// Execute one block's compiled run stream against the packed buffer `t`:
+/// the branch-free replay of the packed kernels. `us`/`vs`/`ws` are the
+/// block's `(b, r)` input panels (slices of the worker's gather buffer,
+/// exactly as the interpreted kernels receive them) and `ci`/`cj`/`ck`
+/// zeroed `(b, r)` output panels.
+///
+/// r ∈ {1, 2, 4} dispatch to register-tiled microkernels whose r-column
+/// accumulator tiles (`m`, `uv`, the per-α `acc`) are `[f32; R]` arrays
+/// held in registers; other r fall back to the dynamic-width path over the
+/// same `chunks_exact` lane helpers as the interpreted kernels. Both paths
+/// perform the identical per-lane arithmetic in the identical order, so
+/// results are **bitwise equal** to the kernels the plan would otherwise
+/// dispatch: the scalar kernels at r = 1, the multi kernels at r ≥ 2
+/// (pinned by `compiled_runs_bitwise_match_packed_kernels`; cross-checked
+/// op-by-op in f32 in Python).
+#[allow(clippy::too_many_arguments)]
+pub fn exec_block_runs(
+    t: &[f32],
+    descs: &[RunDesc],
+    us: &[f32],
+    vs: &[f32],
+    ws: &[f32],
+    ci: &mut [f32],
+    cj: &mut [f32],
+    ck: &mut [f32],
+    r: usize,
+) {
+    match r {
+        1 => exec_runs_tiled::<1>(t, descs, us, vs, ws, ci, cj, ck),
+        2 => exec_runs_tiled::<2>(t, descs, us, vs, ws, ci, cj, ck),
+        4 => exec_runs_tiled::<4>(t, descs, us, vs, ws, ci, cj, ck),
+        _ => exec_runs_dyn(t, descs, us, vs, ws, ci, cj, ck, r),
+    }
+}
+
+/// Register-tiled executor: R is a compile-time constant, so every inner
+/// `l`-loop unrolls over an `[f32; R]` accumulator tile. At R = 1 the
+/// CentralUpper tail updates follow the scalar kernel's two-step adds;
+/// at R ≥ 2 the multi kernels' fused two-term updates — the only place
+/// the two kernel families' operation order differs.
+#[allow(clippy::needless_range_loop, clippy::too_many_arguments)]
+fn exec_runs_tiled<const R: usize>(
+    t: &[f32],
+    descs: &[RunDesc],
+    us: &[f32],
+    vs: &[f32],
+    ws: &[f32],
+    ci: &mut [f32],
+    cj: &mut [f32],
+    ck: &mut [f32],
+) {
+    let mut acc = [0.0f32; R];
+    for d in descs {
+        let base = d.base as usize;
+        let len = d.len as usize;
+        let x = d.x as usize;
+        let y = d.y as usize;
+        let u: [f32; R] = us[x * R..(x + 1) * R].try_into().unwrap();
+        let v: [f32; R] = vs[y * R..(y + 1) * R].try_into().unwrap();
+        let row = &t[base..base + len];
+        let mut m = [0.0f32; R];
+        for (g, &a) in row.iter().enumerate() {
+            let w = &ws[g * R..(g + 1) * R];
+            for l in 0..R {
+                m[l] += a * w[l];
+            }
+        }
+        match d.cls {
+            RunClass::OffDiag => {
+                let mut uv = [0.0f32; R];
+                for l in 0..R {
+                    uv[l] = u[l] * v[l];
+                }
+                for (g, &a) in row.iter().enumerate() {
+                    let c = &mut ck[g * R..(g + 1) * R];
+                    for l in 0..R {
+                        c[l] += a * uv[l];
+                    }
+                }
+                for l in 0..R {
+                    acc[l] += m[l] * v[l];
+                }
+                let c = &mut cj[y * R..(y + 1) * R];
+                for l in 0..R {
+                    c[l] += m[l] * u[l];
+                }
+            }
+            RunClass::GghUpper => {
+                let mut uv = [0.0f32; R];
+                for l in 0..R {
+                    uv[l] = 2.0 * u[l] * v[l];
+                }
+                for (g, &a) in row.iter().enumerate() {
+                    let c = &mut ck[g * R..(g + 1) * R];
+                    for l in 0..R {
+                        c[l] += a * uv[l];
+                    }
+                }
+                for l in 0..R {
+                    acc[l] += m[l] * v[l];
+                }
+                let c = &mut ci[y * R..(y + 1) * R];
+                for l in 0..R {
+                    c[l] += m[l] * u[l];
+                }
+            }
+            RunClass::GghAxis => {
+                let mut uv = [0.0f32; R];
+                for l in 0..R {
+                    uv[l] = u[l] * v[l];
+                }
+                for (g, &a) in row.iter().enumerate() {
+                    let c = &mut ck[g * R..(g + 1) * R];
+                    for l in 0..R {
+                        c[l] += a * uv[l];
+                    }
+                }
+                for l in 0..R {
+                    acc[l] += m[l] * u[l];
+                }
+            }
+            RunClass::Ghh => {
+                let ab = t[base + len];
+                let w_y: [f32; R] = ws[y * R..(y + 1) * R].try_into().unwrap();
+                let mut uv = [0.0f32; R];
+                for l in 0..R {
+                    uv[l] = u[l] * v[l];
+                }
+                for (g, &a) in row.iter().enumerate() {
+                    let c = &mut cj[g * R..(g + 1) * R];
+                    for l in 0..R {
+                        c[l] += a * uv[l];
+                    }
+                }
+                for l in 0..R {
+                    acc[l] += 2.0 * m[l] * v[l] + ab * v[l] * w_y[l];
+                }
+                let c = &mut cj[y * R..(y + 1) * R];
+                for l in 0..R {
+                    c[l] += m[l] * u[l] + ab * u[l] * w_y[l];
+                }
+            }
+            RunClass::CentralUpper => {
+                let ab = t[base + len];
+                let w_y: [f32; R] = ws[y * R..(y + 1) * R].try_into().unwrap();
+                let mut uv = [0.0f32; R];
+                for l in 0..R {
+                    uv[l] = 2.0 * u[l] * v[l];
+                }
+                for (g, &a) in row.iter().enumerate() {
+                    let c = &mut ci[g * R..(g + 1) * R];
+                    for l in 0..R {
+                        c[l] += a * uv[l];
+                    }
+                }
+                if R == 1 {
+                    // scalar-kernel order: split two-step adds
+                    acc[0] += 2.0 * m[0] * v[0];
+                    ci[y] += 2.0 * m[0] * u[0];
+                    acc[0] += ab * v[0] * w_y[0];
+                    ci[y] += 2.0 * ab * u[0] * w_y[0];
+                } else {
+                    // multi-kernel order: fused two-term updates
+                    let t2 = 2.0 * ab;
+                    for l in 0..R {
+                        acc[l] += 2.0 * m[l] * v[l] + ab * v[l] * w_y[l];
+                    }
+                    let c = &mut ci[y * R..(y + 1) * R];
+                    for l in 0..R {
+                        c[l] += 2.0 * m[l] * u[l] + t2 * u[l] * w_y[l];
+                    }
+                }
+            }
+            RunClass::CentralAxis => {
+                let aa = t[base + len];
+                let w_y: [f32; R] = ws[y * R..(y + 1) * R].try_into().unwrap();
+                let mut uv = [0.0f32; R];
+                for l in 0..R {
+                    uv[l] = u[l] * v[l];
+                }
+                for (g, &a) in row.iter().enumerate() {
+                    let c = &mut ci[g * R..(g + 1) * R];
+                    for l in 0..R {
+                        c[l] += a * uv[l];
+                    }
+                }
+                for l in 0..R {
+                    acc[l] += 2.0 * m[l] * v[l];
+                }
+                for l in 0..R {
+                    acc[l] += aa * v[l] * w_y[l];
+                }
+            }
+        }
+        if d.flush {
+            let c = &mut ci[x * R..(x + 1) * R];
+            for l in 0..R {
+                c[l] += acc[l];
+            }
+            acc = [0.0f32; R];
+        }
+    }
+}
+
+/// Dynamic-width fallback for r ∉ {1, 2, 4}: the same replay over the
+/// `chunks_exact` lane helpers the interpreted multi kernels use, with
+/// heap accumulator rows hoisted out of the stream loop. r = 1 never
+/// routes here (the tiled R = 1 path carries the scalar-kernel order), so
+/// this follows the multi kernels' fused updates throughout.
+#[allow(clippy::too_many_arguments)]
+fn exec_runs_dyn(
+    t: &[f32],
+    descs: &[RunDesc],
+    us: &[f32],
+    vs: &[f32],
+    ws: &[f32],
+    ci: &mut [f32],
+    cj: &mut [f32],
+    ck: &mut [f32],
+    r: usize,
+) {
+    let mut acc = vec![0.0f32; r];
+    let mut m = vec![0.0f32; r];
+    let mut uv = vec![0.0f32; r];
+    for d in descs {
+        let base = d.base as usize;
+        let len = d.len as usize;
+        let x = d.x as usize;
+        let y = d.y as usize;
+        let u = &us[x * r..(x + 1) * r];
+        let v = &vs[y * r..(y + 1) * r];
+        let row = &t[base..base + len];
+        m.fill(0.0);
+        for (g, &a) in row.iter().enumerate() {
+            lanes_axpy(&mut m, a, &ws[g * r..(g + 1) * r]);
+        }
+        match d.cls {
+            RunClass::OffDiag => {
+                lanes_set_mul(&mut uv, u, v);
+                for (g, &a) in row.iter().enumerate() {
+                    lanes_axpy(&mut ck[g * r..(g + 1) * r], a, &uv);
+                }
+                lanes_mul_add(&mut acc, &m, v);
+                lanes_mul_add(&mut cj[y * r..(y + 1) * r], &m, u);
+            }
+            RunClass::GghUpper => {
+                lanes_set_mul_s(&mut uv, 2.0, u, v);
+                for (g, &a) in row.iter().enumerate() {
+                    lanes_axpy(&mut ck[g * r..(g + 1) * r], a, &uv);
+                }
+                lanes_mul_add(&mut acc, &m, v);
+                lanes_mul_add(&mut ci[y * r..(y + 1) * r], &m, u);
+            }
+            RunClass::GghAxis => {
+                lanes_set_mul(&mut uv, u, v);
+                for (g, &a) in row.iter().enumerate() {
+                    lanes_axpy(&mut ck[g * r..(g + 1) * r], a, &uv);
+                }
+                lanes_mul_add(&mut acc, &m, u);
+            }
+            RunClass::Ghh => {
+                let ab = t[base + len];
+                let w_y = &ws[y * r..(y + 1) * r];
+                lanes_set_mul(&mut uv, u, v);
+                for (g, &a) in row.iter().enumerate() {
+                    lanes_axpy(&mut cj[g * r..(g + 1) * r], a, &uv);
+                }
+                lanes_mul_add2_s(&mut acc, 2.0, &m, v, ab, v, w_y);
+                lanes_mul_add2(&mut cj[y * r..(y + 1) * r], &m, u, ab, u, w_y);
+            }
+            RunClass::CentralUpper => {
+                let ab = t[base + len];
+                let w_y = &ws[y * r..(y + 1) * r];
+                lanes_set_mul_s(&mut uv, 2.0, u, v);
+                for (g, &a) in row.iter().enumerate() {
+                    lanes_axpy(&mut ci[g * r..(g + 1) * r], a, &uv);
+                }
+                lanes_mul_add2_s(&mut acc, 2.0, &m, v, ab, v, w_y);
+                lanes_mul_add2_s(&mut ci[y * r..(y + 1) * r], 2.0, &m, u, 2.0 * ab, u, w_y);
+            }
+            RunClass::CentralAxis => {
+                let aa = t[base + len];
+                let w_y = &ws[y * r..(y + 1) * r];
+                lanes_set_mul(&mut uv, u, v);
+                for (g, &a) in row.iter().enumerate() {
+                    lanes_axpy(&mut ci[g * r..(g + 1) * r], a, &uv);
+                }
+                lanes_mul_add_s(&mut acc, 2.0, &m, v);
+                lanes_mul_add_s(&mut acc, aa, v, w_y);
+            }
+        }
+        if d.flush {
+            lanes_add(&mut ci[x * r..(x + 1) * r], &acc);
+            acc.fill(0.0);
+        }
+    }
+}
+
 /// Ternary multiplications the packed kernels execute for one block, per
 /// right-hand-side column — derived by walking the kernels' own loop
 /// bounds and summing one count per (unique entry, output contribution)
@@ -987,6 +1318,66 @@ mod tests {
                         "{blk:?} col {l} ck[{x}]"
                     );
                 }
+            }
+        }
+    }
+
+    /// Compile one view's run stream into descriptors (what the plan
+    /// builder does per block).
+    fn compile_view(view: &PackedBlockView) -> Vec<RunDesc> {
+        let mut descs = Vec::new();
+        view.for_each_run(|run| descs.push(RunDesc::compile(&run)));
+        descs
+    }
+
+    #[test]
+    fn compiled_runs_bitwise_match_packed_kernels() {
+        // The compiled executor must be BITWISE equal to the kernels the
+        // interpreted plan dispatches: the scalar packed kernels at r = 1,
+        // the multi kernels at r >= 2 — for every block shape, across the
+        // tiled (r ∈ {1, 2, 4}) and dynamic-width (r ∈ {3, 5}) paths.
+        let (m, b) = (4usize, 6usize);
+        let t = SymTensor::random(m * b, 51);
+        let data = t.packed_data();
+        let mut rng = Rng::new(52);
+        for blk in [(3usize, 2usize, 0usize), (3, 3, 1), (3, 1, 1), (2, 2, 2)] {
+            let view = PackedBlockView::new(blk.0, blk.1, blk.2, b);
+            let descs = compile_view(&view);
+            for r in [1usize, 2, 3, 4, 5] {
+                // panels of equal block indices alias (kernel precondition)
+                let us = rng.normal_vec(b * r);
+                let vs = if blk.0 == blk.1 { us.clone() } else { rng.normal_vec(b * r) };
+                let ws = if blk.1 == blk.2 { vs.clone() } else { rng.normal_vec(b * r) };
+                let mut ci = vec![0.0f32; b * r];
+                let mut cj = vec![0.0f32; b * r];
+                let mut ck = vec![0.0f32; b * r];
+                exec_block_runs(data, &descs, &us, &vs, &ws, &mut ci, &mut cj, &mut ck, r);
+                let want = match (view.is_off_diagonal(), r) {
+                    (true, 1) => block_contract_packed(data, &view, &us, &vs, &ws, b),
+                    (true, _) => block_contract_packed_multi(data, &view, &us, &vs, &ws, b, r),
+                    (false, 1) => diag_block_contract_packed(data, &view, &us, &vs, &ws, b),
+                    (false, _) => {
+                        diag_block_contract_packed_multi(data, &view, &us, &vs, &ws, b, r)
+                    }
+                };
+                assert_eq!(ci, want.0, "{blk:?} r={r} ci");
+                assert_eq!(cj, want.1, "{blk:?} r={r} cj");
+                assert_eq!(ck, want.2, "{blk:?} r={r} ck");
+            }
+        }
+    }
+
+    #[test]
+    fn compiled_run_mults_equal_kernel_walk() {
+        // Σ per-descriptor charge over a block's stream == the kernels'
+        // own loop-bound walk (packed_ternary_mults) — one shared source
+        // of truth for charged vs executed flops on the compiled path.
+        for b in [1usize, 2, 5, 8] {
+            for blk in [(3usize, 2usize, 1usize), (3, 3, 1), (3, 1, 1), (2, 2, 2)] {
+                let view = PackedBlockView::new(blk.0, blk.1, blk.2, b);
+                let mut sum = 0u64;
+                view.for_each_run(|run| sum += run.ternary_mults());
+                assert_eq!(sum, packed_ternary_mults(&view), "{blk:?} b={b}");
             }
         }
     }

@@ -385,6 +385,132 @@ impl PackedBlockView {
     }
 }
 
+/// The weight class of one contiguous packed γ-run — which arithmetic
+/// pattern the contraction kernels apply to it. One class per branch of
+/// the packed kernels ([`crate::runtime::block_contract_packed`] /
+/// `diag_block_contract_packed`), so a block's run stream replayed
+/// class-by-class reproduces the kernel's operations exactly. The
+/// ternary-multiplication charge per run is a pure function of
+/// (class, len) — [`PackedRun::ternary_mults`] — and block sums equal the
+/// §7.1 closed forms (`partition::block_ternary_mults`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunClass {
+    /// Off-diagonal row (bi > bj > bk): every entry serves 3 outputs.
+    OffDiag = 0,
+    /// (g,g,h) row with α > β: 3 contributions per entry, i-weight 2.
+    GghUpper = 1,
+    /// (g,g,h) row with α == β: 2 contributions per entry.
+    GghAxis = 2,
+    /// (g,h,h) row: β > γ prefix (3 each) plus the β == γ tail entry (2).
+    Ghh = 3,
+    /// central row with α > β: γ < β prefix (3 each) + β == γ tail (2).
+    CentralUpper = 4,
+    /// central row with α == β: γ < α prefix (2 each) + the α==β==γ
+    /// apex entry (1).
+    CentralAxis = 5,
+}
+
+/// One contiguous γ-run of a packed block, in kernel iteration order:
+/// `base` is the packed offset of the run, `len` the prefix length the
+/// m/axpy inner loops sweep (the Ghh/Central classes additionally read the
+/// tail entry at `base + len`), and (`alpha`, `beta`) the block-local
+/// panel rows of the u/v inputs. `flush` marks the last run of its α
+/// group — where the kernels flush the per-α `ci` accumulator.
+#[derive(Debug, Clone, Copy)]
+pub struct PackedRun {
+    pub cls: RunClass,
+    pub base: usize,
+    pub len: usize,
+    pub alpha: usize,
+    pub beta: usize,
+    pub flush: bool,
+}
+
+impl PackedRun {
+    /// Ternary multiplications the kernels execute for this run, per
+    /// right-hand-side column — one per (unique entry, output
+    /// contribution) pair. Summed over a block's runs this equals
+    /// [`crate::partition::block_ternary_mults`] exactly (unit-tested in
+    /// the coordinator, extending the §Perf P7 invariant to the compiled
+    /// path).
+    pub fn ternary_mults(&self) -> u64 {
+        let l = self.len as u64;
+        match self.cls {
+            RunClass::OffDiag | RunClass::GghUpper => 3 * l,
+            RunClass::GghAxis => 2 * l,
+            RunClass::Ghh | RunClass::CentralUpper => 3 * l + 2,
+            RunClass::CentralAxis => 2 * l + 1,
+        }
+    }
+}
+
+impl PackedBlockView {
+    /// Enumerate the block's packed γ-runs in the exact iteration order of
+    /// the packed contraction kernels (α outer, β inner), with per-run
+    /// weight classes and flush marks. This is the geometry the compiled
+    /// sweep programs flatten once at plan build — the per-row
+    /// `row_base` tet/tri arithmetic and the α≥β≥γ multiplicity branching
+    /// are resolved here instead of on every sweep (§Perf P10).
+    pub fn for_each_run(&self, mut f: impl FnMut(PackedRun)) {
+        let b = self.b;
+        if self.is_off_diagonal() {
+            for a in 0..b {
+                for be in 0..b {
+                    f(PackedRun {
+                        cls: RunClass::OffDiag,
+                        base: self.row_base(a, be),
+                        len: b,
+                        alpha: a,
+                        beta: be,
+                        flush: be == b - 1,
+                    });
+                }
+            }
+        } else if self.bi == self.bj && self.bj > self.bk {
+            for a in 0..b {
+                for be in 0..=a {
+                    f(PackedRun {
+                        cls: if a > be { RunClass::GghUpper } else { RunClass::GghAxis },
+                        base: self.row_base(a, be),
+                        len: b,
+                        alpha: a,
+                        beta: be,
+                        flush: be == a,
+                    });
+                }
+            }
+        } else if self.bi > self.bj && self.bj == self.bk {
+            for a in 0..b {
+                for be in 0..b {
+                    f(PackedRun {
+                        cls: RunClass::Ghh,
+                        base: self.row_base(a, be),
+                        len: be,
+                        alpha: a,
+                        beta: be,
+                        flush: be == b - 1,
+                    });
+                }
+            }
+        } else {
+            for a in 0..b {
+                for be in 0..=a {
+                    f(PackedRun {
+                        cls: if a > be { RunClass::CentralUpper } else { RunClass::CentralAxis },
+                        base: self.row_base(a, be),
+                        // CentralUpper sweeps γ < β; CentralAxis γ < α —
+                        // equal here since the axis rows have β == α.
+                        len: be,
+                        alpha: a,
+                        beta: be,
+                        flush: be == a,
+                    });
+                }
+            }
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -552,6 +678,88 @@ mod tests {
             .map(|(i, j, k)| PackedBlockView::new(i, j, k, b).unique_len())
             .sum();
         assert_eq!(total, packed_len(m * b));
+    }
+
+    #[test]
+    fn run_enumeration_covers_unique_entries_exactly_once() {
+        // Every packed run (prefix plus the Ghh/Central tail entry) must
+        // tile the block's unique packed words exactly once, in order.
+        let b = 5usize;
+        for blk in [(3usize, 2usize, 0usize), (4, 4, 1), (4, 2, 2), (3, 3, 3)] {
+            let v = PackedBlockView::new(blk.0, blk.1, blk.2, b);
+            let mut seen = std::collections::HashSet::new();
+            let mut count = 0usize;
+            v.for_each_run(|run| {
+                let tail = match run.cls {
+                    RunClass::Ghh | RunClass::CentralUpper | RunClass::CentralAxis => 1,
+                    _ => 0,
+                };
+                for off in 0..run.len + tail {
+                    assert!(seen.insert(run.base + off), "{blk:?}: entry revisited");
+                }
+                count += run.len + tail;
+                // the run is exactly the packed row at (α, β)
+                assert_eq!(run.base, v.row_base(run.alpha, run.beta));
+                assert_eq!(run.len + tail, v.row_len(run.beta), "{blk:?} run {run:?}");
+            });
+            assert_eq!(count, v.unique_len(), "{blk:?}");
+        }
+    }
+
+    #[test]
+    fn run_enumeration_flushes_once_per_alpha() {
+        // Exactly one flush per α group, always on the group's last run —
+        // the accumulator protocol the compiled executor relies on.
+        let b = 6usize;
+        for blk in [(3usize, 2usize, 0usize), (4, 4, 1), (4, 2, 2), (3, 3, 3)] {
+            let v = PackedBlockView::new(blk.0, blk.1, blk.2, b);
+            let mut cur_alpha = usize::MAX;
+            let mut flushed = true;
+            let mut flushes = 0usize;
+            v.for_each_run(|run| {
+                if run.alpha != cur_alpha {
+                    assert!(flushed, "{blk:?}: α group {cur_alpha} never flushed");
+                    cur_alpha = run.alpha;
+                    flushed = false;
+                }
+                if run.flush {
+                    assert!(!flushed, "{blk:?}: α group {cur_alpha} flushed twice");
+                    flushed = true;
+                    flushes += 1;
+                }
+            });
+            assert!(flushed);
+            assert_eq!(flushes, b, "{blk:?}: one flush per α");
+        }
+    }
+
+    #[test]
+    fn run_mults_match_packed_closed_forms() {
+        // Σ ternary_mults over a block's runs == the per-kind closed forms
+        // (the same values runtime::packed_ternary_mults walks).
+        let sum_at = |blk: (usize, usize, usize), b: usize| {
+            let mut s = 0u64;
+            PackedBlockView::new(blk.0, blk.1, blk.2, b)
+                .for_each_run(|run| s += run.ternary_mults());
+            s
+        };
+        // b = 1 spot checks (the closed forms below would underflow at
+        // bu - 2 in debug builds): 3/2/2/1 contributions per kind.
+        assert_eq!(sum_at((3, 2, 1), 1), 3);
+        assert_eq!(sum_at((3, 3, 1), 1), 2);
+        assert_eq!(sum_at((3, 1, 1), 1), 2);
+        assert_eq!(sum_at((2, 2, 2), 1), 1);
+        for b in 2..=7usize {
+            let bu = b as u64;
+            let sum = |blk: (usize, usize, usize)| sum_at(blk, b);
+            assert_eq!(sum((3, 2, 1)), 3 * bu * bu * bu);
+            assert_eq!(sum((3, 3, 1)), 3 * bu * bu * (bu - 1) / 2 + 2 * bu * bu);
+            assert_eq!(sum((3, 1, 1)), 3 * bu * bu * (bu - 1) / 2 + 2 * bu * bu);
+            assert_eq!(
+                sum((2, 2, 2)),
+                bu * (bu - 1) * (bu - 2) / 2 + 2 * bu * (bu - 1) + bu
+            );
+        }
     }
 
     #[test]

@@ -33,6 +33,14 @@
 //!     (r = 1) and the CP driver (r = 4); workers are spawned once per
 //!     solve, and no host↔worker vector traffic exists between
 //!     iterations for the comm counters to miss.
+//! P10: the compiled sweep-program path (plan-built run descriptors +
+//!     register-tiled microkernels) matches the interpreted packed plan
+//!     within 1e-4 — and BITWISE on the phased path at
+//!     compute_threads = 1 — for r ∈ {1, 4}, both comm modes, phased and
+//!     overlap, on random partitions; per-processor words, messages, and
+//!     charged ternary mults are exactly invariant, the compiled plan
+//!     holds zero extra resident tensor words, and a 4-thread compute
+//!     pool changes no CommStats counter.
 
 use sttsv::coordinator::session::SolverSession;
 use sttsv::coordinator::{
@@ -73,10 +81,11 @@ fn p1_distributed_equals_sequential_oracle() {
             let batch = rng.below(2) == 0;
             let packed = rng.below(2) == 0;
             let overlap = rng.below(2) == 0;
+            let compiled = rng.below(2) == 0;
             let seed = rng.next_u64();
-            (part_idx, b, mode, batch, packed, overlap, seed)
+            (part_idx, b, mode, batch, packed, overlap, compiled, seed)
         },
-        |&(part_idx, b, mode, batch, packed, overlap, seed)| {
+        |&(part_idx, b, mode, batch, packed, overlap, compiled, seed)| {
             let part = &pool[part_idx];
             let n = b * part.m;
             let tensor = SymTensor::random(n, seed);
@@ -87,7 +96,15 @@ fn p1_distributed_equals_sequential_oracle() {
                 &tensor,
                 &x,
                 part,
-                ExecOpts { mode, backend: Backend::Native, batch, packed, overlap },
+                ExecOpts {
+                    mode,
+                    backend: Backend::Native,
+                    batch,
+                    packed,
+                    overlap,
+                    compiled,
+                    ..Default::default()
+                },
             )
             .map_err(|e| e.to_string())?;
             let scale = want.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
@@ -228,10 +245,11 @@ fn p5_run_multi_equals_r_independent_oracles() {
             let batch = rng.below(2) == 0;
             let packed = rng.below(2) == 0;
             let overlap = rng.below(2) == 0;
+            let compiled = rng.below(2) == 0;
             let seed = rng.next_u64();
-            (part_idx, b, r, mode, batch, packed, overlap, seed)
+            (part_idx, b, r, mode, batch, packed, overlap, compiled, seed)
         },
-        |&(part_idx, b, r, mode, batch, packed, overlap, seed)| {
+        |&(part_idx, b, r, mode, batch, packed, overlap, compiled, seed)| {
             let part = &pool[part_idx];
             let n = b * part.m;
             let tensor = SymTensor::random(n, seed);
@@ -240,7 +258,15 @@ fn p5_run_multi_equals_r_independent_oracles() {
             let plan = SttsvPlan::new(
                 &tensor,
                 part,
-                ExecOpts { mode, backend: Backend::Native, batch, packed, overlap },
+                ExecOpts {
+                    mode,
+                    backend: Backend::Native,
+                    batch,
+                    packed,
+                    overlap,
+                    compiled,
+                    ..Default::default()
+                },
             )
             .map_err(|e| e.to_string())?;
             let rep = plan.run_multi(&xs).map_err(|e| e.to_string())?;
@@ -314,7 +340,18 @@ fn p6_packed_path_matches_dense_extract_on_random_partitions() {
             let packed_plan = SttsvPlan::new(
                 &tensor,
                 part,
-                ExecOpts { mode, backend: Backend::Native, batch, packed: true, overlap },
+                ExecOpts {
+                    mode,
+                    backend: Backend::Native,
+                    batch,
+                    packed: true,
+                    overlap,
+                    // pin the packed INTERPRETER vs dense-extract (still
+                    // the PJRT fallback and the --no-compiled path);
+                    // compiled-vs-interpreter is property P10
+                    compiled: false,
+                    ..Default::default()
+                },
             )
             .map_err(|e| e.to_string())?;
             if packed_plan.resident_tensor_words() != 0 {
@@ -326,7 +363,14 @@ fn p6_packed_path_matches_dense_extract_on_random_partitions() {
             let dense_plan = SttsvPlan::new(
                 &tensor,
                 part,
-                ExecOpts { mode, backend: Backend::Native, batch, packed: false, overlap },
+                ExecOpts {
+                    mode,
+                    backend: Backend::Native,
+                    batch,
+                    packed: false,
+                    overlap,
+                    ..Default::default()
+                },
             )
             .map_err(|e| e.to_string())?;
             let yp = packed_plan.run_multi(&xs).map_err(|e| e.to_string())?;
@@ -689,6 +733,124 @@ fn p9_collectives_match_recursive_doubling_closed_form() {
             }
         }
     }
+}
+
+#[test]
+fn p10_compiled_programs_match_packed_interpreter() {
+    // The compiled sweep-program path must be a pure execution-strategy
+    // change: identical results within f32 reassociation tolerance on any
+    // path, BITWISE identical on the deterministic phased path at
+    // compute_threads = 1, and exactly invariant per-processor words,
+    // messages, and charged ternary mults — r ∈ {1, 4}, both comm modes,
+    // phased and overlap, random partitions and block sizes.
+    let pool = partition_pool();
+    check(
+        "compiled == interpreted",
+        0x0F10,
+        10,
+        |rng: &mut Rng| {
+            let part_idx = rng.below(pool.len());
+            let b = 2 + rng.below(6); // 2..=7, including non-divisible-by-λ₁
+            let r = [1usize, 4][rng.below(2)];
+            let mode = if rng.below(2) == 0 {
+                CommMode::PointToPoint
+            } else {
+                CommMode::AllToAll
+            };
+            let overlap = rng.below(2) == 0;
+            let seed = rng.next_u64();
+            (part_idx, b, r, mode, overlap, seed)
+        },
+        |&(part_idx, b, r, mode, overlap, seed)| {
+            let part = &pool[part_idx];
+            let n = b * part.m;
+            let tensor = SymTensor::random(n, seed);
+            let mut rng = Rng::new(seed ^ 0xF10);
+            let xs: Vec<Vec<f32>> = (0..r).map(|_| rng.normal_vec(n)).collect();
+            let compiled_opts = ExecOpts { mode, overlap, ..Default::default() };
+            let compiled_plan =
+                SttsvPlan::new(&tensor, part, compiled_opts).map_err(|e| e.to_string())?;
+            if compiled_plan.sweep_program_builds() != part.p as u64 {
+                return Err(format!(
+                    "{} programs built, expected P = {}",
+                    compiled_plan.sweep_program_builds(),
+                    part.p
+                ));
+            }
+            if compiled_plan.resident_tensor_words() != 0 {
+                return Err("compiled plan holds resident tensor words".into());
+            }
+            let interp_plan = SttsvPlan::new(
+                &tensor,
+                part,
+                ExecOpts { mode, overlap, compiled: false, ..Default::default() },
+            )
+            .map_err(|e| e.to_string())?;
+            let rc = compiled_plan.run_multi(&xs).map_err(|e| e.to_string())?;
+            let ri = interp_plan.run_multi(&xs).map_err(|e| e.to_string())?;
+            for l in 0..r {
+                let scale = ri.ys[l].iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+                for i in 0..n {
+                    if !overlap && rc.ys[l][i].to_bits() != ri.ys[l][i].to_bits() {
+                        return Err(format!(
+                            "phased col {l} i={i}: compiled {} != interpreted {} bitwise",
+                            rc.ys[l][i], ri.ys[l][i]
+                        ));
+                    }
+                    if (rc.ys[l][i] - ri.ys[l][i]).abs() > 1e-4 * scale {
+                        return Err(format!(
+                            "col {l} i={i}: compiled {} vs interpreted {} (scale {scale})",
+                            rc.ys[l][i], ri.ys[l][i]
+                        ));
+                    }
+                }
+            }
+            for p in 0..part.p {
+                let (c, i) = (&rc.per_proc[p], &ri.per_proc[p]);
+                if c.stats != i.stats {
+                    return Err(format!(
+                        "proc {p}: compiled comm {:?} != interpreted {:?}",
+                        c.stats, i.stats
+                    ));
+                }
+                if c.ternary_mults != i.ternary_mults {
+                    return Err(format!(
+                        "proc {p}: compiled charged {} mults, interpreted {}",
+                        c.ternary_mults, i.ternary_mults
+                    ));
+                }
+            }
+            // The 4-thread intra-worker pool: results within tolerance,
+            // not a single comm counter or charged mult moved.
+            let pool_plan = SttsvPlan::new(
+                &tensor,
+                part,
+                ExecOpts { mode, overlap, compute_threads: 4, ..Default::default() },
+            )
+            .map_err(|e| e.to_string())?;
+            let rp = pool_plan.run_multi(&xs).map_err(|e| e.to_string())?;
+            for p in 0..part.p {
+                if rp.per_proc[p].stats != ri.per_proc[p].stats {
+                    return Err(format!("proc {p}: compute pool changed CommStats"));
+                }
+                if rp.per_proc[p].ternary_mults != ri.per_proc[p].ternary_mults {
+                    return Err(format!("proc {p}: compute pool changed charged mults"));
+                }
+            }
+            for l in 0..r {
+                let scale = ri.ys[l].iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+                for i in 0..n {
+                    if (rp.ys[l][i] - ri.ys[l][i]).abs() > 1e-4 * scale {
+                        return Err(format!(
+                            "pool col {l} i={i}: {} vs {} (scale {scale})",
+                            rp.ys[l][i], ri.ys[l][i]
+                        ));
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
 }
 
 #[test]

@@ -126,6 +126,7 @@ fn distributed_sttsv_on_pjrt_backend_q2() {
                     batch,
                     packed,
                     overlap: false,
+                    ..Default::default()
                 },
             )
             .unwrap();
@@ -163,6 +164,7 @@ fn pjrt_and_native_backends_agree_through_power_method() {
         batch: true,
         packed: false,
         overlap: false,
+        ..Default::default()
     };
     let rp = power_method(&tensor, &part, &x0, 40, 1e-6, opts(Backend::Pjrt)).unwrap();
     let rn = power_method(&tensor, &part, &x0, 40, 1e-6, opts(Backend::Native)).unwrap();
