@@ -1,7 +1,8 @@
 # Top-level convenience targets (the code's "run `make artifacts`" pointers).
 
 .PHONY: artifacts artifacts-quick test test-release-asserts pytest bench \
-	bench-smoke bench-overlap bench-compiled bench-e2e bench-e2e-smoke
+	bench-smoke bench-overlap bench-compiled bench-e2e bench-e2e-smoke \
+	bench-hw bench-hw-smoke
 
 # AOT-lower the JAX/Pallas kernels (incl. the multi-RHS block_multi_* set)
 # to HLO text artifacts for the Rust PJRT backend.
@@ -57,3 +58,15 @@ bench-e2e:
 # every path and every comm assertion still executes.
 bench-e2e-smoke:
 	cd rust && STTSV_BENCH_SMOKE=1 cargo bench --bench e2e_power_method
+
+# E15 hardware-transport bench: P=2 ping-pong alpha-beta fit per transport
+# plus resident power-method wall-clock at P in {4, 10, 14} on both the
+# lock-free SPSC backend and the mpsc oracle (comm parity asserted);
+# writes rust/BENCH_hw.json. Wants >= P free cores for the spsc numbers.
+bench-hw:
+	cd rust && cargo bench --bench hw_transport
+
+# Fast variant (what CI runs): fewer widths, reps, and samples; parity
+# assertions and the acceptance print still execute.
+bench-hw-smoke:
+	cd rust && STTSV_BENCH_SMOKE=1 cargo bench --bench hw_transport

@@ -1,0 +1,333 @@
+//! Bench E15: hardware-speed transport — true multi-core wall-clock for
+//! the lock-free SPSC transport vs the mpsc counting oracle, plus a
+//! measured α (per-message latency) / β (per-word) fit against the charged
+//! `CommStats`. Emits `BENCH_hw.json`.
+//!
+//!     cargo bench --bench hw_transport                # full sampling
+//!     STTSV_BENCH_SMOKE=1 cargo bench ...             # CI fast path
+//!
+//! Two parts:
+//!
+//! 1. **α-β fit** — a P = 2 ping-pong per transport over a ladder of
+//!    message widths; least-squares fit of one-way time t(w) = α + β·w.
+//!    The per-transport constants turn any charged `CommStats` into a
+//!    predicted communication time (`α·msgs + β·words`), which is exactly
+//!    the quantity the paper's α-β-γ model prices.
+//! 2. **STTSV wall-clock** — the iteration-resident power method (workers
+//!    spawned once, every sweep over the counted fabric) at P ∈ {4, 10,
+//!    14}, phased and overlap, on both transports, with per-processor
+//!    comm parity asserted between them. The paper states its experiments
+//!    for P ∈ {2, 4, 8}, but the tetrahedral construction realizes
+//!    P = v(v²+1)... only at Steiner-system orders — P ∈ {4, 10, 14} are
+//!    the realizable neighbors (trivial S(4,3,3), spherical q = 2,
+//!    SQS(8)); the P = 2 point is covered by the ping-pong ladder.
+//!
+//! The acceptance line (spsc ≥ 2× mpsc wall-clock at P = 4, phased) is
+//! printed honestly either way and recorded in the JSON.
+
+use std::fmt::Write as _;
+use std::time::Instant;
+
+use sttsv::apps::power_method;
+use sttsv::bench::{header, time};
+use sttsv::coordinator::{CommMode, ExecOpts};
+use sttsv::partition::TetraPartition;
+use sttsv::simulator::{self, CommStats, RunCfg, TransportKind};
+use sttsv::steiner::{spherical, sqs8, trivial, SteinerSystem};
+use sttsv::tensor::SymTensor;
+use sttsv::util::rng::Rng;
+use sttsv::util::table::Table;
+
+/// One-way per-message time for `words`-word messages on `transport`,
+/// measured from `reps` P = 2 ping-pong round trips with the endpoints
+/// already warm (pools filled, ring slots sized), so the number excludes
+/// worker spawn and first-touch allocation — it prices the steady-state
+/// message path alone.
+fn pingpong_oneway_secs(transport: TransportKind, words: usize, reps: u64) -> f64 {
+    let mut cfg = RunCfg::new(transport);
+    cfg.slot_words = words;
+    cfg.pin_threads = transport == TransportKind::Spsc;
+    let (outs, _) = simulator::run_cfg(2, None, cfg, |comm| {
+        let mut buf = vec![0.5f32; words];
+        // one warm-up round trip (fills pools / sizes slots)
+        if comm.rank == 0 {
+            comm.isend(1, 0, &buf)?;
+            comm.recv_into(1, 0, &mut buf)?;
+        } else {
+            comm.recv_into(0, 0, &mut buf)?;
+            comm.isend(0, 0, &buf)?;
+        }
+        comm.barrier();
+        let t0 = Instant::now();
+        for it in 0..reps {
+            if comm.rank == 0 {
+                comm.isend(1, 1 + it, &buf)?;
+                comm.recv_into(1, 1 + it, &mut buf)?;
+            } else {
+                comm.recv_into(0, 1 + it, &mut buf)?;
+                comm.isend(0, 1 + it, &buf)?;
+            }
+        }
+        Ok(t0.elapsed().as_secs_f64())
+    })
+    .unwrap();
+    outs[0] / (2.0 * reps as f64)
+}
+
+/// Least-squares fit t = α + β·w over (words, seconds) points.
+fn fit_alpha_beta(points: &[(usize, f64)]) -> (f64, f64) {
+    let n = points.len() as f64;
+    let wbar = points.iter().map(|&(w, _)| w as f64).sum::<f64>() / n;
+    let tbar = points.iter().map(|&(_, t)| t).sum::<f64>() / n;
+    let cov: f64 = points.iter().map(|&(w, t)| (w as f64 - wbar) * (t - tbar)).sum();
+    let var: f64 = points.iter().map(|&(w, _)| (w as f64 - wbar) * (w as f64 - wbar)).sum();
+    let beta = if var > 0.0 { cov / var } else { 0.0 };
+    (tbar - beta * wbar, beta)
+}
+
+/// Predicted one-way communication seconds for a rank's charged counters
+/// under a fitted (α, β): the α-β model priced with measured constants.
+fn predict_secs(stats: &CommStats, alpha: f64, beta: f64) -> f64 {
+    alpha * stats.sent_msgs as f64 + beta * stats.sent_words as f64
+}
+
+struct Fit {
+    transport: TransportKind,
+    alpha: f64,
+    beta: f64,
+    points: Vec<(usize, f64)>,
+}
+
+struct E15Row {
+    p: usize,
+    n: usize,
+    mode: &'static str,
+    iters: usize,
+    mpsc_ms_per_iter: f64,
+    spsc_ms_per_iter: f64,
+    speedup: f64,
+    max_sent_words: u64,
+    max_sent_msgs: u64,
+    pred_comm_ms_mpsc: f64,
+    pred_comm_ms_spsc: f64,
+}
+
+fn render_json(fits: &[Fit], rows: &[E15Row], accept: bool) -> String {
+    let mut s = String::new();
+    s.push_str("{\n  \"bench\": \"hw_transport\",\n  \"alpha_beta_fits\": [\n");
+    for (idx, f) in fits.iter().enumerate() {
+        let pts: Vec<String> = f
+            .points
+            .iter()
+            .map(|&(w, t)| format!("[{w}, {:.1}]", t * 1e9))
+            .collect();
+        let _ = write!(
+            s,
+            "    {{\"transport\": \"{}\", \"alpha_us\": {:.4}, \
+             \"beta_ns_per_word\": {:.4}, \"oneway_ns_by_words\": [{}]}}{}\n",
+            f.transport,
+            f.alpha * 1e6,
+            f.beta * 1e9,
+            pts.join(", "),
+            if idx + 1 < fits.len() { "," } else { "" }
+        );
+    }
+    s.push_str("  ],\n  \"sttsv_power_method\": [\n");
+    for (idx, r) in rows.iter().enumerate() {
+        let _ = write!(
+            s,
+            "    {{\"p\": {}, \"n\": {}, \"mode\": \"{}\", \"iters\": {}, \
+             \"mpsc_ms_per_iter\": {:.4}, \"spsc_ms_per_iter\": {:.4}, \
+             \"speedup\": {:.3}, \"max_sent_words\": {}, \"max_sent_msgs\": {}, \
+             \"pred_comm_ms_mpsc\": {:.4}, \"pred_comm_ms_spsc\": {:.4}}}{}\n",
+            r.p,
+            r.n,
+            r.mode,
+            r.iters,
+            r.mpsc_ms_per_iter,
+            r.spsc_ms_per_iter,
+            r.speedup,
+            r.max_sent_words,
+            r.max_sent_msgs,
+            r.pred_comm_ms_mpsc,
+            r.pred_comm_ms_spsc,
+            if idx + 1 < rows.len() { "," } else { "" }
+        );
+    }
+    let _ = write!(s, "  ],\n  \"accept_spsc_2x_at_p4_phased\": {accept}\n}}\n");
+    s
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("STTSV_BENCH_SMOKE").is_ok();
+
+    // ---- part 1: α-β fit from the P = 2 ping-pong ladder ---------------
+    header("E15a: transport α-β fit (P = 2 ping-pong, one-way per message)");
+    let sizes: &[usize] = if smoke {
+        &[1, 64, 1024]
+    } else {
+        &[1, 4, 16, 64, 256, 1024, 4096, 16384]
+    };
+    let (reps, fit_runs) = if smoke { (200u64, 1) } else { (2000u64, 3) };
+    let mut fits = Vec::new();
+    let mut t1 = Table::new(["transport", "α (µs/msg)", "β (ns/word)", "t(1w) ns", "t(16Kw) ns"]);
+    for transport in [TransportKind::Mpsc, TransportKind::Spsc] {
+        let points: Vec<(usize, f64)> = sizes
+            .iter()
+            .map(|&w| {
+                // min over runs: latency noise is one-sided.
+                let best = (0..fit_runs)
+                    .map(|_| pingpong_oneway_secs(transport, w, reps))
+                    .fold(f64::INFINITY, f64::min);
+                (w, best)
+            })
+            .collect();
+        let (alpha, beta) = fit_alpha_beta(&points);
+        t1.row([
+            transport.to_string(),
+            format!("{:.3}", alpha * 1e6),
+            format!("{:.3}", beta * 1e9),
+            format!("{:.0}", points.first().unwrap().1 * 1e9),
+            format!("{:.0}", points.last().unwrap().1 * 1e9),
+        ]);
+        fits.push(Fit { transport, alpha, beta, points });
+    }
+    t1.print();
+    println!(
+        "fit: one-way t(w) = α + β·w, least squares over {} widths; with \
+         these constants any charged CommStats prices a predicted comm time \
+         α·msgs + β·words.",
+        sizes.len()
+    );
+
+    // ---- part 2: resident power-method wall-clock, both transports ------
+    header("E15b: resident power method, spsc vs mpsc (phased and overlap)");
+    // Steiner-realizable P near the paper's P ∈ {2, 4, 8}: trivial S(4,3,3)
+    // → P=4, spherical q=2 → P=10, SQS(8) → P=14 (P=2 is the ping-pong).
+    let systems: Vec<SteinerSystem> = vec![trivial(4)?, spherical(2)?, sqs8()];
+    let n = 40; // lcm-friendly across m ∈ {4, 10, 8}; comm-dominated sweeps
+    let iters = if smoke { 20 } else { 200 };
+    let (warmup, samples) = if smoke { (0, 1) } else { (1, 3) };
+
+    let mut rows = Vec::new();
+    let mut t2 = Table::new([
+        "P", "mode", "mpsc ms/it", "spsc ms/it", "speedup", "sent w/it", "sent msg/it",
+        "pred mpsc ms", "pred spsc ms",
+    ]);
+    for sys in &systems {
+        let part = TetraPartition::from_steiner(sys)?;
+        assert_eq!(n % part.m, 0, "n must split into m = {} blocks", part.m);
+        let (tensor, cols) = SymTensor::odeco(n, &[5.0, 2.0, 1.0], 7);
+        let mut rng = Rng::new(8);
+        let mut x0 = cols[0].clone();
+        for v in x0.iter_mut() {
+            *v += 0.25 * rng.normal_f32();
+        }
+        for overlap in [false, true] {
+            let mode = if overlap { "overlap" } else { "phased" };
+            let mut ms = [0.0f64; 2];
+            let mut reports = Vec::new();
+            for (ti, transport) in [TransportKind::Mpsc, TransportKind::Spsc]
+                .into_iter()
+                .enumerate()
+            {
+                let opts = ExecOpts {
+                    mode: CommMode::PointToPoint,
+                    overlap,
+                    transport,
+                    pin_threads: transport == TransportKind::Spsc,
+                    ..Default::default()
+                };
+                // tol = 0 pins the session to exactly `iters` sweeps.
+                let rep = power_method(&tensor, &part, &x0, iters, 0.0, opts)?;
+                assert_eq!(rep.iters.len(), iters);
+                let timing = time(warmup, samples, || {
+                    let r = power_method(&tensor, &part, &x0, iters, 0.0, opts).unwrap();
+                    std::hint::black_box(r);
+                });
+                ms[ti] = timing.median_ms() / iters as f64;
+                reports.push(rep);
+            }
+            // P11 at the bench level: identical charged comm per processor
+            // on both transports, for the whole solve.
+            for (p, (m, s)) in reports[0].comm.iter().zip(&reports[1].comm).enumerate() {
+                assert_eq!(m, s, "P={} proc {p} {mode}: transport comm parity", part.p);
+            }
+            if !overlap {
+                // The phased path is the bitwise oracle on BOTH transports.
+                assert_eq!(
+                    reports[0].lambda, reports[1].lambda,
+                    "P={} phased lambda must be bitwise transport-invariant",
+                    part.p
+                );
+            }
+            let busiest = reports[0]
+                .iters
+                .first()
+                .map(|it| it.comm.clone())
+                .unwrap_or_default()
+                .into_iter()
+                .max_by_key(|s| s.sent_words)
+                .unwrap_or_default();
+            let row = E15Row {
+                p: part.p,
+                n,
+                mode,
+                iters,
+                mpsc_ms_per_iter: ms[0],
+                spsc_ms_per_iter: ms[1],
+                speedup: ms[0] / ms[1],
+                max_sent_words: busiest.sent_words,
+                max_sent_msgs: busiest.sent_msgs,
+                pred_comm_ms_mpsc: predict_secs(&busiest, fits[0].alpha, fits[0].beta) * 1e3,
+                pred_comm_ms_spsc: predict_secs(&busiest, fits[1].alpha, fits[1].beta) * 1e3,
+            };
+            t2.row([
+                part.p.to_string(),
+                mode.to_string(),
+                format!("{:.4}", row.mpsc_ms_per_iter),
+                format!("{:.4}", row.spsc_ms_per_iter),
+                format!("{:.2}x", row.speedup),
+                row.max_sent_words.to_string(),
+                row.max_sent_msgs.to_string(),
+                format!("{:.4}", row.pred_comm_ms_mpsc),
+                format!("{:.4}", row.pred_comm_ms_spsc),
+            ]);
+            rows.push(row);
+        }
+    }
+    t2.print();
+    println!(
+        "per-iteration wall-clock of the iteration-resident power method \
+         (workers spawned once; n = {n} keeps sweeps communication-dominated); \
+         \"pred\" columns price the busiest rank's charged per-iteration \
+         CommStats with the part-1 α-β constants."
+    );
+
+    // ---- acceptance (printed honestly either way) -----------------------
+    let p4 = rows
+        .iter()
+        .find(|r| r.p == 4 && r.mode == "phased")
+        .expect("P=4 phased row");
+    let accept = p4.speedup >= 2.0;
+    println!(
+        "\nacceptance [spsc >= 2x mpsc wall-clock at P=4 phased]: {} \
+         (measured {:.2}x: mpsc {:.4} ms/it vs spsc {:.4} ms/it)",
+        if accept { "PASS" } else { "MISS" },
+        p4.speedup,
+        p4.mpsc_ms_per_iter,
+        p4.spsc_ms_per_iter
+    );
+    if !accept {
+        println!(
+            "note: spin-then-park and the spin barrier need P free cores to \
+             shine; oversubscribed or smoke-sized runs understate the spsc \
+             advantage. The α-β fit above is the core E15 deliverable."
+        );
+    }
+
+    let json = render_json(&fits, &rows, accept);
+    std::fs::write("BENCH_hw.json", &json)?;
+    println!("\nwrote BENCH_hw.json ({} bytes)", json.len());
+    Ok(())
+}

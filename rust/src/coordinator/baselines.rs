@@ -113,19 +113,25 @@ pub fn run_naive_grid(tensor: &SymTensor, x: &[f32], p: usize) -> Result<Baselin
             gs.dedup();
             gs
         };
-        // symmetric rounds: in round r exchange with me±r
+        // symmetric rounds: in round r exchange with me±r. One reused
+        // staging buffer per direction: after the first rounds warm the
+        // comm pool, the whole gather runs allocation-free.
+        let mut sbuf: Vec<f32> = Vec::new();
+        let mut rbuf: Vec<f32> = Vec::new();
         for round in 1..p {
             let to = (me + round) % p;
             let from = (me + p - round) % p;
             let out_idx = wanted(to, me);
             if !out_idx.is_empty() {
-                let payload: Vec<f32> = out_idx.iter().map(|&g| x[g]).collect();
-                comm.send(to, 100 + round as u64, payload)?;
+                sbuf.clear();
+                sbuf.extend(out_idx.iter().map(|&g| x[g]));
+                comm.isend(to, 100 + round as u64, &sbuf)?;
             }
             let in_idx = wanted(me, from);
             if !in_idx.is_empty() {
-                let data = comm.recv(from, 100 + round as u64)?;
-                for (g, v) in in_idx.into_iter().zip(data) {
+                rbuf.resize(in_idx.len(), 0.0);
+                comm.recv_into(from, 100 + round as u64, &mut rbuf)?;
+                for (g, v) in in_idx.into_iter().zip(rbuf.iter().copied()) {
                     xe[g] = v;
                     have[g] = true;
                 }
@@ -166,17 +172,17 @@ pub fn run_naive_grid(tensor: &SymTensor, x: &[f32], p: usize) -> Result<Baselin
                 continue;
             }
             let chunk = split_range(ri.len(), m, t);
-            let payload: Vec<f32> = part_y[chunk].to_vec();
-            comm.send(peer, 200 + t as u64, payload)?;
+            comm.isend(peer, 200 + t as u64, &part_y[chunk])?;
         }
         let my_chunk = split_range(ri.len(), m, mpos);
         let mut reduced: Vec<f32> = part_y[my_chunk.clone()].to_vec();
+        rbuf.resize(my_chunk.len(), 0.0);
         for &peer in &row {
             if peer == me {
                 continue;
             }
-            let data = comm.recv(peer, 200 + mpos as u64)?;
-            for (o, v) in reduced.iter_mut().zip(data) {
+            comm.recv_into(peer, 200 + mpos as u64, &mut rbuf)?;
+            for (o, v) in reduced.iter_mut().zip(rbuf.iter().copied()) {
                 *o += v;
             }
         }
@@ -225,11 +231,10 @@ pub fn run_sequence(tensor: &SymTensor, x: &[f32], p: usize) -> Result<BaselineR
         let prev = (me + p - 1) % p;
         let mut cur = own.clone();
         for round in 0..p - 1 {
-            comm.send(next, 300 + round as u64, xe[cur.clone()].to_vec())?;
+            comm.isend(next, 300 + round as u64, &xe[cur.clone()])?;
             let seg_owner = (me + p - 1 - round % p) % p;
             let seg = split_range(n, p, seg_owner);
-            let data = comm.recv(prev, 300 + round as u64)?;
-            xe[seg.clone()].copy_from_slice(&data);
+            comm.recv_into(prev, 300 + round as u64, &mut xe[seg.clone()])?;
             cur = seg;
             comm.barrier();
         }

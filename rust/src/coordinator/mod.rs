@@ -63,7 +63,7 @@ pub mod session;
 use crate::partition::{block_ternary_mults, classify, factors, BlockKind, TetraPartition};
 use crate::runtime::{exec_block_runs, lanes_add, lanes_axpy, Backend, Engine, RunDesc};
 use crate::schedule::CommSchedule;
-use crate::simulator::{self, BufPool, Comm, CommStats, TAG_COLL_BASE};
+use crate::simulator::{self, BufPool, Comm, CommStats, RunCfg, TagClass, TransportKind};
 use crate::tensor::{PackedBlockView, SymTensor};
 use anyhow::{bail, ensure, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -164,6 +164,19 @@ pub struct ExecOpts {
     /// Default 1 — every oracle stays bit-for-bit. Requires `compiled`
     /// (clamped to 1 otherwise).
     pub compute_threads: usize,
+    /// Message-passing transport under the simulated processors (CLI
+    /// `--backend spsc|mpsc`, orthogonal to the compute `backend`):
+    /// [`TransportKind::Mpsc`] is the deterministic counting oracle,
+    /// [`TransportKind::Spsc`] the lock-free shared-memory rings whose
+    /// wall-clock E15 benchmarks (`make bench-hw`). Per-processor words,
+    /// messages, and charged mults are identical on either (property P11);
+    /// the plan sizes the spsc ring slots from its known message widths
+    /// ([`SttsvPlan::max_message_words`]) so sends write in place.
+    pub transport: TransportKind,
+    /// Pin worker thread r to CPU r mod cores (CLI `--pin`; spsc runs
+    /// only). Off by default — pinning helps dedicated benchmark boxes and
+    /// hurts oversubscribed CI runners.
+    pub pin_threads: bool,
 }
 
 impl Default for ExecOpts {
@@ -176,6 +189,8 @@ impl Default for ExecOpts {
             overlap: true,
             compiled: true,
             compute_threads: 1,
+            transport: TransportKind::Mpsc,
+            pin_threads: false,
         }
     }
 }
@@ -1068,7 +1083,9 @@ impl<'a> SttsvPlan<'a> {
             Vec<(usize, std::ops::Range<usize>, Vec<f32>)>,
         );
         let (outs, metrics): (Vec<ProcOut>, simulator::RunMetrics) =
-            simulator::run_ext(part.p, Some(&self.pools), |comm| self.worker(comm, &views))?;
+            simulator::run_cfg(part.p, Some(&self.pools), self.run_cfg(r), |comm| {
+                self.worker(comm, &views)
+            })?;
 
         // Assemble ys from the final portions (each (i, sub-range) once;
         // portion payloads are (len, r) interleaved panels).
@@ -1503,7 +1520,7 @@ impl<'a> SttsvPlan<'a> {
         while st.p1_left > 0 || st.p3_left > 0 || st.blocks_left > 0 {
             // Drain every sweep message that has already arrived (cheap,
             // nonblocking; collective tags stay stashed for the session).
-            while let Some((from, tag)) = comm.try_recv_matching(|t| t < TAG_COLL_BASE) {
+            while let Some((from, tag)) = comm.try_recv_class(TagClass::Sweep) {
                 st.recv_one(comm, &ctx, from, tag)?;
             }
             if !st.ready.is_empty() {
@@ -1557,7 +1574,7 @@ impl<'a> SttsvPlan<'a> {
                 }
             } else if st.p1_left > 0 || st.p3_left > 0 {
                 // Nothing contractable: block until the next sweep arrival.
-                let (from, tag) = comm.recv_any_matching(|t| t < TAG_COLL_BASE)?;
+                let (from, tag) = comm.recv_any_class(TagClass::Sweep)?;
                 st.recv_one(comm, &ctx, from, tag)?;
             } else {
                 bail!(
@@ -1626,6 +1643,54 @@ impl<'a> SttsvPlan<'a> {
             }
         }
         out
+    }
+
+    /// Width (f32 words) of the largest single message any worker sends
+    /// during an r-deep sweep under this plan — the same schedule
+    /// accounting as [`SttsvPlan::expected_proc_stats`], taken per message
+    /// instead of summed. Collective traffic (the resident sessions'
+    /// allreduces: an r·r Gram panel at most, scalars otherwise) is
+    /// covered by the r² floor. Used to size the spsc transport's ring
+    /// slots so every send writes in place without growing a slot.
+    pub fn max_message_words(&self, r: usize) -> usize {
+        let part = self.part;
+        let b = self.b;
+        let widest = match self.opts.mode {
+            CommMode::PointToPoint => self
+                .sched
+                .xfers
+                .iter()
+                .map(|xf| {
+                    // phase-1 payload: the sender's portions of the shared
+                    // row blocks; phase-3 payload: the receiver's.
+                    let w1: usize = xf
+                        .row_blocks
+                        .iter()
+                        .map(|&i| part.portion(i, xf.from, b).len())
+                        .sum();
+                    let w3: usize = xf
+                        .row_blocks
+                        .iter()
+                        .map(|&i| part.portion(i, xf.to, b).len())
+                        .sum();
+                    w1.max(w3)
+                })
+                .max()
+                .unwrap_or(0),
+            CommMode::AllToAll => 2 * b.div_ceil(part.lambda1()),
+        };
+        (widest * r).max(r * r).max(2)
+    }
+
+    /// The simulator run configuration for an r-deep sweep: the plan's
+    /// transport/pinning options plus ring slots sized to the widest
+    /// message, so spsc sends never allocate.
+    pub(crate) fn run_cfg(&self, r: usize) -> RunCfg {
+        RunCfg {
+            transport: self.opts.transport,
+            pin_threads: self.opts.pin_threads,
+            slot_words: self.max_message_words(r),
+        }
     }
 }
 

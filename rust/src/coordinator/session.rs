@@ -174,7 +174,8 @@ impl<'p, 't> SolverSession<'p, 't> {
         let seed = seed_vec.as_slice();
         let entries = AtomicUsize::new(0);
 
-        let (outs, _metrics) = simulator::run_ext(part.p, Some(&plan.pools), |comm| {
+        let cfg = plan.run_cfg(1);
+        let (outs, _metrics) = simulator::run_cfg(part.p, Some(&plan.pools), cfg, |comm| {
             entries.fetch_add(1, Ordering::Relaxed);
             let me = comm.rank;
             let mut st = plan.worker_state(me, 1);
@@ -326,7 +327,8 @@ impl<'p, 't> SolverSession<'p, 't> {
         let views: Vec<&[f32]> = x0_cols.iter().map(|x| x.as_slice()).collect();
         let entries = AtomicUsize::new(0);
 
-        let (outs, _metrics) = simulator::run_ext(part.p, Some(&plan.pools), |comm| {
+        let cfg = plan.run_cfg(r);
+        let (outs, _metrics) = simulator::run_cfg(part.p, Some(&plan.pools), cfg, |comm| {
             entries.fetch_add(1, Ordering::Relaxed);
             let me = comm.rank;
             let mut st = plan.worker_state(me, r);

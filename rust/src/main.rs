@@ -20,6 +20,7 @@ use sttsv::coordinator::{self, baselines, CommMode, ExecOpts};
 use sttsv::partition::TetraPartition;
 use sttsv::runtime::Backend;
 use sttsv::schedule::CommSchedule;
+use sttsv::simulator::TransportKind;
 use sttsv::steiner::{fixtures, spherical, sqs8};
 use sttsv::tensor::{linalg, SymTensor};
 use sttsv::util::cli::Args;
@@ -43,11 +44,17 @@ fn main() {
             eprintln!(
                 "usage: sttsv <tables|schedule|run|power-method|cp-gradient|cp-als\
                  |mttkrp|sweep|verify|bounds> [--q N] [--b N] [--mode p2p|a2a] \
-                 [--backend native|pjrt] [--iters N] [--sqs8] [--no-batch] \
-                 [--packed|--no-packed] [--overlap|--no-overlap] \
+                 [--backend native|pjrt|spsc|mpsc] [--pin] [--iters N] [--sqs8] \
+                 [--no-batch] [--packed|--no-packed] [--overlap|--no-overlap] \
                  [--compiled|--no-compiled] [--compute-threads N] \
                  [--resident|--no-resident]\n\
                  \n\
+                 --backend        comma-separable selectors: a compute backend \
+                 (native|pjrt) and/or a message transport (spsc = lock-free \
+                 shared-memory rings, mpsc = the counting oracle; e.g. \
+                 --backend native,spsc)\n\
+                 --pin            pin worker thread r to CPU r (spsc transport \
+                 benchmarking)\n\
                  --compiled       execute plan-compiled branch-free sweep programs \
                  (default on the packed native path; --no-compiled keeps the \
                  per-sweep interpreter)\n\
@@ -150,8 +157,26 @@ fn cmd_schedule(args: &Args) -> Result<()> {
 }
 
 fn exec_opts(args: &Args) -> Result<ExecOpts> {
-    let backend = args.get("backend").unwrap_or("native").parse::<Backend>()?;
+    // --backend takes a comma list mixing two orthogonal selectors: the
+    // compute backend (native|pjrt) and the message transport (spsc|mpsc).
+    // Each word parses as whichever kind it names, so `--backend spsc`,
+    // `--backend pjrt` and `--backend native,spsc` all do what they say.
+    let mut backend = Backend::Native;
+    let mut transport = TransportKind::Mpsc;
+    for word in args.get("backend").unwrap_or("native").split(',') {
+        if let Ok(t) = word.parse::<TransportKind>() {
+            transport = t;
+        } else {
+            backend = word.parse::<Backend>().map_err(|_| {
+                anyhow::anyhow!(
+                    "unknown backend selector '{word}' (expected native|pjrt|spsc|mpsc)"
+                )
+            })?;
+        }
+    }
     let mut opts = ExecOpts::for_backend(backend);
+    opts.transport = transport;
+    opts.pin_threads = args.flag("pin");
     opts.mode = args.get("mode").unwrap_or("p2p").parse::<CommMode>()?;
     opts.batch = !args.flag("no-batch");
     if args.flag("packed") {

@@ -1,7 +1,7 @@
 //! The instrumented α-β-γ machine (paper §3.1).
 //!
 //! P virtual processors run as OS threads with private state and
-//! communicate *only* by message passing through per-processor mailboxes.
+//! communicate *only* by message passing through per-processor endpoints.
 //! Every send/receive is counted in words (f32 elements) and messages —
 //! exactly the quantities the paper's lower bound constrains. A shared
 //! barrier lets algorithms execute stepped schedules, enforcing the model's
@@ -12,21 +12,49 @@
 //! the paper's claims are word counts per processor in an abstract model,
 //! and the simulator measures them exactly (see DESIGN.md §5).
 //!
+//! **Transports** (§Perf P11): the endpoint sits behind a private
+//! [`Transport`] trait with two interchangeable backends selected by
+//! [`RunCfg`] / [`TransportKind`]:
+//!
+//! * [`TransportKind::Mpsc`] — `std::sync::mpsc` channels, one mailbox per
+//!   processor. Simple and deterministic: the **counting oracle** every
+//!   other backend is validated against.
+//! * [`TransportKind::Spsc`] — lock-free shared-memory rings (`spsc`
+//!   module), one fixed-capacity ring per *directed* processor pair with
+//!   cache-line-padded atomic head/tail counters. Sends copy the payload
+//!   straight into a preallocated ring slot (no channel, no mutex, no
+//!   per-message allocation once slots and pools are warm), receivers
+//!   spin-then-park, and [`RunCfg::pin_threads`] optionally pins workers
+//!   to CPUs. This is the hardware-speed path benchmarked by E15
+//!   (`make bench-hw`), which fits real α/β constants against the charged
+//!   [`CommStats`].
+//!
+//! Both backends share the counters, the stash, the [`BufPool`] machinery
+//! and the collectives, so per-processor words, messages, and charged
+//! mults are bitwise identical across backends (property P11). One
+//! deliberate divergence: when every peer has exited, a blocked spsc
+//! receive fails fast with an error, while mpsc blocks (its channels stay
+//! open until the whole run tears down).
+//!
 //! Two communication APIs share the counters (§Perf P8):
 //!
 //! * **Blocking** ([`Comm::send`] / [`Comm::recv`]) — the original stepped
-//!   API. Each message owns a freshly allocated `Vec<f32>`.
+//!   API. `send` hands off an owned `Vec<f32>`; `recv` returns a buffer
+//!   drawn from the processor's [`BufPool`] and adopts the in-flight
+//!   buffer back into it, so repeated blocking receives are also
+//!   allocation-free at steady state.
 //! * **Nonblocking, buffer-reusing** ([`Comm::isend`], [`Comm::try_recv`],
 //!   [`Comm::recv_any`], [`Comm::recv_into`]) — the MPI
 //!   `Isend`/`Iprobe`/`Recv`-into-registered-buffer shape. `isend` copies
 //!   the borrowed payload into a buffer drawn from a per-processor
-//!   [`BufPool`]; the receiver delivers straight into a caller slice and
-//!   adopts the in-flight buffer into its own pool (ownership migrates
-//!   with the message — since every protocol here sends and receives the
-//!   same number of messages per processor, pools stay balanced and the
-//!   steady state performs **zero per-message heap allocations**, with no
-//!   return-channel race against early worker teardown). Word/message
-//!   accounting is identical to the blocking API (asserted in tests).
+//!   [`BufPool`] (or, on spsc, straight into the ring slot); the receiver
+//!   delivers into a caller slice and adopts the in-flight buffer into its
+//!   own pool (ownership migrates with the message — since every protocol
+//!   here sends and receives the same number of messages per processor,
+//!   pools stay balanced and the steady state performs **zero per-message
+//!   heap allocations**, with no return-channel race against early worker
+//!   teardown). Word/message accounting is identical to the blocking API
+//!   (asserted in tests).
 //!
 //! **Collectives** (§Perf P9): [`Comm::allreduce_sum`] /
 //! [`Comm::allreduce_scalar`] implement recursive-doubling allreduce over
@@ -37,16 +65,17 @@
 //! sessions take the converge-or-continue branch unanimously with no host
 //! round trip. Collective tags live above [`TAG_COLL_BASE`] and are
 //! sequence-numbered per processor, so they never collide with algorithm
-//! traffic; the tag-filtered polling variants
-//! ([`Comm::try_recv_matching`] / [`Comm::recv_any_matching`]) let an
-//! event-loop worker drain its own messages while a faster peer's
-//! collective traffic waits in the stash.
+//! traffic; the class-filtered polling variants ([`Comm::try_recv_class`]
+//! / [`Comm::recv_any_class`], keyed by [`TagClass`] ready-queues so a
+//! poll is O(1) however deep the stash) let an event-loop worker drain its
+//! own messages while a faster peer's collective traffic waits stashed.
 
 pub mod cost;
+mod spsc;
 
 use anyhow::{anyhow, ensure, Result};
-use std::collections::HashMap;
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
 use std::sync::{mpsc, Arc, Barrier, Mutex};
 
 /// Per-processor communication counters.
@@ -90,9 +119,43 @@ impl CommStats {
 
 /// Collective tags live at and above this value; all point-to-point
 /// algorithm traffic (stepped exchange tags, overlap gather/reduce tags)
-/// stays below it, so `tag < TAG_COLL_BASE` cleanly separates the two
-/// streams for the tag-filtered polling APIs.
+/// stays below it, so the [`TagClass`] of a tag cleanly separates the two
+/// streams for the class-filtered polling APIs.
 pub const TAG_COLL_BASE: u64 = 1 << 32;
+
+/// The two disjoint tag streams (plus the union), used to key the ready
+/// queues that make polling O(1) — see [`Comm::try_recv_class`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TagClass {
+    /// Any message at all.
+    Any,
+    /// Algorithm traffic: `tag < TAG_COLL_BASE` (stepped exchange tags,
+    /// overlap gather/reduce tags).
+    Sweep,
+    /// Collective traffic: `tag >= TAG_COLL_BASE` (sequence-numbered
+    /// allreduce instances).
+    Collective,
+}
+
+impl TagClass {
+    /// The class a concrete tag belongs to (never `Any`).
+    pub fn of(tag: u64) -> TagClass {
+        if tag < TAG_COLL_BASE {
+            TagClass::Sweep
+        } else {
+            TagClass::Collective
+        }
+    }
+
+    /// Whether `tag` falls in this class.
+    pub fn matches(self, tag: u64) -> bool {
+        match self {
+            TagClass::Any => true,
+            TagClass::Sweep => tag < TAG_COLL_BASE,
+            TagClass::Collective => tag >= TAG_COLL_BASE,
+        }
+    }
+}
 
 /// Largest power of two ≤ p (the recursive-doubling core size).
 fn pow2_floor(p: usize) -> usize {
@@ -138,13 +201,15 @@ pub fn allreduce_stats(p: usize, rank: usize, width: usize) -> CommStats {
 }
 
 /// A pool of reusable payload buffers (one per processor). Buffers are
-/// drawn best-fit by [`Comm::isend`], travel with the packet, and are
-/// adopted into the *receiver's* pool on delivery (symmetric protocols
-/// keep the pools balanced); `fresh_allocs` counts every buffer
-/// allocation or capacity growth the pool had to perform — zero on a
-/// warmed-up pool. Lend pools across repeated [`run_ext`] calls (as
-/// `coordinator::SttsvPlan` does) to make iterative workloads
-/// allocation-free on the communication hot path.
+/// drawn best-fit by [`Comm::isend`] and [`Comm::recv`], travel with the
+/// packet (mpsc) and are adopted into the *receiver's* pool on delivery
+/// (symmetric protocols keep the pools balanced); `fresh_allocs` counts
+/// every buffer allocation or capacity growth the pool had to perform —
+/// zero on a warmed-up pool. On the spsc transport, ring-slot capacity
+/// growths count here too, so the invariant keeps its meaning: zero means
+/// zero payload heap activity anywhere on the message path. Lend pools
+/// across repeated [`run_ext`] calls (as `coordinator::SttsvPlan` does) to
+/// make iterative workloads allocation-free on the communication hot path.
 #[derive(Debug, Default)]
 pub struct BufPool {
     bufs: Vec<Vec<f32>>,
@@ -243,10 +308,284 @@ pub struct RunMetrics {
     pub fresh_payload_allocs: u64,
 }
 
+/// Message-passing backend for a simulator run — see the module docs for
+/// the two backends' contracts.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub enum TransportKind {
+    /// `std::sync::mpsc` channels: the deterministic counting oracle.
+    #[default]
+    Mpsc,
+    /// Lock-free shared-memory SPSC rings: the hardware-speed path.
+    Spsc,
+}
+
+impl std::str::FromStr for TransportKind {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "mpsc" => Ok(TransportKind::Mpsc),
+            "spsc" => Ok(TransportKind::Spsc),
+            other => Err(anyhow!("unknown transport '{other}' (expected spsc|mpsc)")),
+        }
+    }
+}
+
+impl std::fmt::Display for TransportKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            TransportKind::Mpsc => "mpsc",
+            TransportKind::Spsc => "spsc",
+        })
+    }
+}
+
+/// Run-level configuration for [`run_cfg`].
+#[derive(Debug, Clone, Copy)]
+pub struct RunCfg {
+    pub transport: TransportKind,
+    /// Pin rank r's worker thread to CPU r mod cores (spsc runs only) for
+    /// stable cache/NUMA placement while benchmarking.
+    pub pin_threads: bool,
+    /// Preallocated payload capacity (f32 words) of every ring slot on the
+    /// spsc transport. Size it from the plan's known maximum message width
+    /// (`SttsvPlan::max_message_words`) so sends never grow a slot; an
+    /// undersized value still converges to allocation-free steady state
+    /// because slot growth persists (each slot grows at most once per
+    /// width regime).
+    pub slot_words: usize,
+}
+
+impl Default for RunCfg {
+    fn default() -> Self {
+        RunCfg { transport: TransportKind::Mpsc, pin_threads: false, slot_words: 64 }
+    }
+}
+
+impl RunCfg {
+    /// Default configuration for the given backend.
+    pub fn new(transport: TransportKind) -> RunCfg {
+        RunCfg { transport, ..RunCfg::default() }
+    }
+}
+
 struct Packet {
     from: usize,
     tag: u64,
     data: Vec<f32>,
+}
+
+/// The wire under a [`Comm`] endpoint. Implementations move `Packet`s
+/// between ranks; all counting, stashing, pooling and collective logic
+/// lives above in [`Comm`], which is what keeps the two backends
+/// observationally identical (property P11).
+///
+/// Buffer discipline: `send` consumes an owned payload — a backend that
+/// copies onto the wire (spsc) recycles the `Vec` into `pool`, a backend
+/// that forwards ownership (mpsc) does not. `try_recv`/`recv` draw the
+/// delivered payload's buffer from `pool` when the wire copies out (spsc);
+/// mpsc delivers the sender's buffer itself. Either way the packet the
+/// caller sees owns its data and the pool accounting in `fresh_allocs`
+/// covers every allocation on the path.
+trait Transport: Send {
+    fn send(&mut self, to: usize, tag: u64, data: Vec<f32>, pool: &mut BufPool) -> Result<()>;
+    fn send_slice(&mut self, to: usize, tag: u64, data: &[f32], pool: &mut BufPool)
+        -> Result<()>;
+    fn try_recv(&mut self, pool: &mut BufPool) -> Option<Packet>;
+    fn recv(&mut self, pool: &mut BufPool) -> Result<Packet>;
+}
+
+/// The `std::sync::mpsc` oracle backend: one channel per processor,
+/// payload `Vec`s travel through the channel with ownership.
+struct MpscTransport {
+    rank: usize,
+    senders: Vec<mpsc::Sender<Packet>>,
+    inbox: mpsc::Receiver<Packet>,
+}
+
+impl Transport for MpscTransport {
+    fn send(&mut self, to: usize, tag: u64, data: Vec<f32>, _pool: &mut BufPool) -> Result<()> {
+        self.senders[to]
+            .send(Packet { from: self.rank, tag, data })
+            .map_err(|_| anyhow!("processor {to} hung up"))
+    }
+
+    fn send_slice(
+        &mut self,
+        to: usize,
+        tag: u64,
+        data: &[f32],
+        pool: &mut BufPool,
+    ) -> Result<()> {
+        let mut buf = pool.take(data.len());
+        buf.extend_from_slice(data);
+        self.send(to, tag, buf, pool)
+    }
+
+    fn try_recv(&mut self, _pool: &mut BufPool) -> Option<Packet> {
+        self.inbox.try_recv().ok()
+    }
+
+    fn recv(&mut self, _pool: &mut BufPool) -> Result<Packet> {
+        self.inbox.recv().map_err(|_| anyhow!("inbox closed"))
+    }
+}
+
+/// How long a blocked spsc receiver spins before switching to the
+/// announce-scan-park cycle, and how long each timed park lasts. The park
+/// timeout is pure defense in depth — the SeqCst handshake in
+/// [`spsc::ParkCell`] already rules out lost wakeups — so its only cost is
+/// a rare 50µs hiccup if that reasoning were ever wrong.
+const SPSC_RECV_SPINS: u32 = 512;
+const SPSC_PARK: std::time::Duration = std::time::Duration::from_micros(50);
+
+/// The lock-free backend: a dedicated [`spsc::SpscRing`] per directed
+/// pair, so every ring has exactly one producer and one consumer and
+/// needs no CAS anywhere. `alive` flags give fail-fast liveness: a
+/// blocked receive errors out once every peer has exited with all rings
+/// drained, instead of hanging the run.
+struct SpscTransport {
+    rank: usize,
+    /// `outgoing[to]` / `incoming[from]`; `None` on the diagonal.
+    outgoing: Vec<Option<Arc<spsc::SpscRing>>>,
+    incoming: Vec<Option<Arc<spsc::SpscRing>>>,
+    parks: Arc<Vec<spsc::ParkCell>>,
+    alive: Arc<Vec<AtomicBool>>,
+    /// Round-robin scan start, for fairness across senders.
+    cursor: usize,
+}
+
+impl SpscTransport {
+    /// Copy `data` into `to`'s ring, backing off while the ring is full
+    /// (the consumer always drains — see [`spsc::RING_SLOTS`] — unless it
+    /// exited, which we fail fast on). A slot-capacity growth is charged
+    /// to `pool.fresh_allocs`, keeping the zero-allocation invariant
+    /// end-to-end.
+    fn push_wire(&self, to: usize, tag: u64, data: &[f32], pool: &mut BufPool) -> Result<()> {
+        let ring = self.outgoing[to].as_ref().expect("self-send has no ring");
+        let mut spins = 0u32;
+        let grew = loop {
+            match ring.try_push(tag, data) {
+                Some(grew) => break grew,
+                None => {
+                    if !self.alive[to].load(Ordering::Acquire) {
+                        return Err(anyhow!("processor {to} hung up"));
+                    }
+                    spins += 1;
+                    if spins < 128 {
+                        std::hint::spin_loop();
+                    } else {
+                        std::thread::yield_now();
+                    }
+                }
+            }
+        };
+        if grew {
+            pool.fresh_allocs += 1;
+        }
+        self.parks[to].wake();
+        Ok(())
+    }
+
+    /// One fair pass over all incoming rings; pops the first available
+    /// packet into a pool-drawn buffer.
+    fn scan(&mut self, pool: &mut BufPool) -> Option<Packet> {
+        let p = self.incoming.len();
+        for i in 0..p {
+            let from = (self.cursor + i) % p;
+            if let Some(ring) = self.incoming[from].as_ref() {
+                if let Some((tag, data)) = ring.pop(|cap| pool.take(cap)) {
+                    self.cursor = (from + 1) % p;
+                    return Some(Packet { from, tag, data });
+                }
+            }
+        }
+        None
+    }
+
+    /// Have all peers exited? (Acquire: pairs with the Release store in
+    /// worker teardown, so a true answer happens-after every last publish
+    /// the peer made — one final scan after this is conclusive.)
+    fn peers_done(&self) -> bool {
+        self.alive
+            .iter()
+            .enumerate()
+            .all(|(r, a)| r == self.rank || !a.load(Ordering::Acquire))
+    }
+}
+
+impl Transport for SpscTransport {
+    fn send(&mut self, to: usize, tag: u64, data: Vec<f32>, pool: &mut BufPool) -> Result<()> {
+        self.push_wire(to, tag, &data, pool)?;
+        // The wire copied; recycle the caller's buffer.
+        pool.put(data);
+        Ok(())
+    }
+
+    fn send_slice(
+        &mut self,
+        to: usize,
+        tag: u64,
+        data: &[f32],
+        pool: &mut BufPool,
+    ) -> Result<()> {
+        // In-place fast path: borrowed payloads go straight to the ring
+        // slot with no intermediate pool buffer at all.
+        self.push_wire(to, tag, data, pool)
+    }
+
+    fn try_recv(&mut self, pool: &mut BufPool) -> Option<Packet> {
+        self.scan(pool)
+    }
+
+    fn recv(&mut self, pool: &mut BufPool) -> Result<Packet> {
+        let mut spins = 0u32;
+        loop {
+            if let Some(pkt) = self.scan(pool) {
+                return Ok(pkt);
+            }
+            if spins < SPSC_RECV_SPINS {
+                spins += 1;
+                std::hint::spin_loop();
+                continue;
+            }
+            // Spin budget exhausted: announce, re-scan (the Dekker
+            // handshake — see spsc::ParkCell), then park with a timeout.
+            let park = &self.parks[self.rank];
+            park.announce();
+            if let Some(pkt) = self.scan(pool) {
+                park.retract();
+                return Ok(pkt);
+            }
+            if self.peers_done() {
+                park.retract();
+                return match self.scan(pool) {
+                    Some(pkt) => Ok(pkt),
+                    None => Err(anyhow!("all peers exited with empty rings")),
+                };
+            }
+            spsc::ParkCell::park(SPSC_PARK);
+            park.retract();
+        }
+    }
+}
+
+/// The run-wide barrier, matched to the transport: mutex+condvar for the
+/// oracle, a spin barrier (no syscalls on the fast path) for spsc.
+#[derive(Clone)]
+enum RunBarrier {
+    Std(Arc<Barrier>),
+    Spin(Arc<spsc::SpinBarrier>),
+}
+
+impl RunBarrier {
+    fn wait(&self) {
+        match self {
+            RunBarrier::Std(b) => {
+                b.wait();
+            }
+            RunBarrier::Spin(b) => b.wait(),
+        }
+    }
 }
 
 /// A processor's communication endpoint inside [`run`].
@@ -255,13 +594,19 @@ pub struct Comm {
     pub rank: usize,
     /// Total number of processors.
     pub p: usize,
-    senders: Vec<mpsc::Sender<Packet>>,
-    inbox: mpsc::Receiver<Packet>,
+    transport: Box<dyn Transport>,
     /// Out-of-order buffer: packets received while waiting for another key.
     stash: HashMap<(usize, u64), Packet>,
+    /// Arrival-ordered keys of stashed packets, one queue per [`TagClass`]
+    /// (index 0 = Sweep, 1 = Collective), so class-filtered polling peeks
+    /// in O(1) instead of scanning the stash. Entries whose packet has
+    /// since been consumed by a targeted receive are stale; they are
+    /// dropped lazily at peek time and swept when a queue outgrows the
+    /// stash (see [`Comm::stash_insert`]).
+    ready: [VecDeque<(usize, u64)>; 2],
     pool: BufPool,
     inflight: Arc<InflightGauge>,
-    barrier: Arc<Barrier>,
+    barrier: RunBarrier,
     /// Sequence number for collective tags: every collective call on this
     /// processor consumes one tag above [`TAG_COLL_BASE`]. All processors
     /// issue collectives in the same program order, so the tags agree
@@ -274,43 +619,46 @@ pub struct Comm {
 }
 
 impl Comm {
-    /// Send `data` to processor `to` with a matching `tag` (allocating
-    /// variant: the caller-built `Vec` becomes the in-flight buffer).
+    /// Send `data` to processor `to` with a matching `tag` (owned-payload
+    /// variant: the caller-built `Vec` becomes the in-flight buffer on
+    /// mpsc, or is recycled into this processor's pool after the spsc wire
+    /// copies it in place).
     pub fn send(&mut self, to: usize, tag: u64, data: Vec<f32>) -> Result<()> {
         debug_assert_ne!(to, self.rank, "self-send is a bug in the algorithm");
         self.stats.sent_words += data.len() as u64;
         self.stats.sent_msgs += 1;
         self.inflight.add(data.len() as u64);
-        self.senders[to]
-            .send(Packet { from: self.rank, tag, data })
-            .map_err(|_| anyhow!("processor {to} hung up"))
+        self.transport.send(to, tag, data, &mut self.pool)
     }
 
     /// Nonblocking send from a borrowed slice: the payload is copied into a
     /// reusable buffer from this processor's pool (zero allocations once
-    /// the pool is warm) and handed to `to`'s mailbox. Never blocks;
-    /// identical word/message accounting to [`Comm::send`].
+    /// the pool is warm) — or, on the spsc transport, directly into the
+    /// destination ring slot — and handed to `to`'s endpoint. Never blocks
+    /// under the protocols' in-flight bounds; identical word/message
+    /// accounting to [`Comm::send`].
     pub fn isend(&mut self, to: usize, tag: u64, data: &[f32]) -> Result<()> {
         debug_assert_ne!(to, self.rank, "self-send is a bug in the algorithm");
-        let mut buf = self.pool.take(data.len());
-        buf.extend_from_slice(data);
         self.stats.sent_words += data.len() as u64;
         self.stats.sent_msgs += 1;
         self.inflight.add(data.len() as u64);
-        self.senders[to]
-            .send(Packet { from: self.rank, tag, data: buf })
-            .map_err(|_| anyhow!("processor {to} hung up"))
+        self.transport.send_slice(to, tag, data, &mut self.pool)
     }
 
     /// Blocking receive of the message from `from` with `tag` (out-of-order
-    /// deliveries are stashed). Allocating variant: ownership of the
-    /// payload moves to the caller, so the buffer leaves the pool system.
+    /// deliveries are stashed). The returned buffer is drawn from this
+    /// processor's [`BufPool`] and the in-flight buffer is adopted into the
+    /// pool in its place, so ownership stays inside the pool system and
+    /// repeated blocking receives allocate nothing once the pool is warm.
     pub fn recv(&mut self, from: usize, tag: u64) -> Result<Vec<f32>> {
         let pkt = self.wait_for(from, tag)?;
         self.stats.recv_words += pkt.data.len() as u64;
         self.stats.recv_msgs += 1;
         self.inflight.sub(pkt.data.len() as u64);
-        Ok(pkt.data)
+        let mut out = self.pool.take(pkt.data.len());
+        out.extend_from_slice(&pkt.data);
+        self.pool.put(pkt.data);
+        Ok(out)
     }
 
     /// Blocking receive delivered straight into `dst`, which must be
@@ -333,48 +681,49 @@ impl Comm {
         Ok(())
     }
 
-    /// Nonblocking poll: drains every packet currently in the mailbox into
+    /// Nonblocking poll: drains every packet currently on the wire into
     /// the stash and reports the `(from, tag)` of one available message, or
     /// `None` when nothing has arrived. Consume the reported message with
     /// [`Comm::recv_into`] (or [`Comm::recv`]) before polling again.
     pub fn try_recv(&mut self) -> Option<(usize, u64)> {
-        self.try_recv_matching(|_| true)
+        self.try_recv_class(TagClass::Any)
     }
 
-    /// [`Comm::try_recv`] restricted to tags satisfying `pred`:
-    /// non-matching arrivals are stashed (not lost) but never reported.
-    /// Event-loop workers poll with `|t| t < TAG_COLL_BASE` so a faster
-    /// peer's collective traffic waits in the stash instead of derailing
-    /// the sweep protocol.
-    pub fn try_recv_matching(&mut self, pred: impl Fn(u64) -> bool) -> Option<(usize, u64)> {
-        while let Ok(pkt) = self.inbox.try_recv() {
+    /// [`Comm::try_recv`] restricted to one [`TagClass`]: non-matching
+    /// arrivals are stashed (not lost) but never reported. Event-loop
+    /// workers poll with [`TagClass::Sweep`] so a faster peer's collective
+    /// traffic waits in the stash instead of derailing the sweep protocol.
+    /// The peek is O(1) via the per-class ready queue (arrival order), so
+    /// polling cost is independent of stash depth.
+    pub fn try_recv_class(&mut self, class: TagClass) -> Option<(usize, u64)> {
+        while let Some(pkt) = self.transport.try_recv(&mut self.pool) {
             self.stash_insert(pkt);
         }
-        self.stash.keys().find(|&&(_, t)| pred(t)).copied()
+        self.ready_peek(class)
     }
 
     /// Blocking wait for *any* message: returns the `(from, tag)` of an
-    /// available packet (stashed first, then the mailbox). Like
+    /// available packet (stashed first, then the wire). Like
     /// [`Comm::try_recv`], does not consume the message.
     pub fn recv_any(&mut self) -> Result<(usize, u64)> {
-        self.recv_any_matching(|_| true)
+        self.recv_any_class(TagClass::Any)
     }
 
-    /// [`Comm::recv_any`] restricted to tags satisfying `pred`: blocks
-    /// until a matching message is available, stashing (never dropping)
+    /// [`Comm::recv_any`] restricted to one [`TagClass`]: blocks until a
+    /// matching message is available, stashing (never dropping)
     /// non-matching arrivals along the way.
-    pub fn recv_any_matching(&mut self, pred: impl Fn(u64) -> bool) -> Result<(usize, u64)> {
-        if let Some(key) = self.stash.keys().find(|&&(_, t)| pred(t)).copied() {
+    pub fn recv_any_class(&mut self, class: TagClass) -> Result<(usize, u64)> {
+        if let Some(key) = self.try_recv_class(class) {
             return Ok(key);
         }
         loop {
             let pkt = self
-                .inbox
-                .recv()
-                .map_err(|_| anyhow!("inbox closed while waiting for any message"))?;
+                .transport
+                .recv(&mut self.pool)
+                .map_err(|e| anyhow!("{e} while waiting for any message"))?;
             let key = (pkt.from, pkt.tag);
             self.stash_insert(pkt);
-            if pred(key.1) {
+            if class.matches(key.1) {
                 return Ok(key);
             }
         }
@@ -434,14 +783,35 @@ impl Comm {
         Ok(buf[0])
     }
 
-    /// Stash an out-of-order packet. A `(from, tag)` key must identify at
-    /// most one in-flight message at a time (true for every protocol here:
-    /// the stepped exchanges use per-step tags, the overlap pipeline one
-    /// gather + one reduce per ordered pair); a duplicate would silently
-    /// replace the first payload, so it trips a debug assertion (running
-    /// in CI's release-with-debug-assertions job too).
+    /// Oldest stashed key in `class`, dropping stale ready entries (whose
+    /// packet a targeted receive already consumed) along the way.
+    fn ready_peek(&mut self, class: TagClass) -> Option<(usize, u64)> {
+        let order: &[usize] = match class {
+            TagClass::Any => &[0, 1],
+            TagClass::Sweep => &[0],
+            TagClass::Collective => &[1],
+        };
+        for &q in order {
+            while let Some(&key) = self.ready[q].front() {
+                if self.stash.contains_key(&key) {
+                    return Some(key);
+                }
+                self.ready[q].pop_front();
+            }
+        }
+        None
+    }
+
+    /// Stash an out-of-order packet and enqueue its key on the class ready
+    /// queue. A `(from, tag)` key must identify at most one in-flight
+    /// message at a time (true for every protocol here: the stepped
+    /// exchanges use per-step tags, the overlap pipeline one gather + one
+    /// reduce per ordered pair); a duplicate would silently replace the
+    /// first payload, so it trips a debug assertion (running in CI's
+    /// release-with-debug-assertions job too).
     fn stash_insert(&mut self, pkt: Packet) {
         let key = (pkt.from, pkt.tag);
+        let q = if key.1 < TAG_COLL_BASE { 0 } else { 1 };
         let prev = self.stash.insert(key, pkt);
         debug_assert!(
             prev.is_none(),
@@ -449,17 +819,28 @@ impl Comm {
             key.0,
             key.1
         );
+        self.ready[q].push_back(key);
+        // Purely-phased protocols consume the stash through targeted
+        // `wait_for` and never peek a ready queue, so stale entries would
+        // otherwise accumulate unboundedly; this amortized sweep keeps
+        // every queue O(|stash|) with O(1) amortized cost per insert.
+        if self.ready[q].len() >= 2 * self.stash.len() + 8 {
+            let stash = &self.stash;
+            self.ready[q].retain(|k| stash.contains_key(k));
+        }
     }
 
     fn wait_for(&mut self, from: usize, tag: u64) -> Result<Packet> {
         if let Some(pkt) = self.stash.remove(&(from, tag)) {
+            // The matching ready entry (if any) goes stale and is dropped
+            // lazily at the next peek.
             return Ok(pkt);
         }
         loop {
             let pkt = self
-                .inbox
-                .recv()
-                .map_err(|_| anyhow!("inbox closed while waiting for {from}:{tag}"))?;
+                .transport
+                .recv(&mut self.pool)
+                .map_err(|e| anyhow!("{e} while waiting for {from}:{tag}"))?;
             if pkt.from == from && pkt.tag == tag {
                 return Ok(pkt);
             }
@@ -471,6 +852,21 @@ impl Comm {
     pub fn barrier(&self) {
         self.barrier.wait();
     }
+}
+
+/// Per-rank endpoint halves built by [`run_cfg`] and moved into the worker
+/// threads.
+enum Endpoint {
+    Mpsc {
+        senders: Vec<mpsc::Sender<Packet>>,
+        inbox: mpsc::Receiver<Packet>,
+    },
+    Spsc {
+        outgoing: Vec<Option<Arc<spsc::SpscRing>>>,
+        incoming: Vec<Option<Arc<spsc::SpscRing>>>,
+        parks: Arc<Vec<spsc::ParkCell>>,
+        alive: Arc<Vec<AtomicBool>>,
+    },
 }
 
 /// Run `body` on P simulated processors; returns the per-rank results in
@@ -485,12 +881,28 @@ where
 
 /// [`run`] with run-level metrics, optionally lending per-processor
 /// [`BufPool`]s so payload buffers survive across runs (the steady-state
-/// zero-allocation path for iterative callers). `pools`, when provided,
-/// must have exactly `p` entries; each worker locks only its own slot, at
-/// entry and exit.
+/// zero-allocation path for iterative callers). Uses the default (mpsc)
+/// transport; see [`run_cfg`] for backend selection.
 pub fn run_ext<R, F>(
     p: usize,
     pools: Option<&[Mutex<BufPool>]>,
+    body: F,
+) -> Result<(Vec<R>, RunMetrics)>
+where
+    R: Send,
+    F: Fn(&mut Comm) -> Result<R> + Send + Sync,
+{
+    run_cfg(p, pools, RunCfg::default(), body)
+}
+
+/// [`run_ext`] with full run configuration: transport backend, CPU
+/// pinning, and spsc ring-slot sizing. `pools`, when provided, must have
+/// exactly `p` entries; each worker locks only its own slot, at entry and
+/// exit.
+pub fn run_cfg<R, F>(
+    p: usize,
+    pools: Option<&[Mutex<BufPool>]>,
+    cfg: RunCfg,
     body: F,
 ) -> Result<(Vec<R>, RunMetrics)>
 where
@@ -501,39 +913,87 @@ where
     if let Some(ps) = pools {
         assert_eq!(ps.len(), p, "one BufPool per processor");
     }
-    let mut senders = Vec::with_capacity(p);
-    let mut inboxes = Vec::with_capacity(p);
-    for _ in 0..p {
-        let (tx, rx) = mpsc::channel::<Packet>();
-        senders.push(tx);
-        inboxes.push(Some(rx));
-    }
-    let barrier = Arc::new(Barrier::new(p));
+    let mut endpoints: Vec<Option<Endpoint>> = Vec::with_capacity(p);
+    let barrier = match cfg.transport {
+        TransportKind::Mpsc => {
+            let mut senders = Vec::with_capacity(p);
+            let mut inboxes = Vec::with_capacity(p);
+            for _ in 0..p {
+                let (tx, rx) = mpsc::channel::<Packet>();
+                senders.push(tx);
+                inboxes.push(rx);
+            }
+            for inbox in inboxes {
+                endpoints.push(Some(Endpoint::Mpsc { senders: senders.clone(), inbox }));
+            }
+            RunBarrier::Std(Arc::new(Barrier::new(p)))
+        }
+        TransportKind::Spsc => {
+            // rings[from * p + to]: one SPSC ring per directed pair.
+            let rings: Vec<Option<Arc<spsc::SpscRing>>> = (0..p * p)
+                .map(|i| {
+                    (i / p != i % p)
+                        .then(|| Arc::new(spsc::SpscRing::new(spsc::RING_SLOTS, cfg.slot_words)))
+                })
+                .collect();
+            let parks = Arc::new((0..p).map(|_| spsc::ParkCell::new()).collect::<Vec<_>>());
+            let alive = Arc::new((0..p).map(|_| AtomicBool::new(true)).collect::<Vec<_>>());
+            for rank in 0..p {
+                endpoints.push(Some(Endpoint::Spsc {
+                    outgoing: (0..p).map(|to| rings[rank * p + to].clone()).collect(),
+                    incoming: (0..p).map(|from| rings[from * p + rank].clone()).collect(),
+                    parks: parks.clone(),
+                    alive: alive.clone(),
+                }));
+            }
+            RunBarrier::Spin(Arc::new(spsc::SpinBarrier::new(p)))
+        }
+    };
     let inflight = Arc::new(InflightGauge::default());
     let fresh = AtomicU64::new(0);
     let results: Vec<Mutex<Option<Result<R>>>> = (0..p).map(|_| Mutex::new(None)).collect();
     let body = &body;
     let fresh_ref = &fresh;
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
 
     std::thread::scope(|scope| {
-        for (rank, inbox) in inboxes.iter_mut().enumerate() {
-            let senders = senders.clone();
+        for (rank, ep) in endpoints.iter_mut().enumerate() {
+            let ep = ep.take().unwrap();
             let barrier = barrier.clone();
             let inflight = inflight.clone();
-            let inbox = inbox.take().unwrap();
             let slot = &results[rank];
             scope.spawn(move || {
+                if cfg.pin_threads {
+                    spsc::pin_to_cpu(rank % cores);
+                }
                 let pool = match pools {
                     Some(ps) => std::mem::take(&mut *ps[rank].lock().unwrap()),
                     None => BufPool::new(),
                 };
                 let fresh_before = pool.fresh_allocs;
+                let (transport, liveness): (Box<dyn Transport>, Option<_>) = match ep {
+                    Endpoint::Mpsc { senders, inbox } => {
+                        (Box::new(MpscTransport { rank, senders, inbox }), None)
+                    }
+                    Endpoint::Spsc { outgoing, incoming, parks, alive } => {
+                        parks[rank].register();
+                        let t = SpscTransport {
+                            rank,
+                            outgoing,
+                            incoming,
+                            parks: parks.clone(),
+                            alive: alive.clone(),
+                            cursor: 0,
+                        };
+                        (Box::new(t), Some((parks, alive)))
+                    }
+                };
                 let mut comm = Comm {
                     rank,
                     p,
-                    senders,
-                    inbox,
+                    transport,
                     stash: HashMap::new(),
+                    ready: [VecDeque::new(), VecDeque::new()],
                     pool,
                     inflight,
                     barrier,
@@ -551,6 +1011,17 @@ where
                     let mut lent = ps[rank].lock().unwrap();
                     lent.fresh_allocs += comm.pool.fresh_allocs;
                     lent.bufs.append(&mut comm.pool.bufs);
+                }
+                if let Some((parks, alive)) = liveness {
+                    // Release: everything this rank published on any ring
+                    // happens-before a peer observing it dead; wake all
+                    // parked peers so they re-check liveness.
+                    alive[rank].store(false, Ordering::Release);
+                    for (r, park) in parks.iter().enumerate() {
+                        if r != rank {
+                            park.wake();
+                        }
+                    }
                 }
                 *slot.lock().unwrap() = Some(out);
             });
@@ -600,40 +1071,44 @@ mod tests {
 
     #[test]
     fn out_of_order_tags_are_stashed() {
-        let out = run(2, |comm| {
-            if comm.rank == 0 {
-                comm.send(1, 7, vec![7.0])?;
-                comm.send(1, 8, vec![8.0])?;
-                Ok(0.0)
-            } else {
-                // receive in reverse order
-                let b = comm.recv(0, 8)?;
-                let a = comm.recv(0, 7)?;
-                Ok(a[0] * 10.0 + b[0])
-            }
-        })
-        .unwrap();
-        assert_eq!(out[1], 78.0);
+        for transport in [TransportKind::Mpsc, TransportKind::Spsc] {
+            let (out, _) = run_cfg(2, None, RunCfg::new(transport), |comm| {
+                if comm.rank == 0 {
+                    comm.send(1, 7, vec![7.0])?;
+                    comm.send(1, 8, vec![8.0])?;
+                    Ok(0.0)
+                } else {
+                    // receive in reverse order
+                    let b = comm.recv(0, 8)?;
+                    let a = comm.recv(0, 7)?;
+                    Ok(a[0] * 10.0 + b[0])
+                }
+            })
+            .unwrap();
+            assert_eq!(out[1], 78.0, "{transport}");
+        }
     }
 
     #[test]
     fn barrier_synchronizes_steps() {
         use std::sync::atomic::{AtomicUsize, Ordering};
-        let counter = AtomicUsize::new(0);
-        let p = 4;
-        run(p, |comm| {
-            for step in 0..3 {
-                counter.fetch_add(1, Ordering::SeqCst);
-                comm.barrier();
-                // after the barrier, all p increments of this step happened
-                let c = counter.load(Ordering::SeqCst);
-                assert!(c >= (step + 1) * p, "step {step}: {c}");
-                comm.barrier();
-            }
-            Ok(())
-        })
-        .unwrap();
-        assert_eq!(counter.load(Ordering::SeqCst), 3 * p);
+        for transport in [TransportKind::Mpsc, TransportKind::Spsc] {
+            let counter = AtomicUsize::new(0);
+            let p = 4;
+            run_cfg(p, None, RunCfg::new(transport), |comm| {
+                for step in 0..3 {
+                    counter.fetch_add(1, Ordering::SeqCst);
+                    comm.barrier();
+                    // after the barrier, all p increments of this step happened
+                    let c = counter.load(Ordering::SeqCst);
+                    assert!(c >= (step + 1) * p, "step {step}: {c}");
+                    comm.barrier();
+                }
+                Ok(())
+            })
+            .unwrap();
+            assert_eq!(counter.load(Ordering::SeqCst), 3 * p);
+        }
     }
 
     #[test]
@@ -662,9 +1137,15 @@ mod tests {
     /// Comm-only ring exchange over the nonblocking API (no tensor, no
     /// compute): every rank isends to both neighbors, then drains arrivals
     /// with try_recv/recv_any + recv_into. Used to pin (a) stats parity
-    /// with the blocking API and (b) steady-state buffer reuse.
-    fn nonblocking_ring(p: usize, words: usize, pools: &[Mutex<BufPool>]) -> Vec<CommStats> {
-        let (out, _) = run_ext(p, Some(pools), |comm| {
+    /// with the blocking API and (b) steady-state buffer reuse, on both
+    /// transports.
+    fn nonblocking_ring(
+        p: usize,
+        words: usize,
+        pools: &[Mutex<BufPool>],
+        cfg: RunCfg,
+    ) -> Vec<CommStats> {
+        let (out, _) = run_cfg(p, Some(pools), cfg, |comm| {
             let me = comm.rank;
             let next = (me + 1) % comm.p;
             let prev = (me + comm.p - 1) % comm.p;
@@ -705,8 +1186,99 @@ mod tests {
         })
         .unwrap();
         let pools: Vec<Mutex<BufPool>> = (0..p).map(|_| Mutex::new(BufPool::new())).collect();
-        let nonblocking = nonblocking_ring(p, words, &pools);
+        let nonblocking = nonblocking_ring(p, words, &pools, RunCfg::default());
         assert_eq!(blocking, nonblocking);
+    }
+
+    #[test]
+    fn spsc_transport_matches_mpsc_stats_exactly() {
+        // The same exchange (neighbor isends + recursive-doubling
+        // allreduce on awkward odd P) on both backends: per-rank counters
+        // and allreduce results must be identical — the simulator-level
+        // core of property P11.
+        let (p, words) = (5usize, 23usize);
+        let run_one = |transport| {
+            run_cfg(p, None, RunCfg::new(transport), |comm| {
+                let me = comm.rank;
+                let next = (me + 1) % comm.p;
+                let prev = (me + comm.p - 1) % comm.p;
+                let payload = vec![me as f32 + 0.5; words];
+                comm.isend(next, 1, &payload)?;
+                comm.isend(prev, 2, &payload)?;
+                let mut buf = vec![0.0f32; words];
+                comm.recv_into(prev, 1, &mut buf)?;
+                comm.recv_into(next, 2, &mut buf)?;
+                let total = comm.allreduce_scalar(buf[0])?;
+                Ok((total, comm.stats))
+            })
+            .unwrap()
+            .0
+        };
+        let mpsc_out = run_one(TransportKind::Mpsc);
+        let spsc_out = run_one(TransportKind::Spsc);
+        assert_eq!(mpsc_out, spsc_out);
+        for (rank, (_, stats)) in mpsc_out.iter().enumerate() {
+            let mut want = CommStats {
+                sent_words: 2 * words as u64,
+                recv_words: 2 * words as u64,
+                sent_msgs: 2,
+                recv_msgs: 2,
+            };
+            want.absorb(&allreduce_stats(p, rank, 1));
+            assert_eq!(*stats, want, "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn spsc_warm_pools_and_sized_slots_are_allocation_free() {
+        // With ring slots sized to the message width, a warmed-up spsc run
+        // performs zero payload heap activity: isends write in place and
+        // recv_into draws from the adopted-buffer pool.
+        let (p, words) = (4usize, 33usize);
+        let mut cfg = RunCfg::new(TransportKind::Spsc);
+        cfg.slot_words = words;
+        let pools: Vec<Mutex<BufPool>> = (0..p).map(|_| Mutex::new(BufPool::new())).collect();
+        nonblocking_ring(p, words, &pools, cfg);
+        let (_, metrics) = run_cfg(p, Some(&pools), cfg, |comm| {
+            let me = comm.rank;
+            let next = (me + 1) % comm.p;
+            let prev = (me + comm.p - 1) % comm.p;
+            let payload = vec![me as f32; words];
+            comm.isend(next, 1, &payload)?;
+            comm.isend(prev, 2, &payload)?;
+            let mut buf = vec![0.0f32; words];
+            comm.recv_into(prev, 1, &mut buf)?;
+            comm.recv_into(next, 2, &mut buf)?;
+            Ok(())
+        })
+        .unwrap();
+        assert_eq!(
+            metrics.fresh_payload_allocs, 0,
+            "warm spsc run must not touch the heap for payloads"
+        );
+    }
+
+    #[test]
+    fn spsc_blocked_recv_fails_fast_when_all_peers_exit() {
+        // Deliberate backend divergence: rank 1 waits for a message rank 0
+        // never sends; once rank 0 exits, the blocked receive must error
+        // out instead of hanging the run (mpsc would block forever here).
+        let out = run_cfg(2, None, RunCfg::new(TransportKind::Spsc), |comm| {
+            if comm.rank == 0 {
+                Ok(String::new())
+            } else {
+                match comm.recv(0, 42) {
+                    Ok(_) => panic!("received a message nobody sent"),
+                    Err(e) => Ok(e.to_string()),
+                }
+            }
+        })
+        .unwrap();
+        assert!(
+            out[1].contains("all peers exited"),
+            "unexpected error text: {}",
+            out[1]
+        );
     }
 
     #[test]
@@ -715,7 +1287,7 @@ mod tests {
         // pools lent across runs, the second run allocates nothing.
         let (p, words) = (4usize, 33usize);
         let pools: Vec<Mutex<BufPool>> = (0..p).map(|_| Mutex::new(BufPool::new())).collect();
-        nonblocking_ring(p, words, &pools);
+        nonblocking_ring(p, words, &pools, RunCfg::default());
         let before: u64 = pools.iter().map(|pl| pl.lock().unwrap().fresh_allocs()).sum();
         assert!(before > 0, "cold run must have allocated buffers");
         let (_, metrics) = run_ext(p, Some(&pools), |comm| {
@@ -734,6 +1306,39 @@ mod tests {
         assert_eq!(
             metrics.fresh_payload_allocs, 0,
             "warmed pools must serve every isend without allocating"
+        );
+    }
+
+    #[test]
+    fn blocking_recv_adopts_buffer_into_pool() {
+        // The satellite fix for the allocating receive: `recv` now returns
+        // a pool-drawn buffer and adopts the in-flight buffer, so a second
+        // run over warm pools performs zero receive-side allocations.
+        let pools: Vec<Mutex<BufPool>> = (0..2).map(|_| Mutex::new(BufPool::new())).collect();
+        let exchange = |pools: &[Mutex<BufPool>]| {
+            run_ext(2, Some(pools), |comm| {
+                if comm.rank == 0 {
+                    comm.send(1, 3, vec![1.0, 2.0, 3.0])?;
+                    Ok(0.0)
+                } else {
+                    let got = comm.recv(0, 3)?;
+                    Ok(got.iter().sum())
+                }
+            })
+            .unwrap()
+        };
+        let (out, first) = exchange(&pools);
+        assert_eq!(out[1], 6.0);
+        assert!(first.fresh_payload_allocs > 0, "cold pool must allocate once");
+        assert!(
+            !pools[1].lock().unwrap().is_empty(),
+            "receiver must have adopted the in-flight buffer"
+        );
+        let (out, second) = exchange(&pools);
+        assert_eq!(out[1], 6.0);
+        assert_eq!(
+            second.fresh_payload_allocs, 0,
+            "warm blocking recv must not allocate"
         );
     }
 
@@ -797,36 +1402,62 @@ mod tests {
         // pairs must not collide even when one rank races ahead: the
         // per-processor tag sequence keys every instance uniquely.
         let p = 6;
-        let out = run(p, |comm| {
-            let a = comm.allreduce_scalar(1.0)?;
-            let b = comm.allreduce_scalar(comm.rank as f32)?;
-            Ok((a, b))
-        })
-        .unwrap();
-        let rank_sum = (p * (p - 1) / 2) as f32;
-        for (a, b) in out {
-            assert_eq!(a, p as f32);
-            assert_eq!(b, rank_sum);
+        for transport in [TransportKind::Mpsc, TransportKind::Spsc] {
+            let (out, _) = run_cfg(p, None, RunCfg::new(transport), |comm| {
+                let a = comm.allreduce_scalar(1.0)?;
+                let b = comm.allreduce_scalar(comm.rank as f32)?;
+                Ok((a, b))
+            })
+            .unwrap();
+            let rank_sum = (p * (p - 1) / 2) as f32;
+            for (a, b) in out {
+                assert_eq!(a, p as f32);
+                assert_eq!(b, rank_sum);
+            }
+        }
+    }
+
+    #[test]
+    fn tag_class_partitions_the_tag_space() {
+        assert_eq!(TagClass::of(0), TagClass::Sweep);
+        assert_eq!(TagClass::of(TAG_COLL_BASE - 1), TagClass::Sweep);
+        assert_eq!(TagClass::of(TAG_COLL_BASE), TagClass::Collective);
+        for tag in [0, TAG_COLL_BASE - 1, TAG_COLL_BASE, TAG_COLL_BASE + 9] {
+            assert!(TagClass::Any.matches(tag));
+            assert_eq!(TagClass::Sweep.matches(tag), tag < TAG_COLL_BASE);
+            assert_eq!(TagClass::Collective.matches(tag), tag >= TAG_COLL_BASE);
         }
     }
 
     #[test]
     fn tag_filtered_polling_leaves_collective_traffic_stashed() {
         // A collective-tagged message from a racing peer must be invisible
-        // to a sweep's tag-filtered drain, yet stay available for a later
-        // targeted receive.
+        // to a sweep's class-filtered drain, yet stay available for a later
+        // targeted receive — and the ready queues must survive the stash
+        // mutation in between.
         run(2, |comm| {
             if comm.rank == 0 {
                 comm.isend(1, TAG_COLL_BASE + 7, &[1.0, 2.0])?;
+                comm.isend(1, 5, &[9.0])?;
                 comm.barrier();
             } else {
-                comm.barrier(); // sender's isend happens-before its barrier
-                // Unfiltered poll sees it (draining it into the stash)...
-                let key = comm.try_recv();
-                assert_eq!(key, Some((0, TAG_COLL_BASE + 7)));
-                // ...the sweep-tag filter does not...
-                assert!(comm.try_recv_matching(|t| t < TAG_COLL_BASE).is_none());
-                // ...and the targeted receive still consumes it.
+                comm.barrier(); // sender's isends happen-before its barrier
+                // Unfiltered poll sees something (draining both into the
+                // stash); the sweep filter reports only the sweep tag...
+                assert!(comm.try_recv().is_some());
+                assert_eq!(comm.try_recv_class(TagClass::Sweep), Some((0, 5)));
+                assert_eq!(
+                    comm.try_recv_class(TagClass::Collective),
+                    Some((0, TAG_COLL_BASE + 7))
+                );
+                // ...consuming the sweep message leaves a stale ready entry
+                // that the next peek silently skips...
+                let mut one = [0.0f32; 1];
+                comm.recv_into(0, 5, &mut one)?;
+                assert_eq!(one, [9.0]);
+                assert!(comm.try_recv_class(TagClass::Sweep).is_none());
+                // ...and the targeted receive still consumes the stashed
+                // collective payload.
                 let mut buf = [0.0f32; 2];
                 comm.recv_into(0, TAG_COLL_BASE + 7, &mut buf)?;
                 assert_eq!(buf, [1.0, 2.0]);
@@ -834,6 +1465,40 @@ mod tests {
             Ok(())
         })
         .unwrap();
+    }
+
+    #[test]
+    fn ready_queue_reports_arrival_order_within_class() {
+        // Three sweep messages stashed out of order by a targeted wait:
+        // class polling then reports the remaining keys oldest-first.
+        run(2, |comm| {
+            if comm.rank == 0 {
+                comm.isend(1, 11, &[1.0])?;
+                comm.isend(1, 12, &[2.0])?;
+                comm.isend(1, 13, &[3.0])?;
+            } else {
+                // Waiting for tag 13 stashes 11 and 12 in arrival order.
+                let mut buf = [0.0f32; 1];
+                comm.recv_into(0, 13, &mut buf)?;
+                assert_eq!(buf, [3.0]);
+                assert_eq!(comm.recv_any_class(TagClass::Sweep)?, (0, 11));
+                comm.recv_into(0, 11, &mut buf)?;
+                assert_eq!(comm.recv_any_class(TagClass::Sweep)?, (0, 12));
+                comm.recv_into(0, 12, &mut buf)?;
+                assert!(comm.try_recv().is_none());
+            }
+            Ok(())
+        })
+        .unwrap();
+    }
+
+    #[test]
+    fn transport_kind_parses_and_displays() {
+        assert_eq!("mpsc".parse::<TransportKind>().unwrap(), TransportKind::Mpsc);
+        assert_eq!("spsc".parse::<TransportKind>().unwrap(), TransportKind::Spsc);
+        assert!("tcp".parse::<TransportKind>().is_err());
+        assert_eq!(TransportKind::Spsc.to_string(), "spsc");
+        assert_eq!(TransportKind::default(), TransportKind::Mpsc);
     }
 
     #[test]

@@ -1,0 +1,468 @@
+//! Lock-free shared-memory SPSC transport primitives (§Perf P11).
+//!
+//! One [`SpscRing`] per directed (sender, receiver) pair: a fixed-capacity
+//! Lamport ring with cache-line-padded monotonic head/tail counters and
+//! payload slots that own preallocated `Vec<f32>` buffers, so a send is a
+//! single in-place `memcpy` into the slot — no per-message allocation, no
+//! channel, no mutex, no CAS (each index has exactly one writer). The
+//! consumer copies the payload out into a pool-drawn buffer and releases
+//! the slot immediately, so slots recycle at ring rate and the packet then
+//! flows through the same stash/pool machinery as the mpsc oracle.
+//!
+//! Memory ordering is the classic SPSC argument: the producer publishes a
+//! filled slot with a `Release` store of `tail` and the consumer `Acquire`-
+//! loads it before reading the slot (and symmetrically `head` for slot
+//! reuse), so slot accesses never race — model-checked under loom
+//! (`RUSTFLAGS="--cfg loom" cargo test loom`, the CI `rust-loom` job) and
+//! raced for real under ThreadSanitizer (`rust-tsan`).
+//!
+//! Blocked receivers use a spin-then-park strategy via [`ParkCell`]: spin
+//! briefly, then announce intent with a parked flag (SeqCst-fenced on both
+//! sides — the Dekker handshake below can lose at most one timed park
+//! interval, never a message) and `park_timeout`. Producers `unpark` after
+//! publishing only when the flag is up, so the uncontended fast path costs
+//! one fence + one relaxed load. [`SpinBarrier`] replaces the mutex+condvar
+//! `std::sync::Barrier` on the spsc fabric, and [`pin_to_cpu`] optionally
+//! pins worker threads for stable cache/NUMA placement (`--pin`).
+
+#[cfg(loom)]
+use loom::sync::atomic::AtomicUsize;
+#[cfg(not(loom))]
+use std::sync::atomic::AtomicUsize;
+
+use std::sync::atomic::Ordering;
+
+/// Slots per ring. The protocols bound simultaneously in-flight messages
+/// per ordered pair to ~4 (one gather + one reduce in overlap mode, ≤2 per
+/// stepped exchange round, ≤2 per collective instance); 16 leaves slack
+/// for a rank racing ahead through back-to-back collectives. A full ring
+/// only makes the producer spin — never deadlock, because a receiver
+/// blocked in `recv` drains *every* incoming ring into its stash.
+pub(crate) const RING_SLOTS: usize = 16;
+
+/// Pad to 128 bytes (two 64-byte lines: adjacent-line prefetchers) so the
+/// producer-owned `tail` and consumer-owned `head` never false-share.
+#[repr(align(128))]
+struct Padded<T>(T);
+
+struct Slot {
+    tag: u64,
+    data: Vec<f32>,
+}
+
+/// Loom-checkable interior mutability for ring slots: the std path is a
+/// plain `UnsafeCell` access, the loom path routes through loom's tracked
+/// cell so the model checker sees every slot read/write.
+#[cfg(not(loom))]
+struct SlotCell<T>(std::cell::UnsafeCell<T>);
+#[cfg(not(loom))]
+impl<T> SlotCell<T> {
+    fn new(v: T) -> Self {
+        SlotCell(std::cell::UnsafeCell::new(v))
+    }
+    fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+        f(self.0.get())
+    }
+}
+#[cfg(loom)]
+struct SlotCell<T>(loom::cell::UnsafeCell<T>);
+#[cfg(loom)]
+impl<T> SlotCell<T> {
+    fn new(v: T) -> Self {
+        SlotCell(loom::cell::UnsafeCell::new(v))
+    }
+    fn with_mut<R>(&self, f: impl FnOnce(*mut T) -> R) -> R {
+        self.0.with_mut(f)
+    }
+}
+
+/// A single-producer single-consumer ring of owned payload slots.
+///
+/// `head`/`tail` are monotonically increasing (wrapping) counters masked
+/// into the power-of-two slot array: `tail − head` is the queue length,
+/// equality means empty, a difference of `slots.len()` means full. The
+/// producer alone writes `tail` and slots in `[tail, head+cap)`; the
+/// consumer alone writes `head` and reads the slot at `head` — so the only
+/// synchronization is one Release/Acquire edge per direction.
+pub(crate) struct SpscRing {
+    head: Padded<AtomicUsize>,
+    tail: Padded<AtomicUsize>,
+    slots: Box<[SlotCell<Slot>]>,
+    mask: usize,
+}
+
+// SAFETY: slots are `UnsafeCell` but every slot index is exclusively owned
+// by either the producer (indices in [tail, head+capacity), about to be
+// filled) or the consumer (index head, being drained) at any instant; the
+// Release store of the counter that transfers a slot happens-after the
+// slot write and the Acquire load on the other side happens-before the
+// slot read. Exactly one producer and one consumer thread may use a ring.
+unsafe impl Sync for SpscRing {}
+unsafe impl Send for SpscRing {}
+
+impl SpscRing {
+    /// A ring with `slots` capacity (rounded up to a power of two), each
+    /// slot's payload buffer preallocated to `slot_words` f32 words.
+    /// Larger payloads grow the slot's buffer in place — the growth is
+    /// reported once by [`SpscRing::try_push`] and the enlarged capacity
+    /// persists, so even an undersized `slot_words` converges to
+    /// allocation-free steady state after one lap of the ring.
+    pub(crate) fn new(slots: usize, slot_words: usize) -> SpscRing {
+        let cap = slots.next_power_of_two();
+        SpscRing {
+            head: Padded(AtomicUsize::new(0)),
+            tail: Padded(AtomicUsize::new(0)),
+            slots: (0..cap)
+                .map(|_| {
+                    SlotCell::new(Slot { tag: 0, data: Vec::with_capacity(slot_words) })
+                })
+                .collect(),
+            mask: cap - 1,
+        }
+    }
+
+    /// Producer: copy `data` into the next free slot and publish it.
+    /// Returns `None` when the ring is full (caller backs off and retries;
+    /// the consumer is guaranteed to drain — see [`RING_SLOTS`]), otherwise
+    /// `Some(grew)` where `grew` reports that the payload exceeded the
+    /// slot's buffer capacity and forced a (one-time) reallocation.
+    pub(crate) fn try_push(&self, tag: u64, data: &[f32]) -> Option<bool> {
+        let tail = self.tail.0.load(Ordering::Relaxed);
+        let head = self.head.0.load(Ordering::Acquire);
+        if tail.wrapping_sub(head) == self.slots.len() {
+            return None;
+        }
+        let grew = self.slots[tail & self.mask].with_mut(|p| {
+            // SAFETY: this slot is producer-owned until the tail store
+            // below publishes it (see the `Sync` rationale).
+            let slot = unsafe { &mut *p };
+            slot.tag = tag;
+            let grew = data.len() > slot.data.capacity();
+            slot.data.clear();
+            slot.data.extend_from_slice(data);
+            grew
+        });
+        self.tail.0.store(tail.wrapping_add(1), Ordering::Release);
+        Some(grew)
+    }
+
+    /// Consumer: copy the oldest undelivered payload out and release its
+    /// slot. `alloc(len)` supplies the destination buffer (empty, capacity
+    /// ≥ `len` — drawn from the receiver's `BufPool` in the simulator).
+    pub(crate) fn pop<F>(&self, alloc: F) -> Option<(u64, Vec<f32>)>
+    where
+        F: FnOnce(usize) -> Vec<f32>,
+    {
+        let head = self.head.0.load(Ordering::Relaxed);
+        let tail = self.tail.0.load(Ordering::Acquire);
+        if head == tail {
+            return None;
+        }
+        let out = self.slots[head & self.mask].with_mut(|p| {
+            // SAFETY: this slot is consumer-owned until the head store
+            // below returns it to the producer.
+            let slot = unsafe { &mut *p };
+            let mut out = alloc(slot.data.len());
+            out.extend_from_slice(&slot.data);
+            (slot.tag, out)
+        });
+        self.head.0.store(head.wrapping_add(1), Ordering::Release);
+        Some(out)
+    }
+}
+
+/// Spin-then-park state for one consumer thread, shared with its P−1
+/// producers. The lost-wakeup-free handshake is Dekker-style:
+///
+/// * consumer: `parked := true` → SeqCst fence → re-scan all rings → park;
+/// * producer: publish slot → SeqCst fence → load `parked` → unpark if set.
+///
+/// The two fences guarantee at least one side observes the other: either
+/// the consumer's re-scan sees the published slot, or the producer sees
+/// `parked = true` and unparks. `park_timeout` bounds the stall from any
+/// spurious miss to one interval as defense in depth.
+pub(crate) struct ParkCell {
+    thread: std::sync::OnceLock<std::thread::Thread>,
+    parked: std::sync::atomic::AtomicBool,
+}
+
+impl ParkCell {
+    pub(crate) fn new() -> ParkCell {
+        ParkCell {
+            thread: std::sync::OnceLock::new(),
+            parked: std::sync::atomic::AtomicBool::new(false),
+        }
+    }
+
+    /// Bind this cell to the calling (consumer) thread. Called once per
+    /// run before any peer can want to wake it.
+    pub(crate) fn register(&self) {
+        let _ = self.thread.set(std::thread::current());
+    }
+
+    /// Consumer: announce imminent parking. Must re-scan every incoming
+    /// ring after this and before [`ParkCell::park`].
+    pub(crate) fn announce(&self) {
+        self.parked.store(true, Ordering::Relaxed);
+        std::sync::atomic::fence(Ordering::SeqCst);
+    }
+
+    /// Consumer: withdraw the announcement (a message was found, or the
+    /// park returned).
+    pub(crate) fn retract(&self) {
+        self.parked.store(false, Ordering::Relaxed);
+    }
+
+    /// Consumer: block until unparked or `timeout` elapses.
+    pub(crate) fn park(timeout: std::time::Duration) {
+        std::thread::park_timeout(timeout);
+    }
+
+    /// Producer: wake the consumer if (and only if) it announced parking.
+    /// Call after publishing to its ring.
+    pub(crate) fn wake(&self) {
+        std::sync::atomic::fence(Ordering::SeqCst);
+        if self.parked.load(Ordering::Relaxed) {
+            if let Some(t) = self.thread.get() {
+                t.unpark();
+            }
+        }
+    }
+}
+
+/// Sense-reversing spin barrier for the spsc fabric: arrival is one
+/// `fetch_add`, release is one generation-counter bump — no mutex, no
+/// condvar, no syscall on the fast path. Waiters spin briefly then yield,
+/// so oversubscribed machines (P threads > cores, e.g. the 2-core CI
+/// runner at P = 14) degrade to cooperative scheduling instead of burning
+/// full quanta.
+pub(crate) struct SpinBarrier {
+    count: std::sync::atomic::AtomicUsize,
+    generation: std::sync::atomic::AtomicUsize,
+    p: usize,
+}
+
+impl SpinBarrier {
+    pub(crate) fn new(p: usize) -> SpinBarrier {
+        SpinBarrier {
+            count: std::sync::atomic::AtomicUsize::new(0),
+            generation: std::sync::atomic::AtomicUsize::new(0),
+            p,
+        }
+    }
+
+    pub(crate) fn wait(&self) {
+        let gen = self.generation.load(Ordering::Acquire);
+        if self.count.fetch_add(1, Ordering::AcqRel) + 1 == self.p {
+            // Last arriver: reset the counter BEFORE bumping the
+            // generation — waiters re-enter only after they observe the
+            // bump (Acquire below), which orders the reset before any
+            // next-round arrival.
+            self.count.store(0, Ordering::Relaxed);
+            self.generation.fetch_add(1, Ordering::AcqRel);
+            return;
+        }
+        let mut spins = 0u32;
+        while self.generation.load(Ordering::Acquire) == gen {
+            spins += 1;
+            if spins < 256 {
+                std::hint::spin_loop();
+            } else {
+                std::thread::yield_now();
+            }
+        }
+    }
+}
+
+/// Pin the calling thread to `cpu` (modulo the machine's CPU count) via a
+/// direct `sched_setaffinity` syscall binding — no libc crate needed. A
+/// best-effort no-op on failure and on non-Linux targets.
+#[cfg(target_os = "linux")]
+pub(crate) fn pin_to_cpu(cpu: usize) {
+    // A 1024-bit cpu_set_t, the glibc default width.
+    let mut mask = [0u64; 16];
+    let bit = cpu % 1024;
+    mask[bit / 64] |= 1u64 << (bit % 64);
+    extern "C" {
+        fn sched_setaffinity(pid: i32, cpusetsize: usize, mask: *const u64) -> i32;
+    }
+    // SAFETY: mask is a valid, live 128-byte buffer; pid 0 = this thread.
+    unsafe {
+        let _ = sched_setaffinity(0, std::mem::size_of_val(&mask), mask.as_ptr());
+    }
+}
+
+#[cfg(not(target_os = "linux"))]
+pub(crate) fn pin_to_cpu(_cpu: usize) {}
+
+/// Real-thread stress tests (loom models the same structures exhaustively
+/// in `loom_tests` below; ThreadSanitizer races these in CI).
+#[cfg(all(test, not(loom)))]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicUsize;
+    use std::sync::Arc;
+
+    #[test]
+    fn fifo_integrity_through_wraparound_under_contention() {
+        // 5000 messages through a 4-slot ring: tags stay in order, every
+        // payload arrives intact, and oversized payloads (len > slot_words)
+        // grow slots at most once each.
+        let ring = Arc::new(SpscRing::new(4, 8));
+        let prod = ring.clone();
+        let n = 5000u64;
+        let producer = std::thread::spawn(move || {
+            let mut grew = 0u64;
+            for i in 0..n {
+                let len = (i % 13 + 1) as usize; // up to 13 > slot_words 8
+                let payload = vec![i as f32; len];
+                loop {
+                    match prod.try_push(i, &payload) {
+                        Some(g) => {
+                            grew += g as u64;
+                            break;
+                        }
+                        None => std::thread::yield_now(),
+                    }
+                }
+            }
+            grew
+        });
+        let mut next = 0u64;
+        while next < n {
+            match ring.pop(Vec::with_capacity) {
+                Some((tag, data)) => {
+                    assert_eq!(tag, next, "out-of-order delivery");
+                    assert_eq!(data.len(), (next % 13 + 1) as usize);
+                    assert!(data.iter().all(|&v| v == next as f32));
+                    next += 1;
+                }
+                None => std::thread::yield_now(),
+            }
+        }
+        let grew = producer.join().unwrap();
+        // 4 slots (4 rounded to a power of two), each grows at most once.
+        assert!(grew <= 4, "slot growth must persist, saw {grew} growths");
+        assert!(ring.pop(Vec::with_capacity).is_none());
+    }
+
+    #[test]
+    fn parked_consumer_is_woken_by_publish() {
+        let ring = Arc::new(SpscRing::new(4, 4));
+        let park = Arc::new(ParkCell::new());
+        let (r2, p2) = (ring.clone(), park.clone());
+        let consumer = std::thread::spawn(move || {
+            p2.register();
+            loop {
+                p2.announce();
+                if let Some((tag, data)) = r2.pop(Vec::with_capacity) {
+                    p2.retract();
+                    return (tag, data);
+                }
+                ParkCell::park(std::time::Duration::from_millis(50));
+                p2.retract();
+            }
+        });
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        assert_eq!(ring.try_push(9, &[3.5, 4.5]), Some(false));
+        park.wake();
+        let (tag, data) = consumer.join().unwrap();
+        assert_eq!((tag, data), (9, vec![3.5, 4.5]));
+    }
+
+    #[test]
+    fn spin_barrier_synchronizes_generations() {
+        let p = 4;
+        let rounds = 50;
+        let barrier = Arc::new(SpinBarrier::new(p));
+        let counter = Arc::new(AtomicUsize::new(0));
+        let handles: Vec<_> = (0..p)
+            .map(|_| {
+                let (b, c) = (barrier.clone(), counter.clone());
+                std::thread::spawn(move || {
+                    for round in 0..rounds {
+                        c.fetch_add(1, Ordering::SeqCst);
+                        b.wait();
+                        let seen = c.load(Ordering::SeqCst);
+                        assert!(seen >= (round + 1) * p, "round {round}: {seen}");
+                        b.wait();
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(counter.load(Ordering::SeqCst), rounds * p);
+    }
+
+    #[test]
+    fn pin_to_cpu_is_best_effort() {
+        pin_to_cpu(0); // must never crash, even in restricted sandboxes
+        pin_to_cpu(usize::MAX); // mask bit wraps into range
+    }
+}
+
+/// Exhaustive interleaving checks (`RUSTFLAGS="--cfg loom" cargo test
+/// loom`; the `rust-loom` CI job injects the test-only `loom` dependency).
+#[cfg(all(test, loom))]
+mod loom_tests {
+    use super::*;
+
+    #[test]
+    fn loom_ring_publish_consume_and_wraparound() {
+        // 4 messages through a 2-slot ring: every interleaving preserves
+        // FIFO order and payload integrity across the wrap, including the
+        // full-ring producer backoff.
+        loom::model(|| {
+            let ring = loom::sync::Arc::new(SpscRing::new(2, 2));
+            let prod = ring.clone();
+            let t = loom::thread::spawn(move || {
+                for i in 0..4u64 {
+                    let payload = [i as f32, (i + 1) as f32];
+                    while prod.try_push(i, &payload).is_none() {
+                        loom::thread::yield_now();
+                    }
+                }
+            });
+            let mut next = 0u64;
+            while next < 4 {
+                match ring.pop(Vec::with_capacity) {
+                    Some((tag, data)) => {
+                        assert_eq!(tag, next);
+                        assert_eq!(data, vec![next as f32, (next + 1) as f32]);
+                        next += 1;
+                    }
+                    None => loom::thread::yield_now(),
+                }
+            }
+            t.join().unwrap();
+        });
+    }
+
+    #[test]
+    fn loom_park_handshake_never_loses_a_wakeup() {
+        // The Dekker handshake of the spin-then-park protocol: in every
+        // interleaving, either the consumer's post-announce re-scan sees
+        // the message, or the producer's post-publish check sees the
+        // parked flag (and would unpark). Both missing = a lost wakeup.
+        loom::model(|| {
+            let ring = loom::sync::Arc::new(SpscRing::new(2, 1));
+            let parked = loom::sync::Arc::new(loom::sync::atomic::AtomicBool::new(false));
+            let (r2, p2) = (ring.clone(), parked.clone());
+            let producer = loom::thread::spawn(move || {
+                assert!(r2.try_push(7, &[1.0]).is_some());
+                loom::sync::atomic::fence(Ordering::SeqCst);
+                p2.load(Ordering::Relaxed) // would this publish unpark?
+            });
+            parked.store(true, Ordering::Relaxed);
+            loom::sync::atomic::fence(Ordering::SeqCst);
+            let saw_message = ring.pop(Vec::with_capacity).is_some();
+            let would_unpark = producer.join().unwrap();
+            assert!(
+                saw_message || would_unpark,
+                "lost wakeup: consumer would park, producer would not unpark"
+            );
+        });
+    }
+}

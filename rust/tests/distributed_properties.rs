@@ -41,6 +41,11 @@
 //!     charged ternary mults are exactly invariant, the compiled plan
 //!     holds zero extra resident tensor words, and a 4-thread compute
 //!     pool changes no CommStats counter.
+//! P11: the lock-free SPSC transport is observationally identical to the
+//!     mpsc counting oracle — per-processor words, messages, and charged
+//!     ternary mults are bitwise equal across both comm modes, phased and
+//!     overlap, r ∈ {1, 4}; phased results are bitwise transport-invariant
+//!     and overlap results agree within f32 reassociation tolerance.
 
 use sttsv::coordinator::session::SolverSession;
 use sttsv::coordinator::{
@@ -49,7 +54,7 @@ use sttsv::coordinator::{
 use sttsv::partition::{classify, BlockKind, TetraPartition};
 use sttsv::runtime::{packed_ternary_mults, Backend};
 use sttsv::schedule::CommSchedule;
-use sttsv::simulator::{allreduce_stats, CommStats};
+use sttsv::simulator::{allreduce_stats, CommStats, TransportKind};
 use sttsv::steiner::{spherical, sqs8};
 use sttsv::tensor::{linalg, PackedBlockView, SymTensor};
 use sttsv::util::proptest::check;
@@ -913,4 +918,94 @@ fn p8_nonblocking_comm_dry_run_matches_blocking_counters() {
         assert_eq!(blocking, nonblocking, "q={q}");
         assert!(metrics.peak_inflight_words > 0, "q={q}");
     }
+}
+
+#[test]
+fn p11_spsc_transport_matches_mpsc_oracle_exactly() {
+    // The SPSC rings are a *transport*, not a different algorithm: every
+    // counter the α-β-γ model prices must be bitwise identical to the mpsc
+    // oracle's, per processor, in every execution mode. The phased path
+    // must additionally produce bitwise-identical result vectors (its
+    // arrival order is protocol-determined); overlap accumulates phase-3
+    // partials in arrival order, so values there agree only up to f32
+    // reassociation.
+    let pool = partition_pool();
+    check(
+        "spsc == mpsc oracle",
+        0x0511,
+        6,
+        |rng: &mut Rng| {
+            let part_idx = rng.below(pool.len());
+            let b = 2 + rng.below(5); // 2..=6, including non-divisible-by-λ₁
+            let seed = rng.next_u64();
+            (part_idx, b, seed)
+        },
+        |&(part_idx, b, seed)| {
+            let part = &pool[part_idx];
+            let n = b * part.m;
+            let tensor = SymTensor::random(n, seed);
+            let mut rng = Rng::new(seed ^ 0x511);
+            let xs: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(n)).collect();
+            for mode in [CommMode::PointToPoint, CommMode::AllToAll] {
+                for overlap in [false, true] {
+                    for r in [1usize, 4] {
+                        let xs = &xs[..r];
+                        let plan_for = |transport| {
+                            SttsvPlan::new(
+                                &tensor,
+                                part,
+                                ExecOpts { mode, overlap, transport, ..Default::default() },
+                            )
+                        };
+                        let mp = plan_for(TransportKind::Mpsc)
+                            .map_err(|e| e.to_string())?
+                            .run_multi(xs)
+                            .map_err(|e| e.to_string())?;
+                        let sp = plan_for(TransportKind::Spsc)
+                            .map_err(|e| e.to_string())?
+                            .run_multi(xs)
+                            .map_err(|e| e.to_string())?;
+                        let ctx = format!("{mode:?} overlap={overlap} r={r}");
+                        for p in 0..part.p {
+                            let (m, s) = (&mp.per_proc[p], &sp.per_proc[p]);
+                            if m.stats != s.stats {
+                                return Err(format!(
+                                    "{ctx} proc {p}: mpsc {:?} != spsc {:?}",
+                                    m.stats, s.stats
+                                ));
+                            }
+                            if m.ternary_mults != s.ternary_mults {
+                                return Err(format!(
+                                    "{ctx} proc {p}: mults {} != {}",
+                                    m.ternary_mults, s.ternary_mults
+                                ));
+                            }
+                        }
+                        for l in 0..r {
+                            if overlap {
+                                let scale = mp.ys[l]
+                                    .iter()
+                                    .map(|v| v.abs())
+                                    .fold(1.0f32, f32::max);
+                                for i in 0..n {
+                                    if (sp.ys[l][i] - mp.ys[l][i]).abs() > 2e-4 * scale {
+                                        return Err(format!(
+                                            "{ctx} col {l} i={i}: spsc {} vs mpsc {}",
+                                            sp.ys[l][i], mp.ys[l][i]
+                                        ));
+                                    }
+                                }
+                            } else if sp.ys[l] != mp.ys[l] {
+                                return Err(format!(
+                                    "{ctx} col {l}: phased results must be bitwise \
+                                     transport-invariant"
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
 }
