@@ -2,7 +2,7 @@
 
 .PHONY: artifacts artifacts-quick test test-release-asserts pytest bench \
 	bench-smoke bench-overlap bench-compiled bench-e2e bench-e2e-smoke \
-	bench-hw bench-hw-smoke
+	bench-hw bench-hw-smoke bench-serve bench-serve-smoke
 
 # AOT-lower the JAX/Pallas kernels (incl. the multi-RHS block_multi_* set)
 # to HLO text artifacts for the Rust PJRT backend.
@@ -70,3 +70,15 @@ bench-hw:
 # assertions and the acceptance print still execute.
 bench-hw-smoke:
 	cd rust && STTSV_BENCH_SMOKE=1 cargo bench --bench hw_transport
+
+# E16 serving-throughput bench: one bursty open-loop query trace replayed
+# under serial vs coalescing admission policies at P in {4, 10} on both
+# transports; queries/sec + p50/p99 latency per policy, per-batch comm
+# asserted = one r-deep STTSV; writes rust/BENCH_serve.json.
+bench-serve:
+	cd rust && cargo bench --bench serve_throughput
+
+# Fast variant (what CI runs): fewer queries and policies; the cache
+# build-once assert, comm asserts, and the acceptance print still execute.
+bench-serve-smoke:
+	cd rust && STTSV_BENCH_SMOKE=1 cargo bench --bench serve_throughput

@@ -83,8 +83,24 @@ pub fn power_method(
     // The plan (schedule + owner-compute block state) is built once; the
     // session then never touches host-resident vectors again (§Perf P9).
     let plan = SttsvPlan::new(tensor, part, opts)?;
-    let solve = SolverSession::new(&plan).power_method(x0, max_iters, tol)?;
-    let comm = total_comm(part.p, solve.iters.iter().map(|it| it.comm.as_slice()));
+    power_method_on(&plan, x0, max_iters, tol)
+}
+
+/// Resident power method over an EXTERNALLY built plan — the multi-tenant
+/// serving path (`crate::serve`): independent solves against one resident
+/// tensor share a cached plan's schedule, buffer pools, and compiled
+/// sweep programs instead of paying a fresh build per solve. Identical to
+/// [`power_method`] once the plan exists (which builds one and delegates
+/// here).
+pub fn power_method_on(
+    plan: &SttsvPlan,
+    x0: &[f32],
+    max_iters: usize,
+    tol: f32,
+) -> Result<PowerReport> {
+    let solve = SolverSession::new(plan).power_method(x0, max_iters, tol)?;
+    let p = solve.per_proc.len();
+    let comm = total_comm(p, solve.iters.iter().map(|it| it.comm.as_slice()));
     let lambda = solve.iters.last().map(|i| i.lambda).unwrap_or(0.0);
     Ok(PowerReport {
         lambda,

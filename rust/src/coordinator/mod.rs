@@ -71,7 +71,7 @@ use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 /// How vector data moves between processors.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum CommMode {
     /// Theorem 6 point-to-point schedule: comm matches the lower bound's
     /// leading term exactly.
@@ -112,7 +112,14 @@ impl std::str::FromStr for CommMode {
 /// Post-conditions are debug-asserted in `normalize`; downgrades (e.g.
 /// requesting `compiled` on PJRT) are silent, matching how `batch` has
 /// always been ignored under `overlap`.
-#[derive(Debug, Clone, Copy)]
+///
+/// `PartialEq`/`Eq`/`Hash` are field-wise and therefore meaningful as a
+/// cache key only on **normalized** options: two raw option sets that
+/// normalize identically (say `compiled: true` on PJRT vs `compiled:
+/// false`) compare unequal until passed through [`ExecOpts::normalize`].
+/// The serving layer's plan cache ([`crate::serve::PlanCache`]) normalizes
+/// before keying, so logically identical opts can never miss.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct ExecOpts {
     pub mode: CommMode,
     pub backend: Backend,

@@ -585,4 +585,59 @@ mod tests {
             "gradient norm did not descend: {first} -> {last}"
         );
     }
+
+    #[test]
+    fn resident_session_odd_r_exercises_dyn_fallback_on_both_modes() {
+        // r = 3 and r = 5 have no register tile (tiles: r ∈ {1, 2, 4, 8}),
+        // so compiled sweeps take the dynamic-width lane-helper fallback.
+        // One cp_sweep with step = 0 is exactly Algorithm 2 — a single
+        // distributed gradient evaluation — checked against host
+        // arithmetic end to end, in both comm modes. (The session itself
+        // asserts per-iteration comm == one r-deep STTSV + collectives.)
+        let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+        let b = 4usize;
+        let n = b * part.m;
+        let tensor = SymTensor::random(n, 81);
+        let mut rng = Rng::new(82);
+        for mode in [CommMode::PointToPoint, CommMode::AllToAll] {
+            for r in [3usize, 5] {
+                let x: Vec<Vec<f32>> = (0..r)
+                    .map(|_| rng.normal_vec(n).iter().map(|v| 0.3 * v).collect())
+                    .collect();
+                let plan = SttsvPlan::new(
+                    &tensor,
+                    &part,
+                    ExecOpts { mode, ..Default::default() },
+                )
+                .unwrap();
+                let solve =
+                    SolverSession::new(&plan).cp_sweeps(&x, 1, 0.0, 0.0).unwrap();
+                assert_eq!(solve.iters.len(), 1, "{mode:?} r={r}");
+                // Host replica of the gradient: ∇_ℓ = X·G[:,ℓ] − y_ℓ with
+                // G = (XᵀX) ∗ (XᵀX) and y_ℓ the sequential oracle.
+                let mut gram = vec![0.0f32; r * r];
+                for a in 0..r {
+                    for l in 0..r {
+                        let d = crate::tensor::linalg::dot(&x[a], &x[l]);
+                        gram[a * r + l] = d * d;
+                    }
+                }
+                for l in 0..r {
+                    let y = tensor.sttsv(&x[l]);
+                    for i in 0..n {
+                        let mut v = 0.0f32;
+                        for a in 0..r {
+                            v += x[a][i] * gram[a * r + l];
+                        }
+                        let want = v - y[i];
+                        let got = solve.grad_cols[l][i];
+                        assert!(
+                            (got - want).abs() < 1e-3 * want.abs().max(1.0),
+                            "{mode:?} r={r} grad[{l}][{i}]: {got} vs host {want}"
+                        );
+                    }
+                }
+            }
+        }
+    }
 }

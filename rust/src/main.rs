@@ -10,6 +10,7 @@
 //!   cp-gradient   Algorithm 2 end to end
 //!   cp-als        resident multi-sweep CP gradient descent
 //!   sweep         comm-cost sweep vs the Theorem 1 lower bound
+//!   serve         multi-tenant serving: plan cache + r-deep query coalescing
 //!   verify        exhaustive invariant checks for a given q
 //!   bounds        print the paper's closed-form costs
 
@@ -20,8 +21,9 @@ use sttsv::coordinator::{self, baselines, CommMode, ExecOpts};
 use sttsv::partition::TetraPartition;
 use sttsv::runtime::Backend;
 use sttsv::schedule::CommSchedule;
+use sttsv::serve::{AdmissionPolicy, SttsvServer};
 use sttsv::simulator::TransportKind;
-use sttsv::steiner::{fixtures, spherical, sqs8};
+use sttsv::steiner::{fixtures, spherical, sqs8, trivial};
 use sttsv::tensor::{linalg, SymTensor};
 use sttsv::util::cli::Args;
 use sttsv::util::rng::Rng;
@@ -38,16 +40,18 @@ fn main() {
         Some("cp-als") => cmd_cp_als(&args),
         Some("mttkrp") => cmd_mttkrp(&args),
         Some("sweep") => cmd_sweep(&args),
+        Some("serve") => cmd_serve(&args),
         Some("verify") => cmd_verify(&args),
         Some("bounds") => cmd_bounds(&args),
         _ => {
             eprintln!(
                 "usage: sttsv <tables|schedule|run|power-method|cp-gradient|cp-als\
-                 |mttkrp|sweep|verify|bounds> [--q N] [--b N] [--mode p2p|a2a] \
+                 |mttkrp|sweep|serve|verify|bounds> [--q N] [--b N] [--mode p2p|a2a] \
                  [--backend native|pjrt|spsc|mpsc] [--pin] [--iters N] [--sqs8] \
-                 [--no-batch] [--packed|--no-packed] [--overlap|--no-overlap] \
-                 [--compiled|--no-compiled] [--compute-threads N] \
-                 [--resident|--no-resident]\n\
+                 [--trivial M] [--no-batch] [--packed|--no-packed] \
+                 [--overlap|--no-overlap] [--compiled|--no-compiled] \
+                 [--compute-threads N] [--resident|--no-resident] \
+                 [--batch-window MS] [--max-r N] [--cache N] [--queries N]\n\
                  \n\
                  --backend        comma-separable selectors: a compute backend \
                  (native|pjrt) and/or a message transport (spsc = lock-free \
@@ -60,7 +64,15 @@ fn main() {
                  per-sweep interpreter)\n\
                  --compute-threads N  split each worker's compiled descriptor \
                  stream over N intra-worker threads (default 1 = bitwise \
-                 oracle; comm counters are invariant for any N)"
+                 oracle; comm counters are invariant for any N)\n\
+                 --trivial M      use the trivial Steiner system on M block rows \
+                 (P = C(M,3); --trivial 4 is the P=4 serving fixture)\n\
+                 --batch-window MS  serve: hold a non-full batch open this many \
+                 ms for stragglers (0 + --max-r 1 = serial per-query serving)\n\
+                 --max-r N        serve: coalesce at most N queries into one \
+                 r-deep sweep\n\
+                 --cache N        serve: plan-cache capacity (plans, LRU)\n\
+                 --queries N      serve: synthetic open-loop queries to replay"
             );
             std::process::exit(2);
         }
@@ -75,6 +87,11 @@ fn partition_for(args: &Args) -> Result<(TetraPartition, String)> {
     if args.flag("sqs8") {
         let part = TetraPartition::from_steiner(&sqs8())?;
         Ok((part, "SQS(8), m=8, P=14".to_string()))
+    } else if args.get("trivial").is_some() {
+        let m: usize = args.get_or("trivial", 4usize);
+        let part = TetraPartition::from_steiner(&trivial(m)?)?;
+        let label = format!("trivial m={m}, P={}", part.p);
+        Ok((part, label))
     } else {
         let q: u64 = args.get_or("q", 2u64);
         let sys = spherical(q)?;
@@ -461,6 +478,98 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         format!("{:.2}x", seq.max_sent_words() as f64 / lb),
     ]);
     t2.print();
+    Ok(())
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let (part, label) = partition_for(args)?;
+    let b: usize = args.get_or("b", 4usize);
+    let n = b * part.m;
+    let opts = exec_opts(args)?;
+    let window_ms: f64 = args.get_or("batch-window", 1.0f64);
+    let max_r: usize = args.get_or("max-r", 8usize);
+    let cache: usize = args.get_or("cache", 4usize);
+    let queries: usize = args.get_or("queries", 64usize);
+    let seed: u64 = args.get_or("seed", 97u64);
+    let policy = AdmissionPolicy::coalescing(window_ms / 1000.0, max_r);
+    println!(
+        "multi-tenant serving on {label}: n={n} (b={b}), window {window_ms} ms, \
+         max_r {max_r}, cache {cache} plans, {queries} queries, {opts:?}"
+    );
+    let tensor = SymTensor::random(n, seed);
+
+    // Synthetic bursty open-loop workload: bursts of max_r queries landing
+    // within ~0.1 ms of each other, separated by 0.2 ms gaps — the arrival
+    // process a coalescer exists for. The SAME trace replays under the
+    // coalescing policy and the serial baseline.
+    let mut rng = Rng::new(seed + 1);
+    let burst = max_r.max(1);
+    let mut trace: Vec<(Vec<f32>, f64)> = Vec::with_capacity(queries);
+    for k in 0..queries {
+        let base = (k / burst) as f64 * 2e-4;
+        let jitter = rng.below(1000) as f64 * 1e-7;
+        trace.push((rng.normal_vec(n), base + jitter));
+    }
+
+    let server = SttsvServer::new(&tensor, &part, opts, policy, cache)?;
+    for (x, arrival) in &trace {
+        server.submit(x.clone(), *arrival)?;
+    }
+    let rep = server.drain()?;
+
+    let mut max_err = 0.0f32;
+    for o in &rep.outcomes {
+        let want = tensor.sttsv(&trace[o.id as usize].0);
+        let scale = want.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+        for i in 0..n {
+            max_err = max_err.max((o.y[i] - want[i]).abs() / scale);
+        }
+    }
+    println!(
+        "results: max rel err vs sequential oracle = {max_err:.2e} {}",
+        if max_err < 5e-3 { "(OK)" } else { "(FAIL)" }
+    );
+
+    let serial = SttsvServer::new(&tensor, &part, opts, AdmissionPolicy::serial(), cache)?;
+    for (x, arrival) in &trace {
+        serial.submit(x.clone(), *arrival)?;
+    }
+    let srep = serial.drain()?;
+
+    let mut t = Table::new([
+        "policy", "batches", "mean r", "qps", "p50 ms", "p99 ms", "words/query",
+    ]);
+    for (name, r) in [("coalescing", &rep), ("serial", &srep)] {
+        let words = r
+            .outcomes
+            .iter()
+            .map(|o| o.comm.sent_words)
+            .max()
+            .unwrap_or(0);
+        t.row([
+            name.to_string(),
+            r.batches.len().to_string(),
+            format!("{:.2}", r.mean_batch_depth()),
+            format!("{:.0}", r.qps()),
+            format!("{:.3}", 1e3 * r.latency_percentile(50.0)),
+            format!("{:.3}", 1e3 * r.latency_percentile(99.0)),
+            words.to_string(),
+        ]);
+    }
+    t.print();
+    println!(
+        "throughput: {:.2}x serial ({:.0} vs {:.0} queries/s); per-batch comm \
+         asserted = one r-deep STTSV (words rx, messages unchanged)",
+        rep.qps() / srep.qps().max(1e-12),
+        rep.qps(),
+        srep.qps()
+    );
+    let c = server.cache_counters();
+    println!(
+        "plan cache: {} builds, {} hits, {} misses, {} evictions \
+         (builds freeze once every (tensor, P, opts) config is seen)",
+        c.plan_builds, c.hits, c.misses, c.evictions
+    );
     Ok(())
 }
 

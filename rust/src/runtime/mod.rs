@@ -29,8 +29,9 @@ use std::collections::HashSet;
 use std::path::PathBuf;
 use std::sync::mpsc;
 
-/// Which compute backend executes block contractions.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// Which compute backend executes block contractions. (`Hash` because the
+/// backend is part of the serving layer's plan-cache key via `ExecOpts`.)
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Backend {
     /// Pure-Rust loops (always available; cross-check + perf baseline).
     Native,

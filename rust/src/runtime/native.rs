@@ -713,7 +713,7 @@ impl RunDesc {
 /// exactly as the interpreted kernels receive them) and `ci`/`cj`/`ck`
 /// zeroed `(b, r)` output panels.
 ///
-/// r ∈ {1, 2, 4} dispatch to register-tiled microkernels whose r-column
+/// r ∈ {1, 2, 4, 8} dispatch to register-tiled microkernels whose r-column
 /// accumulator tiles (`m`, `uv`, the per-α `acc`) are `[f32; R]` arrays
 /// held in registers; other r fall back to the dynamic-width path over the
 /// same `chunks_exact` lane helpers as the interpreted kernels. Both paths
@@ -738,6 +738,7 @@ pub fn exec_block_runs(
         1 => exec_runs_tiled::<1>(t, descs, us, vs, ws, ci, cj, ck),
         2 => exec_runs_tiled::<2>(t, descs, us, vs, ws, ci, cj, ck),
         4 => exec_runs_tiled::<4>(t, descs, us, vs, ws, ci, cj, ck),
+        8 => exec_runs_tiled::<8>(t, descs, us, vs, ws, ci, cj, ck),
         _ => exec_runs_dyn(t, descs, us, vs, ws, ci, cj, ck, r),
     }
 }
@@ -911,7 +912,7 @@ fn exec_runs_tiled<const R: usize>(
     }
 }
 
-/// Dynamic-width fallback for r ∉ {1, 2, 4}: the same replay over the
+/// Dynamic-width fallback for r ∉ {1, 2, 4, 8}: the same replay over the
 /// `chunks_exact` lane helpers the interpreted multi kernels use, with
 /// heap accumulator rows hoisted out of the stream loop. r = 1 never
 /// routes here (the tiled R = 1 path carries the scalar-kernel order), so
@@ -1335,7 +1336,7 @@ mod tests {
         // The compiled executor must be BITWISE equal to the kernels the
         // interpreted plan dispatches: the scalar packed kernels at r = 1,
         // the multi kernels at r >= 2 — for every block shape, across the
-        // tiled (r ∈ {1, 2, 4}) and dynamic-width (r ∈ {3, 5}) paths.
+        // tiled (r ∈ {1, 2, 4, 8}) and dynamic-width (r ∈ {3, 5}) paths.
         let (m, b) = (4usize, 6usize);
         let t = SymTensor::random(m * b, 51);
         let data = t.packed_data();
@@ -1343,7 +1344,7 @@ mod tests {
         for blk in [(3usize, 2usize, 0usize), (3, 3, 1), (3, 1, 1), (2, 2, 2)] {
             let view = PackedBlockView::new(blk.0, blk.1, blk.2, b);
             let descs = compile_view(&view);
-            for r in [1usize, 2, 3, 4, 5] {
+            for r in [1usize, 2, 3, 4, 5, 8] {
                 // panels of equal block indices alias (kernel precondition)
                 let us = rng.normal_vec(b * r);
                 let vs = if blk.0 == blk.1 { us.clone() } else { rng.normal_vec(b * r) };

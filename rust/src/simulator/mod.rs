@@ -115,6 +115,38 @@ impl CommStats {
             recv_msgs: self.recv_msgs - earlier.recv_msgs,
         }
     }
+
+    /// Attribute this counter set — one r-deep batched sweep — to a single
+    /// query of the batch. Words divide **exactly** (r-deep packing scales
+    /// every payload by r and nothing else; the caller's r must be the
+    /// batch depth, debug-asserted); message counts are r-independent, so
+    /// a query's share of the latency cost is fractional. This is the
+    /// serving layer's per-query billing primitive: coalescing r queries
+    /// leaves each query's word bill unchanged and cuts its message bill
+    /// by r.
+    pub fn per_query(&self, r: usize) -> QueryCommShare {
+        let r64 = r as u64;
+        debug_assert!(r >= 1);
+        debug_assert_eq!(self.sent_words % r64, 0, "words not r-deep");
+        debug_assert_eq!(self.recv_words % r64, 0, "words not r-deep");
+        QueryCommShare {
+            sent_words: self.sent_words / r64,
+            recv_words: self.recv_words / r64,
+            sent_msgs: self.sent_msgs as f64 / r as f64,
+            recv_msgs: self.recv_msgs as f64 / r as f64,
+        }
+    }
+}
+
+/// One query's share of an r-deep batch's communication
+/// ([`CommStats::per_query`]): exact words, amortized (fractional)
+/// messages.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct QueryCommShare {
+    pub sent_words: u64,
+    pub recv_words: u64,
+    pub sent_msgs: f64,
+    pub recv_msgs: f64,
 }
 
 /// Collective tags live at and above this value; all point-to-point
@@ -309,8 +341,9 @@ pub struct RunMetrics {
 }
 
 /// Message-passing backend for a simulator run — see the module docs for
-/// the two backends' contracts.
-#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+/// the two backends' contracts. (`Hash` because the transport is part of
+/// the serving layer's plan-cache key via `ExecOpts`.)
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum TransportKind {
     /// `std::sync::mpsc` channels: the deterministic counting oracle.
     #[default]
@@ -1538,5 +1571,30 @@ mod tests {
             "peak {} < 30",
             metrics.peak_inflight_words
         );
+    }
+
+    #[test]
+    fn per_query_attribution_divides_words_exactly_and_amortizes_msgs() {
+        // An r-deep batch's stats are (r × words, same msgs) of the
+        // single-query sweep; attribution must invert that exactly.
+        let single = CommStats {
+            sent_words: 12,
+            recv_words: 20,
+            sent_msgs: 6,
+            recv_msgs: 6,
+        };
+        for r in [1usize, 2, 4, 8] {
+            let batch = CommStats {
+                sent_words: single.sent_words * r as u64,
+                recv_words: single.recv_words * r as u64,
+                sent_msgs: single.sent_msgs,
+                recv_msgs: single.recv_msgs,
+            };
+            let share = batch.per_query(r);
+            assert_eq!(share.sent_words, single.sent_words, "r={r}");
+            assert_eq!(share.recv_words, single.recv_words, "r={r}");
+            assert_eq!(share.sent_msgs, single.sent_msgs as f64 / r as f64, "r={r}");
+            assert_eq!(share.recv_msgs, single.recv_msgs as f64 / r as f64, "r={r}");
+        }
     }
 }

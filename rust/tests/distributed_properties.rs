@@ -46,6 +46,17 @@
 //!     ternary mults are bitwise equal across both comm modes, phased and
 //!     overlap, r ∈ {1, 4}; phased results are bitwise transport-invariant
 //!     and overlap results agree within f32 reassociation tolerance.
+//! P12: N queries coalesced into r-deep sweeps by the serving layer are
+//!     bitwise the same-depth `run_multi` oracle on the phased path (the
+//!     demux adds nothing) and within 1e-4 of N serial `plan.run` calls on
+//!     both phased and overlap (the r = 1 scalar kernels and r ≥ 2 fused
+//!     multi kernels regroup central-block tail adds — the documented P10
+//!     kernel-family boundary — so cross-depth equality is tolerance, not
+//!     bitwise); the serial admission policy IS bitwise `plan.run`; every
+//!     batch's per-processor counters equal exactly one r-deep STTSV
+//!     (words r×, messages unchanged vs r = 1); and the plan cache's
+//!     `plan_builds` counter freezes after warmup — a second drain through
+//!     the same server builds nothing.
 
 use sttsv::coordinator::session::SolverSession;
 use sttsv::coordinator::{
@@ -54,6 +65,7 @@ use sttsv::coordinator::{
 use sttsv::partition::{classify, BlockKind, TetraPartition};
 use sttsv::runtime::{packed_ternary_mults, Backend};
 use sttsv::schedule::CommSchedule;
+use sttsv::serve::{AdmissionPolicy, SttsvServer};
 use sttsv::simulator::{allreduce_stats, CommStats, TransportKind};
 use sttsv::steiner::{spherical, sqs8};
 use sttsv::tensor::{linalg, PackedBlockView, SymTensor};
@@ -1004,6 +1016,180 @@ fn p11_spsc_transport_matches_mpsc_oracle_exactly() {
                         }
                     }
                 }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn p12_coalesced_serving_matches_serial_and_bills_exact_comm() {
+    // The serving layer must ADD nothing to the numerics and MOVE nothing
+    // in the comm model: coalescing is exactly `run_multi`, attribution is
+    // exactly the closed form, and the plan cache builds once. Depths 3
+    // and 5 route through the dynamic-width compiled microkernel fallback,
+    // 2/4/8 through the register tiles — same contract either way.
+    let pool = partition_pool();
+    check(
+        "serve coalescing == serial",
+        0x5E12,
+        6,
+        |rng: &mut Rng| {
+            let part_idx = rng.below(pool.len());
+            let b = 2 + rng.below(4); // 2..=5, including non-divisible-by-λ₁
+            let depth = [2usize, 3, 4, 5, 8][rng.below(5)];
+            let overlap = rng.below(2) == 0;
+            let seed = rng.next_u64();
+            (part_idx, b, depth, overlap, seed)
+        },
+        |&(part_idx, b, depth, overlap, seed)| {
+            let part = &pool[part_idx];
+            let n = b * part.m;
+            let tensor = SymTensor::random(n, seed);
+            let mut rng = Rng::new(seed ^ 0x5E12);
+            let nq = 2 * depth;
+            let xs: Vec<Vec<f32>> = (0..nq).map(|_| rng.normal_vec(n)).collect();
+            let opts = ExecOpts { overlap, ..Default::default() };
+            let server = SttsvServer::new(
+                &tensor,
+                part,
+                opts,
+                AdmissionPolicy::coalescing(1.0, depth),
+                2,
+            )
+            .map_err(|e| e.to_string())?;
+            for (k, x) in xs.iter().enumerate() {
+                // One tight burst: everything lands inside the window, so
+                // admission packs exactly two full depth-r batches.
+                server
+                    .submit(x.clone(), 1e-4 * k as f64)
+                    .map_err(|e| e.to_string())?;
+            }
+            let rep = server.drain().map_err(|e| e.to_string())?;
+            if rep.batches.len() != 2 || rep.batches.iter().any(|bt| bt.r != depth) {
+                return Err(format!(
+                    "expected 2 batches of depth {depth}, got {:?}",
+                    rep.batches.iter().map(|bt| bt.r).collect::<Vec<_>>()
+                ));
+            }
+            // drain() already asserted per-batch counters equal
+            // `expected_proc_stats(depth)`; independently pin the r-scaling
+            // law against the SINGLE-query closed form: words exactly r×,
+            // messages unchanged, on every processor of every batch.
+            let plan = server.plan().map_err(|e| e.to_string())?;
+            let single = plan.expected_proc_stats(1);
+            for (bi, bt) in rep.batches.iter().enumerate() {
+                for (p, (got, one)) in bt.per_proc.iter().zip(&single).enumerate() {
+                    if got.sent_words != depth as u64 * one.sent_words
+                        || got.recv_words != depth as u64 * one.recv_words
+                        || got.sent_msgs != one.sent_msgs
+                        || got.recv_msgs != one.recv_msgs
+                    {
+                        return Err(format!(
+                            "batch {bi} proc {p}: {got:?} is not one {depth}-deep \
+                             STTSV (1-deep form {one:?})"
+                        ));
+                    }
+                }
+                // And the per-query bill inverts it exactly.
+                let busiest = bt
+                    .per_proc
+                    .iter()
+                    .copied()
+                    .max_by_key(|s| s.total_words())
+                    .unwrap();
+                let one_busiest = single
+                    .iter()
+                    .copied()
+                    .max_by_key(|s| s.total_words())
+                    .unwrap();
+                let share = busiest.per_query(depth);
+                if share.sent_words != one_busiest.sent_words
+                    || share.recv_words != one_busiest.recv_words
+                {
+                    return Err(format!(
+                        "batch {bi}: per-query words {share:?} != single-query \
+                         bill {one_busiest:?}"
+                    ));
+                }
+            }
+            // Bitwise: the demultiplexed outcomes ARE the same-depth
+            // batched oracle's columns (phased path; overlap accumulates
+            // phase-3 partials in arrival order, so bitwise claims stop at
+            // the P11 boundary there).
+            if !overlap {
+                for (g, group) in xs.chunks(depth).enumerate() {
+                    let oracle = plan.run_multi(group).map_err(|e| e.to_string())?;
+                    for (l, want) in oracle.ys.iter().enumerate() {
+                        if rep.outcomes[depth * g + l].y != *want {
+                            return Err(format!(
+                                "batch {g} col {l}: coalesced result is not \
+                                 bitwise the run_multi oracle"
+                            ));
+                        }
+                    }
+                }
+            }
+            // Tolerance vs N serial plan.run calls, phased AND overlap
+            // (cross-depth bitwise equality is impossible: the scalar and
+            // fused-multi kernel families group central tail adds
+            // differently — P10's documented boundary).
+            let mut serial_ys: Vec<Vec<f32>> = Vec::with_capacity(nq);
+            for x in &xs {
+                serial_ys.push(plan.run(x).map_err(|e| e.to_string())?.y);
+            }
+            for o in &rep.outcomes {
+                let want = &serial_ys[o.id as usize];
+                let scale = want.iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+                for i in 0..n {
+                    if (o.y[i] - want[i]).abs() > 1e-4 * scale {
+                        return Err(format!(
+                            "query {} i={i}: coalesced {} vs serial {}",
+                            o.id, o.y[i], want[i]
+                        ));
+                    }
+                }
+            }
+            // The serial admission policy takes the identical r = 1 code
+            // path plan.run takes: bitwise on the phased path.
+            if !overlap {
+                let sserver =
+                    SttsvServer::new(&tensor, part, opts, AdmissionPolicy::serial(), 2)
+                        .map_err(|e| e.to_string())?;
+                for (k, x) in xs.iter().enumerate() {
+                    sserver
+                        .submit(x.clone(), k as f64)
+                        .map_err(|e| e.to_string())?;
+                }
+                let srep = sserver.drain().map_err(|e| e.to_string())?;
+                for o in &srep.outcomes {
+                    if o.batch_r != 1 || o.y != serial_ys[o.id as usize] {
+                        return Err(format!(
+                            "query {}: serial-policy serving must be bitwise \
+                             plan.run",
+                            o.id
+                        ));
+                    }
+                }
+            }
+            // Cache warmup: one build served everything above; a second
+            // drain through the same server builds nothing new.
+            let c = server.cache_counters();
+            if c.plan_builds != 1 {
+                return Err(format!("plan_builds {} != 1 after warmup", c.plan_builds));
+            }
+            for (k, x) in xs.iter().take(depth).enumerate() {
+                server
+                    .submit(x.clone(), 100.0 + 1e-4 * k as f64)
+                    .map_err(|e| e.to_string())?;
+            }
+            server.drain().map_err(|e| e.to_string())?;
+            let c2 = server.cache_counters();
+            if c2.plan_builds != c.plan_builds {
+                return Err(format!(
+                    "plan_builds moved {} -> {} on a warm cache",
+                    c.plan_builds, c2.plan_builds
+                ));
             }
             Ok(())
         },
