@@ -2,7 +2,8 @@
 
 .PHONY: artifacts artifacts-quick test test-release-asserts pytest bench \
 	bench-smoke bench-overlap bench-compiled bench-e2e bench-e2e-smoke \
-	bench-hw bench-hw-smoke bench-serve bench-serve-smoke
+	bench-hw bench-hw-smoke bench-serve bench-serve-smoke bench-chaos \
+	bench-chaos-smoke
 
 # AOT-lower the JAX/Pallas kernels (incl. the multi-RHS block_multi_* set)
 # to HLO text artifacts for the Rust PJRT backend.
@@ -82,3 +83,15 @@ bench-serve:
 # build-once assert, comm asserts, and the acceptance print still execute.
 bench-serve-smoke:
 	cd rust && STTSV_BENCH_SMOKE=1 cargo bench --bench serve_throughput
+
+# E17 chaos-resilience bench: the E16 bursty trace replayed under a ladder
+# of seeded transport fault rates through the robust server (reseeded
+# retries, breaker, deadline shedding) at P in {4, 10}; goodput + p50/p99
+# + shed/failure accounting per rate; writes rust/BENCH_chaos.json.
+bench-chaos:
+	cd rust && cargo bench --bench chaos_resilience
+
+# Fast variant (what CI runs): fewer queries and rates; the full-accounting
+# assert, zero-rate transparency assert, and acceptance print still execute.
+bench-chaos-smoke:
+	cd rust && STTSV_BENCH_SMOKE=1 cargo bench --bench chaos_resilience

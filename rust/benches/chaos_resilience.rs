@@ -1,0 +1,223 @@
+//! Bench E17: serving resilience under chaos — goodput, tail latency,
+//! and shed/failure rates vs injected transport fault rate, at
+//! P ∈ {4, 10} on the mpsc oracle transport. Emits `BENCH_chaos.json`.
+//!
+//!     cargo bench --bench chaos_resilience            # full sampling
+//!     STTSV_BENCH_SMOKE=1 cargo bench ...             # CI fast path
+//!
+//! Protocol: ONE bursty open-loop trace per P (the E16 arrival process)
+//! replayed under a ladder of seeded [`FaultPlan`] rates through a server
+//! running the §Rob robustness policy (per-batch reseeded retries,
+//! breaker to serial on sustained failure, a generous per-query
+//! deadline). Every query must be accounted for at every rate:
+//! `served + failed + shed == submitted` — the termination contract the
+//! P13 soak proves, measured here as capacity. The zero-rate row is
+//! asserted fault-free (no retries, no failures, no shedding) and doubles
+//! as the transparency baseline: its goodput IS the E16 coalescing path.
+//!
+//! Reported per row: goodput (answered queries/sec and the answered
+//! fraction), p50/p99 latency over the answers, retries, breaker trips,
+//! shed and failed counts. Acceptance (printed honestly either way):
+//! full accounting at every rate AND goodput at the highest rate stays
+//! above zero — degraded, never wedged.
+
+use std::fmt::Write as _;
+
+use sttsv::bench::header;
+use sttsv::coordinator::ExecOpts;
+use sttsv::partition::TetraPartition;
+use sttsv::serve::{AdmissionPolicy, RobustnessPolicy, ServeReport, SttsvServer};
+use sttsv::simulator::FaultPlan;
+use sttsv::steiner::{spherical, trivial};
+use sttsv::tensor::SymTensor;
+use sttsv::util::rng::Rng;
+use sttsv::util::table::Table;
+
+const BURST: usize = 8;
+
+/// The E16 bursty open-loop trace: bursts of [`BURST`] queries spread
+/// over ~0.1 ms, bursts 0.1 ms apart.
+fn make_trace(n: usize, queries: usize, seed: u64) -> Vec<(Vec<f32>, f64)> {
+    let mut rng = Rng::new(seed);
+    (0..queries)
+        .map(|k| {
+            let base = (k / BURST) as f64 * 1e-4;
+            let jitter = rng.below(1000) as f64 * 1e-7;
+            (rng.normal_vec(n), base + jitter)
+        })
+        .collect()
+}
+
+/// Replay `trace` once through a robust server under `chaos`.
+fn replay(
+    tensor: &SymTensor,
+    part: &TetraPartition,
+    chaos: FaultPlan,
+    trace: &[(Vec<f32>, f64)],
+) -> anyhow::Result<ServeReport> {
+    let opts = ExecOpts {
+        chaos,
+        overlap: false, // phased: deterministic fault schedules per seed
+        ..Default::default()
+    };
+    let robust = RobustnessPolicy {
+        deadline: 0.25, // generous 250 ms: sheds only pathological stalls
+        max_retries: 2,
+        breaker_after: 2,
+        ..RobustnessPolicy::default()
+    };
+    let server = SttsvServer::new(tensor, part, opts, AdmissionPolicy::coalescing(5e-4, 8), 2)?
+        .with_robustness(robust);
+    for (x, arrival) in trace {
+        server.submit(x.clone(), *arrival)?;
+    }
+    server.drain()
+}
+
+struct E17Row {
+    p: usize,
+    rate: f64,
+    served: usize,
+    failed: usize,
+    shed: usize,
+    retries: u64,
+    breaker_trips: u64,
+    goodput_qps: f64,
+    answered_frac: f64,
+    p50_ms: f64,
+    p99_ms: f64,
+}
+
+fn render_json(rows: &[E17Row], queries: usize, accept: bool) -> String {
+    let mut s = String::new();
+    let _ = write!(
+        s,
+        "{{\n  \"bench\": \"chaos_resilience\",\n  \"queries_per_trace\": {queries},\n  \
+         \"burst\": {BURST},\n  \"rows\": [\n"
+    );
+    for (idx, r) in rows.iter().enumerate() {
+        let _ = write!(
+            s,
+            "    {{\"p\": {}, \"fault_rate\": {:.6}, \"served\": {}, \
+             \"failed\": {}, \"shed\": {}, \"retries\": {}, \
+             \"breaker_trips\": {}, \"goodput_qps\": {:.1}, \
+             \"answered_frac\": {:.4}, \"p50_ms\": {:.4}, \"p99_ms\": {:.4}}}{}\n",
+            r.p,
+            r.rate,
+            r.served,
+            r.failed,
+            r.shed,
+            r.retries,
+            r.breaker_trips,
+            r.goodput_qps,
+            r.answered_frac,
+            r.p50_ms,
+            r.p99_ms,
+            if idx + 1 < rows.len() { "," } else { "" }
+        );
+    }
+    let _ = write!(s, "  ],\n  \"accept_full_accounting_nonzero_goodput\": {accept}\n}}\n");
+    s
+}
+
+fn main() -> anyhow::Result<()> {
+    let smoke = std::env::var("STTSV_BENCH_SMOKE").is_ok();
+    let queries = if smoke { 16 } else { 64 };
+    let n = 40; // splits into m ∈ {4, 10}; comm-dominated sweeps
+
+    header("E17: serving resilience — goodput and tails vs injected fault rate");
+    let rates: &[f64] = if smoke {
+        &[0.0, 1e-3]
+    } else {
+        &[0.0, 1e-4, 1e-3, 5e-3]
+    };
+
+    let mut rows: Vec<E17Row> = Vec::new();
+    let mut accept = true;
+    let mut t = Table::new([
+        "P", "fault rate", "served", "failed", "shed", "retries", "trips",
+        "goodput qps", "answered", "p50 ms", "p99 ms",
+    ]);
+    for (sys, p_label) in [(trivial(4)?, 4usize), (spherical(2)?, 10usize)] {
+        let part = TetraPartition::from_steiner(&sys)?;
+        assert_eq!(part.p, p_label);
+        assert_eq!(n % part.m, 0);
+        let tensor = SymTensor::random(n, 0xE17);
+        let trace = make_trace(n, queries, 0xE17 ^ part.p as u64);
+        for &rate in rates {
+            let chaos = FaultPlan::rate(0xE17 ^ part.p as u64, rate);
+            let rep = replay(&tensor, &part, chaos, &trace)?;
+            let served = rep.outcomes.len();
+            let failed = rep.failed.len();
+            let shed = rep.shed.len();
+            // Termination accounting: every submitted query surfaced as
+            // exactly one of answered / typed-failure / deadline-shed.
+            let accounted = served + failed + shed == queries;
+            assert!(accounted, "P={} rate={rate}: {served}+{failed}+{shed} != {queries}", part.p);
+            if rate == 0.0 {
+                assert_eq!(
+                    (failed, shed, rep.retries),
+                    (0, 0, 0),
+                    "zero-rate chaos must be transparent"
+                );
+            }
+            accept &= accounted && (served > 0 || rate > 0.0);
+            let row = E17Row {
+                p: part.p,
+                rate,
+                served,
+                failed,
+                shed,
+                retries: rep.retries,
+                breaker_trips: rep.breaker_trips,
+                goodput_qps: rep.qps(), // qps() already counts answers only
+                answered_frac: served as f64 / queries.max(1) as f64,
+                p50_ms: 1e3 * rep.latency_percentile(50.0),
+                p99_ms: 1e3 * rep.latency_percentile(99.0),
+            };
+            t.row([
+                row.p.to_string(),
+                format!("{:.4}", row.rate),
+                row.served.to_string(),
+                row.failed.to_string(),
+                row.shed.to_string(),
+                row.retries.to_string(),
+                row.breaker_trips.to_string(),
+                format!("{:.0}", row.goodput_qps),
+                format!("{:.2}", row.answered_frac),
+                format!("{:.4}", row.p50_ms),
+                format!("{:.4}", row.p99_ms),
+            ]);
+            rows.push(row);
+        }
+    }
+    t.print();
+    println!(
+        "one bursty trace per P replayed under each seeded fault rate; the \
+         server retries failed batches under reseeded plans, trips its \
+         breaker to serial after 2 consecutive failures, and sheds only \
+         queries that cannot start within 250 ms. served + failed + shed \
+         is asserted == submitted at every rate (the P13 termination \
+         contract, measured as capacity)."
+    );
+
+    // ---- acceptance (printed honestly either way) -----------------------
+    let worst = rows
+        .iter()
+        .filter(|r| r.rate >= rates[rates.len() - 1])
+        .map(|r| r.answered_frac)
+        .fold(1.0f64, f64::min);
+    accept &= worst > 0.0;
+    println!(
+        "\nacceptance [full accounting at every rate AND nonzero goodput at \
+         the highest rate]: {} (worst answered fraction at rate {:.4}: {:.2})",
+        if accept { "PASS" } else { "MISS" },
+        rates[rates.len() - 1],
+        worst
+    );
+
+    let json = render_json(&rows, queries, accept);
+    std::fs::write("BENCH_chaos.json", &json)?;
+    println!("\nwrote BENCH_chaos.json ({} bytes)", json.len());
+    Ok(())
+}

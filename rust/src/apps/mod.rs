@@ -36,7 +36,7 @@ use crate::simulator::CommStats;
 use crate::tensor::{linalg, SymTensor};
 use anyhow::Result;
 
-pub use crate::coordinator::session::{CpIter, PowerIter};
+pub use crate::coordinator::session::{CpIter, PowerIter, RecoveryLog, RecoveryPolicy};
 
 /// Full power-method report.
 #[derive(Debug, Clone)]
@@ -53,6 +53,9 @@ pub struct PowerReport {
     pub comm: Vec<CommStats>,
     /// Communication steps per STTSV vector phase.
     pub steps_per_phase: usize,
+    /// Attempt/restart record of the solve (§Rob). `attempts == 1` on a
+    /// fault-free run; the host loop never retries and reports defaults.
+    pub recovery: RecoveryLog,
 }
 
 /// Sum per-iteration per-processor records into whole-solve totals.
@@ -108,6 +111,40 @@ pub fn power_method_on(
         iters: solve.iters,
         comm,
         steps_per_phase: solve.steps_per_phase,
+        recovery: solve.recovery,
+    })
+}
+
+/// Resident power method with checkpointed recovery (§Rob): identical to
+/// [`power_method`] on a fault-free run, but the session commits
+/// portion-local checkpoints every `recovery.checkpoint_every` iterations
+/// and retries a failed run from the newest globally consistent one (with
+/// capped exponential backoff) up to `recovery.max_retries` times. The
+/// extra checkpoint/restore traffic is charged to [`CommStats`] and the
+/// restart history lands in [`PowerReport::recovery`].
+pub fn power_method_recovering(
+    tensor: &SymTensor,
+    part: &TetraPartition,
+    x0: &[f32],
+    max_iters: usize,
+    tol: f32,
+    opts: ExecOpts,
+    recovery: RecoveryPolicy,
+) -> Result<PowerReport> {
+    let plan = SttsvPlan::new(tensor, part, opts)?;
+    let solve = SolverSession::new(&plan)
+        .with_recovery(recovery)
+        .power_method(x0, max_iters, tol)?;
+    let p = solve.per_proc.len();
+    let comm = total_comm(p, solve.iters.iter().map(|it| it.comm.as_slice()));
+    let lambda = solve.iters.last().map(|i| i.lambda).unwrap_or(0.0);
+    Ok(PowerReport {
+        lambda,
+        x: solve.x,
+        iters: solve.iters,
+        comm,
+        steps_per_phase: solve.steps_per_phase,
+        recovery: solve.recovery,
     })
 }
 
@@ -162,6 +199,7 @@ pub fn power_method_host(
         iters,
         comm,
         steps_per_phase,
+        recovery: RecoveryLog::default(),
     })
 }
 
@@ -209,6 +247,8 @@ pub struct CpAlsReport {
     /// Aggregated per-processor comm over the whole solve.
     pub comm: Vec<CommStats>,
     pub steps_per_phase: usize,
+    /// Attempt/restart record of the solve (§Rob).
+    pub recovery: RecoveryLog,
 }
 
 /// Multi-sweep resident symmetric CP driver (the Algorithm 2 workload
@@ -232,6 +272,7 @@ pub fn cp_als_sweep(
             iters: Vec::new(),
             comm: vec![CommStats::default(); part.p],
             steps_per_phase: 0,
+            recovery: RecoveryLog::default(),
         });
     }
     let plan = SttsvPlan::new(tensor, part, opts)?;
@@ -242,6 +283,45 @@ pub fn cp_als_sweep(
         iters: solve.iters,
         comm,
         steps_per_phase: solve.steps_per_phase,
+        recovery: solve.recovery,
+    })
+}
+
+/// Resident CP descent with checkpointed recovery (§Rob): the CP analogue
+/// of [`power_method_recovering`] — factor-portion checkpoints every
+/// `recovery.checkpoint_every` sweeps, reseeded retry-with-restart on
+/// failure, all extra traffic charged to [`CommStats`].
+#[allow(clippy::too_many_arguments)]
+pub fn cp_als_recovering(
+    tensor: &SymTensor,
+    part: &TetraPartition,
+    x0_cols: &[Vec<f32>],
+    sweeps: usize,
+    step: f32,
+    tol: f32,
+    opts: ExecOpts,
+    recovery: RecoveryPolicy,
+) -> Result<CpAlsReport> {
+    if x0_cols.is_empty() {
+        return Ok(CpAlsReport {
+            x_cols: Vec::new(),
+            iters: Vec::new(),
+            comm: vec![CommStats::default(); part.p],
+            steps_per_phase: 0,
+            recovery: RecoveryLog::default(),
+        });
+    }
+    let plan = SttsvPlan::new(tensor, part, opts)?;
+    let solve = SolverSession::new(&plan)
+        .with_recovery(recovery)
+        .cp_sweeps(x0_cols, sweeps, step, tol)?;
+    let comm = solve.per_proc.iter().map(|pr| pr.stats).collect();
+    Ok(CpAlsReport {
+        x_cols: solve.x_cols,
+        iters: solve.iters,
+        comm,
+        steps_per_phase: solve.steps_per_phase,
+        recovery: solve.recovery,
     })
 }
 

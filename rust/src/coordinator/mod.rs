@@ -63,7 +63,9 @@ pub mod session;
 use crate::partition::{block_ternary_mults, classify, factors, BlockKind, TetraPartition};
 use crate::runtime::{exec_block_runs, lanes_add, lanes_axpy, Backend, Engine, RunDesc};
 use crate::schedule::CommSchedule;
-use crate::simulator::{self, BufPool, Comm, CommStats, RunCfg, TagClass, TransportKind};
+use crate::simulator::{
+    self, BufPool, Comm, CommStats, FaultPlan, RunCfg, TagClass, TransportKind,
+};
 use crate::tensor::{PackedBlockView, SymTensor};
 use anyhow::{bail, ensure, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -184,6 +186,20 @@ pub struct ExecOpts {
     /// only). Off by default — pinning helps dedicated benchmark boxes and
     /// hurts oversubscribed CI runners.
     pub pin_threads: bool,
+    /// Seeded fault-injection plan (§Rob, CLI `--chaos seed,rate`). The
+    /// default (all-zero) plan runs the plain transport with no wrapper;
+    /// any other plan wraps it in the chaos decorator. Retry loops do NOT
+    /// bake the per-attempt reseed into the opts — they pass
+    /// [`FaultPlan::reseeded`] plans through
+    /// [`SttsvPlan::run_multi_with`], so one plan (and one cache entry)
+    /// serves every attempt.
+    pub chaos: FaultPlan,
+    /// Watchdog for blocking receives (CLI `--recv-timeout-ms`): a rank
+    /// blocked longer than this surfaces a typed timeout instead of
+    /// waiting forever behind a stuck-but-alive peer. `None` = no
+    /// watchdog (peer death still unwinds the run via the abort
+    /// protocol and the fail-fast liveness check).
+    pub recv_timeout: Option<Duration>,
 }
 
 impl Default for ExecOpts {
@@ -198,6 +214,8 @@ impl Default for ExecOpts {
             compute_threads: 1,
             transport: TransportKind::Mpsc,
             pin_threads: false,
+            chaos: FaultPlan::default(),
+            recv_timeout: None,
         }
     }
 }
@@ -1073,6 +1091,18 @@ impl<'a> SttsvPlan<'a> {
     /// exactly r× the single-vector counts; message counts (latency) are
     /// unchanged.
     pub fn run_multi<X: AsRef<[f32]>>(&self, xs: &[X]) -> Result<SttsvMultiReport> {
+        self.run_multi_with(xs, self.opts.chaos)
+    }
+
+    /// [`SttsvPlan::run_multi`] under an explicit chaos plan — the §Rob
+    /// retry loops (serve-layer batch retry, session restart) run their
+    /// [`FaultPlan::reseeded`] attempts through here, so one cached plan
+    /// serves every attempt.
+    pub fn run_multi_with<X: AsRef<[f32]>>(
+        &self,
+        xs: &[X],
+        chaos: FaultPlan,
+    ) -> Result<SttsvMultiReport> {
         let r = xs.len();
         ensure!(r >= 1, "run_multi needs at least one right-hand side");
         let views: Vec<&[f32]> = xs.iter().map(|x| x.as_ref()).collect();
@@ -1090,7 +1120,7 @@ impl<'a> SttsvPlan<'a> {
             Vec<(usize, std::ops::Range<usize>, Vec<f32>)>,
         );
         let (outs, metrics): (Vec<ProcOut>, simulator::RunMetrics) =
-            simulator::run_cfg(part.p, Some(&self.pools), self.run_cfg(r), |comm| {
+            simulator::run_cfg(part.p, Some(&self.pools), self.run_cfg_with(r, chaos), |comm| {
                 self.worker(comm, &views)
             })?;
 
@@ -1253,6 +1283,7 @@ impl<'a> SttsvPlan<'a> {
         debug_assert_eq!(st.xbuf.len(), part.r_p[me].len() * panel);
 
         // ---- phase 1: gather r-deep row-block panels x[i], i ∈ R_p --------
+        comm.phase = "gather";
         exchange(
             comm,
             part,
@@ -1282,6 +1313,7 @@ impl<'a> SttsvPlan<'a> {
         // Packed mode (§Perf P7) contracts in place against the shared
         // packed buffer; dense-extract mode sweeps the plan's b³ copies.
         let compute_start = Instant::now();
+        comm.phase = "compute";
         let tdata = self.tensor.packed_data();
         for v in st.ybuf.iter_mut() {
             *v = 0.0;
@@ -1390,6 +1422,7 @@ impl<'a> SttsvPlan<'a> {
         let b = self.b;
         let r = st.r;
         let slots = &self.slot_of[me];
+        comm.phase = "reduce";
         exchange(
             comm,
             part,
@@ -1474,6 +1507,7 @@ impl<'a> SttsvPlan<'a> {
         let panel = b * r;
         let meta = &self.overlap[me];
         let groups = &self.groups[me];
+        comm.phase = "overlap";
         debug_assert_eq!(wst.xbuf.len(), part.r_p[me].len() * panel);
 
         for v in wst.ybuf.iter_mut() {
@@ -1525,6 +1559,9 @@ impl<'a> SttsvPlan<'a> {
         let mut mults: u64 = 0;
         let mut compute_time = Duration::ZERO;
         while st.p1_left > 0 || st.p3_left > 0 || st.blocks_left > 0 {
+            // A dead peer must unwind this worker even while it still has
+            // local compute queued (§Rob): one atomic load per iteration.
+            comm.check_abort()?;
             // Drain every sweep message that has already arrived (cheap,
             // nonblocking; collective tags stay stashed for the session).
             while let Some((from, tag)) = comm.try_recv_class(TagClass::Sweep) {
@@ -1691,12 +1728,22 @@ impl<'a> SttsvPlan<'a> {
 
     /// The simulator run configuration for an r-deep sweep: the plan's
     /// transport/pinning options plus ring slots sized to the widest
-    /// message, so spsc sends never allocate.
+    /// message, so spsc sends never allocate — and the plan's fault
+    /// injection and recv watchdog (§Rob).
     pub(crate) fn run_cfg(&self, r: usize) -> RunCfg {
+        self.run_cfg_with(r, self.opts.chaos)
+    }
+
+    /// [`SttsvPlan::run_cfg`] with the chaos plan overridden — the retry
+    /// loops substitute [`FaultPlan::reseeded`] attempts here without
+    /// touching the plan (or its cache key).
+    pub(crate) fn run_cfg_with(&self, r: usize, chaos: FaultPlan) -> RunCfg {
         RunCfg {
             transport: self.opts.transport,
             pin_threads: self.opts.pin_threads,
             slot_words: self.max_message_words(r),
+            chaos,
+            recv_timeout: self.opts.recv_timeout,
         }
     }
 }

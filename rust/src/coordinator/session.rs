@@ -38,12 +38,27 @@
 //! the host sees the iterate again only in the final assembled result.
 //! Property P9 cross-checks a k-iteration session against k independent
 //! `plan.run` calls plus host arithmetic.
+//!
+//! **Failure & recovery** (§Rob): with a [`RecoveryPolicy`], every k-th
+//! completed iteration each worker commits a portion-local checkpoint —
+//! its own O(n·r/P) iterate coordinates plus the committed iteration
+//! records — charged to its `CommStats` as one message. A failed run
+//! (injected crash, transient-fault storm, peer timeout) is retried
+//! under a [`FaultPlan::reseeded`](crate::simulator::FaultPlan::reseeded)
+//! plan with capped exponential backoff, resuming every rank from the
+//! newest checkpoint generation that ALL ranks committed. The
+//! per-iteration δ/gnorm allreduce keeps crash skew to one iteration, so
+//! two retained generations per rank always contain that consistent cut.
+//! Recovery comm therefore follows the closed form `checkpoint writes +
+//! one read per resume + replayed iterations`, asserted bitwise in the
+//! tests below against the zero-fault oracle solve.
 
 use super::{assemble_columns, ProcReport, SttsvPlan};
-use crate::simulator::{self, allreduce_stats, CommStats};
+use crate::simulator::{self, allreduce_stats, lock_clean, CommStats};
 use crate::tensor::linalg;
 use anyhow::{ensure, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 use std::time::Duration;
 
 /// One resident power-method iteration record.
@@ -71,9 +86,12 @@ pub struct PowerSolve {
     /// Whole-solve per-processor totals (STTSV + collectives).
     pub per_proc: Vec<ProcReport>,
     pub steps_per_phase: usize,
-    /// Simulator worker entries observed: P — one spawn per solve, however
-    /// many iterations ran (asserted) — or 0 for a zero-iteration solve.
+    /// Simulator worker entries observed on the final (successful)
+    /// attempt: P — one spawn per attempt, however many iterations ran
+    /// (asserted) — or 0 for a zero-iteration solve.
     pub worker_spawns: usize,
+    /// Retry-with-restart evidence (§Rob); `attempts == 1` on a clean run.
+    pub recovery: RecoveryLog,
 }
 
 /// One resident CP sweep record.
@@ -96,9 +114,12 @@ pub struct CpSolve {
     pub iters: Vec<CpIter>,
     pub per_proc: Vec<ProcReport>,
     pub steps_per_phase: usize,
-    /// Simulator worker entries observed: P — one spawn per solve
-    /// (asserted) — or 0 for a zero-sweep solve.
+    /// Simulator worker entries observed on the final (successful)
+    /// attempt: P — one spawn per attempt (asserted) — or 0 for a
+    /// zero-sweep solve.
     pub worker_spawns: usize,
+    /// Retry-with-restart evidence (§Rob); `attempts == 1` on a clean run.
+    pub recovery: RecoveryLog,
 }
 
 /// Per-worker output of the resident power loop.
@@ -135,16 +156,158 @@ fn zero_proc_reports(p: usize) -> Vec<ProcReport> {
         .collect()
 }
 
+/// Checkpoint/retry policy for resident solves (§Rob). The default is
+/// OFF — no checkpoints, no retries — so sessions built with
+/// [`SolverSession::new`] behave exactly as they did before this layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RecoveryPolicy {
+    /// Commit a portion-local checkpoint every `k` completed iterations
+    /// (0 = never). Each commit moves O(n·r/P) words per rank, charged to
+    /// that rank's [`CommStats`] as one message.
+    pub checkpoint_every: usize,
+    /// Failed runs to retry (under a reseeded fault plan) before
+    /// surfacing the failure to the caller.
+    pub max_retries: u32,
+    /// First retry delay; doubles per retry up to `backoff_cap`.
+    pub backoff: Duration,
+    pub backoff_cap: Duration,
+}
+
+impl Default for RecoveryPolicy {
+    fn default() -> RecoveryPolicy {
+        RecoveryPolicy {
+            checkpoint_every: 0,
+            max_retries: 0,
+            backoff: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(100),
+        }
+    }
+}
+
+/// What the retry-with-restart loop actually did: the evidence the
+/// recovery-comm closed form (`checkpoint writes + one read per resume +
+/// replayed iterations`) is checked against.
+#[derive(Debug, Clone, Default)]
+pub struct RecoveryLog {
+    /// Run attempts made; 1 = the solve succeeded without a restart, 0 =
+    /// the degenerate zero-iteration solve never entered the simulator.
+    pub attempts: u32,
+    /// Completed-iteration count each retry resumed from (0 = restarted
+    /// from the seed), in attempt order — `attempts - 1` entries.
+    pub resumed_from: Vec<usize>,
+    /// Rendered failure reports of the failed attempts, in attempt order.
+    pub failures: Vec<String>,
+}
+
+/// One committed checkpoint generation of one rank: the owned iterate
+/// coordinates plus every record needed to resume the host-visible
+/// iteration history. `R` is the per-iteration scalar record — `(norm,
+/// lambda, delta)` for power, `gnorm` for CP.
+struct Ckpt<R> {
+    /// Completed iterations at this checkpoint (a multiple of k).
+    iter: usize,
+    /// Owned xbuf coordinates, concatenated in `own_ranges` order.
+    own: Vec<f32>,
+    recs: Vec<R>,
+    per_iter: Vec<CommStats>,
+    mults: u64,
+    compute: Duration,
+    /// Cumulative comm at commit time, INCLUDING this commit's own write
+    /// charge — a resume restores a counter that already paid for the
+    /// checkpoint it restores from.
+    stats: CommStats,
+}
+
+/// Per-rank checkpoint slots: newest generation last, at most two retained.
+type CkptSlots<R> = Vec<Mutex<Vec<Ckpt<R>>>>;
+
+/// Total owned words across a rank's interleaved ranges — the O(n·r/P)
+/// checkpoint payload size.
+fn owned_words(ranges: &[std::ops::Range<usize>]) -> u64 {
+    ranges.iter().map(|rg| rg.len() as u64).sum()
+}
+
+/// Copy a checkpoint's concatenated owned coordinates back into `xbuf`.
+fn restore_own(ranges: &[std::ops::Range<usize>], own: &[f32], xbuf: &mut [f32]) {
+    let mut off = 0;
+    for rg in ranges {
+        xbuf[rg.clone()].copy_from_slice(&own[off..off + rg.len()]);
+        off += rg.len();
+    }
+}
+
+/// Commit one checkpoint generation: charge the write (own-portion words,
+/// one message) and push the snapshot, retiring all but the last two
+/// generations — the per-iteration allreduce keeps ranks within one
+/// iteration of each other at a crash, so the consistent resume cut is
+/// always among every rank's last two commits.
+#[allow(clippy::too_many_arguments)]
+fn commit_ckpt<R: Clone>(
+    slot: &Mutex<Vec<Ckpt<R>>>,
+    ranges: &[std::ops::Range<usize>],
+    xbuf: &[f32],
+    iter: usize,
+    recs: &[R],
+    per_iter: &[CommStats],
+    mults: u64,
+    compute: Duration,
+    stats: &mut CommStats,
+) {
+    let words = owned_words(ranges);
+    stats.sent_words += words;
+    stats.sent_msgs += 1;
+    let mut own = Vec::with_capacity(words as usize);
+    for rg in ranges {
+        own.extend_from_slice(&xbuf[rg.clone()]);
+    }
+    let mut slot = lock_clean(slot);
+    slot.push(Ckpt {
+        iter,
+        own,
+        recs: recs.to_vec(),
+        per_iter: per_iter.to_vec(),
+        mults,
+        compute,
+        stats: *stats,
+    });
+    if slot.len() > 2 {
+        slot.remove(0);
+    }
+}
+
+/// The newest checkpoint generation EVERY rank committed — the only cut a
+/// restart may resume from. Entries past the cut belong to the abandoned
+/// attempt and are pruned here, before any worker looks.
+fn consistent_cut<R>(ckpts: &[Mutex<Vec<Ckpt<R>>>]) -> usize {
+    let cut = ckpts
+        .iter()
+        .map(|s| lock_clean(s).last().map_or(0, |c| c.iter))
+        .min()
+        .unwrap_or(0);
+    for slot in ckpts {
+        lock_clean(slot).retain(|c| c.iter <= cut);
+    }
+    cut
+}
+
 /// An iteration-resident solve bound to a prepared [`SttsvPlan`]: the
 /// tensor distribution, schedule, and buffer pools are the plan's; the
 /// session adds the driver loops that keep the *vector* distributed too.
 pub struct SolverSession<'p, 't> {
     plan: &'p SttsvPlan<'t>,
+    recovery: RecoveryPolicy,
 }
 
 impl<'p, 't> SolverSession<'p, 't> {
     pub fn new(plan: &'p SttsvPlan<'t>) -> SolverSession<'p, 't> {
-        SolverSession { plan }
+        SolverSession { plan, recovery: RecoveryPolicy::default() }
+    }
+
+    /// Enable checkpointed retry-with-restart (§Rob) for this session's
+    /// solves.
+    pub fn with_recovery(mut self, policy: RecoveryPolicy) -> SolverSession<'p, 't> {
+        self.recovery = policy;
+        self
     }
 
     /// Resident higher-order power method (Algorithm 1): iterate
@@ -169,72 +332,126 @@ impl<'p, 't> SolverSession<'p, 't> {
                 per_proc: zero_proc_reports(part.p),
                 steps_per_phase: plan.steps_per_phase(),
                 worker_spawns: 0,
+                recovery: RecoveryLog::default(),
             });
         }
         let seed = seed_vec.as_slice();
-        let entries = AtomicUsize::new(0);
-
-        let cfg = plan.run_cfg(1);
-        let (outs, _metrics) = simulator::run_cfg(part.p, Some(&plan.pools), cfg, |comm| {
-            entries.fetch_add(1, Ordering::Relaxed);
-            let me = comm.rank;
-            let mut st = plan.worker_state(me, 1);
-            plan.seed_own(me, &[seed], &mut st.xbuf);
-            let ranges = plan.own_ranges(me, 1);
-            let mut scalars = Vec::new();
-            let mut per_iter = Vec::new();
-            let mut mults = 0u64;
-            let mut compute = Duration::ZERO;
-            for _ in 0..max_iters {
-                let before = comm.stats;
-                let (m, ct) = plan.sweep(comm, &mut st)?;
-                mults += m;
-                compute += ct;
-                // λ = x·y and ‖y‖² from the owned portions only, fused
-                // into one 2-word allreduce.
-                let (mut lam, mut nrm2) = (0.0f64, 0.0f64);
-                for rg in &ranges {
-                    for idx in rg.clone() {
-                        let (xv, yv) = (st.xbuf[idx] as f64, st.ybuf[idx] as f64);
-                        lam += xv * yv;
-                        nrm2 += yv * yv;
-                    }
-                }
-                let mut s = [lam as f32, nrm2 as f32];
-                comm.allreduce_sum(&mut s)?;
-                let (lambda, norm) = (s[0], s[1].sqrt());
-                let inv = if norm > 0.0 { 1.0 / norm } else { 0.0 };
-                // Normalize portion-locally, accumulating ‖Δx‖² on the fly.
-                let mut d2 = 0.0f64;
-                for rg in &ranges {
-                    for idx in rg.clone() {
-                        let xn = st.ybuf[idx] * inv;
-                        let d = (xn - st.xbuf[idx]) as f64;
-                        d2 += d * d;
-                        st.xbuf[idx] = xn;
-                    }
-                }
-                // The δ allreduce is the session's control channel: every
-                // rank receives the identical bits and branches identically.
-                let delta = comm.allreduce_scalar(d2 as f32)?.sqrt();
-                scalars.push((norm, lambda, delta));
-                per_iter.push(comm.stats.since(&before));
-                if delta < tol {
-                    break;
-                }
+        let every = self.recovery.checkpoint_every;
+        let ckpts: CkptSlots<(f32, f32, f32)> =
+            (0..part.p).map(|_| Mutex::new(Vec::new())).collect();
+        let mut recovery = RecoveryLog::default();
+        let mut backoff = self.recovery.backoff;
+        let (outs, worker_spawns) = loop {
+            let attempt = recovery.attempts;
+            recovery.attempts += 1;
+            let cut = consistent_cut(&ckpts);
+            if attempt > 0 {
+                recovery.resumed_from.push(cut);
             }
-            let portions = plan.owned_portions(me, &st.xbuf, 1);
-            Ok(PowerWorkerOut {
-                stats: comm.stats,
-                mults,
-                compute,
-                scalars,
-                per_iter,
-                portions,
-            })
-        })?;
+            let entries = AtomicUsize::new(0);
+            let cfg = plan.run_cfg_with(1, plan.opts.chaos.reseeded(attempt));
+            let result = simulator::run_cfg(part.p, Some(&plan.pools), cfg, |comm| {
+                entries.fetch_add(1, Ordering::Relaxed);
+                let me = comm.rank;
+                let mut st = plan.worker_state(me, 1);
+                let ranges = plan.own_ranges(me, 1);
+                let mut scalars = Vec::new();
+                let mut per_iter = Vec::new();
+                let mut mults = 0u64;
+                let mut compute = Duration::ZERO;
+                let mut t0 = 0usize;
+                if let Some(c) = lock_clean(&ckpts[me]).last() {
+                    // Resume: restore the owned coordinates and the
+                    // committed history, then charge the checkpoint read
+                    // (own-portion words, one message — the §Rob budget).
+                    t0 = c.iter;
+                    restore_own(&ranges, &c.own, &mut st.xbuf);
+                    scalars = c.recs.clone();
+                    per_iter = c.per_iter.clone();
+                    mults = c.mults;
+                    compute = c.compute;
+                    comm.stats = c.stats;
+                    comm.stats.recv_words += owned_words(&ranges);
+                    comm.stats.recv_msgs += 1;
+                } else {
+                    plan.seed_own(me, &[seed], &mut st.xbuf);
+                }
+                for t in t0..max_iters {
+                    let before = comm.stats;
+                    let (m, ct) = plan.sweep(comm, &mut st)?;
+                    mults += m;
+                    compute += ct;
+                    // λ = x·y and ‖y‖² from the owned portions only, fused
+                    // into one 2-word allreduce.
+                    let (mut lam, mut nrm2) = (0.0f64, 0.0f64);
+                    for rg in &ranges {
+                        for idx in rg.clone() {
+                            let (xv, yv) = (st.xbuf[idx] as f64, st.ybuf[idx] as f64);
+                            lam += xv * yv;
+                            nrm2 += yv * yv;
+                        }
+                    }
+                    let mut s = [lam as f32, nrm2 as f32];
+                    comm.allreduce_sum(&mut s)?;
+                    let (lambda, norm) = (s[0], s[1].sqrt());
+                    let inv = if norm > 0.0 { 1.0 / norm } else { 0.0 };
+                    // Normalize portion-locally, accumulating ‖Δx‖² on the fly.
+                    let mut d2 = 0.0f64;
+                    for rg in &ranges {
+                        for idx in rg.clone() {
+                            let xn = st.ybuf[idx] * inv;
+                            let d = (xn - st.xbuf[idx]) as f64;
+                            d2 += d * d;
+                            st.xbuf[idx] = xn;
+                        }
+                    }
+                    // The δ allreduce is the session's control channel: every
+                    // rank receives the identical bits and branches identically.
+                    let delta = comm.allreduce_scalar(d2 as f32)?.sqrt();
+                    scalars.push((norm, lambda, delta));
+                    per_iter.push(comm.stats.since(&before));
+                    // Never checkpoint a finished solve — there is nothing
+                    // left to protect (so per-iteration comm stays exactly
+                    // the closed form; write charges land between records).
+                    let done = delta < tol || t + 1 == max_iters;
+                    if !done && every > 0 && (t + 1) % every == 0 {
+                        commit_ckpt(
+                            &ckpts[me],
+                            &ranges,
+                            &st.xbuf,
+                            t + 1,
+                            &scalars,
+                            &per_iter,
+                            mults,
+                            compute,
+                            &mut comm.stats,
+                        );
+                    }
+                    if delta < tol {
+                        break;
+                    }
+                }
+                let portions = plan.owned_portions(me, &st.xbuf, 1);
+                Ok(PowerWorkerOut {
+                    stats: comm.stats,
+                    mults,
+                    compute,
+                    scalars,
+                    per_iter,
+                    portions,
+                })
+            });
+            match result {
+                Ok((outs, _metrics)) => break (outs, entries.load(Ordering::Relaxed)),
+                Err(e) if attempt < self.recovery.max_retries => {
+                    recovery.failures.push(format!("{e:#}"));
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(self.recovery.backoff_cap);
+                }
+                Err(e) => return Err(e),
+            }
+        };
 
-        let worker_spawns = entries.load(Ordering::Relaxed);
         ensure!(
             worker_spawns == part.p,
             "resident session must spawn each worker exactly once per solve"
@@ -286,6 +503,7 @@ impl<'p, 't> SolverSession<'p, 't> {
             per_proc,
             steps_per_phase: plan.steps_per_phase(),
             worker_spawns,
+            recovery,
         })
     }
 
@@ -322,91 +540,145 @@ impl<'p, 't> SolverSession<'p, 't> {
                 per_proc: zero_proc_reports(part.p),
                 steps_per_phase: plan.steps_per_phase(),
                 worker_spawns: 0,
+                recovery: RecoveryLog::default(),
             });
         }
         let views: Vec<&[f32]> = x0_cols.iter().map(|x| x.as_slice()).collect();
-        let entries = AtomicUsize::new(0);
-
-        let cfg = plan.run_cfg(r);
-        let (outs, _metrics) = simulator::run_cfg(part.p, Some(&plan.pools), cfg, |comm| {
-            entries.fetch_add(1, Ordering::Relaxed);
-            let me = comm.rank;
-            let mut st = plan.worker_state(me, r);
-            plan.seed_own(me, &views, &mut st.xbuf);
-            let ranges = plan.own_ranges(me, r);
-            let mut gbuf = vec![0.0f32; st.xbuf.len()];
-            let mut tmp = vec![0.0f32; r];
-            let mut gnorms = Vec::new();
-            let mut per_iter = Vec::new();
-            let mut mults = 0u64;
-            let mut compute = Duration::ZERO;
-            for _ in 0..max_sweeps {
-                let before = comm.stats;
-                // One r-deep batched STTSV: ybuf[·, ℓ] = A ×₂ x_ℓ ×₃ x_ℓ.
-                let (m, ct) = plan.sweep(comm, &mut st)?;
-                mults += m;
-                compute += ct;
-                // Gram partials from owned coordinates, one r² allreduce,
-                // then the elementwise square: G = (XᵀX) ∗ (XᵀX).
-                let mut gram64 = vec![0.0f64; r * r];
-                for rg in &ranges {
-                    let mut base = rg.start;
-                    while base < rg.end {
-                        for a in 0..r {
-                            let xa = st.xbuf[base + a] as f64;
-                            for l in 0..r {
-                                gram64[a * r + l] += xa * st.xbuf[base + l] as f64;
-                            }
-                        }
-                        base += r;
-                    }
-                }
-                let mut gram: Vec<f32> = gram64.iter().map(|&v| v as f32).collect();
-                comm.allreduce_sum(&mut gram)?;
-                for v in gram.iter_mut() {
-                    *v *= *v;
-                }
-                // ∇_ℓ = Σ_a x_a·G[a][ℓ] − y_ℓ and the step, portion-local.
-                let mut gn2 = 0.0f64;
-                for rg in &ranges {
-                    let mut base = rg.start;
-                    while base < rg.end {
-                        for (l, t) in tmp.iter_mut().enumerate() {
-                            let mut v = 0.0f32;
-                            for a in 0..r {
-                                v += st.xbuf[base + a] * gram[a * r + l];
-                            }
-                            *t = v - st.ybuf[base + l];
-                        }
-                        for (l, &g) in tmp.iter().enumerate() {
-                            gbuf[base + l] = g;
-                            gn2 += (g as f64) * (g as f64);
-                            st.xbuf[base + l] -= step * g;
-                        }
-                        base += r;
-                    }
-                }
-                let gnorm = comm.allreduce_scalar(gn2 as f32)?.sqrt();
-                gnorms.push(gnorm);
-                per_iter.push(comm.stats.since(&before));
-                if gnorm < tol {
-                    break;
-                }
+        let every = self.recovery.checkpoint_every;
+        let ckpts: CkptSlots<f32> = (0..part.p).map(|_| Mutex::new(Vec::new())).collect();
+        let mut recovery = RecoveryLog::default();
+        let mut backoff = self.recovery.backoff;
+        let (outs, worker_spawns) = loop {
+            let attempt = recovery.attempts;
+            recovery.attempts += 1;
+            let cut = consistent_cut(&ckpts);
+            if attempt > 0 {
+                recovery.resumed_from.push(cut);
             }
-            let x_portions = plan.owned_portions(me, &st.xbuf, r);
-            let grad_portions = plan.owned_portions(me, &gbuf, r);
-            Ok(CpWorkerOut {
-                stats: comm.stats,
-                mults,
-                compute,
-                gnorms,
-                per_iter,
-                x_portions,
-                grad_portions,
-            })
-        })?;
+            let entries = AtomicUsize::new(0);
+            let cfg = plan.run_cfg_with(r, plan.opts.chaos.reseeded(attempt));
+            let result = simulator::run_cfg(part.p, Some(&plan.pools), cfg, |comm| {
+                entries.fetch_add(1, Ordering::Relaxed);
+                let me = comm.rank;
+                let mut st = plan.worker_state(me, r);
+                let ranges = plan.own_ranges(me, r);
+                let mut gbuf = vec![0.0f32; st.xbuf.len()];
+                let mut tmp = vec![0.0f32; r];
+                let mut gnorms = Vec::new();
+                let mut per_iter = Vec::new();
+                let mut mults = 0u64;
+                let mut compute = Duration::ZERO;
+                let mut t0 = 0usize;
+                if let Some(c) = lock_clean(&ckpts[me]).last() {
+                    // Resume from the consistent cut. `gbuf` is NOT part of
+                    // the checkpoint: a checkpoint is never the final sweep,
+                    // so at least one post-resume sweep refills the gradient
+                    // before `grad_portions` is read.
+                    t0 = c.iter;
+                    restore_own(&ranges, &c.own, &mut st.xbuf);
+                    gnorms = c.recs.clone();
+                    per_iter = c.per_iter.clone();
+                    mults = c.mults;
+                    compute = c.compute;
+                    comm.stats = c.stats;
+                    comm.stats.recv_words += owned_words(&ranges);
+                    comm.stats.recv_msgs += 1;
+                } else {
+                    plan.seed_own(me, &views, &mut st.xbuf);
+                }
+                for t in t0..max_sweeps {
+                    let before = comm.stats;
+                    // One r-deep batched STTSV: ybuf[·, ℓ] = A ×₂ x_ℓ ×₃ x_ℓ.
+                    let (m, ct) = plan.sweep(comm, &mut st)?;
+                    mults += m;
+                    compute += ct;
+                    // Gram partials from owned coordinates, one r² allreduce,
+                    // then the elementwise square: G = (XᵀX) ∗ (XᵀX).
+                    let mut gram64 = vec![0.0f64; r * r];
+                    for rg in &ranges {
+                        let mut base = rg.start;
+                        while base < rg.end {
+                            for a in 0..r {
+                                let xa = st.xbuf[base + a] as f64;
+                                for l in 0..r {
+                                    gram64[a * r + l] += xa * st.xbuf[base + l] as f64;
+                                }
+                            }
+                            base += r;
+                        }
+                    }
+                    let mut gram: Vec<f32> = gram64.iter().map(|&v| v as f32).collect();
+                    comm.allreduce_sum(&mut gram)?;
+                    for v in gram.iter_mut() {
+                        *v *= *v;
+                    }
+                    // ∇_ℓ = Σ_a x_a·G[a][ℓ] − y_ℓ and the step, portion-local.
+                    let mut gn2 = 0.0f64;
+                    for rg in &ranges {
+                        let mut base = rg.start;
+                        while base < rg.end {
+                            for (l, dst) in tmp.iter_mut().enumerate() {
+                                let mut v = 0.0f32;
+                                for a in 0..r {
+                                    v += st.xbuf[base + a] * gram[a * r + l];
+                                }
+                                *dst = v - st.ybuf[base + l];
+                            }
+                            for (l, &g) in tmp.iter().enumerate() {
+                                gbuf[base + l] = g;
+                                gn2 += (g as f64) * (g as f64);
+                                st.xbuf[base + l] -= step * g;
+                            }
+                            base += r;
+                        }
+                    }
+                    let gnorm = comm.allreduce_scalar(gn2 as f32)?.sqrt();
+                    gnorms.push(gnorm);
+                    per_iter.push(comm.stats.since(&before));
+                    // As in the power loop: a finished solve is never
+                    // checkpointed, and write charges land between the
+                    // per-sweep records.
+                    let done = gnorm < tol || t + 1 == max_sweeps;
+                    if !done && every > 0 && (t + 1) % every == 0 {
+                        commit_ckpt(
+                            &ckpts[me],
+                            &ranges,
+                            &st.xbuf,
+                            t + 1,
+                            &gnorms,
+                            &per_iter,
+                            mults,
+                            compute,
+                            &mut comm.stats,
+                        );
+                    }
+                    if gnorm < tol {
+                        break;
+                    }
+                }
+                let x_portions = plan.owned_portions(me, &st.xbuf, r);
+                let grad_portions = plan.owned_portions(me, &gbuf, r);
+                Ok(CpWorkerOut {
+                    stats: comm.stats,
+                    mults,
+                    compute,
+                    gnorms,
+                    per_iter,
+                    x_portions,
+                    grad_portions,
+                })
+            });
+            match result {
+                Ok((outs, _metrics)) => break (outs, entries.load(Ordering::Relaxed)),
+                Err(e) if attempt < self.recovery.max_retries => {
+                    recovery.failures.push(format!("{e:#}"));
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(self.recovery.backoff_cap);
+                }
+                Err(e) => return Err(e),
+            }
+        };
 
-        let worker_spawns = entries.load(Ordering::Relaxed);
         ensure!(
             worker_spawns == part.p,
             "resident session must spawn each worker exactly once per solve"
@@ -459,6 +731,7 @@ impl<'p, 't> SolverSession<'p, 't> {
             per_proc,
             steps_per_phase: plan.steps_per_phase(),
             worker_spawns,
+            recovery,
         })
     }
 }
@@ -468,6 +741,7 @@ mod tests {
     use super::*;
     use crate::coordinator::{CommMode, ExecOpts};
     use crate::partition::TetraPartition;
+    use crate::simulator::{FailureReport, FaultPlan, SttsvError};
     use crate::steiner::spherical;
     use crate::tensor::SymTensor;
     use crate::util::rng::Rng;
@@ -583,6 +857,156 @@ mod tests {
         assert!(
             last < 0.5 * first,
             "gradient norm did not descend: {first} -> {last}"
+        );
+    }
+
+    #[test]
+    fn power_recovery_replays_from_checkpoints_with_closed_form_comm() {
+        // §Rob acceptance: a solve under an injected rank crash recovers
+        // bitwise to the zero-fault oracle, and its committed comm totals
+        // equal the oracle's plus EXACTLY the checkpoint writes and one
+        // checkpoint read per nonzero resume — the `checkpoint + replayed
+        // iterations` closed form. crash_at is swept because the op index
+        // of a given iteration is schedule-dependent; every value must
+        // recover bitwise, and at least one must resume from a checkpoint
+        // (rather than restarting from the seed).
+        let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+        let b = 5usize;
+        let n = b * part.m;
+        let (tensor, cols) = SymTensor::odeco(n, &[5.0, 2.0, 1.0], 91);
+        let mut rng = Rng::new(92);
+        let mut x0 = cols[0].clone();
+        for v in x0.iter_mut() {
+            *v += 0.2 * rng.normal_f32();
+        }
+        let iters = 10usize;
+        let plan0 = SttsvPlan::new(&tensor, &part, ExecOpts::default()).unwrap();
+        let oracle = SolverSession::new(&plan0).power_method(&x0, iters, 0.0).unwrap();
+        assert_eq!(oracle.recovery.attempts, 1);
+        assert!(oracle.recovery.failures.is_empty());
+        let policy = RecoveryPolicy {
+            checkpoint_every: 1,
+            max_retries: 3,
+            backoff: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(4),
+        };
+        let mut exercised_restore = false;
+        for crash_at in [20u64, 60, 140] {
+            let opts =
+                ExecOpts { chaos: FaultPlan::crash(9, 1, crash_at), ..Default::default() };
+            let plan = SttsvPlan::new(&tensor, &part, opts).unwrap();
+            let solve = SolverSession::new(&plan)
+                .with_recovery(policy)
+                .power_method(&x0, iters, 0.0)
+                .unwrap();
+            if crash_at < 80 {
+                // 10 iterations × (≥ 8 collective ops each) guarantee the
+                // crash fires mid-solve for these op indices.
+                assert!(solve.recovery.attempts >= 2, "crash_at={crash_at} never fired");
+            }
+            assert_eq!(
+                solve.recovery.failures.len() as u32,
+                solve.recovery.attempts - 1
+            );
+            // Replaying the deterministic phased schedule from a consistent
+            // checkpoint cut is bitwise.
+            assert_eq!(solve.x, oracle.x, "crash_at={crash_at}");
+            assert_eq!(solve.iters.len(), oracle.iters.len());
+            for (a, o) in solve.iters.iter().zip(&oracle.iters) {
+                assert_eq!(
+                    (a.norm, a.lambda, a.delta),
+                    (o.norm, o.lambda, o.delta),
+                    "crash_at={crash_at}"
+                );
+            }
+            // Closed-form recovery comm. Per-iteration comm was already
+            // asserted unchanged inside the session; totals add one write
+            // per committed generation (1..iters-1 at k=1 — the chain
+            // property makes this attempt-count invariant) plus one read
+            // per resume that found a checkpoint.
+            let writes = (iters - 1) as u64;
+            let reads = solve.recovery.resumed_from.iter().filter(|&&c| c > 0).count() as u64;
+            for (p, proc_) in solve.per_proc.iter().enumerate() {
+                let words: u64 =
+                    plan.own_ranges(p, 1).iter().map(|rg| rg.len() as u64).sum();
+                let mut want = oracle.per_proc[p].stats;
+                want.sent_words += writes * words;
+                want.sent_msgs += writes;
+                want.recv_words += reads * words;
+                want.recv_msgs += reads;
+                assert_eq!(
+                    proc_.stats, want,
+                    "crash_at={crash_at} proc {p}: recovery comm != \
+                     checkpoint+replay closed form"
+                );
+            }
+            if solve.recovery.resumed_from.iter().any(|&c| c > 0) {
+                exercised_restore = true;
+            }
+        }
+        assert!(exercised_restore, "no crash_at value resumed from a checkpoint");
+    }
+
+    #[test]
+    fn cp_recovery_matches_the_zero_fault_oracle_bitwise() {
+        let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+        let b = 3usize;
+        let n = b * part.m;
+        let tensor = SymTensor::random(n, 93);
+        let mut rng = Rng::new(94);
+        let x0: Vec<Vec<f32>> = (0..2)
+            .map(|_| rng.normal_vec(n).iter().map(|v| 0.3 * v).collect())
+            .collect();
+        let sweeps = 6usize;
+        let plan0 = SttsvPlan::new(&tensor, &part, ExecOpts::default()).unwrap();
+        let oracle = SolverSession::new(&plan0).cp_sweeps(&x0, sweeps, 0.02, 0.0).unwrap();
+        let policy = RecoveryPolicy {
+            checkpoint_every: 2,
+            max_retries: 3,
+            backoff: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(2),
+        };
+        let opts = ExecOpts { chaos: FaultPlan::crash(17, 0, 30), ..Default::default() };
+        let plan = SttsvPlan::new(&tensor, &part, opts).unwrap();
+        let solve = SolverSession::new(&plan)
+            .with_recovery(policy)
+            .cp_sweeps(&x0, sweeps, 0.02, 0.0)
+            .unwrap();
+        assert!(solve.recovery.attempts >= 2, "the injected crash never fired");
+        // Bitwise: the restart replays the same deterministic sweeps, and
+        // the post-resume sweep refills the gradient buffer before it is
+        // assembled (gbuf is deliberately not checkpointed).
+        assert_eq!(solve.x_cols, oracle.x_cols);
+        assert_eq!(solve.grad_cols, oracle.grad_cols);
+        assert_eq!(solve.iters.len(), oracle.iters.len());
+        for (a, o) in solve.iters.iter().zip(&oracle.iters) {
+            assert_eq!(a.gnorm, o.gnorm);
+        }
+    }
+
+    #[test]
+    fn exhausted_retries_surface_a_typed_failure_report() {
+        // Recovery OFF (the default session): the injected crash must
+        // surface as a structured FailureReport naming the dead rank, not
+        // as a hang or a stringly error.
+        let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+        let b = 3usize;
+        let n = b * part.m;
+        let (tensor, cols) = SymTensor::odeco(n, &[4.0, 1.0], 95);
+        let x0 = cols[0].clone();
+        let opts = ExecOpts { chaos: FaultPlan::crash(5, 0, 10), ..Default::default() };
+        let plan = SttsvPlan::new(&tensor, &part, opts).unwrap();
+        let err = SolverSession::new(&plan)
+            .power_method(&x0, 5, 0.0)
+            .expect_err("the crash must fail the unprotected solve");
+        let report = err
+            .downcast_ref::<FailureReport>()
+            .expect("session failures carry a FailureReport");
+        assert_eq!(report.failed_rank, 0);
+        assert!(
+            matches!(report.kind, Some(SttsvError::Crashed { rank: 0, .. })),
+            "root cause should be the injected crash, got {:?}",
+            report.kind
         );
     }
 

@@ -21,8 +21,9 @@ use sttsv::coordinator::{self, baselines, CommMode, ExecOpts};
 use sttsv::partition::TetraPartition;
 use sttsv::runtime::Backend;
 use sttsv::schedule::CommSchedule;
-use sttsv::serve::{AdmissionPolicy, SttsvServer};
-use sttsv::simulator::TransportKind;
+use sttsv::apps::RecoveryPolicy;
+use sttsv::serve::{AdmissionPolicy, RobustnessPolicy, SttsvServer};
+use sttsv::simulator::{FaultPlan, TransportKind};
 use sttsv::steiner::{fixtures, spherical, sqs8, trivial};
 use sttsv::tensor::{linalg, SymTensor};
 use sttsv::util::cli::Args;
@@ -51,7 +52,9 @@ fn main() {
                  [--trivial M] [--no-batch] [--packed|--no-packed] \
                  [--overlap|--no-overlap] [--compiled|--no-compiled] \
                  [--compute-threads N] [--resident|--no-resident] \
-                 [--batch-window MS] [--max-r N] [--cache N] [--queries N]\n\
+                 [--batch-window MS] [--max-r N] [--cache N] [--queries N] \
+                 [--chaos SEED,RATE] [--recv-timeout-ms N] \
+                 [--checkpoint-every N] [--retries N] [--deadline-ms MS]\n\
                  \n\
                  --backend        comma-separable selectors: a compute backend \
                  (native|pjrt) and/or a message transport (spsc = lock-free \
@@ -72,7 +75,18 @@ fn main() {
                  --max-r N        serve: coalesce at most N queries into one \
                  r-deep sweep\n\
                  --cache N        serve: plan-cache capacity (plans, LRU)\n\
-                 --queries N      serve: synthetic open-loop queries to replay"
+                 --queries N      serve: synthetic open-loop queries to replay\n\
+                 --chaos SEED,RATE  inject seeded transport faults at this \
+                 per-op probability (deterministic per seed; 0 = transparent)\n\
+                 --recv-timeout-ms N  recv watchdog: a rank waiting longer \
+                 than this on one message fails with a typed Timeout\n\
+                 --checkpoint-every N  power-method/cp-als: commit a \
+                 portion-local checkpoint every N iterations and restart \
+                 from the newest consistent one on failure\n\
+                 --retries N      max restart attempts (sessions) or \
+                 per-batch retries (serve) after a failure\n\
+                 --deadline-ms MS serve: shed queries that cannot start \
+                 within MS of arrival; late completions are flagged"
             );
             std::process::exit(2);
         }
@@ -215,6 +229,13 @@ fn exec_opts(args: &Args) -> Result<ExecOpts> {
         opts.compiled = false;
     }
     opts.compute_threads = args.get_or("compute-threads", opts.compute_threads);
+    if let Some(spec) = args.get("chaos") {
+        opts.chaos = spec.parse::<FaultPlan>()?;
+    }
+    let recv_timeout_ms: u64 = args.get_or("recv-timeout-ms", 0u64);
+    if recv_timeout_ms > 0 {
+        opts.recv_timeout = Some(std::time::Duration::from_millis(recv_timeout_ms));
+    }
     // Plans normalize flag interactions themselves; surface the one
     // silent downgrade a user could plausibly trip over.
     if opts.compute_threads > 1 && opts.normalize().compute_threads == 1 {
@@ -226,6 +247,18 @@ fn exec_opts(args: &Args) -> Result<ExecOpts> {
         );
     }
     Ok(opts)
+}
+
+/// `--checkpoint-every N [--retries R]` → a session [`RecoveryPolicy`]
+/// (§Rob). Defaults stay all-off so plain runs are byte-identical to the
+/// pre-recovery code path; turning on checkpoints defaults to 3 retries.
+fn recovery_policy(args: &Args) -> RecoveryPolicy {
+    let every: usize = args.get_or("checkpoint-every", 0usize);
+    RecoveryPolicy {
+        checkpoint_every: every,
+        max_retries: args.get_or("retries", if every > 0 { 3u32 } else { 0u32 }),
+        ..RecoveryPolicy::default()
+    }
 }
 
 fn cmd_run(args: &Args) -> Result<()> {
@@ -293,7 +326,8 @@ fn cmd_power_method(args: &Args) -> Result<()> {
         *v += 0.25 * rng.normal_f32();
     }
     let rep = if resident {
-        apps::power_method(&tensor, &part, &x0, iters, 1e-6, opts)?
+        let policy = recovery_policy(args);
+        apps::power_method_recovering(&tensor, &part, &x0, iters, 1e-6, opts, policy)?
     } else {
         apps::power_method_host(&tensor, &part, &x0, iters, 1e-6, opts)?
     };
@@ -325,6 +359,13 @@ fn cmd_power_method(args: &Args) -> Result<()> {
             "; plus 2n host↔worker vector words per iteration, uncounted"
         }
     );
+    if rep.recovery.attempts > 1 {
+        println!(
+            "recovery: {} attempts; resumed from checkpointed iterations {:?} \
+             (checkpoint + replay comm charged above)",
+            rep.recovery.attempts, rep.recovery.resumed_from
+        );
+    }
     Ok(())
 }
 
@@ -353,7 +394,8 @@ fn cmd_cp_als(args: &Args) -> Result<()> {
         })
         .collect();
     let f0 = apps::cp_objective(&tensor, &x0);
-    let rep = apps::cp_als_sweep(&tensor, &part, &x0, sweeps, step, 1e-6, opts)?;
+    let policy = recovery_policy(args);
+    let rep = apps::cp_als_recovering(&tensor, &part, &x0, sweeps, step, 1e-6, opts, policy)?;
     for (t, it) in rep.iters.iter().enumerate() {
         let iter_sent = it.comm.iter().map(|s| s.sent_words).max().unwrap_or(0);
         println!("sweep {:>3}: ||grad|| = {:.3e}  comm {iter_sent} w/proc", t + 1, it.gnorm);
@@ -366,6 +408,12 @@ fn cmd_cp_als(args: &Args) -> Result<()> {
     );
     let max_sent = rep.comm.iter().map(|s| s.sent_words).max().unwrap();
     println!("comm: max sent/proc = {max_sent} words total (vector never left the workers)");
+    if rep.recovery.attempts > 1 {
+        println!(
+            "recovery: {} attempts; resumed from checkpointed sweeps {:?}",
+            rep.recovery.attempts, rep.recovery.resumed_from
+        );
+    }
     Ok(())
 }
 
@@ -492,6 +540,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
     let queries: usize = args.get_or("queries", 64usize);
     let seed: u64 = args.get_or("seed", 97u64);
     let policy = AdmissionPolicy::coalescing(window_ms / 1000.0, max_r);
+    let deadline_ms: f64 = args.get_or("deadline-ms", f64::INFINITY);
+    let robust = RobustnessPolicy {
+        deadline: deadline_ms / 1000.0,
+        max_retries: args.get_or("retries", if opts.chaos.is_zero() { 0u32 } else { 2u32 }),
+        ..RobustnessPolicy::default()
+    };
     println!(
         "multi-tenant serving on {label}: n={n} (b={b}), window {window_ms} ms, \
          max_r {max_r}, cache {cache} plans, {queries} queries, {opts:?}"
@@ -511,7 +565,7 @@ fn cmd_serve(args: &Args) -> Result<()> {
         trace.push((rng.normal_vec(n), base + jitter));
     }
 
-    let server = SttsvServer::new(&tensor, &part, opts, policy, cache)?;
+    let server = SttsvServer::new(&tensor, &part, opts, policy, cache)?.with_robustness(robust);
     for (x, arrival) in &trace {
         server.submit(x.clone(), *arrival)?;
     }
@@ -530,7 +584,8 @@ fn cmd_serve(args: &Args) -> Result<()> {
         if max_err < 5e-3 { "(OK)" } else { "(FAIL)" }
     );
 
-    let serial = SttsvServer::new(&tensor, &part, opts, AdmissionPolicy::serial(), cache)?;
+    let serial = SttsvServer::new(&tensor, &part, opts, AdmissionPolicy::serial(), cache)?
+        .with_robustness(robust);
     for (x, arrival) in &trace {
         serial.submit(x.clone(), *arrival)?;
     }
@@ -570,6 +625,18 @@ fn cmd_serve(args: &Args) -> Result<()> {
          (builds freeze once every (tensor, P, opts) config is seen)",
         c.plan_builds, c.hits, c.misses, c.evictions
     );
+    if !rep.shed.is_empty() || !rep.failed.is_empty() || rep.retries > 0 || rep.breaker_trips > 0 {
+        let late = rep.outcomes.iter().filter(|o| o.missed_deadline).count();
+        println!(
+            "robustness: {} shed (deadline), {} late, {} failed, {} retries, \
+             {} breaker trips",
+            rep.shed.len(),
+            late,
+            rep.failed.len(),
+            rep.retries,
+            rep.breaker_trips
+        );
+    }
     Ok(())
 }
 

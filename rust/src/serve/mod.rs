@@ -47,12 +47,29 @@
 //! honest (real service times, declared arrival process) while staying
 //! deterministic enough to property-test — the same shape E15 uses to
 //! bridge charged counters and measured seconds.
+//!
+//! ## Failure semantics (§Rob)
+//!
+//! Under a [`RobustnessPolicy`] the server degrades instead of hanging or
+//! panicking: `submit` sheds beyond the pending-queue cap; a query whose
+//! deadline already passed when its batch opens is shed for free; a batch
+//! whose sweep fails (e.g. an injected [`FaultPlan`] fault) is retried
+//! under a reseeded plan up to `max_retries` times, then its queries are
+//! reported failed — never silently dropped; and `breaker_after`
+//! consecutive batch failures trip a breaker that degrades coalescing to
+//! serial (depth 1) until a batch succeeds, bounding the blast radius of
+//! a poisoned batch member. All of it is recorded on the [`ServeReport`]
+//! (shed ids, failed ids with causes, retry and trip counters), and the
+//! per-batch closed-form comm assertion still holds for every batch that
+//! completes.
+//!
+//! [`FaultPlan`]: crate::simulator::FaultPlan
 
 use crate::apps::{self, PowerReport};
 use crate::coordinator::session::{CpSolve, SolverSession};
 use crate::coordinator::{ExecOpts, SttsvPlan};
 use crate::partition::TetraPartition;
-use crate::simulator::{CommStats, QueryCommShare};
+use crate::simulator::{lock_clean, CommStats, QueryCommShare};
 use crate::tensor::SymTensor;
 use anyhow::{ensure, Result};
 use std::collections::HashMap;
@@ -223,6 +240,41 @@ impl Default for AdmissionPolicy {
     }
 }
 
+/// Serve-layer failure handling (§Rob): deadlines, load shedding, batch
+/// retries, and the coalescing→serial breaker. The default turns all of
+/// it off — infinite deadline, unbounded queue, no retries, no breaker —
+/// so servers built without [`SttsvServer::with_robustness`] behave
+/// exactly as before this layer existed.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RobustnessPolicy {
+    /// Seconds from arrival a query's answer is still useful
+    /// (`f64::INFINITY` = no deadline). A query whose deadline has
+    /// already passed when its batch opens is shed without running; one
+    /// that completes late is flagged [`QueryOutcome::missed_deadline`].
+    pub deadline: f64,
+    /// Pending-queue cap (0 = unbounded): [`SttsvServer::submit`] sheds —
+    /// returns an error and counts it — once this many queries wait.
+    pub max_queue: usize,
+    /// Failed sweeps to retry per batch, each under a
+    /// [`FaultPlan::reseeded`](crate::simulator::FaultPlan::reseeded)
+    /// plan, before the batch's queries are reported failed.
+    pub max_retries: u32,
+    /// Consecutive batch failures that trip the breaker, degrading
+    /// coalescing to serial batches until one succeeds (0 = never trip).
+    pub breaker_after: u32,
+}
+
+impl Default for RobustnessPolicy {
+    fn default() -> RobustnessPolicy {
+        RobustnessPolicy {
+            deadline: f64::INFINITY,
+            max_queue: 0,
+            max_retries: 0,
+            breaker_after: 0,
+        }
+    }
+}
+
 struct Pending {
     id: u64,
     x: Vec<f32>,
@@ -248,6 +300,9 @@ pub struct QueryOutcome {
     /// comm: words / r (exact — r-deep packing scales words and nothing
     /// else), messages amortized fractionally.
     pub comm: QueryCommShare,
+    /// The answer arrived after `arrival + deadline` (§Rob): it was
+    /// computed and returned, but too late to be useful.
+    pub missed_deadline: bool,
 }
 
 /// One executed r-deep sweep.
@@ -271,8 +326,20 @@ pub struct BatchRecord {
 pub struct ServeReport {
     /// Per-query outcomes, in submission-id order.
     pub outcomes: Vec<QueryOutcome>,
-    /// Per-batch records, in dispatch order.
+    /// Per-batch records of SUCCESSFUL sweeps, in dispatch order.
     pub batches: Vec<BatchRecord>,
+    /// Ids shed before execution: their deadline had already passed when
+    /// their batch opened (§Rob) — no sweep slot was spent on them.
+    pub shed: Vec<u64>,
+    /// Ids whose batch exhausted its retries, with the rendered cause.
+    pub failed: Vec<(u64, String)>,
+    /// Depths of the batches that failed, in dispatch order (the breaker
+    /// test reads the degradation to serial off this).
+    pub failed_batches: Vec<usize>,
+    /// Sweep re-executions beyond each batch's first attempt.
+    pub retries: u64,
+    /// Times the breaker newly tripped coalescing down to serial.
+    pub breaker_trips: u64,
 }
 
 impl ServeReport {
@@ -326,9 +393,11 @@ pub struct SttsvServer<'t> {
     part: &'t TetraPartition,
     opts: ExecOpts,
     policy: AdmissionPolicy,
+    robust: RobustnessPolicy,
     cache: Mutex<PlanCache<'t>>,
     pending: Mutex<Vec<Pending>>,
     next_id: AtomicU64,
+    shed_submits: AtomicU64,
 }
 
 impl<'t> SttsvServer<'t> {
@@ -353,10 +422,28 @@ impl<'t> SttsvServer<'t> {
             part,
             opts,
             policy,
+            robust: RobustnessPolicy::default(),
             cache: Mutex::new(PlanCache::new(cache_capacity)),
             pending: Mutex::new(Vec::new()),
             next_id: AtomicU64::new(0),
+            shed_submits: AtomicU64::new(0),
         })
+    }
+
+    /// Enable failure handling (§Rob) — deadlines, shedding, retries, the
+    /// coalescing breaker — for this server's submit/drain traffic.
+    pub fn with_robustness(mut self, robust: RobustnessPolicy) -> SttsvServer<'t> {
+        self.robust = robust;
+        self
+    }
+
+    pub fn robustness(&self) -> RobustnessPolicy {
+        self.robust
+    }
+
+    /// Submissions refused by the queue-depth cap so far.
+    pub fn shed_submits(&self) -> u64 {
+        self.shed_submits.load(Ordering::Relaxed)
     }
 
     /// The execution options sweeps run with (as supplied; the cache keys
@@ -371,26 +458,24 @@ impl<'t> SttsvServer<'t> {
 
     /// Queries submitted but not yet drained.
     pub fn pending_len(&self) -> usize {
-        self.pending.lock().expect("pending lock").len()
+        lock_clean(&self.pending).len()
     }
 
     pub fn cache_counters(&self) -> CacheCounters {
-        self.cache.lock().expect("cache lock").counters()
+        lock_clean(&self.cache).counters()
     }
 
     /// The (cached) plan this server sweeps with — also the entry point
     /// for callers that want to run their own sessions against the shared
     /// tensor.
     pub fn plan(&self) -> Result<Arc<SttsvPlan<'t>>> {
-        self.cache
-            .lock()
-            .expect("cache lock")
-            .get_or_build(self.tensor, self.part, self.opts)
+        lock_clean(&self.cache).get_or_build(self.tensor, self.part, self.opts)
     }
 
     /// Enqueue one query `y = A x x` arriving at `arrival` seconds on the
     /// workload clock. Returns the query id its [`QueryOutcome`] will
-    /// carry.
+    /// carry. Sheds (errors and counts) when the pending queue is at the
+    /// robustness policy's cap — backpressure instead of unbounded growth.
     pub fn submit(&self, x: Vec<f32>, arrival: f64) -> Result<u64> {
         ensure!(
             x.len() == self.tensor.n,
@@ -399,11 +484,17 @@ impl<'t> SttsvServer<'t> {
             self.tensor.n
         );
         ensure!(arrival.is_finite(), "non-finite arrival time");
+        let mut pending = lock_clean(&self.pending);
+        if self.robust.max_queue > 0 && pending.len() >= self.robust.max_queue {
+            drop(pending);
+            self.shed_submits.fetch_add(1, Ordering::Relaxed);
+            anyhow::bail!(
+                "shed: pending queue at its cap of {}",
+                self.robust.max_queue
+            );
+        }
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.pending
-            .lock()
-            .expect("pending lock")
-            .push(Pending { id, x, arrival });
+        pending.push(Pending { id, x, arrival });
         Ok(id)
     }
 
@@ -417,7 +508,7 @@ impl<'t> SttsvServer<'t> {
     /// off the closed form the plan promises.
     pub fn drain(&self) -> Result<ServeReport> {
         let mut queries = {
-            let mut pending = self.pending.lock().expect("pending lock");
+            let mut pending = lock_clean(&self.pending);
             std::mem::take(&mut *pending)
         };
         if queries.is_empty() {
@@ -428,33 +519,85 @@ impl<'t> SttsvServer<'t> {
         let plan = self.plan()?;
         let max_r = self.policy.max_r.max(1);
         let window = self.policy.batch_window.max(0.0);
+        let robust = self.robust;
         // Closed-form per-proc comm of one r-deep sweep, per depth seen.
         let mut expected: HashMap<usize, Vec<CommStats>> = HashMap::new();
 
-        let mut outcomes: Vec<QueryOutcome> = Vec::with_capacity(queries.len());
-        let mut batches: Vec<BatchRecord> = Vec::new();
+        let mut report = ServeReport::default();
         let mut server_free = f64::NEG_INFINITY;
+        // Breaker state: `fails` consecutive batch failures; at the
+        // threshold coalescing degrades to serial until a batch succeeds.
+        let mut fails = 0u32;
+        let mut tripped = false;
         let mut i = 0usize;
         while i < queries.len() {
             let open = queries[i].arrival.max(server_free);
-            let deadline = open + window;
+            // Admission-time shedding: a query whose deadline passed
+            // before the server could even open its batch is dropped for
+            // free instead of spending a sweep slot on a stale answer.
+            if open > queries[i].arrival + robust.deadline {
+                report.shed.push(queries[i].id);
+                i += 1;
+                continue;
+            }
+            let eff_max_r = if tripped { 1 } else { max_r };
+            let close = open + window;
             let mut j = i + 1;
-            while j < queries.len() && j - i < max_r && queries[j].arrival <= deadline {
+            while j < queries.len() && j - i < eff_max_r && queries[j].arrival <= close {
                 j += 1;
             }
             let r = j - i;
             // A full batch goes the moment its last member arrives; a
             // non-full one waits out the window for stragglers.
-            let dispatched = if r == max_r {
+            let dispatched = if r == eff_max_r {
                 open.max(queries[j - 1].arrival)
             } else {
-                deadline
+                close
             };
             let batch = &queries[i..j];
             let xs: Vec<&[f32]> = batch.iter().map(|q| q.x.as_slice()).collect();
             let t0 = Instant::now();
-            let mut rep = plan.run_multi(&xs)?;
+            // Retry-on-fault: attempt 0 runs the plan's own fault plan;
+            // each retry remixes it (and drops a one-shot crash), modeling
+            // a replaced worker re-running the sweep.
+            let mut attempt = 0u32;
+            let run = loop {
+                match plan.run_multi_with(&xs, self.opts.chaos.reseeded(attempt)) {
+                    Ok(rep) => break Ok(rep),
+                    Err(_) if attempt < robust.max_retries => {
+                        attempt += 1;
+                        report.retries += 1;
+                    }
+                    Err(e) => break Err(e),
+                }
+            };
             let service_secs = t0.elapsed().as_secs_f64();
+            let completed = dispatched + service_secs;
+            let mut rep = match run {
+                Ok(rep) => {
+                    fails = 0;
+                    tripped = false;
+                    rep
+                }
+                Err(e) => {
+                    // The batch is lost, not the server: report every
+                    // member failed, advance the clock, maybe trip the
+                    // breaker, and keep draining.
+                    fails += 1;
+                    if robust.breaker_after > 0 && fails == robust.breaker_after {
+                        tripped = true;
+                        report.breaker_trips += 1;
+                    }
+                    let cause = format!("{e:#}");
+                    for q in batch {
+                        report.failed.push((q.id, cause.clone()));
+                    }
+                    report.failed_batches.push(r);
+                    server_free = completed;
+                    i = j;
+                    continue;
+                }
+            };
 
             let want = expected
                 .entry(r)
@@ -464,7 +607,7 @@ impl<'t> SttsvServer<'t> {
                 ensure!(
                     got == exp,
                     "batch {} proc {p}: comm {:?} != one {r}-deep STTSV {:?}",
-                    batches.len(),
+                    report.batches.len(),
                     got,
                     exp
                 );
@@ -476,10 +619,9 @@ impl<'t> SttsvServer<'t> {
                 .unwrap_or_default();
             let share = busiest.per_query(r);
 
-            let completed = dispatched + service_secs;
-            let batch_idx = batches.len();
+            let batch_idx = report.batches.len();
             for (q, y) in batch.iter().zip(rep.ys.drain(..)) {
-                outcomes.push(QueryOutcome {
+                report.outcomes.push(QueryOutcome {
                     id: q.id,
                     y,
                     batch: batch_idx,
@@ -487,9 +629,10 @@ impl<'t> SttsvServer<'t> {
                     arrival: q.arrival,
                     latency: completed - q.arrival,
                     comm: share,
+                    missed_deadline: completed > q.arrival + robust.deadline,
                 });
             }
-            batches.push(BatchRecord {
+            report.batches.push(BatchRecord {
                 r,
                 dispatched,
                 completed,
@@ -499,8 +642,8 @@ impl<'t> SttsvServer<'t> {
             server_free = completed;
             i = j;
         }
-        outcomes.sort_by_key(|o| o.id);
-        Ok(ServeReport { outcomes, batches })
+        report.outcomes.sort_by_key(|o| o.id);
+        Ok(report)
     }
 
     /// Resident HOPM solve through the shared cached plan — one tenant's
@@ -729,6 +872,148 @@ mod tests {
         assert!(rep.outcomes[0].latency >= 0.1);
         assert!(rep.outcomes[4].latency >= 0.5);
         assert!(rep.makespan() >= 100.5);
+    }
+
+    #[test]
+    fn queue_cap_sheds_submits_with_backpressure() {
+        let part = p4();
+        let b = 2usize;
+        let n = b * part.m;
+        let tensor = SymTensor::random(n, 0x520);
+        let server = SttsvServer::new(
+            &tensor,
+            &part,
+            ExecOpts::default(),
+            AdmissionPolicy::serial(),
+            1,
+        )
+        .unwrap()
+        .with_robustness(RobustnessPolicy { max_queue: 2, ..Default::default() });
+        let mut rng = Rng::new(0x521);
+        server.submit(rng.normal_vec(n), 0.0).unwrap();
+        server.submit(rng.normal_vec(n), 0.0).unwrap();
+        let err = server.submit(rng.normal_vec(n), 0.0).expect_err("cap of 2");
+        assert!(err.to_string().contains("shed"), "{err}");
+        assert_eq!(server.pending_len(), 2);
+        assert_eq!(server.shed_submits(), 1);
+        // Draining frees the queue; submits flow again.
+        let rep = server.drain().unwrap();
+        assert_eq!(rep.outcomes.len(), 2);
+        server.submit(rng.normal_vec(n), 1.0).unwrap();
+        assert_eq!(server.pending_len(), 1);
+    }
+
+    #[test]
+    fn deadlines_shed_stale_queries_and_flag_late_answers() {
+        // Zero-second deadline: the first query (open == arrival) runs but
+        // completes after its instant deadline — flagged missed; the
+        // second opens only once the server frees up, strictly after its
+        // arrival — shed without spending a sweep on it.
+        let part = p4();
+        let b = 2usize;
+        let n = b * part.m;
+        let tensor = SymTensor::random(n, 0x522);
+        let server = SttsvServer::new(
+            &tensor,
+            &part,
+            ExecOpts { overlap: false, ..Default::default() },
+            AdmissionPolicy::serial(),
+            1,
+        )
+        .unwrap()
+        .with_robustness(RobustnessPolicy { deadline: 0.0, ..Default::default() });
+        let mut rng = Rng::new(0x523);
+        let id0 = server.submit(rng.normal_vec(n), 0.0).unwrap();
+        let id1 = server.submit(rng.normal_vec(n), 0.0).unwrap();
+        let rep = server.drain().unwrap();
+        assert_eq!(rep.outcomes.len(), 1);
+        assert_eq!(rep.outcomes[0].id, id0);
+        assert!(rep.outcomes[0].missed_deadline);
+        assert_eq!(rep.shed, vec![id1]);
+        assert!(rep.failed.is_empty());
+    }
+
+    #[test]
+    fn transient_batch_failures_retry_under_reseeded_plans() {
+        use crate::simulator::FaultPlan;
+        // Every batch's first attempt runs the plan's own fault plan — a
+        // deterministic rank crash — and must fail; the retry drops the
+        // one-shot crash and succeeds. Results are bitwise the zero-fault
+        // sweep on the same plan.
+        let part = p4();
+        let b = 3usize;
+        let n = b * part.m;
+        let tensor = SymTensor::random(n, 0x524);
+        let opts = ExecOpts {
+            overlap: false,
+            chaos: FaultPlan::crash(21, 1, 1),
+            ..Default::default()
+        };
+        let server = SttsvServer::new(
+            &tensor,
+            &part,
+            opts,
+            AdmissionPolicy::coalescing(1.0, 4),
+            2,
+        )
+        .unwrap()
+        .with_robustness(RobustnessPolicy { max_retries: 2, ..Default::default() });
+        let mut rng = Rng::new(0x525);
+        let xs: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(n)).collect();
+        for (k, x) in xs.iter().enumerate() {
+            server.submit(x.clone(), 0.001 * k as f64).unwrap();
+        }
+        let rep = server.drain().unwrap();
+        assert_eq!(rep.outcomes.len(), 4);
+        assert!(rep.failed.is_empty());
+        assert_eq!(rep.batches.len(), 1);
+        assert_eq!(rep.retries, 1, "one crash, one reseeded re-run");
+        let plan = server.plan().unwrap();
+        let views: Vec<&[f32]> = xs.iter().map(|x| x.as_slice()).collect();
+        let oracle = plan.run_multi_with(&views, FaultPlan::default()).unwrap();
+        for (o, want) in rep.outcomes.iter().zip(&oracle.ys) {
+            assert_eq!(o.y, *want, "query {}: retried batch must be bitwise", o.id);
+        }
+    }
+
+    #[test]
+    fn sustained_failures_trip_the_breaker_down_to_serial() {
+        use crate::simulator::FaultPlan;
+        // No retries: with a crash plan every batch fails. The first
+        // 4-deep failure trips the breaker (threshold 1), so the
+        // remaining queries are attempted serially — visible as failed
+        // batch depths [4, 1, 1]. Nothing hangs, nothing panics, every
+        // query is accounted for.
+        let part = p4();
+        let b = 2usize;
+        let n = b * part.m;
+        let tensor = SymTensor::random(n, 0x526);
+        let opts = ExecOpts {
+            overlap: false,
+            chaos: FaultPlan::crash(23, 0, 1),
+            ..Default::default()
+        };
+        let server = SttsvServer::new(
+            &tensor,
+            &part,
+            opts,
+            AdmissionPolicy::coalescing(1.0, 4),
+            2,
+        )
+        .unwrap()
+        .with_robustness(RobustnessPolicy { breaker_after: 1, ..Default::default() });
+        let mut rng = Rng::new(0x527);
+        for k in 0..6 {
+            server.submit(rng.normal_vec(n), 0.001 * k as f64).unwrap();
+        }
+        let rep = server.drain().unwrap();
+        assert!(rep.outcomes.is_empty());
+        assert_eq!(rep.failed.len(), 6);
+        assert_eq!(rep.failed_batches, vec![4, 1, 1]);
+        assert_eq!(rep.breaker_trips, 1);
+        for (_, cause) in &rep.failed {
+            assert!(cause.contains("crash"), "cause should name the fault: {cause}");
+        }
     }
 
     #[test]

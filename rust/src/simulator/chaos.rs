@@ -1,0 +1,223 @@
+//! Deterministic, seeded fault injection at the [`Transport`] seam
+//! (§Rob: property P13, bench E17).
+//!
+//! [`ChaosTransport`] wraps either backend (the mpsc counting oracle or
+//! the lock-free spsc rings) behind the same private [`Transport`] trait
+//! and injects faults according to a [`FaultPlan`]: message delays that
+//! reorder arrivals, transient send/recv failures, and a deterministic
+//! rank-crash-at-op event. Because every counter, stash, pool, and
+//! collective lives in `Comm` ABOVE the trait, a zero-fault plan is
+//! observationally invisible — bitwise-identical results and identical
+//! `CommStats` (the P13 transparency leg).
+//!
+//! Determinism: each rank draws fault decisions from its own xorshift64*
+//! stream seeded from `(plan.seed, rank)`, and the decision index is the
+//! count of *fallible* operations (send / send_slice / blocking recv)
+//! that rank has issued — a schedule-determined quantity on the phased
+//! path, so a given `(seed, rate)` replays the same fault sequence every
+//! run. Polling (`try_recv`) draws from the same stream but its call
+//! count follows real arrival timing, so overlap-mode delays are seeded
+//!-reproducible in distribution rather than bitwise.
+//!
+//! Recovery interplay: retrying a failed run under the SAME plan would
+//! deterministically re-inject the same crash, so restart loops
+//! (`SolverSession` retry-with-restart, the serve layer's batch retry)
+//! call [`FaultPlan::reseeded`] — the transient-fault stream is remixed
+//! per attempt and the one-shot `crash_rank` event is dropped after the
+//! first attempt, modeling a crashed-and-replaced worker.
+
+use super::{BufPool, Packet, SttsvError, Transport};
+use crate::util::rng::Rng;
+use anyhow::Result;
+use std::collections::VecDeque;
+
+/// Most packets a rank will hold back (delay) at once. Small, so chaos
+/// perturbs ordering without unboundedly deferring progress; a blocking
+/// recv always drains the holdback before it can park (liveness).
+const HOLDBACK_CAP: usize = 4;
+
+/// A deterministic fault-injection plan for one run (§Rob).
+///
+/// `Copy + Hash` so it can ride inside `ExecOpts` (the plan-cache key).
+/// `Default` is the all-zero plan: no faults, no crash — and the
+/// `ChaosTransport` wrapper under it is bitwise transparent.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct FaultPlan {
+    /// Seed of the per-rank fault-decision streams (rank-mixed, so ranks
+    /// draw independent faults from one plan).
+    pub seed: u64,
+    /// Per-fallible-operation fault probability in parts per million
+    /// (`rate_ppm = 1_000` ≈ one fault per thousand transport ops). Each
+    /// firing is a transient send/recv failure or a delivery delay.
+    pub rate_ppm: u32,
+    /// Deterministic kill switch: crash this rank (every subsequent
+    /// transport op returns [`SttsvError::Crashed`]) once it has issued
+    /// [`FaultPlan::crash_at`] fallible operations. `None` = no crash.
+    pub crash_rank: Option<u32>,
+    /// The fallible-op index at which `crash_rank` dies.
+    pub crash_at: u64,
+}
+
+impl FaultPlan {
+    /// Random-fault plan from a CLI-style `(seed, rate)` pair: `rate` is
+    /// a probability in `[0, 1]`, stored as parts per million.
+    pub fn rate(seed: u64, rate: f64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            rate_ppm: (rate.clamp(0.0, 1.0) * 1e6).round() as u32,
+            crash_rank: None,
+            crash_at: 0,
+        }
+    }
+
+    /// Deterministic crash plan: `rank` dies at its `at`-th transport op.
+    pub fn crash(seed: u64, rank: usize, at: u64) -> FaultPlan {
+        FaultPlan { seed, rate_ppm: 0, crash_rank: Some(rank as u32), crash_at: at }
+    }
+
+    /// The plan a restart should run under. Attempt 0 is the plan itself;
+    /// later attempts remix the transient-fault stream (same rate — the
+    /// environment is still hostile) and drop the one-shot crash event
+    /// (the crashed worker was replaced).
+    pub fn reseeded(self, attempt: u32) -> FaultPlan {
+        if attempt == 0 {
+            return self;
+        }
+        FaultPlan {
+            seed: self.seed ^ (attempt as u64).wrapping_mul(0xA076_1D64_78BD_642F),
+            rate_ppm: self.rate_ppm,
+            crash_rank: None,
+            crash_at: 0,
+        }
+    }
+
+    /// True when the plan can inject nothing (the transparency case).
+    pub fn is_zero(&self) -> bool {
+        self.rate_ppm == 0 && self.crash_rank.is_none()
+    }
+}
+
+/// `--chaos seed,rate` CLI form, e.g. `--chaos 7,0.001`.
+impl std::str::FromStr for FaultPlan {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<FaultPlan> {
+        let (seed, rate) = s
+            .split_once(',')
+            .ok_or_else(|| anyhow::anyhow!("--chaos wants `seed,rate` (e.g. 7,0.001)"))?;
+        let seed: u64 = seed.trim().parse()?;
+        let rate: f64 = rate.trim().parse()?;
+        anyhow::ensure!((0.0..=1.0).contains(&rate), "chaos rate must be in [0,1], got {rate}");
+        Ok(FaultPlan::rate(seed, rate))
+    }
+}
+
+/// The fault-injecting [`Transport`] decorator. Constructed by `run_cfg`
+/// around whichever backend the run selected; never visible above the
+/// trait object.
+pub(super) struct ChaosTransport {
+    inner: Box<dyn Transport>,
+    plan: FaultPlan,
+    rank: usize,
+    rng: Rng,
+    /// Count of fallible ops issued — the deterministic decision index.
+    ops: u64,
+    /// Set once the crash event fires; every later op fails immediately.
+    crashed: bool,
+    /// Delayed packets awaiting re-delivery (source of reordering).
+    holdback: VecDeque<Packet>,
+}
+
+impl ChaosTransport {
+    pub(super) fn new(rank: usize, plan: FaultPlan, inner: Box<dyn Transport>) -> ChaosTransport {
+        ChaosTransport {
+            inner,
+            plan,
+            rank,
+            rng: Rng::new(plan.seed ^ (rank as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+            ops: 0,
+            crashed: false,
+            holdback: VecDeque::new(),
+        }
+    }
+
+    /// One biased coin at the plan's rate. Zero-rate plans never touch
+    /// the RNG, so the wrapper stays bit-transparent.
+    fn flip(&mut self) -> bool {
+        self.plan.rate_ppm > 0 && self.rng.next_u64() % 1_000_000 < self.plan.rate_ppm as u64
+    }
+
+    /// Advance the fallible-op counter; `Err` when this op crashes the
+    /// rank or draws a transient fault.
+    fn step(&mut self, op: &'static str) -> Result<()> {
+        if self.crashed {
+            return Err(SttsvError::Crashed { rank: self.rank, at_op: self.ops }.into());
+        }
+        let at = self.ops;
+        self.ops += 1;
+        if self.plan.crash_rank == Some(self.rank as u32) && at >= self.plan.crash_at {
+            self.crashed = true;
+            return Err(SttsvError::Crashed { rank: self.rank, at_op: at }.into());
+        }
+        if self.flip() {
+            return Err(SttsvError::Transient { op, rank: self.rank }.into());
+        }
+        Ok(())
+    }
+}
+
+impl Transport for ChaosTransport {
+    fn send(&mut self, to: usize, tag: u64, data: Vec<f32>, pool: &mut BufPool) -> Result<()> {
+        self.step("send")?;
+        self.inner.send(to, tag, data, pool)
+    }
+
+    fn send_slice(&mut self, to: usize, tag: u64, data: &[f32], pool: &mut BufPool) -> Result<()> {
+        self.step("send")?;
+        self.inner.send_slice(to, tag, data, pool)
+    }
+
+    fn try_recv(&mut self, pool: &mut BufPool) -> Option<Packet> {
+        if self.crashed {
+            return None;
+        }
+        // A held-back packet may re-enter the stream ahead of this poll's
+        // wire arrival — that (plus the holdback push below) is where
+        // reordering comes from.
+        if !self.holdback.is_empty() && self.flip() {
+            return self.holdback.pop_front();
+        }
+        match self.inner.try_recv(pool) {
+            Some(pkt) => {
+                if self.holdback.len() < HOLDBACK_CAP && self.flip() {
+                    // Delay: the caller sees nothing this poll; the packet
+                    // re-emerges on a later poll or before any blocking recv.
+                    self.holdback.push_back(pkt);
+                    None
+                } else {
+                    Some(pkt)
+                }
+            }
+            // Empty wire: release the oldest delayed packet, preserving
+            // progress (a delay is never an indefinite withhold).
+            None => self.holdback.pop_front(),
+        }
+    }
+
+    fn recv(&mut self, pool: &mut BufPool) -> Result<Packet> {
+        self.step("recv")?;
+        // Never block while holding delayed packets: poll the wire once
+        // (possibly delaying the fresh arrival), then drain the holdback,
+        // and only park in the inner transport when both are empty.
+        if let Some(pkt) = self.inner.try_recv(pool) {
+            if self.holdback.len() < HOLDBACK_CAP && self.flip() {
+                self.holdback.push_back(pkt);
+            } else {
+                return Ok(pkt);
+            }
+        }
+        if let Some(pkt) = self.holdback.pop_front() {
+            return Ok(pkt);
+        }
+        self.inner.recv(pool)
+    }
+}

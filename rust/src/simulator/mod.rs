@@ -31,10 +31,22 @@
 //!
 //! Both backends share the counters, the stash, the [`BufPool`] machinery
 //! and the collectives, so per-processor words, messages, and charged
-//! mults are bitwise identical across backends (property P11). One
-//! deliberate divergence: when every peer has exited, a blocked spsc
-//! receive fails fast with an error, while mpsc blocks (its channels stay
-//! open until the whole run tears down).
+//! mults are bitwise identical across backends (property P11). Both also
+//! fail fast when every peer has exited while a receive is still blocked
+//! (`SttsvError::PeersGone` — formerly spsc-only; the mpsc oracle used to
+//! block forever).
+//!
+//! **Failure semantics** (§Rob): blocking waits are never unbounded when
+//! something is wrong. A [`RunCfg::recv_timeout`] watchdog turns a
+//! stuck-but-alive peer into [`SttsvError::Timeout`]; the cooperative
+//! abort protocol ([`RunCtl`]) unwinds every healthy rank within one tick
+//! once any rank fails; worker panics are contained and typed
+//! ([`SttsvError::Panicked`]); and a failed run returns a structured
+//! [`FailureReport`] (root-cause rank, phase, per-rank counters,
+//! in-flight words) instead of a hang, a panic, or a bare string. The
+//! seeded [`FaultPlan`] / chaos decorator (the `chaos` module) injects
+//! delays, transient faults, and rank crashes underneath the trait for
+//! property P13 and bench E17.
 //!
 //! Two communication APIs share the counters (§Perf P8):
 //!
@@ -70,13 +82,17 @@
 //! poll is O(1) however deep the stash) let an event-loop worker drain its
 //! own messages while a faster peer's collective traffic waits stashed.
 
+mod chaos;
 pub mod cost;
 mod spsc;
 
+pub use chaos::FaultPlan;
+
 use anyhow::{anyhow, ensure, Result};
 use std::collections::{HashMap, VecDeque};
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc, Barrier, Mutex};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
 
 /// Per-processor communication counters.
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
@@ -186,6 +202,133 @@ impl TagClass {
             TagClass::Sweep => tag < TAG_COLL_BASE,
             TagClass::Collective => tag >= TAG_COLL_BASE,
         }
+    }
+}
+
+/// Typed failure taxonomy of the fault-tolerance layer (§Rob). Every
+/// fault a transport, the chaos wrapper, or the abort protocol can
+/// surface travels through the `anyhow` chain as one of these variants,
+/// so callers (the run-level [`FailureReport`] assembly, the session
+/// retry loop, the serve layer's breaker) branch on *kind* with
+/// `downcast_ref` instead of string-matching rendered messages.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SttsvError {
+    /// The chaos plan's crash event killed this rank at its `at_op`-th
+    /// fallible transport operation; every later op fails the same way.
+    Crashed { rank: usize, at_op: u64 },
+    /// A transient (retryable) fault injected on one send or receive.
+    Transient { op: &'static str, rank: usize },
+    /// A targeted receive outwaited the watchdog
+    /// ([`RunCfg::recv_timeout`]) for a specific peer message.
+    Timeout { from: usize, tag: u64 },
+    /// A blocking wait with no specific peer key (e.g.
+    /// [`Comm::recv_any`]) outwaited the watchdog.
+    RecvStalled { rank: usize, millis: u64 },
+    /// Every peer exited while this rank was still blocked receiving —
+    /// the fail-fast liveness check, on both backends.
+    PeersGone { rank: usize },
+    /// A peer failed first and the cooperative abort protocol unwound
+    /// this (otherwise healthy) rank.
+    Aborted { rank: usize },
+    /// The worker body panicked; [`run_cfg`] contained the panic.
+    Panicked { rank: usize, msg: String },
+}
+
+impl SttsvError {
+    /// Faults a retry under a reseeded [`FaultPlan`] can clear.
+    pub fn is_transient(&self) -> bool {
+        matches!(
+            self,
+            SttsvError::Transient { .. }
+                | SttsvError::Timeout { .. }
+                | SttsvError::RecvStalled { .. }
+        )
+    }
+
+    /// Secondary casualties of another rank's failure — never the root
+    /// cause a [`FailureReport`] should blame.
+    pub fn is_secondary(&self) -> bool {
+        matches!(self, SttsvError::Aborted { .. } | SttsvError::PeersGone { .. })
+    }
+}
+
+impl std::fmt::Display for SttsvError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SttsvError::Crashed { rank, at_op } => {
+                write!(f, "rank {rank} crashed at transport op {at_op} (chaos plan)")
+            }
+            SttsvError::Transient { op, rank } => {
+                write!(f, "transient {op} fault on rank {rank} (chaos plan)")
+            }
+            SttsvError::Timeout { from, tag } => {
+                write!(f, "recv watchdog fired waiting for {from}:{tag}")
+            }
+            SttsvError::RecvStalled { rank, millis } => {
+                write!(f, "rank {rank} stalled {millis} ms waiting for any message")
+            }
+            SttsvError::PeersGone { rank } => {
+                write!(f, "all peers exited with rank {rank} still receiving")
+            }
+            SttsvError::Aborted { rank } => {
+                write!(f, "rank {rank} unwound by cooperative abort (a peer failed first)")
+            }
+            SttsvError::Panicked { rank, msg } => {
+                write!(f, "rank {rank} panicked: {msg}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for SttsvError {}
+
+/// Structured account of a failed [`run_cfg`] execution, returned (inside
+/// `anyhow`) in place of a hang, a panic, or a bare first-error string:
+/// which rank failed first, what phase label it was in, the typed root
+/// cause when there is one, every rank's counters at unwind time, and the
+/// payload words abandoned in flight. Callers recover it with
+/// `err.downcast_ref::<FailureReport>()`.
+#[derive(Debug, Clone)]
+pub struct FailureReport {
+    /// Root-cause rank (abort-protocol winner, or the first rank whose
+    /// error is not a secondary casualty).
+    pub failed_rank: usize,
+    /// The phase label the failed rank last set via [`Comm::phase`].
+    pub phase: &'static str,
+    /// The root cause, typed, when the failure was a [`SttsvError`].
+    pub kind: Option<SttsvError>,
+    /// Rendered root-cause chain (present even for untyped errors).
+    pub cause: String,
+    /// Per-rank counters at unwind (index = rank; failed/aborted ranks
+    /// report whatever they had charged before unwinding).
+    pub per_rank: Vec<CommStats>,
+    /// Payload words still in flight when the run unwound.
+    pub inflight_words: u64,
+}
+
+impl std::fmt::Display for FailureReport {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "rank {} failed in phase '{}': {} ({} words in flight)",
+            self.failed_rank, self.phase, self.cause, self.inflight_words
+        )
+    }
+}
+
+impl std::error::Error for FailureReport {}
+
+/// Poison-recovering mutex access: a lock poisoned by a panicked worker
+/// yields its guard anyway. Every structure guarded this way (lent
+/// [`BufPool`]s, result slots, the serve layer's caches and queues) is
+/// kept consistent by whole-value writes and appends, so the data is
+/// valid even when a panic interleaved — clearing the poison is what
+/// keeps a cached `Arc<SttsvPlan>` usable by other serve tenants after
+/// one tenant's run dies (§Rob satellite).
+pub fn lock_clean<T>(m: &Mutex<T>) -> MutexGuard<'_, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => poisoned.into_inner(),
     }
 }
 
@@ -386,11 +529,29 @@ pub struct RunCfg {
     /// because slot growth persists (each slot grows at most once per
     /// width regime).
     pub slot_words: usize,
+    /// Fault-injection plan (§Rob). `FaultPlan::default()` runs the plain
+    /// backend with no wrapper at all; any other plan — including a
+    /// zero-rate, crash-free one — wraps the transport in the chaos
+    /// decorator, which is what lets property P13 assert the wrapper
+    /// itself is bitwise and counter transparent.
+    pub chaos: FaultPlan,
+    /// Watchdog for blocking receives: a rank blocked longer than this
+    /// surfaces [`SttsvError::Timeout`] / [`SttsvError::RecvStalled`]
+    /// instead of waiting forever behind a stuck-but-alive peer. `None`
+    /// waits indefinitely (the abort protocol and the fail-fast liveness
+    /// check still bound the wait when a peer actually dies).
+    pub recv_timeout: Option<Duration>,
 }
 
 impl Default for RunCfg {
     fn default() -> Self {
-        RunCfg { transport: TransportKind::Mpsc, pin_threads: false, slot_words: 64 }
+        RunCfg {
+            transport: TransportKind::Mpsc,
+            pin_threads: false,
+            slot_words: 64,
+            chaos: FaultPlan::default(),
+            recv_timeout: None,
+        }
     }
 }
 
@@ -406,6 +567,62 @@ struct Packet {
     tag: u64,
     data: Vec<f32>,
 }
+
+/// Run-wide cooperative control shared by every rank (§Rob). The first
+/// failing rank's teardown raises `abort`; every blocking transport wait
+/// and every barrier polls it, so all peers unwind within a bounded time
+/// (one watchdog tick / park interval) instead of deadlocking on a
+/// message or barrier arrival that will never come. `alive` flags
+/// (formerly spsc-only) give both backends the fail-fast "all peers
+/// exited" liveness check.
+struct RunCtl {
+    abort: AtomicBool,
+    /// First failing rank — the root cause [`FailureReport`] blames;
+    /// `usize::MAX` until a failure wins the race.
+    abort_rank: AtomicUsize,
+    alive: Vec<AtomicBool>,
+}
+
+impl RunCtl {
+    fn new(p: usize) -> RunCtl {
+        RunCtl {
+            abort: AtomicBool::new(false),
+            abort_rank: AtomicUsize::new(usize::MAX),
+            alive: (0..p).map(|_| AtomicBool::new(true)).collect(),
+        }
+    }
+
+    /// Raise the abort flag; the first caller wins the root-cause slot.
+    fn trigger(&self, rank: usize) {
+        let _ = self.abort_rank.compare_exchange(
+            usize::MAX,
+            rank,
+            Ordering::AcqRel,
+            Ordering::Acquire,
+        );
+        self.abort.store(true, Ordering::Release);
+    }
+
+    fn aborted(&self) -> bool {
+        self.abort.load(Ordering::Acquire)
+    }
+
+    /// Have all of `rank`'s peers exited? (Acquire: pairs with the
+    /// Release store in worker teardown, so a true answer happens-after
+    /// every last publish the peer made — one final nonblocking drain
+    /// after this is conclusive.)
+    fn peers_done(&self, rank: usize) -> bool {
+        self.alive
+            .iter()
+            .enumerate()
+            .all(|(r, a)| r == rank || !a.load(Ordering::Acquire))
+    }
+}
+
+/// How often a blocked mpsc receive wakes to poll the abort flag, the
+/// liveness check, and its watchdog deadline. Pure overhead bound: a
+/// message arrival wakes the receiver immediately regardless.
+const MPSC_TICK: Duration = Duration::from_millis(1);
 
 /// The wire under a [`Comm`] endpoint. Implementations move `Packet`s
 /// between ranks; all counting, stashing, pooling and collective logic
@@ -433,6 +650,9 @@ struct MpscTransport {
     rank: usize,
     senders: Vec<mpsc::Sender<Packet>>,
     inbox: mpsc::Receiver<Packet>,
+    ctl: Arc<RunCtl>,
+    /// Watchdog budget for one blocking receive ([`RunCfg::recv_timeout`]).
+    timeout: Option<Duration>,
 }
 
 impl Transport for MpscTransport {
@@ -459,7 +679,41 @@ impl Transport for MpscTransport {
     }
 
     fn recv(&mut self, _pool: &mut BufPool) -> Result<Packet> {
-        self.inbox.recv().map_err(|_| anyhow!("inbox closed"))
+        let deadline = self.timeout.map(|t| Instant::now() + t);
+        loop {
+            match self.inbox.recv_timeout(MPSC_TICK) {
+                Ok(pkt) => return Ok(pkt),
+                Err(mpsc::RecvTimeoutError::Disconnected) => {
+                    return Err(anyhow!("inbox closed"));
+                }
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if self.ctl.aborted() {
+                        return Err(SttsvError::Aborted { rank: self.rank }.into());
+                    }
+                    if self.ctl.peers_done(self.rank) {
+                        // Peers publish (send) before the Release store on
+                        // their alive flag, so this final drain after
+                        // observing all of them dead is conclusive.
+                        return match self.inbox.try_recv() {
+                            Ok(pkt) => Ok(pkt),
+                            Err(_) => {
+                                Err(SttsvError::PeersGone { rank: self.rank }.into())
+                            }
+                        };
+                    }
+                    if let Some(d) = deadline {
+                        if Instant::now() >= d {
+                            let millis = self.timeout.unwrap_or_default().as_millis() as u64;
+                            return Err(SttsvError::RecvStalled {
+                                rank: self.rank,
+                                millis,
+                            }
+                            .into());
+                        }
+                    }
+                }
+            }
+        }
     }
 }
 
@@ -482,7 +736,9 @@ struct SpscTransport {
     outgoing: Vec<Option<Arc<spsc::SpscRing>>>,
     incoming: Vec<Option<Arc<spsc::SpscRing>>>,
     parks: Arc<Vec<spsc::ParkCell>>,
-    alive: Arc<Vec<AtomicBool>>,
+    ctl: Arc<RunCtl>,
+    /// Watchdog budget for one blocking receive ([`RunCfg::recv_timeout`]).
+    timeout: Option<Duration>,
     /// Round-robin scan start, for fairness across senders.
     cursor: usize,
 }
@@ -500,8 +756,11 @@ impl SpscTransport {
             match ring.try_push(tag, data) {
                 Some(grew) => break grew,
                 None => {
-                    if !self.alive[to].load(Ordering::Acquire) {
+                    if !self.ctl.alive[to].load(Ordering::Acquire) {
                         return Err(anyhow!("processor {to} hung up"));
+                    }
+                    if self.ctl.aborted() {
+                        return Err(SttsvError::Aborted { rank: self.rank }.into());
                     }
                     spins += 1;
                     if spins < 128 {
@@ -535,14 +794,9 @@ impl SpscTransport {
         None
     }
 
-    /// Have all peers exited? (Acquire: pairs with the Release store in
-    /// worker teardown, so a true answer happens-after every last publish
-    /// the peer made — one final scan after this is conclusive.)
+    /// Have all peers exited? See [`RunCtl::peers_done`].
     fn peers_done(&self) -> bool {
-        self.alive
-            .iter()
-            .enumerate()
-            .all(|(r, a)| r == self.rank || !a.load(Ordering::Acquire))
+        self.ctl.peers_done(self.rank)
     }
 }
 
@@ -571,6 +825,7 @@ impl Transport for SpscTransport {
     }
 
     fn recv(&mut self, pool: &mut BufPool) -> Result<Packet> {
+        let deadline = self.timeout.map(|t| Instant::now() + t);
         let mut spins = 0u32;
         loop {
             if let Some(pkt) = self.scan(pool) {
@@ -583,18 +838,32 @@ impl Transport for SpscTransport {
             }
             // Spin budget exhausted: announce, re-scan (the Dekker
             // handshake — see spsc::ParkCell), then park with a timeout.
+            // Each park interval re-checks the abort flag, the liveness
+            // of the peers, and the watchdog deadline, so every way a
+            // message can fail to arrive resolves in bounded time.
             let park = &self.parks[self.rank];
             park.announce();
             if let Some(pkt) = self.scan(pool) {
                 park.retract();
                 return Ok(pkt);
             }
+            if self.ctl.aborted() {
+                park.retract();
+                return Err(SttsvError::Aborted { rank: self.rank }.into());
+            }
             if self.peers_done() {
                 park.retract();
                 return match self.scan(pool) {
                     Some(pkt) => Ok(pkt),
-                    None => Err(anyhow!("all peers exited with empty rings")),
+                    None => Err(SttsvError::PeersGone { rank: self.rank }.into()),
                 };
+            }
+            if let Some(d) = deadline {
+                if Instant::now() >= d {
+                    park.retract();
+                    let millis = self.timeout.unwrap_or_default().as_millis() as u64;
+                    return Err(SttsvError::RecvStalled { rank: self.rank, millis }.into());
+                }
             }
             spsc::ParkCell::park(SPSC_PARK);
             park.retract();
@@ -602,21 +871,65 @@ impl Transport for SpscTransport {
     }
 }
 
-/// The run-wide barrier, matched to the transport: mutex+condvar for the
-/// oracle, a spin barrier (no syscalls on the fast path) for spsc.
+/// Abort-aware generation barrier for the mpsc path: the same
+/// mutex+condvar shape as `std::sync::Barrier`, except waits tick on a
+/// short timeout and re-check the run's abort flag — a rank that died
+/// mid-protocol (and will never arrive) releases its peers within one
+/// tick instead of wedging the run at a step boundary. An aborted exit
+/// leaves the arrival count stale; that is fine, the run is unwinding
+/// and the barrier is per-run.
+struct CondBarrier {
+    p: usize,
+    /// (arrived, generation)
+    state: Mutex<(usize, u64)>,
+    cv: Condvar,
+}
+
+impl CondBarrier {
+    fn new(p: usize) -> CondBarrier {
+        CondBarrier { p, state: Mutex::new((0, 0)), cv: Condvar::new() }
+    }
+
+    fn wait(&self, ctl: &RunCtl) {
+        let mut s = lock_clean(&self.state);
+        s.0 += 1;
+        if s.0 >= self.p {
+            s.0 = 0;
+            s.1 = s.1.wrapping_add(1);
+            self.cv.notify_all();
+            return;
+        }
+        let gen = s.1;
+        loop {
+            if ctl.aborted() {
+                return;
+            }
+            let (ns, _timed_out) = self
+                .cv
+                .wait_timeout(s, MPSC_TICK)
+                .unwrap_or_else(|poisoned| poisoned.into_inner());
+            s = ns;
+            if s.1 != gen {
+                return;
+            }
+        }
+    }
+}
+
+/// The run-wide barrier, matched to the transport: the abort-aware
+/// condvar barrier for the oracle, a spin barrier (no syscalls on the
+/// fast path, abort polled in the spin loop) for spsc.
 #[derive(Clone)]
 enum RunBarrier {
-    Std(Arc<Barrier>),
+    Std(Arc<CondBarrier>),
     Spin(Arc<spsc::SpinBarrier>),
 }
 
 impl RunBarrier {
-    fn wait(&self) {
+    fn wait(&self, ctl: &RunCtl) {
         match self {
-            RunBarrier::Std(b) => {
-                b.wait();
-            }
-            RunBarrier::Spin(b) => b.wait(),
+            RunBarrier::Std(b) => b.wait(ctl),
+            RunBarrier::Spin(b) => b.wait_abortable(&ctl.abort),
         }
     }
 }
@@ -640,6 +953,11 @@ pub struct Comm {
     pool: BufPool,
     inflight: Arc<InflightGauge>,
     barrier: RunBarrier,
+    ctl: Arc<RunCtl>,
+    /// Free-form phase label the worker body keeps current ("sweep",
+    /// "allreduce", …). Costs one pointer store to set; surfaces in the
+    /// [`FailureReport`] so a failure names the protocol phase it hit.
+    pub phase: &'static str,
     /// Sequence number for collective tags: every collective call on this
     /// processor consumes one tag above [`TAG_COLL_BASE`]. All processors
     /// issue collectives in the same program order, so the tags agree
@@ -750,10 +1068,10 @@ impl Comm {
             return Ok(key);
         }
         loop {
-            let pkt = self
-                .transport
-                .recv(&mut self.pool)
-                .map_err(|e| anyhow!("{e} while waiting for any message"))?;
+            let pkt = match self.transport.recv(&mut self.pool) {
+                Ok(pkt) => pkt,
+                Err(e) => return Err(annotate(e, "while waiting for any message")),
+            };
             let key = (pkt.from, pkt.tag);
             self.stash_insert(pkt);
             if class.matches(key.1) {
@@ -870,10 +1188,24 @@ impl Comm {
             return Ok(pkt);
         }
         loop {
-            let pkt = self
-                .transport
-                .recv(&mut self.pool)
-                .map_err(|e| anyhow!("{e} while waiting for {from}:{tag}"))?;
+            let pkt = match self.transport.recv(&mut self.pool) {
+                Ok(pkt) => pkt,
+                // A generic watchdog stall upgrades to the concrete key
+                // this receive was blocked on — the caller learns *which*
+                // message never came.
+                Err(e) => {
+                    return Err(match e.downcast::<SttsvError>() {
+                        Ok(SttsvError::RecvStalled { .. }) => {
+                            SttsvError::Timeout { from, tag }.into()
+                        }
+                        Ok(kind) => annotate(
+                            anyhow::Error::new(kind),
+                            &format!("while waiting for {from}:{tag}"),
+                        ),
+                        Err(e) => annotate(e, &format!("while waiting for {from}:{tag}")),
+                    });
+                }
+            };
             if pkt.from == from && pkt.tag == tag {
                 return Ok(pkt);
             }
@@ -881,10 +1213,30 @@ impl Comm {
         }
     }
 
+    /// Surface a peer-initiated abort as a typed error — event-loop
+    /// workers that make progress through nonblocking polls (which cannot
+    /// fail) call this once per loop iteration so a dead peer unwinds
+    /// them within one iteration instead of leaving them spinning.
+    pub fn check_abort(&self) -> Result<()> {
+        if self.ctl.aborted() {
+            return Err(SttsvError::Aborted { rank: self.rank }.into());
+        }
+        Ok(())
+    }
+
     /// Synchronize all processors (end of a schedule step).
     pub fn barrier(&self) {
-        self.barrier.wait();
+        self.barrier.wait(&self.ctl);
     }
+}
+
+/// Wrap a transport error with its waiting context while keeping any
+/// typed [`SttsvError`] downcastable through the chain (the old
+/// `anyhow!("{e} …")` rewrap erased the type). The context line repeats
+/// the cause, so a bare `to_string()` stays self-contained.
+fn annotate(e: anyhow::Error, what: &str) -> anyhow::Error {
+    let msg = format!("{e} {what}");
+    e.context(msg)
 }
 
 /// Per-rank endpoint halves built by [`run_cfg`] and moved into the worker
@@ -898,7 +1250,6 @@ enum Endpoint {
         outgoing: Vec<Option<Arc<spsc::SpscRing>>>,
         incoming: Vec<Option<Arc<spsc::SpscRing>>>,
         parks: Arc<Vec<spsc::ParkCell>>,
-        alive: Arc<Vec<AtomicBool>>,
     },
 }
 
@@ -959,7 +1310,7 @@ where
             for inbox in inboxes {
                 endpoints.push(Some(Endpoint::Mpsc { senders: senders.clone(), inbox }));
             }
-            RunBarrier::Std(Arc::new(Barrier::new(p)))
+            RunBarrier::Std(Arc::new(CondBarrier::new(p)))
         }
         TransportKind::Spsc => {
             // rings[from * p + to]: one SPSC ring per directed pair.
@@ -970,23 +1321,27 @@ where
                 })
                 .collect();
             let parks = Arc::new((0..p).map(|_| spsc::ParkCell::new()).collect::<Vec<_>>());
-            let alive = Arc::new((0..p).map(|_| AtomicBool::new(true)).collect::<Vec<_>>());
             for rank in 0..p {
                 endpoints.push(Some(Endpoint::Spsc {
                     outgoing: (0..p).map(|to| rings[rank * p + to].clone()).collect(),
                     incoming: (0..p).map(|from| rings[from * p + rank].clone()).collect(),
                     parks: parks.clone(),
-                    alive: alive.clone(),
                 }));
             }
             RunBarrier::Spin(Arc::new(spsc::SpinBarrier::new(p)))
         }
     };
+    let ctl = Arc::new(RunCtl::new(p));
     let inflight = Arc::new(InflightGauge::default());
     let fresh = AtomicU64::new(0);
     let results: Vec<Mutex<Option<Result<R>>>> = (0..p).map(|_| Mutex::new(None)).collect();
+    // Per-rank (stats, phase) observations written at teardown — the raw
+    // material of a [`FailureReport`] when the run fails.
+    let obs: Vec<Mutex<(CommStats, &'static str)>> =
+        (0..p).map(|_| Mutex::new((CommStats::default(), "run"))).collect();
     let body = &body;
     let fresh_ref = &fresh;
+    let obs_ref = &obs;
     let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
 
     std::thread::scope(|scope| {
@@ -994,32 +1349,51 @@ where
             let ep = ep.take().unwrap();
             let barrier = barrier.clone();
             let inflight = inflight.clone();
+            let ctl = ctl.clone();
             let slot = &results[rank];
             scope.spawn(move || {
                 if cfg.pin_threads {
                     spsc::pin_to_cpu(rank % cores);
                 }
                 let pool = match pools {
-                    Some(ps) => std::mem::take(&mut *ps[rank].lock().unwrap()),
+                    Some(ps) => std::mem::take(&mut *lock_clean(&ps[rank])),
                     None => BufPool::new(),
                 };
                 let fresh_before = pool.fresh_allocs;
-                let (transport, liveness): (Box<dyn Transport>, Option<_>) = match ep {
+                let (transport, park_cells): (Box<dyn Transport>, Option<_>) = match ep {
                     Endpoint::Mpsc { senders, inbox } => {
-                        (Box::new(MpscTransport { rank, senders, inbox }), None)
+                        let t = MpscTransport {
+                            rank,
+                            senders,
+                            inbox,
+                            ctl: ctl.clone(),
+                            timeout: cfg.recv_timeout,
+                        };
+                        (Box::new(t), None)
                     }
-                    Endpoint::Spsc { outgoing, incoming, parks, alive } => {
+                    Endpoint::Spsc { outgoing, incoming, parks } => {
                         parks[rank].register();
                         let t = SpscTransport {
                             rank,
                             outgoing,
                             incoming,
                             parks: parks.clone(),
-                            alive: alive.clone(),
+                            ctl: ctl.clone(),
+                            timeout: cfg.recv_timeout,
                             cursor: 0,
                         };
-                        (Box::new(t), Some((parks, alive)))
+                        (Box::new(t), Some(parks))
                     }
+                };
+                // The chaos decorator goes on only under a non-default
+                // plan; the default plan means the plain backend, no
+                // wrapper — so the zero-cost status quo is the default
+                // and a zero-RATE plan still exercises the wrapper
+                // (the P13 transparency leg).
+                let transport: Box<dyn Transport> = if cfg.chaos == FaultPlan::default() {
+                    transport
+                } else {
+                    Box::new(chaos::ChaosTransport::new(rank, cfg.chaos, transport))
                 };
                 let mut comm = Comm {
                     rank,
@@ -1030,10 +1404,31 @@ where
                     pool,
                     inflight,
                     barrier,
+                    ctl: ctl.clone(),
+                    phase: "run",
                     coll_seq: 0,
                     stats: CommStats::default(),
                 };
-                let out = body(&mut comm);
+                // Contain panics: an assert in a worker body becomes a
+                // typed error and the cooperative abort below, not a
+                // poisoned-lock cascade through the whole plan.
+                let out = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    body(&mut comm)
+                }))
+                .unwrap_or_else(|payload| {
+                    let msg = payload
+                        .downcast_ref::<&str>()
+                        .map(|s| s.to_string())
+                        .or_else(|| payload.downcast_ref::<String>().cloned())
+                        .unwrap_or_else(|| "non-string panic payload".to_string());
+                    Err(SttsvError::Panicked { rank, msg }.into())
+                });
+                if out.is_err() {
+                    // First failure wins the root-cause slot; every peer
+                    // blocked on a receive, a full ring, or a barrier
+                    // polls the flag and unwinds within one tick.
+                    ctl.trigger(rank);
+                }
                 // Teardown: publish the per-run allocation delta, then MERGE
                 // the pool back into the lent slot (append, don't overwrite:
                 // if a second run on the same plan raced us and took an
@@ -1041,40 +1436,75 @@ where
                 // keeps every buffer and the cumulative counter correct).
                 fresh_ref.fetch_add(comm.pool.fresh_allocs - fresh_before, Ordering::Relaxed);
                 if let Some(ps) = pools {
-                    let mut lent = ps[rank].lock().unwrap();
+                    let mut lent = lock_clean(&ps[rank]);
                     lent.fresh_allocs += comm.pool.fresh_allocs;
                     lent.bufs.append(&mut comm.pool.bufs);
                 }
-                if let Some((parks, alive)) = liveness {
-                    // Release: everything this rank published on any ring
-                    // happens-before a peer observing it dead; wake all
-                    // parked peers so they re-check liveness.
-                    alive[rank].store(false, Ordering::Release);
+                *lock_clean(&obs_ref[rank]) = (comm.stats, comm.phase);
+                // Release: everything this rank published on any wire
+                // happens-before a peer observing it dead.
+                ctl.alive[rank].store(false, Ordering::Release);
+                if let Some(parks) = park_cells {
+                    // Wake all parked peers so they re-check liveness and
+                    // the abort flag promptly.
                     for (r, park) in parks.iter().enumerate() {
                         if r != rank {
                             park.wake();
                         }
                     }
                 }
-                *slot.lock().unwrap() = Some(out);
+                *lock_clean(slot) = Some(out);
             });
         }
     });
 
-    let out: Result<Vec<R>> = results
-        .into_iter()
-        .enumerate()
-        .map(|(rank, slot)| {
-            slot.into_inner()
-                .unwrap()
-                .ok_or_else(|| anyhow!("processor {rank} produced no result"))?
-        })
-        .collect();
+    let mut vals: Vec<Option<R>> = Vec::with_capacity(p);
+    let mut errs: Vec<(usize, anyhow::Error)> = Vec::new();
+    for (rank, slot) in results.into_iter().enumerate() {
+        let cell = slot.into_inner().unwrap_or_else(|poisoned| poisoned.into_inner());
+        match cell {
+            Some(Ok(v)) => vals.push(Some(v)),
+            Some(Err(e)) => {
+                vals.push(None);
+                errs.push((rank, e));
+            }
+            None => {
+                vals.push(None);
+                errs.push((rank, anyhow!("processor {rank} produced no result")));
+            }
+        }
+    }
     let metrics = RunMetrics {
         peak_inflight_words: inflight.peak.load(Ordering::Relaxed),
         fresh_payload_allocs: fresh.into_inner(),
     };
-    Ok((out?, metrics))
+    if errs.is_empty() {
+        let out = vals.into_iter().map(|v| v.expect("checked")).collect();
+        return Ok((out, metrics));
+    }
+    // Root-cause selection: the abort-protocol winner if its error is a
+    // genuine failure, else the first rank whose error is not a secondary
+    // casualty (Aborted / PeersGone), else the first error.
+    let is_primary = |e: &anyhow::Error| match e.downcast_ref::<SttsvError>() {
+        Some(kind) => !kind.is_secondary(),
+        None => true,
+    };
+    let winner = ctl.abort_rank.load(Ordering::Acquire);
+    let idx = errs
+        .iter()
+        .position(|(r, e)| *r == winner && is_primary(e))
+        .or_else(|| errs.iter().position(|(_, e)| is_primary(e)))
+        .unwrap_or(0);
+    let (failed_rank, cause) = &errs[idx];
+    let report = FailureReport {
+        failed_rank: *failed_rank,
+        phase: lock_clean(&obs[*failed_rank]).1,
+        kind: cause.downcast_ref::<SttsvError>().cloned(),
+        cause: cause.to_string(),
+        per_rank: obs.iter().map(|o| lock_clean(o).0).collect(),
+        inflight_words: inflight.current.load(Ordering::Relaxed),
+    };
+    Err(anyhow::Error::new(report))
 }
 
 #[cfg(test)]
@@ -1293,9 +1723,9 @@ mod tests {
 
     #[test]
     fn spsc_blocked_recv_fails_fast_when_all_peers_exit() {
-        // Deliberate backend divergence: rank 1 waits for a message rank 0
-        // never sends; once rank 0 exits, the blocked receive must error
-        // out instead of hanging the run (mpsc would block forever here).
+        // Rank 1 waits for a message rank 0 never sends; once rank 0
+        // exits, the blocked receive must error out (typed PeersGone)
+        // instead of hanging the run.
         let out = run_cfg(2, None, RunCfg::new(TransportKind::Spsc), |comm| {
             if comm.rank == 0 {
                 Ok(String::new())
@@ -1312,6 +1742,223 @@ mod tests {
             "unexpected error text: {}",
             out[1]
         );
+    }
+
+    #[test]
+    fn mpsc_blocked_recv_fails_fast_when_all_peers_exit() {
+        // The oracle backend gained the same fail-fast liveness check the
+        // spsc rings always had (§Rob satellite): no more indefinite
+        // block on a message nobody will ever send.
+        let out = run_cfg(2, None, RunCfg::default(), |comm| {
+            if comm.rank == 0 {
+                Ok(String::new())
+            } else {
+                match comm.recv(0, 42) {
+                    Ok(_) => panic!("received a message nobody sent"),
+                    Err(e) => Ok(e.to_string()),
+                }
+            }
+        })
+        .unwrap();
+        assert!(
+            out[1].contains("all peers exited"),
+            "unexpected error text: {}",
+            out[1]
+        );
+    }
+
+    #[test]
+    fn recv_watchdog_surfaces_typed_timeout_on_both_backends() {
+        // Rank 1 blocks on a message a stuck-but-ALIVE rank 0 never
+        // sends; the watchdog must fire with the concrete awaited key
+        // (SttsvError::Timeout, upgraded from the generic stall), and the
+        // run must report a structured FailureReport blaming rank 1.
+        for kind in [TransportKind::Mpsc, TransportKind::Spsc] {
+            let mut cfg = RunCfg::new(kind);
+            cfg.recv_timeout = Some(Duration::from_millis(50));
+            let hold = AtomicBool::new(false);
+            let err = run_cfg(2, None, cfg, |comm| {
+                if comm.rank == 0 {
+                    // Stay alive (poll the flag) until rank 1 has failed,
+                    // so liveness fail-fast cannot mask the watchdog.
+                    while !hold.load(Ordering::Acquire) {
+                        std::thread::sleep(Duration::from_millis(1));
+                        if comm.check_abort().is_err() {
+                            break;
+                        }
+                    }
+                    Ok(())
+                } else {
+                    let res = comm.recv(0, 42).map(|_| ());
+                    hold.store(true, Ordering::Release);
+                    res
+                }
+            })
+            .unwrap_err();
+            let report = err
+                .downcast_ref::<FailureReport>()
+                .unwrap_or_else(|| panic!("[{kind}] expected FailureReport, got: {err}"));
+            assert_eq!(report.failed_rank, 1, "[{kind}]");
+            assert_eq!(
+                report.kind,
+                Some(SttsvError::Timeout { from: 0, tag: 42 }),
+                "[{kind}] cause: {}",
+                report.cause
+            );
+        }
+    }
+
+    #[test]
+    fn dead_rank_aborts_peers_within_bounded_time() {
+        // Rank 0 fails immediately; every other rank is blocked on a
+        // receive (no watchdog configured). The cooperative abort must
+        // unwind them all and the report must blame rank 0's typed
+        // crash, not the secondary Aborted casualties.
+        for kind in [TransportKind::Mpsc, TransportKind::Spsc] {
+            let cfg = RunCfg::new(kind);
+            let started = Instant::now();
+            let err = run_cfg(4, None, cfg, |comm| {
+                if comm.rank == 0 {
+                    Err(SttsvError::Crashed { rank: 0, at_op: 0 }.into())
+                } else {
+                    comm.recv(0, 7).map(|_| ())
+                }
+            })
+            .unwrap_err();
+            assert!(
+                started.elapsed() < Duration::from_secs(10),
+                "[{kind}] abort unwind took too long"
+            );
+            let report = err
+                .downcast_ref::<FailureReport>()
+                .unwrap_or_else(|| panic!("[{kind}] expected FailureReport, got: {err}"));
+            assert_eq!(report.failed_rank, 0, "[{kind}] cause: {}", report.cause);
+            assert_eq!(report.kind, Some(SttsvError::Crashed { rank: 0, at_op: 0 }));
+        }
+    }
+
+    #[test]
+    fn dead_rank_releases_peers_blocked_on_a_barrier() {
+        // Same, but the healthy ranks are parked at a BARRIER the dead
+        // rank will never arrive at — the abort-aware barriers must
+        // release them (they then unwind at their next fallible op or
+        // complete; either way the run terminates and blames rank 0).
+        for kind in [TransportKind::Mpsc, TransportKind::Spsc] {
+            let err = run_cfg(4, None, RunCfg::new(kind), |comm| {
+                if comm.rank == 0 {
+                    Err(SttsvError::Crashed { rank: 0, at_op: 0 }.into())
+                } else {
+                    comm.barrier();
+                    comm.check_abort()
+                }
+            })
+            .unwrap_err();
+            let report = err
+                .downcast_ref::<FailureReport>()
+                .unwrap_or_else(|| panic!("[{kind}] expected FailureReport, got: {err}"));
+            assert_eq!(report.failed_rank, 0, "[{kind}] cause: {}", report.cause);
+        }
+    }
+
+    #[test]
+    fn worker_panic_is_contained_and_typed() {
+        // A panicking body must become SttsvError::Panicked in a
+        // FailureReport — not a process abort, not a poisoned-lock
+        // cascade — and lent pools must stay usable afterwards.
+        let pools: Vec<Mutex<BufPool>> = (0..2).map(|_| Mutex::new(BufPool::new())).collect();
+        let err = run_cfg(2, Some(&pools), RunCfg::default(), |comm| -> Result<()> {
+            if comm.rank == 0 {
+                panic!("worker body exploded");
+            }
+            comm.barrier();
+            Ok(())
+        })
+        .unwrap_err();
+        let report = err.downcast_ref::<FailureReport>().expect("FailureReport");
+        assert_eq!(report.failed_rank, 0);
+        match &report.kind {
+            Some(SttsvError::Panicked { rank: 0, msg }) => {
+                assert!(msg.contains("exploded"), "panic message lost: {msg}");
+            }
+            other => panic!("expected Panicked, got {other:?}"),
+        }
+        // The pools survived the panic (poison-recovering access).
+        let (_, metrics) = run_cfg(2, Some(&pools), RunCfg::default(), |comm| {
+            let peer = 1 - comm.rank;
+            comm.isend(peer, 1, &[1.0, 2.0])?;
+            let mut buf = [0.0f32; 2];
+            comm.recv_into(peer, 1, &mut buf)?;
+            Ok(())
+        })
+        .unwrap();
+        let _ = metrics;
+    }
+
+    #[test]
+    fn zero_fault_chaos_wrapper_is_transparent() {
+        // A nonzero-seed, zero-rate, crash-free plan wraps the transport
+        // in the chaos decorator but must be observationally invisible:
+        // bitwise-identical results and identical CommStats.
+        let body = |comm: &mut Comm| {
+            let to = (comm.rank + 1) % comm.p;
+            let from = (comm.rank + comm.p - 1) % comm.p;
+            comm.send(to, 0, vec![comm.rank as f32 + 0.25; 9])?;
+            let got = comm.recv(from, 0)?;
+            let s = comm.allreduce_scalar(got.iter().sum())?;
+            Ok((s, comm.stats))
+        };
+        for kind in [TransportKind::Mpsc, TransportKind::Spsc] {
+            let plain = run_cfg(5, None, RunCfg::new(kind), body).unwrap().0;
+            let mut cfg = RunCfg::new(kind);
+            cfg.chaos = FaultPlan::rate(12345, 0.0);
+            assert!(cfg.chaos.is_zero() && cfg.chaos != FaultPlan::default());
+            let wrapped = run_cfg(5, None, cfg, body).unwrap().0;
+            assert_eq!(plain, wrapped, "[{kind}] zero-fault chaos must be invisible");
+        }
+    }
+
+    #[test]
+    fn chaos_crash_yields_failure_report_not_hang() {
+        // A deterministic crash of rank 2 early in its op stream: the
+        // run must terminate on both backends with a report blaming rank
+        // 2's Crashed error (never a deadlock, never a panic).
+        for kind in [TransportKind::Mpsc, TransportKind::Spsc] {
+            let mut cfg = RunCfg::new(kind);
+            cfg.chaos = FaultPlan::crash(9, 2, 0);
+            let err = run_cfg(4, None, cfg, |comm| {
+                let to = (comm.rank + 1) % comm.p;
+                let from = (comm.rank + comm.p - 1) % comm.p;
+                comm.phase = "ring";
+                comm.send(to, 0, vec![1.0; 8])?;
+                let _ = comm.recv(from, 0)?;
+                Ok(())
+            })
+            .unwrap_err();
+            let report = err
+                .downcast_ref::<FailureReport>()
+                .unwrap_or_else(|| panic!("[{kind}] expected FailureReport, got: {err}"));
+            assert_eq!(report.failed_rank, 2, "[{kind}] cause: {}", report.cause);
+            assert_eq!(report.kind, Some(SttsvError::Crashed { rank: 2, at_op: 0 }));
+            assert_eq!(report.phase, "ring", "[{kind}]");
+            assert_eq!(report.per_rank.len(), 4);
+        }
+    }
+
+    #[test]
+    fn fault_plan_parses_and_reseeds() {
+        let plan: FaultPlan = "7,0.001".parse().unwrap();
+        assert_eq!(plan.seed, 7);
+        assert_eq!(plan.rate_ppm, 1000);
+        assert!("7".parse::<FaultPlan>().is_err());
+        assert!("7,1.5".parse::<FaultPlan>().is_err());
+        // Attempt 0 is the plan itself; retries remix the stream and drop
+        // the one-shot crash event.
+        let crash = FaultPlan::crash(3, 1, 10);
+        assert_eq!(crash.reseeded(0), crash);
+        let retry = crash.reseeded(1);
+        assert_eq!(retry.crash_rank, None);
+        assert_ne!(retry.seed, crash.seed);
+        assert_ne!(crash.reseeded(1), crash.reseeded(2));
     }
 
     #[test]

@@ -252,6 +252,16 @@ impl SpinBarrier {
     }
 
     pub(crate) fn wait(&self) {
+        static NEVER: std::sync::atomic::AtomicBool = std::sync::atomic::AtomicBool::new(false);
+        self.wait_abortable(&NEVER);
+    }
+
+    /// [`SpinBarrier::wait`] that also releases once `abort` is raised —
+    /// a rank that died mid-protocol will never arrive, and without this
+    /// its peers would spin at the step boundary forever. An aborted
+    /// exit leaves the arrival count stale; that is fine: the run is
+    /// unwinding and the barrier is per-run.
+    pub(crate) fn wait_abortable(&self, abort: &std::sync::atomic::AtomicBool) {
         let gen = self.generation.load(Ordering::Acquire);
         if self.count.fetch_add(1, Ordering::AcqRel) + 1 == self.p {
             // Last arriver: reset the counter BEFORE bumping the
@@ -264,6 +274,9 @@ impl SpinBarrier {
         }
         let mut spins = 0u32;
         while self.generation.load(Ordering::Acquire) == gen {
+            if abort.load(Ordering::Acquire) {
+                return;
+            }
             spins += 1;
             if spins < 256 {
                 std::hint::spin_loop();

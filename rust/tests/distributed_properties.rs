@@ -57,7 +57,21 @@
 //!     (words r×, messages unchanged vs r = 1); and the plan cache's
 //!     `plan_builds` counter freezes after warmup — a second drain through
 //!     the same server builds nothing.
+//! P13: chaos soak (§Rob) — under seeded fault injection (delays,
+//!     reordering, transient failures, rank crashes) across ≥32 seeds ×
+//!     {phased, overlap} × {p2p, a2a}, every run TERMINATES: either Ok
+//!     with oracle-equal results (bitwise on the phased path, 2e-4 under
+//!     overlap) and unchanged CommStats, or a typed `FailureReport`
+//!     naming a real rank — never a hang, never a panic — and the same
+//!     plan then completes a clean rerun bitwise (pools survive the
+//!     poison). A zero-fault `ChaosTransport` (non-default plan, zero
+//!     rate) is observationally invisible: bitwise results and identical
+//!     per-proc CommStats on both transports, both comm modes. Crashed
+//!     resident solves under a checkpointed `RecoveryPolicy` recover to
+//!     the fault-free answer bitwise; without recovery they surface the
+//!     typed report instead of hanging.
 
+use sttsv::apps::{self, RecoveryPolicy};
 use sttsv::coordinator::session::SolverSession;
 use sttsv::coordinator::{
     run_comm_only, run_comm_only_multi, run_sttsv_opts, CommMode, ExecOpts, SttsvPlan,
@@ -66,7 +80,7 @@ use sttsv::partition::{classify, BlockKind, TetraPartition};
 use sttsv::runtime::{packed_ternary_mults, Backend};
 use sttsv::schedule::CommSchedule;
 use sttsv::serve::{AdmissionPolicy, SttsvServer};
-use sttsv::simulator::{allreduce_stats, CommStats, TransportKind};
+use sttsv::simulator::{allreduce_stats, CommStats, FailureReport, FaultPlan, TransportKind};
 use sttsv::steiner::{spherical, sqs8};
 use sttsv::tensor::{linalg, PackedBlockView, SymTensor};
 use sttsv::util::proptest::check;
@@ -1190,6 +1204,318 @@ fn p12_coalesced_serving_matches_serial_and_bills_exact_comm() {
                     "plan_builds moved {} -> {} on a warm cache",
                     c.plan_builds, c2.plan_builds
                 ));
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn p13_chaos_soak_terminates_with_oracle_results_or_typed_failures() {
+    // The §Rob termination contract: under seeded fault injection every
+    // run either completes with oracle-equal results or unwinds into a
+    // typed FailureReport — and the plan (pools, schedule, compiled
+    // programs) survives the failure for a clean rerun. 32 seeds, each
+    // swept over {p2p, a2a} × {phased, overlap}; every fourth seed
+    // injects a deterministic rank crash instead of random transients.
+    let pool = partition_pool();
+    check(
+        "chaos soak: typed failure or oracle result",
+        0xC4A05,
+        32,
+        |rng: &mut Rng| {
+            // P=10 and P=14 partitions keep 384 simulator runs cheap.
+            let part_idx = [0usize, 2][rng.below(2)];
+            let b = 2 + rng.below(3); // 2..=4
+            let r = [1usize, 2][rng.below(2)];
+            let rate_ppm = [500u32, 2_000, 8_000][rng.below(3)];
+            let crash = rng.below(4) == 0;
+            let crash_rank = rng.below(10);
+            let crash_at = rng.below(40) as u64;
+            let seed = rng.next_u64();
+            (part_idx, b, r, rate_ppm, crash, crash_rank, crash_at, seed)
+        },
+        |&(part_idx, b, r, rate_ppm, crash, crash_rank, crash_at, seed)| {
+            let part = &pool[part_idx];
+            let n = b * part.m;
+            let tensor = SymTensor::random(n, seed);
+            let mut rng = Rng::new(seed ^ 0xC4A0);
+            let xs: Vec<Vec<f32>> = (0..r).map(|_| rng.normal_vec(n)).collect();
+            let chaos = if crash {
+                FaultPlan::crash(seed, crash_rank, crash_at)
+            } else {
+                FaultPlan { seed, rate_ppm, crash_rank: None, crash_at: 0 }
+            };
+            for mode in [CommMode::PointToPoint, CommMode::AllToAll] {
+                for overlap in [false, true] {
+                    let ctx = format!("{mode:?} overlap={overlap} r={r} {chaos:?}");
+                    let opts = ExecOpts { mode, overlap, ..Default::default() };
+                    let plan =
+                        SttsvPlan::new(&tensor, part, opts).map_err(|e| e.to_string())?;
+                    let oracle = plan
+                        .run_multi_with(&xs, FaultPlan::default())
+                        .map_err(|e| e.to_string())?;
+                    match plan.run_multi_with(&xs, chaos) {
+                        Ok(rep) => {
+                            // Whatever fired was delay-only: the answer and
+                            // the bill must be exactly the fault-free run's
+                            // (bitwise phased; reassociation tolerance under
+                            // overlap — the P11 boundary).
+                            for p in 0..part.p {
+                                if rep.per_proc[p].stats != oracle.per_proc[p].stats {
+                                    return Err(format!(
+                                        "{ctx} proc {p}: chaos Ok run billed {:?}, \
+                                         oracle {:?}",
+                                        rep.per_proc[p].stats, oracle.per_proc[p].stats
+                                    ));
+                                }
+                            }
+                            for l in 0..r {
+                                if overlap {
+                                    let scale = oracle.ys[l]
+                                        .iter()
+                                        .map(|v| v.abs())
+                                        .fold(1.0f32, f32::max);
+                                    for i in 0..n {
+                                        if (rep.ys[l][i] - oracle.ys[l][i]).abs()
+                                            > 2e-4 * scale
+                                        {
+                                            return Err(format!(
+                                                "{ctx} col {l} i={i}: {} vs oracle {}",
+                                                rep.ys[l][i], oracle.ys[l][i]
+                                            ));
+                                        }
+                                    }
+                                } else if rep.ys[l] != oracle.ys[l] {
+                                    return Err(format!(
+                                        "{ctx} col {l}: delay-only chaos must be \
+                                         bitwise on the phased path"
+                                    ));
+                                }
+                            }
+                        }
+                        Err(e) => {
+                            let report = match e.downcast_ref::<FailureReport>() {
+                                Some(rp) => rp,
+                                None => {
+                                    return Err(format!(
+                                        "{ctx}: untyped failure {e:#} (no \
+                                         FailureReport in the chain)"
+                                    ))
+                                }
+                            };
+                            if report.failed_rank >= part.p {
+                                return Err(format!(
+                                    "{ctx}: report names rank {} of {}",
+                                    report.failed_rank, part.p
+                                ));
+                            }
+                            if crash && report.failed_rank != crash_rank {
+                                return Err(format!(
+                                    "{ctx}: crash plan killed rank {crash_rank} \
+                                     but the report blames {}",
+                                    report.failed_rank
+                                ));
+                            }
+                        }
+                    }
+                    // Poison survival: the SAME plan must now complete a
+                    // zero-fault rerun bitwise (phased) / in tolerance
+                    // (overlap) — buffers and pools recovered.
+                    let clean = plan
+                        .run_multi_with(&xs, FaultPlan::default())
+                        .map_err(|e| format!("{ctx}: clean rerun failed: {e:#}"))?;
+                    for l in 0..r {
+                        if overlap {
+                            let scale = oracle.ys[l]
+                                .iter()
+                                .map(|v| v.abs())
+                                .fold(1.0f32, f32::max);
+                            for i in 0..n {
+                                if (clean.ys[l][i] - oracle.ys[l][i]).abs() > 2e-4 * scale
+                                {
+                                    return Err(format!(
+                                        "{ctx} col {l} i={i}: post-failure rerun {} vs \
+                                         oracle {}",
+                                        clean.ys[l][i], oracle.ys[l][i]
+                                    ));
+                                }
+                            }
+                        } else if clean.ys[l] != oracle.ys[l] {
+                            return Err(format!(
+                                "{ctx} col {l}: post-failure rerun is not bitwise \
+                                 the oracle — the plan did not survive"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn p13_zero_fault_chaos_wrapper_is_observationally_invisible() {
+    // A non-default plan with zero rate and no crash installs the
+    // ChaosTransport decorator on every rank but must change NOTHING:
+    // bitwise results (phased), tolerance-equal results (overlap), and
+    // identical per-proc CommStats — on both transports and both modes.
+    let pool = partition_pool();
+    check(
+        "zero-fault chaos == no chaos",
+        0x2E40F,
+        6,
+        |rng: &mut Rng| {
+            let part_idx = rng.below(pool.len());
+            let b = 2 + rng.below(3); // 2..=4
+            let r = [1usize, 2][rng.below(2)];
+            let seed = rng.next_u64();
+            (part_idx, b, r, seed)
+        },
+        |&(part_idx, b, r, seed)| {
+            let part = &pool[part_idx];
+            let n = b * part.m;
+            let tensor = SymTensor::random(n, seed);
+            let mut rng = Rng::new(seed ^ 0x2E40);
+            let xs: Vec<Vec<f32>> = (0..r).map(|_| rng.normal_vec(n)).collect();
+            let zero = FaultPlan::rate(seed | 1, 0.0);
+            assert!(zero.is_zero() && zero != FaultPlan::default());
+            for transport in [TransportKind::Mpsc, TransportKind::Spsc] {
+                for mode in [CommMode::PointToPoint, CommMode::AllToAll] {
+                    for overlap in [false, true] {
+                        let ctx = format!("{transport:?} {mode:?} overlap={overlap} r={r}");
+                        let opts =
+                            ExecOpts { mode, overlap, transport, ..Default::default() };
+                        let plan =
+                            SttsvPlan::new(&tensor, part, opts).map_err(|e| e.to_string())?;
+                        let plain = plan
+                            .run_multi_with(&xs, FaultPlan::default())
+                            .map_err(|e| e.to_string())?;
+                        let wrapped = plan
+                            .run_multi_with(&xs, zero)
+                            .map_err(|e| e.to_string())?;
+                        for p in 0..part.p {
+                            if plain.per_proc[p].stats != wrapped.per_proc[p].stats {
+                                return Err(format!(
+                                    "{ctx} proc {p}: wrapper changed the bill: {:?} \
+                                     vs {:?}",
+                                    wrapped.per_proc[p].stats, plain.per_proc[p].stats
+                                ));
+                            }
+                        }
+                        for l in 0..r {
+                            if overlap {
+                                let scale = plain.ys[l]
+                                    .iter()
+                                    .map(|v| v.abs())
+                                    .fold(1.0f32, f32::max);
+                                for i in 0..n {
+                                    if (wrapped.ys[l][i] - plain.ys[l][i]).abs()
+                                        > 2e-4 * scale
+                                    {
+                                        return Err(format!(
+                                            "{ctx} col {l} i={i}: wrapped {} vs plain {}",
+                                            wrapped.ys[l][i], plain.ys[l][i]
+                                        ));
+                                    }
+                                }
+                            } else if wrapped.ys[l] != plain.ys[l] {
+                                return Err(format!(
+                                    "{ctx} col {l}: zero-fault wrapper must be \
+                                     bitwise invisible on the phased path"
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn p13_crashed_sessions_recover_bitwise_or_report_without_recovery() {
+    // Resident solves under a rank crash: WITH a checkpointed
+    // RecoveryPolicy the reseeded restart reproduces the fault-free
+    // answer bitwise; WITHOUT one, a crash that fires early surfaces the
+    // typed FailureReport (never a hang, never a panic).
+    let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+    check(
+        "session recovery == oracle",
+        0x13EC0,
+        6,
+        |rng: &mut Rng| {
+            let b = 2 + rng.below(3); // 2..=4
+            let rank = rng.below(10);
+            let at = rng.below(80) as u64;
+            let seed = rng.next_u64();
+            (b, rank, at, seed)
+        },
+        |&(b, rank, at, seed)| {
+            let n = b * part.m;
+            let (tensor, cols) = SymTensor::odeco(n, &[3.0, 1.5], seed);
+            let mut rng = Rng::new(seed ^ 0x13EC);
+            let mut x0 = cols[0].clone();
+            for v in x0.iter_mut() {
+                *v += 0.2 * rng.normal_f32();
+            }
+            let opts = ExecOpts::default();
+            let oracle = apps::power_method(&tensor, &part, &x0, 6, 0.0, opts)
+                .map_err(|e| e.to_string())?;
+            let mut chaos_opts = opts;
+            chaos_opts.chaos = FaultPlan::crash(seed, rank, at);
+            let policy = RecoveryPolicy {
+                checkpoint_every: 2,
+                max_retries: 3,
+                ..RecoveryPolicy::default()
+            };
+            let rep =
+                apps::power_method_recovering(&tensor, &part, &x0, 6, 0.0, chaos_opts, policy)
+                    .map_err(|e| format!("recovering solve failed: {e:#}"))?;
+            if rep.x != oracle.x {
+                return Err(format!(
+                    "crash({rank}@{at}): recovered x is not bitwise the fault-free \
+                     solve (attempts {})",
+                    rep.recovery.attempts
+                ));
+            }
+            for (t, (got, want)) in rep.iters.iter().zip(&oracle.iters).enumerate() {
+                if (got.norm, got.lambda, got.delta) != (want.norm, want.lambda, want.delta)
+                {
+                    return Err(format!(
+                        "crash({rank}@{at}) iter {t}: scalars diverged from the \
+                         fault-free solve"
+                    ));
+                }
+            }
+            // An early crash with recovery OFF must unwind into the typed
+            // report (6 iterations issue far more than 16 transport ops).
+            if at < 16 {
+                match apps::power_method(&tensor, &part, &x0, 6, 0.0, chaos_opts) {
+                    Ok(_) => {
+                        return Err(format!(
+                            "crash({rank}@{at}): unrecovered solve should have failed"
+                        ))
+                    }
+                    Err(e) => {
+                        let report = match e.downcast_ref::<FailureReport>() {
+                            Some(rp) => rp,
+                            None => {
+                                return Err(format!(
+                                    "crash({rank}@{at}): untyped failure {e:#}"
+                                ))
+                            }
+                        };
+                        if report.failed_rank != rank {
+                            return Err(format!(
+                                "crash({rank}@{at}): report blames rank {}",
+                                report.failed_rank
+                            ));
+                        }
+                    }
+                }
             }
             Ok(())
         },
