@@ -3,7 +3,7 @@
 .PHONY: artifacts artifacts-quick test test-release-asserts pytest bench \
 	bench-smoke bench-overlap bench-compiled bench-e2e bench-e2e-smoke \
 	bench-hw bench-hw-smoke bench-serve bench-serve-smoke bench-chaos \
-	bench-chaos-smoke
+	bench-chaos-smoke bench-precision bench-precision-smoke
 
 # AOT-lower the JAX/Pallas kernels (incl. the multi-RHS block_multi_* set)
 # to HLO text artifacts for the Rust PJRT backend.
@@ -95,3 +95,15 @@ bench-chaos:
 # assert, zero-rate transparency assert, and acceptance print still execute.
 bench-chaos-smoke:
 	cd rust && STTSV_BENCH_SMOKE=1 cargo bench --bench chaos_resilience
+
+# E18 precision/SIMD bench: AVX2-vs-scalar run-kernel GF/s (kernel level
+# and end to end, bitwise equality asserted), bf16-wire bytes-vs-accuracy,
+# and the f32-vs-f64 HOPM conditioning study; writes
+# rust/BENCH_precision.json.
+bench-precision:
+	cd rust && cargo bench --bench precision_simd
+
+# Fast variant (what CI runs): fewer samples; every dispatch path, the
+# bitwise and byte-halving asserts, and the acceptance print still execute.
+bench-precision-smoke:
+	cd rust && STTSV_BENCH_SMOKE=1 cargo bench --bench precision_simd

@@ -26,7 +26,7 @@ fn main() -> anyhow::Result<()> {
     header("A1: p2p schedule vs All-to-All under the α-β model (per vector phase x2)");
     let model = CostModel::typical();
     let mut t = Table::new([
-        "q", "P", "n", "mode", "steps", "max words", "α·steps (µs)", "β·words (µs)",
+        "q", "P", "n", "mode", "steps", "max words", "α·steps (µs)", "β·bytes (µs)",
         "total (µs)",
     ]);
     for q in [2usize, 3, 4, 5] {

@@ -32,8 +32,9 @@
 use crate::coordinator::session::SolverSession;
 use crate::coordinator::{ExecOpts, SttsvPlan};
 use crate::partition::TetraPartition;
+use crate::runtime::{exec_block_runs_elem, RunDesc};
 use crate::simulator::CommStats;
-use crate::tensor::{linalg, SymTensor};
+use crate::tensor::{linalg, PackedBlockView, SymTensor, SymTensorG};
 use anyhow::Result;
 
 pub use crate::coordinator::session::{CpIter, PowerIter, RecoveryLog, RecoveryPolicy};
@@ -201,6 +202,94 @@ pub fn power_method_host(
         steps_per_phase,
         recovery: RecoveryLog::default(),
     })
+}
+
+/// Per-iteration record of the f64 conditioning-study power method.
+#[derive(Debug, Clone)]
+pub struct PowerF64Iter {
+    /// ‖y‖ before normalization.
+    pub norm: f64,
+    /// λ = x·y of this iteration.
+    pub lambda: f64,
+    /// ‖x_{t+1} − x_t‖ convergence measure.
+    pub delta: f64,
+}
+
+/// Report of [`power_method_f64`].
+#[derive(Debug, Clone)]
+pub struct PowerF64Report {
+    /// Final eigenvalue estimate.
+    pub lambda: f64,
+    /// Final unit eigenvector estimate.
+    pub x: Vec<f64>,
+    /// Per-iteration convergence log.
+    pub iters: Vec<PowerF64Iter>,
+}
+
+/// Double-precision STTSV y = A ×₂ x ×₃ x by replaying the whole packed
+/// tensor as ONE central block's compiled run stream through the
+/// f64-generic register-tiled executor ([`exec_block_runs_elem`]) at
+/// r = 1. A central block's run classes (CentralUpper/CentralAxis)
+/// accumulate every contribution into the `ci` panel with unit factor, so
+/// `y = ci` directly — the same §Perf P10 descriptor machinery the
+/// distributed plan compiles per owned block, exercised end-to-end in
+/// f64.
+fn sttsv_f64(tensor: &SymTensorG<f64>, descs: &[RunDesc], x: &[f64]) -> Vec<f64> {
+    let n = tensor.n;
+    let mut ci = vec![0.0f64; n];
+    let mut cj = vec![0.0f64; n];
+    let mut ck = vec![0.0f64; n];
+    exec_block_runs_elem::<f64>(tensor.packed_data(), descs, x, x, x, &mut ci, &mut cj, &mut ck, 1);
+    // Central-class runs never touch the cj/ck panels.
+    debug_assert!(cj.iter().chain(ck.iter()).all(|&v| v == 0.0));
+    ci
+}
+
+/// Host-side higher-order power method in **f64** end-to-end (§Perf, PR 9
+/// precision path): packed tensor storage, run-kernel arithmetic, and all
+/// iteration scalars in double precision. This is the conditioning-study
+/// companion to [`power_method`] — on ill-conditioned planted-eigenpair
+/// instances (`SymTensorG::<f64>::odeco64` with λ spreads of 1e8 or more)
+/// the f32 pipeline's ~1e-7 relative kernel error swamps the small
+/// eigenvalues, while this path resolves them to f64 accuracy. Sequential
+/// by construction: the distributed plan and its wire formats stay
+/// f32-only (`ExecOpts::precision` routes the CLI here instead).
+pub fn power_method_f64(
+    tensor: &SymTensorG<f64>,
+    x0: &[f64],
+    max_iters: usize,
+    tol: f64,
+) -> PowerF64Report {
+    let n = tensor.n;
+    assert_eq!(x0.len(), n, "x0 length must equal tensor dimension");
+    // Compile the run stream once (the whole tensor is the single central
+    // block of a 1-block partition); every iteration replays it.
+    let view = PackedBlockView::new(0, 0, 0, n);
+    let mut descs = Vec::new();
+    view.for_each_run(|run| descs.push(RunDesc::compile(&run)));
+
+    let mut x = x0.to_vec();
+    let nrm = x.iter().map(|v| v * v).sum::<f64>().sqrt();
+    assert!(nrm > 0.0, "x0 must be nonzero");
+    x.iter_mut().for_each(|v| *v /= nrm);
+
+    let mut iters: Vec<PowerF64Iter> = Vec::new();
+    for _ in 0..max_iters {
+        let mut y = sttsv_f64(tensor, &descs, &x);
+        let lambda = x.iter().zip(&y).map(|(a, b)| a * b).sum::<f64>();
+        let norm = y.iter().map(|v| v * v).sum::<f64>().sqrt();
+        if norm > 0.0 {
+            y.iter_mut().for_each(|v| *v /= norm);
+        }
+        let delta = x.iter().zip(&y).map(|(a, b)| (a - b) * (a - b)).sum::<f64>().sqrt();
+        x = y;
+        iters.push(PowerF64Iter { norm, lambda, delta });
+        if delta < tol {
+            break;
+        }
+    }
+    let lambda = iters.last().map(|i| i.lambda).unwrap_or(0.0);
+    PowerF64Report { lambda, x, iters }
 }
 
 /// Symmetric CP gradient report (Algorithm 2).
@@ -503,6 +592,55 @@ mod tests {
             before,
             "an iterative app fell back to the dense O(n³) host oracle"
         );
+    }
+
+    #[test]
+    fn f64_power_method_matches_the_f32_twin_on_tame_spectra() {
+        // SymTensorG::random draws the same f32 variate stream for every
+        // element type, so the f64 tensor is the exact promotion of the
+        // f32 one — the two power methods walk the same instance and must
+        // agree to f32 kernel accuracy on a well-conditioned problem.
+        let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+        let b = 4;
+        let n = b * part.m;
+        let t32 = SymTensor::random(n, 91);
+        let t64 = SymTensorG::<f64>::random(n, 91);
+        let mut rng = Rng::new(92);
+        let x0: Vec<f32> = rng.normal_vec(n);
+        let x0_64: Vec<f64> = x0.iter().map(|&v| v as f64).collect();
+        let k = 6;
+        let host = power_method_host(&t32, &part, &x0, k, 0.0, opts()).unwrap();
+        let dbl = power_method_f64(&t64, &x0_64, k, 0.0);
+        assert_eq!(dbl.iters.len(), k);
+        for (t, (a, b)) in host.iters.iter().zip(&dbl.iters).enumerate() {
+            let scale = b.lambda.abs().max(1.0);
+            assert!(((a.lambda as f64) - b.lambda).abs() < 1e-3 * scale, "iter {t} lambda");
+            let nscale = b.norm.abs().max(1.0);
+            assert!(((a.norm as f64) - b.norm).abs() < 1e-3 * nscale, "iter {t} norm");
+        }
+        for i in 0..n {
+            assert!(((host.x[i] as f64) - dbl.x[i]).abs() < 1e-3, "x[{i}]");
+        }
+    }
+
+    #[test]
+    fn f64_power_method_resolves_ill_conditioned_dominant_pair() {
+        // Conditioning study (the reason the f64 path exists): with a
+        // planted spectrum spanning 9 decades, the f32 pipeline's ~1e-7
+        // relative kernel error is ~10 absolute at λ = 1e8 — the f64 path
+        // must land within 1e-2 absolute (1e-10 relative).
+        let n = 12;
+        let (t, cols) = SymTensorG::<f64>::odeco64(n, &[1.0e8, 1.0, 1.0e-1], 77);
+        let mut x0 = cols[0].clone();
+        let mut rng = Rng::new(78);
+        for v in x0.iter_mut() {
+            *v += 0.1 * rng.normal_f32() as f64;
+        }
+        let rep = power_method_f64(&t, &x0, 60, 1e-12);
+        assert!((rep.lambda - 1.0e8).abs() < 1e-2, "lambda={}", rep.lambda);
+        let align: f64 = rep.x.iter().zip(&cols[0]).map(|(a, b)| a * b).sum::<f64>().abs();
+        assert!(align > 1.0 - 1e-10, "alignment={align}");
+        assert!(rep.iters.last().unwrap().delta < 1e-12);
     }
 
     #[test]

@@ -64,9 +64,9 @@ use crate::partition::{block_ternary_mults, classify, factors, BlockKind, TetraP
 use crate::runtime::{exec_block_runs, lanes_add, lanes_axpy, Backend, Engine, RunDesc};
 use crate::schedule::CommSchedule;
 use crate::simulator::{
-    self, BufPool, Comm, CommStats, FaultPlan, RunCfg, TagClass, TransportKind,
+    self, BufPool, Comm, CommStats, FaultPlan, RunCfg, TagClass, TransportKind, WireFormat,
 };
-use crate::tensor::{PackedBlockView, SymTensor};
+use crate::tensor::{PackedBlockView, Precision, SymTensor};
 use anyhow::{bail, ensure, Result};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
@@ -110,6 +110,11 @@ impl std::str::FromStr for CommMode {
 /// | `compute_threads` w/o compiled | clamped to 1 (the pool splits       |
 /// |                                | compiled descriptor streams)        |
 /// | `compute_threads = 0`          | clamped to 1                        |
+/// | `wire = bf16` + `precision f64`| `precision` forced to `F32` (the    |
+/// |                                | wire wins: a 2-byte wire under f64  |
+/// |                                | elements would be neither the f64   |
+/// |                                | conditioning study nor the bf16     |
+/// |                                | bandwidth point)                    |
 ///
 /// Post-conditions are debug-asserted in `normalize`; downgrades (e.g.
 /// requesting `compiled` on PJRT) are silent, matching how `batch` has
@@ -200,6 +205,19 @@ pub struct ExecOpts {
     /// watchdog (peer death still unwinds the run via the abort
     /// protocol and the fail-fast liveness check).
     pub recv_timeout: Option<Duration>,
+    /// Physical wire encoding of sweep payloads (§Perf P14, CLI
+    /// `--wire f32|bf16`): [`WireFormat::Bf16`] packs gather/reduce
+    /// panels to bfloat16 on the wire (accumulation stays f32), exactly
+    /// halving measured payload bytes while per-proc words and messages
+    /// stay the closed-form counts. Collectives always travel f32.
+    pub wire: WireFormat,
+    /// Element type for the *sequential* conditioning-study paths (CLI
+    /// `--precision f32|f64`): [`Precision::F64`] routes host-side HOPM
+    /// (`apps::power_method_f64`) through the f64-generic packed tensor +
+    /// run-kernels. The distributed plan always computes in f32 — f64 is
+    /// the accuracy reference the f32/bf16 runs are compared against.
+    /// Forced to `F32` under a bf16 wire (see the table above).
+    pub precision: Precision,
 }
 
 impl Default for ExecOpts {
@@ -216,6 +234,8 @@ impl Default for ExecOpts {
             pin_threads: false,
             chaos: FaultPlan::default(),
             recv_timeout: None,
+            wire: WireFormat::F32,
+            precision: Precision::F32,
         }
     }
 }
@@ -257,8 +277,15 @@ impl ExecOpts {
             // program there is nothing to split.
             self.compute_threads = 1;
         }
+        if self.wire == WireFormat::Bf16 {
+            // The wire wins: bf16 payloads carry 8 mantissa bits, so an
+            // f64 element type underneath would measure neither the f64
+            // conditioning reference nor the bf16 bandwidth point.
+            self.precision = Precision::F32;
+        }
         debug_assert!(self.compute_threads >= 1);
         debug_assert!(!self.compiled || (self.packed && self.backend == Backend::Native));
+        debug_assert!(self.wire != WireFormat::Bf16 || self.precision == Precision::F32);
         self
     }
 }
@@ -1649,6 +1676,10 @@ impl<'a> SttsvPlan<'a> {
     pub fn expected_proc_stats(&self, r: usize) -> Vec<CommStats> {
         let part = self.part;
         let b = self.b;
+        // Sweep payloads travel at the plan wire's width (2 bytes/word
+        // under bf16, 4 at f32); every sweep tag prices identically, so
+        // tag 0 stands in for the class.
+        let bpw = self.opts.wire.bytes_per_word(0);
         let mut out = vec![CommStats::default(); part.p];
         match self.opts.mode {
             CommMode::PointToPoint => {
@@ -1667,8 +1698,10 @@ impl<'a> SttsvPlan<'a> {
                         .sum();
                     let words = ((w1 + w3) * r) as u64;
                     out[xf.from].sent_words += words;
+                    out[xf.from].sent_bytes += bpw * words;
                     out[xf.from].sent_msgs += 2;
                     out[xf.to].recv_words += words;
+                    out[xf.to].recv_bytes += bpw * words;
                     out[xf.to].recv_msgs += 2;
                 }
             }
@@ -1680,6 +1713,8 @@ impl<'a> SttsvPlan<'a> {
                     *s = CommStats {
                         sent_words: words,
                         recv_words: words,
+                        sent_bytes: bpw * words,
+                        recv_bytes: bpw * words,
                         sent_msgs: msgs,
                         recv_msgs: msgs,
                     };
@@ -1744,6 +1779,7 @@ impl<'a> SttsvPlan<'a> {
             slot_words: self.max_message_words(r),
             chaos,
             recv_timeout: self.opts.recv_timeout,
+            wire: self.opts.wire,
         }
     }
 }
@@ -2796,6 +2832,17 @@ mod tests {
         let o = ExecOpts { compute_threads: 4, ..Default::default() }.normalize();
         assert!(o.compiled);
         assert_eq!(o.compute_threads, 4);
+        // bf16 wire forces f32 elements (the wire wins); an f32 wire
+        // leaves the requested precision alone.
+        let o = ExecOpts {
+            wire: WireFormat::Bf16,
+            precision: Precision::F64,
+            ..Default::default()
+        }
+        .normalize();
+        assert_eq!(o.precision, Precision::F32, "bf16 wire forces f32 elements");
+        let o = ExecOpts { precision: Precision::F64, ..Default::default() }.normalize();
+        assert_eq!(o.precision, Precision::F64);
         // plans normalize on construction: a PJRT-flagged compiled request
         // builds no programs (and still runs, via the interpreter)
         let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();

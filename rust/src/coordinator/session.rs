@@ -255,6 +255,7 @@ fn commit_ckpt<R: Clone>(
 ) {
     let words = owned_words(ranges);
     stats.sent_words += words;
+    stats.sent_bytes += 4 * words; // checkpoints snapshot f32 portions
     stats.sent_msgs += 1;
     let mut own = Vec::with_capacity(words as usize);
     for rg in ranges {
@@ -372,6 +373,7 @@ impl<'p, 't> SolverSession<'p, 't> {
                     compute = c.compute;
                     comm.stats = c.stats;
                     comm.stats.recv_words += owned_words(&ranges);
+                    comm.stats.recv_bytes += 4 * owned_words(&ranges);
                     comm.stats.recv_msgs += 1;
                 } else {
                     plan.seed_own(me, &[seed], &mut st.xbuf);
@@ -582,6 +584,7 @@ impl<'p, 't> SolverSession<'p, 't> {
                     compute = c.compute;
                     comm.stats = c.stats;
                     comm.stats.recv_words += owned_words(&ranges);
+                    comm.stats.recv_bytes += 4 * owned_words(&ranges);
                     comm.stats.recv_msgs += 1;
                 } else {
                     plan.seed_own(me, &views, &mut st.xbuf);
@@ -931,8 +934,10 @@ mod tests {
                     plan.own_ranges(p, 1).iter().map(|rg| rg.len() as u64).sum();
                 let mut want = oracle.per_proc[p].stats;
                 want.sent_words += writes * words;
+                want.sent_bytes += 4 * writes * words;
                 want.sent_msgs += writes;
                 want.recv_words += reads * words;
+                want.recv_bytes += 4 * reads * words;
                 want.recv_msgs += reads;
                 assert_eq!(
                     proc_.stats, want,

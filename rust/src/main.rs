@@ -19,13 +19,13 @@ use sttsv::apps;
 use sttsv::bounds;
 use sttsv::coordinator::{self, baselines, CommMode, ExecOpts};
 use sttsv::partition::TetraPartition;
-use sttsv::runtime::Backend;
+use sttsv::runtime::{set_simd_policy, Backend, SimdPolicy};
 use sttsv::schedule::CommSchedule;
 use sttsv::apps::RecoveryPolicy;
 use sttsv::serve::{AdmissionPolicy, RobustnessPolicy, SttsvServer};
-use sttsv::simulator::{FaultPlan, TransportKind};
+use sttsv::simulator::{FaultPlan, TransportKind, WireFormat};
 use sttsv::steiner::{fixtures, spherical, sqs8, trivial};
-use sttsv::tensor::{linalg, SymTensor};
+use sttsv::tensor::{linalg, Precision, SymTensor, SymTensorG};
 use sttsv::util::cli::Args;
 use sttsv::util::rng::Rng;
 use sttsv::util::table::{fnum, fset, ftriples, Table};
@@ -54,7 +54,8 @@ fn main() {
                  [--compute-threads N] [--resident|--no-resident] \
                  [--batch-window MS] [--max-r N] [--cache N] [--queries N] \
                  [--chaos SEED,RATE] [--recv-timeout-ms N] \
-                 [--checkpoint-every N] [--retries N] [--deadline-ms MS]\n\
+                 [--checkpoint-every N] [--retries N] [--deadline-ms MS] \
+                 [--wire f32|bf16] [--precision f32|f64] [--simd auto|scalar]\n\
                  \n\
                  --backend        comma-separable selectors: a compute backend \
                  (native|pjrt) and/or a message transport (spsc = lock-free \
@@ -86,7 +87,16 @@ fn main() {
                  --retries N      max restart attempts (sessions) or \
                  per-batch retries (serve) after a failure\n\
                  --deadline-ms MS serve: shed queries that cannot start \
-                 within MS of arrival; late completions are flagged"
+                 within MS of arrival; late completions are flagged\n\
+                 --wire FMT       sweep-payload wire format: f32 (default) or \
+                 bf16 (half the payload bytes at identical words/messages; \
+                 collectives and blocking sends stay f32)\n\
+                 --precision P    f32 (default) or f64; power-method with f64 \
+                 runs the host-side conditioning study through the f64 \
+                 run-kernels (the distributed plan itself stays f32)\n\
+                 --simd POLICY    run-kernel dispatch: auto (default; AVX2 \
+                 microkernels when the CPU has them — bitwise-identical \
+                 results either way) or scalar"
             );
             std::process::exit(2);
         }
@@ -236,14 +246,26 @@ fn exec_opts(args: &Args) -> Result<ExecOpts> {
     if recv_timeout_ms > 0 {
         opts.recv_timeout = Some(std::time::Duration::from_millis(recv_timeout_ms));
     }
-    // Plans normalize flag interactions themselves; surface the one
-    // silent downgrade a user could plausibly trip over.
+    opts.wire = args.get("wire").unwrap_or("f32").parse::<WireFormat>()?;
+    opts.precision = args.get("precision").unwrap_or("f32").parse::<Precision>()?;
+    // SIMD dispatch is a runtime-global policy, not a plan property:
+    // the AVX2 kernels are bitwise-identical to the scalar ones, so the
+    // choice never belongs in a plan-cache key.
+    set_simd_policy(args.get("simd").unwrap_or("auto").parse::<SimdPolicy>()?);
+    // Plans normalize flag interactions themselves; surface the silent
+    // downgrades a user could plausibly trip over.
     if opts.compute_threads > 1 && opts.normalize().compute_threads == 1 {
         eprintln!(
             "warning: --compute-threads {} ignored — the compute pool \
              requires the compiled packed native path (drop --no-compiled/\
              --no-packed/--backend pjrt, or see --compiled)",
             opts.compute_threads
+        );
+    }
+    if opts.precision == Precision::F64 && opts.normalize().precision == Precision::F32 {
+        eprintln!(
+            "warning: --precision f64 ignored — the bf16 wire format is \
+             f32-only (drop --wire bf16)"
         );
     }
     Ok(opts)
@@ -313,6 +335,9 @@ fn cmd_power_method(args: &Args) -> Result<()> {
     let n = b * part.m;
     let iters: usize = args.get_or("iters", 50usize);
     let opts = exec_opts(args)?;
+    if opts.normalize().precision == Precision::F64 {
+        return cmd_power_method_f64(args, &label, n, iters);
+    }
     let resident = !args.flag("no-resident");
     println!(
         "higher-order power method on {label}: n={n}, {} driver, {opts:?}",
@@ -366,6 +391,43 @@ fn cmd_power_method(args: &Args) -> Result<()> {
             rep.recovery.attempts, rep.recovery.resumed_from
         );
     }
+    Ok(())
+}
+
+/// `power-method --precision f64`: the host-side conditioning study. The
+/// distributed plan (and its wire formats) is f32-only, so the f64 path
+/// runs Algorithm 1 sequentially through the f64-generic run-kernels on
+/// an ill-conditioned planted-eigenpair instance — the regime where the
+/// f32 pipeline's ~1e-7 relative kernel error swamps the answer.
+fn cmd_power_method_f64(args: &Args, label: &str, n: usize, iters: usize) -> Result<()> {
+    let lambdas = [1.0e8f64, 2.0, 1.0];
+    println!(
+        "higher-order power method on {label} sized n={n}: f64 conditioning \
+         study (host-side sequential; planted spectrum {lambdas:?})"
+    );
+    let (tensor, cols) = SymTensorG::<f64>::odeco64(n, &lambdas, args.get_or("seed", 7u64));
+    let mut rng = Rng::new(args.get_or("seed", 7u64) + 1);
+    let mut x0 = cols[0].clone();
+    for v in x0.iter_mut() {
+        *v += 0.25 * rng.normal_f32() as f64;
+    }
+    let rep = apps::power_method_f64(&tensor, &x0, iters, 1e-12);
+    for (t, it) in rep.iters.iter().enumerate() {
+        println!(
+            "iter {:>3}: ||y|| = {:<14.6e} lambda = {:<14.8e} delta = {:.3e}",
+            t + 1,
+            it.norm,
+            it.lambda,
+            it.delta
+        );
+    }
+    let align: f64 = rep.x.iter().zip(&cols[0]).map(|(a, b)| a * b).sum::<f64>().abs();
+    println!(
+        "converged: lambda = {:.8e} (planted 1e8, abs err {:.2e}; an f32 \
+         pipeline is ~1e1 here), |<x, e1>| = {align:.12}",
+        rep.lambda,
+        (rep.lambda - 1.0e8).abs()
+    );
     Ok(())
 }
 

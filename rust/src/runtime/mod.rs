@@ -15,13 +15,16 @@
 //! says how to enable the backend. See rust/Cargo.toml for the recipe.
 
 mod native;
+pub mod simd;
 
 pub use native::{
     block_contract_multi, block_contract_native, block_contract_packed,
     block_contract_packed_multi, dense_sttsv_native, diag_block_contract_packed,
-    diag_block_contract_packed_multi, exec_block_runs, packed_ternary_mults, RunDesc,
+    diag_block_contract_packed_multi, exec_block_runs, exec_block_runs_elem,
+    packed_ternary_mults, RunDesc,
 };
-pub(crate) use native::{lanes_add, lanes_axpy};
+pub use simd::{avx2_available, set_simd_policy, simd_policy, SimdPolicy};
+pub(crate) use simd::{lanes_add, lanes_axpy};
 
 use crate::tensor::PackedBlockView;
 use anyhow::{anyhow, bail, ensure, Context, Result};

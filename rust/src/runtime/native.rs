@@ -56,207 +56,16 @@ pub fn block_contract_native(
     (ci, cj, ck)
 }
 
-/// Lane width of the elementwise panel helpers below: wide enough for one
-/// AVX2 f32 vector (or two NEON ones); the remainder runs scalar.
-const LANES: usize = 8;
-
-/// Elementwise helpers for the multi-RHS inner `l`-loops (and the
-/// coordinator's `axpy_panel`): each runs over `chunks_exact(LANES)` with a
-/// scalar remainder so LLVM emits full-width SIMD regardless of how `r`
-/// aligns, while performing exactly the same per-lane arithmetic (same
-/// association, no FMA contraction) as the scalar loops they replaced —
-/// results are **bitwise identical**, pinned by the kernel tests
-/// (`multi_rhs_matches_column_by_column`, `multi_rhs_r1_is_the_single_kernel`,
-/// `packed_offdiag_is_bitwise_the_dense_kernel`).
-///
-/// dst[l] += s · a[l]
-#[inline]
-pub(crate) fn lanes_axpy(dst: &mut [f32], s: f32, a: &[f32]) {
-    debug_assert_eq!(dst.len(), a.len());
-    let mut dc = dst.chunks_exact_mut(LANES);
-    let mut ac = a.chunks_exact(LANES);
-    for (d, a) in dc.by_ref().zip(ac.by_ref()) {
-        for (o, x) in d.iter_mut().zip(a) {
-            *o += s * x;
-        }
-    }
-    for (o, x) in dc.into_remainder().iter_mut().zip(ac.remainder()) {
-        *o += s * x;
-    }
-}
-
-/// dst[l] = a[l] · b[l]
-#[inline]
-fn lanes_set_mul(dst: &mut [f32], a: &[f32], b: &[f32]) {
-    debug_assert!(dst.len() == a.len() && dst.len() == b.len());
-    let mut dc = dst.chunks_exact_mut(LANES);
-    let mut ac = a.chunks_exact(LANES);
-    let mut bc = b.chunks_exact(LANES);
-    for ((d, a), b) in dc.by_ref().zip(ac.by_ref()).zip(bc.by_ref()) {
-        for ((o, x), y) in d.iter_mut().zip(a).zip(b) {
-            *o = x * y;
-        }
-    }
-    for ((o, x), y) in dc
-        .into_remainder()
-        .iter_mut()
-        .zip(ac.remainder())
-        .zip(bc.remainder())
-    {
-        *o = x * y;
-    }
-}
-
-/// dst[l] = (s · a[l]) · b[l]
-#[inline]
-fn lanes_set_mul_s(dst: &mut [f32], s: f32, a: &[f32], b: &[f32]) {
-    debug_assert!(dst.len() == a.len() && dst.len() == b.len());
-    let mut dc = dst.chunks_exact_mut(LANES);
-    let mut ac = a.chunks_exact(LANES);
-    let mut bc = b.chunks_exact(LANES);
-    for ((d, a), b) in dc.by_ref().zip(ac.by_ref()).zip(bc.by_ref()) {
-        for ((o, x), y) in d.iter_mut().zip(a).zip(b) {
-            *o = s * x * y;
-        }
-    }
-    for ((o, x), y) in dc
-        .into_remainder()
-        .iter_mut()
-        .zip(ac.remainder())
-        .zip(bc.remainder())
-    {
-        *o = s * x * y;
-    }
-}
-
-/// dst[l] += a[l] · b[l]
-#[inline]
-fn lanes_mul_add(dst: &mut [f32], a: &[f32], b: &[f32]) {
-    debug_assert!(dst.len() == a.len() && dst.len() == b.len());
-    let mut dc = dst.chunks_exact_mut(LANES);
-    let mut ac = a.chunks_exact(LANES);
-    let mut bc = b.chunks_exact(LANES);
-    for ((d, a), b) in dc.by_ref().zip(ac.by_ref()).zip(bc.by_ref()) {
-        for ((o, x), y) in d.iter_mut().zip(a).zip(b) {
-            *o += x * y;
-        }
-    }
-    for ((o, x), y) in dc
-        .into_remainder()
-        .iter_mut()
-        .zip(ac.remainder())
-        .zip(bc.remainder())
-    {
-        *o += x * y;
-    }
-}
-
-/// dst[l] += (s · a[l]) · b[l]
-#[inline]
-fn lanes_mul_add_s(dst: &mut [f32], s: f32, a: &[f32], b: &[f32]) {
-    debug_assert!(dst.len() == a.len() && dst.len() == b.len());
-    let mut dc = dst.chunks_exact_mut(LANES);
-    let mut ac = a.chunks_exact(LANES);
-    let mut bc = b.chunks_exact(LANES);
-    for ((d, a), b) in dc.by_ref().zip(ac.by_ref()).zip(bc.by_ref()) {
-        for ((o, x), y) in d.iter_mut().zip(a).zip(b) {
-            *o += s * x * y;
-        }
-    }
-    for ((o, x), y) in dc
-        .into_remainder()
-        .iter_mut()
-        .zip(ac.remainder())
-        .zip(bc.remainder())
-    {
-        *o += s * x * y;
-    }
-}
-
-/// dst[l] += (s · a[l]) · b[l] + (t · c[l]) · d[l] — the fused two-term
-/// update of the diagonal kernels; the single composite addition per lane
-/// is preserved (splitting it would change the rounding).
-#[inline]
-#[allow(clippy::too_many_arguments)]
-fn lanes_mul_add2_s(dst: &mut [f32], s: f32, a: &[f32], b: &[f32], t: f32, c: &[f32], d: &[f32]) {
-    debug_assert!(dst.len() == a.len() && dst.len() == b.len());
-    debug_assert!(dst.len() == c.len() && dst.len() == d.len());
-    let mut oc = dst.chunks_exact_mut(LANES);
-    let mut ac = a.chunks_exact(LANES);
-    let mut bc = b.chunks_exact(LANES);
-    let mut cc = c.chunks_exact(LANES);
-    let mut ec = d.chunks_exact(LANES);
-    for ((((o, a), b), c), e) in oc
-        .by_ref()
-        .zip(ac.by_ref())
-        .zip(bc.by_ref())
-        .zip(cc.by_ref())
-        .zip(ec.by_ref())
-    {
-        for ((((o, x), y), z), w) in o.iter_mut().zip(a).zip(b).zip(c).zip(e) {
-            *o += s * x * y + t * z * w;
-        }
-    }
-    for ((((o, x), y), z), w) in oc
-        .into_remainder()
-        .iter_mut()
-        .zip(ac.remainder())
-        .zip(bc.remainder())
-        .zip(cc.remainder())
-        .zip(ec.remainder())
-    {
-        *o += s * x * y + t * z * w;
-    }
-}
-
-/// dst[l] += a[l] · b[l] + (t · c[l]) · d[l]
-#[inline]
-fn lanes_mul_add2(dst: &mut [f32], a: &[f32], b: &[f32], t: f32, c: &[f32], d: &[f32]) {
-    debug_assert!(dst.len() == a.len() && dst.len() == b.len());
-    debug_assert!(dst.len() == c.len() && dst.len() == d.len());
-    let mut oc = dst.chunks_exact_mut(LANES);
-    let mut ac = a.chunks_exact(LANES);
-    let mut bc = b.chunks_exact(LANES);
-    let mut cc = c.chunks_exact(LANES);
-    let mut ec = d.chunks_exact(LANES);
-    for ((((o, a), b), c), e) in oc
-        .by_ref()
-        .zip(ac.by_ref())
-        .zip(bc.by_ref())
-        .zip(cc.by_ref())
-        .zip(ec.by_ref())
-    {
-        for ((((o, x), y), z), w) in o.iter_mut().zip(a).zip(b).zip(c).zip(e) {
-            *o += x * y + t * z * w;
-        }
-    }
-    for ((((o, x), y), z), w) in oc
-        .into_remainder()
-        .iter_mut()
-        .zip(ac.remainder())
-        .zip(bc.remainder())
-        .zip(cc.remainder())
-        .zip(ec.remainder())
-    {
-        *o += x * y + t * z * w;
-    }
-}
-
-/// dst[l] += a[l]
-#[inline]
-pub(crate) fn lanes_add(dst: &mut [f32], a: &[f32]) {
-    debug_assert_eq!(dst.len(), a.len());
-    let mut dc = dst.chunks_exact_mut(LANES);
-    let mut ac = a.chunks_exact(LANES);
-    for (d, a) in dc.by_ref().zip(ac.by_ref()) {
-        for (o, x) in d.iter_mut().zip(a) {
-            *o += x;
-        }
-    }
-    for (o, x) in dc.into_remainder().iter_mut().zip(ac.remainder()) {
-        *o += x;
-    }
-}
+// The elementwise `lanes_*` panel helpers (and their single documented
+// lane-width constant) live in `runtime::simd` — shared, generic over the
+// sealed Element scalar, and still bitwise-pinned by the kernel tests here
+// (`multi_rhs_matches_column_by_column`, `multi_rhs_r1_is_the_single_kernel`,
+// `packed_offdiag_is_bitwise_the_dense_kernel`).
+use super::simd::{
+    lanes_add, lanes_axpy, lanes_mul_add, lanes_mul_add2, lanes_mul_add2_s, lanes_mul_add_s,
+    lanes_set_mul, lanes_set_mul_s,
+};
+use crate::tensor::Element;
 
 /// Multi-RHS fused ternary block contraction: one sweep of the b³ block
 /// serves r right-hand-side columns.
@@ -722,6 +531,12 @@ impl RunDesc {
 /// dispatch: the scalar kernels at r = 1, the multi kernels at r ≥ 2
 /// (pinned by `compiled_runs_bitwise_match_packed_kernels`; cross-checked
 /// op-by-op in f32 in Python).
+///
+/// At r ∈ {4, 8} this additionally dispatches to the explicit AVX2
+/// microkernels in [`super::simd`] when the host supports them and the
+/// process-wide [`super::simd::SimdPolicy`] allows it (§Perf P14). Those
+/// variants are bitwise-equal too (no FMA contraction, lanes are
+/// independent r-columns), so the dispatch is unobservable in results.
 #[allow(clippy::too_many_arguments)]
 pub fn exec_block_runs(
     t: &[f32],
@@ -734,41 +549,78 @@ pub fn exec_block_runs(
     ck: &mut [f32],
     r: usize,
 ) {
+    #[cfg(target_arch = "x86_64")]
+    if super::simd::use_avx2() {
+        // SAFETY: use_avx2() verified the CPU feature at runtime; the
+        // kernels bounds-check every panel access via checked slicing.
+        match r {
+            4 => {
+                return unsafe {
+                    super::simd::exec_runs_avx2_r4(t, descs, us, vs, ws, ci, cj, ck)
+                }
+            }
+            8 => {
+                return unsafe {
+                    super::simd::exec_runs_avx2_r8(t, descs, us, vs, ws, ci, cj, ck)
+                }
+            }
+            _ => {}
+        }
+    }
+    exec_block_runs_elem::<f32>(t, descs, us, vs, ws, ci, cj, ck, r)
+}
+
+/// Element-generic run executor (no arch-specific variants): the portable
+/// path [`exec_block_runs`] routes f32 through, and the entry point the
+/// sequential f64 conditioning apps use (`apps::power_method_f64` replays
+/// a central block's run stream at r = 1 in full f64).
+#[allow(clippy::too_many_arguments)]
+pub fn exec_block_runs_elem<E: Element>(
+    t: &[E],
+    descs: &[RunDesc],
+    us: &[E],
+    vs: &[E],
+    ws: &[E],
+    ci: &mut [E],
+    cj: &mut [E],
+    ck: &mut [E],
+    r: usize,
+) {
     match r {
-        1 => exec_runs_tiled::<1>(t, descs, us, vs, ws, ci, cj, ck),
-        2 => exec_runs_tiled::<2>(t, descs, us, vs, ws, ci, cj, ck),
-        4 => exec_runs_tiled::<4>(t, descs, us, vs, ws, ci, cj, ck),
-        8 => exec_runs_tiled::<8>(t, descs, us, vs, ws, ci, cj, ck),
+        1 => exec_runs_tiled::<1, E>(t, descs, us, vs, ws, ci, cj, ck),
+        2 => exec_runs_tiled::<2, E>(t, descs, us, vs, ws, ci, cj, ck),
+        4 => exec_runs_tiled::<4, E>(t, descs, us, vs, ws, ci, cj, ck),
+        8 => exec_runs_tiled::<8, E>(t, descs, us, vs, ws, ci, cj, ck),
         _ => exec_runs_dyn(t, descs, us, vs, ws, ci, cj, ck, r),
     }
 }
 
 /// Register-tiled executor: R is a compile-time constant, so every inner
-/// `l`-loop unrolls over an `[f32; R]` accumulator tile. At R = 1 the
+/// `l`-loop unrolls over an `[E; R]` accumulator tile. At R = 1 the
 /// CentralUpper tail updates follow the scalar kernel's two-step adds;
 /// at R ≥ 2 the multi kernels' fused two-term updates — the only place
 /// the two kernel families' operation order differs.
 #[allow(clippy::needless_range_loop, clippy::too_many_arguments)]
-fn exec_runs_tiled<const R: usize>(
-    t: &[f32],
+fn exec_runs_tiled<const R: usize, E: Element>(
+    t: &[E],
     descs: &[RunDesc],
-    us: &[f32],
-    vs: &[f32],
-    ws: &[f32],
-    ci: &mut [f32],
-    cj: &mut [f32],
-    ck: &mut [f32],
+    us: &[E],
+    vs: &[E],
+    ws: &[E],
+    ci: &mut [E],
+    cj: &mut [E],
+    ck: &mut [E],
 ) {
-    let mut acc = [0.0f32; R];
+    let mut acc = [E::ZERO; R];
     for d in descs {
         let base = d.base as usize;
         let len = d.len as usize;
         let x = d.x as usize;
         let y = d.y as usize;
-        let u: [f32; R] = us[x * R..(x + 1) * R].try_into().unwrap();
-        let v: [f32; R] = vs[y * R..(y + 1) * R].try_into().unwrap();
+        let u: [E; R] = us[x * R..(x + 1) * R].try_into().unwrap();
+        let v: [E; R] = vs[y * R..(y + 1) * R].try_into().unwrap();
         let row = &t[base..base + len];
-        let mut m = [0.0f32; R];
+        let mut m = [E::ZERO; R];
         for (g, &a) in row.iter().enumerate() {
             let w = &ws[g * R..(g + 1) * R];
             for l in 0..R {
@@ -777,7 +629,7 @@ fn exec_runs_tiled<const R: usize>(
         }
         match d.cls {
             RunClass::OffDiag => {
-                let mut uv = [0.0f32; R];
+                let mut uv = [E::ZERO; R];
                 for l in 0..R {
                     uv[l] = u[l] * v[l];
                 }
@@ -796,9 +648,9 @@ fn exec_runs_tiled<const R: usize>(
                 }
             }
             RunClass::GghUpper => {
-                let mut uv = [0.0f32; R];
+                let mut uv = [E::ZERO; R];
                 for l in 0..R {
-                    uv[l] = 2.0 * u[l] * v[l];
+                    uv[l] = E::TWO * u[l] * v[l];
                 }
                 for (g, &a) in row.iter().enumerate() {
                     let c = &mut ck[g * R..(g + 1) * R];
@@ -815,7 +667,7 @@ fn exec_runs_tiled<const R: usize>(
                 }
             }
             RunClass::GghAxis => {
-                let mut uv = [0.0f32; R];
+                let mut uv = [E::ZERO; R];
                 for l in 0..R {
                     uv[l] = u[l] * v[l];
                 }
@@ -831,8 +683,8 @@ fn exec_runs_tiled<const R: usize>(
             }
             RunClass::Ghh => {
                 let ab = t[base + len];
-                let w_y: [f32; R] = ws[y * R..(y + 1) * R].try_into().unwrap();
-                let mut uv = [0.0f32; R];
+                let w_y: [E; R] = ws[y * R..(y + 1) * R].try_into().unwrap();
+                let mut uv = [E::ZERO; R];
                 for l in 0..R {
                     uv[l] = u[l] * v[l];
                 }
@@ -843,7 +695,7 @@ fn exec_runs_tiled<const R: usize>(
                     }
                 }
                 for l in 0..R {
-                    acc[l] += 2.0 * m[l] * v[l] + ab * v[l] * w_y[l];
+                    acc[l] += E::TWO * m[l] * v[l] + ab * v[l] * w_y[l];
                 }
                 let c = &mut cj[y * R..(y + 1) * R];
                 for l in 0..R {
@@ -852,10 +704,10 @@ fn exec_runs_tiled<const R: usize>(
             }
             RunClass::CentralUpper => {
                 let ab = t[base + len];
-                let w_y: [f32; R] = ws[y * R..(y + 1) * R].try_into().unwrap();
-                let mut uv = [0.0f32; R];
+                let w_y: [E; R] = ws[y * R..(y + 1) * R].try_into().unwrap();
+                let mut uv = [E::ZERO; R];
                 for l in 0..R {
-                    uv[l] = 2.0 * u[l] * v[l];
+                    uv[l] = E::TWO * u[l] * v[l];
                 }
                 for (g, &a) in row.iter().enumerate() {
                     let c = &mut ci[g * R..(g + 1) * R];
@@ -865,26 +717,26 @@ fn exec_runs_tiled<const R: usize>(
                 }
                 if R == 1 {
                     // scalar-kernel order: split two-step adds
-                    acc[0] += 2.0 * m[0] * v[0];
-                    ci[y] += 2.0 * m[0] * u[0];
+                    acc[0] += E::TWO * m[0] * v[0];
+                    ci[y] += E::TWO * m[0] * u[0];
                     acc[0] += ab * v[0] * w_y[0];
-                    ci[y] += 2.0 * ab * u[0] * w_y[0];
+                    ci[y] += E::TWO * ab * u[0] * w_y[0];
                 } else {
                     // multi-kernel order: fused two-term updates
-                    let t2 = 2.0 * ab;
+                    let t2 = E::TWO * ab;
                     for l in 0..R {
-                        acc[l] += 2.0 * m[l] * v[l] + ab * v[l] * w_y[l];
+                        acc[l] += E::TWO * m[l] * v[l] + ab * v[l] * w_y[l];
                     }
                     let c = &mut ci[y * R..(y + 1) * R];
                     for l in 0..R {
-                        c[l] += 2.0 * m[l] * u[l] + t2 * u[l] * w_y[l];
+                        c[l] += E::TWO * m[l] * u[l] + t2 * u[l] * w_y[l];
                     }
                 }
             }
             RunClass::CentralAxis => {
                 let aa = t[base + len];
-                let w_y: [f32; R] = ws[y * R..(y + 1) * R].try_into().unwrap();
-                let mut uv = [0.0f32; R];
+                let w_y: [E; R] = ws[y * R..(y + 1) * R].try_into().unwrap();
+                let mut uv = [E::ZERO; R];
                 for l in 0..R {
                     uv[l] = u[l] * v[l];
                 }
@@ -895,7 +747,7 @@ fn exec_runs_tiled<const R: usize>(
                     }
                 }
                 for l in 0..R {
-                    acc[l] += 2.0 * m[l] * v[l];
+                    acc[l] += E::TWO * m[l] * v[l];
                 }
                 for l in 0..R {
                     acc[l] += aa * v[l] * w_y[l];
@@ -907,7 +759,7 @@ fn exec_runs_tiled<const R: usize>(
             for l in 0..R {
                 c[l] += acc[l];
             }
-            acc = [0.0f32; R];
+            acc = [E::ZERO; R];
         }
     }
 }
@@ -918,20 +770,20 @@ fn exec_runs_tiled<const R: usize>(
 /// routes here (the tiled R = 1 path carries the scalar-kernel order), so
 /// this follows the multi kernels' fused updates throughout.
 #[allow(clippy::too_many_arguments)]
-fn exec_runs_dyn(
-    t: &[f32],
+fn exec_runs_dyn<E: Element>(
+    t: &[E],
     descs: &[RunDesc],
-    us: &[f32],
-    vs: &[f32],
-    ws: &[f32],
-    ci: &mut [f32],
-    cj: &mut [f32],
-    ck: &mut [f32],
+    us: &[E],
+    vs: &[E],
+    ws: &[E],
+    ci: &mut [E],
+    cj: &mut [E],
+    ck: &mut [E],
     r: usize,
 ) {
-    let mut acc = vec![0.0f32; r];
-    let mut m = vec![0.0f32; r];
-    let mut uv = vec![0.0f32; r];
+    let mut acc = vec![E::ZERO; r];
+    let mut m = vec![E::ZERO; r];
+    let mut uv = vec![E::ZERO; r];
     for d in descs {
         let base = d.base as usize;
         let len = d.len as usize;
@@ -940,7 +792,7 @@ fn exec_runs_dyn(
         let u = &us[x * r..(x + 1) * r];
         let v = &vs[y * r..(y + 1) * r];
         let row = &t[base..base + len];
-        m.fill(0.0);
+        m.fill(E::ZERO);
         for (g, &a) in row.iter().enumerate() {
             lanes_axpy(&mut m, a, &ws[g * r..(g + 1) * r]);
         }
@@ -954,7 +806,7 @@ fn exec_runs_dyn(
                 lanes_mul_add(&mut cj[y * r..(y + 1) * r], &m, u);
             }
             RunClass::GghUpper => {
-                lanes_set_mul_s(&mut uv, 2.0, u, v);
+                lanes_set_mul_s(&mut uv, E::TWO, u, v);
                 for (g, &a) in row.iter().enumerate() {
                     lanes_axpy(&mut ck[g * r..(g + 1) * r], a, &uv);
                 }
@@ -975,18 +827,18 @@ fn exec_runs_dyn(
                 for (g, &a) in row.iter().enumerate() {
                     lanes_axpy(&mut cj[g * r..(g + 1) * r], a, &uv);
                 }
-                lanes_mul_add2_s(&mut acc, 2.0, &m, v, ab, v, w_y);
+                lanes_mul_add2_s(&mut acc, E::TWO, &m, v, ab, v, w_y);
                 lanes_mul_add2(&mut cj[y * r..(y + 1) * r], &m, u, ab, u, w_y);
             }
             RunClass::CentralUpper => {
                 let ab = t[base + len];
                 let w_y = &ws[y * r..(y + 1) * r];
-                lanes_set_mul_s(&mut uv, 2.0, u, v);
+                lanes_set_mul_s(&mut uv, E::TWO, u, v);
                 for (g, &a) in row.iter().enumerate() {
                     lanes_axpy(&mut ci[g * r..(g + 1) * r], a, &uv);
                 }
-                lanes_mul_add2_s(&mut acc, 2.0, &m, v, ab, v, w_y);
-                lanes_mul_add2_s(&mut ci[y * r..(y + 1) * r], 2.0, &m, u, 2.0 * ab, u, w_y);
+                lanes_mul_add2_s(&mut acc, E::TWO, &m, v, ab, v, w_y);
+                lanes_mul_add2_s(&mut ci[y * r..(y + 1) * r], E::TWO, &m, u, E::TWO * ab, u, w_y);
             }
             RunClass::CentralAxis => {
                 let aa = t[base + len];
@@ -995,13 +847,13 @@ fn exec_runs_dyn(
                 for (g, &a) in row.iter().enumerate() {
                     lanes_axpy(&mut ci[g * r..(g + 1) * r], a, &uv);
                 }
-                lanes_mul_add_s(&mut acc, 2.0, &m, v);
+                lanes_mul_add_s(&mut acc, E::TWO, &m, v);
                 lanes_mul_add_s(&mut acc, aa, v, w_y);
             }
         }
         if d.flush {
             lanes_add(&mut ci[x * r..(x + 1) * r], &acc);
-            acc.fill(0.0);
+            acc.fill(E::ZERO);
         }
     }
 }

@@ -1,0 +1,702 @@
+//! SIMD lane helpers and arch-dispatched run-kernel variants (§Perf P14).
+//!
+//! Two layers live here:
+//!
+//! 1. **Portable lane helpers** (`lanes_*`): the elementwise inner-loop
+//!    primitives every multi-RHS kernel and the coordinator's `axpy_panel`
+//!    share, generic over the sealed [`Element`] scalar. Each runs over
+//!    `chunks_exact(LANES)` with a scalar remainder so LLVM emits
+//!    full-width SIMD regardless of how `r` aligns, while performing
+//!    exactly the same per-lane arithmetic (same association, no FMA
+//!    contraction) as the scalar loops they replaced — results are
+//!    **bitwise identical**, pinned by the kernel tests.
+//! 2. **Explicit AVX2 microkernels** for the register-tiled run executors
+//!    at r ∈ {4, 8} (`core::arch::x86_64` intrinsics, runtime-detected via
+//!    `is_x86_feature_detected!`). These use separate `_mm*_mul_ps` +
+//!    `_mm*_add_ps` — deliberately **not** fused FMA — so every lane
+//!    performs the identical correctly-rounded mul-then-add sequence as
+//!    the scalar tiled executor and the outputs stay bitwise equal
+//!    (asserted in this module's tests). The tiled kernels vectorize
+//!    across independent r-columns, so no reduction is reassociated.
+//!
+//! Dispatch policy ([`SimdPolicy`], CLI `--simd auto|scalar`) is a
+//! **runtime global**, not an `ExecOpts` field: because the AVX2 kernels
+//! are bitwise-equal to the scalar path, results are policy-invariant —
+//! the policy is a host-machine execution detail (like thread pinning),
+//! and keeping it out of `ExecOpts` keeps it out of the serving layer's
+//! plan-cache key, where it would only fragment the cache.
+//!
+//! (The accelerator guides shipped with this repo cover
+//! Trainium/CUDA/Pallas/Triton only; the AVX2 variants below follow the
+//! same discipline those guides prescribe — pin the contraction order,
+//! prove bitwise parity against the reference kernel.)
+
+use crate::tensor::Element;
+
+/// The single lane-width constant for the portable helpers: 8 f32 words —
+/// one AVX2 256-bit vector (or two NEON 128-bit ones). For f64 the same
+/// count spans two 256-bit vectors; LLVM still emits full-width ops. The
+/// remainder of every helper runs scalar, so LANES only affects codegen,
+/// never results.
+pub(crate) const LANES: usize = 8;
+
+/// dst[l] += s · a[l]
+#[inline]
+pub(crate) fn lanes_axpy<E: Element>(dst: &mut [E], s: E, a: &[E]) {
+    debug_assert_eq!(dst.len(), a.len());
+    let mut dc = dst.chunks_exact_mut(LANES);
+    let mut ac = a.chunks_exact(LANES);
+    for (d, a) in dc.by_ref().zip(ac.by_ref()) {
+        for (o, x) in d.iter_mut().zip(a) {
+            *o += s * *x;
+        }
+    }
+    for (o, x) in dc.into_remainder().iter_mut().zip(ac.remainder()) {
+        *o += s * *x;
+    }
+}
+
+/// dst[l] = a[l] · b[l]
+#[inline]
+pub(crate) fn lanes_set_mul<E: Element>(dst: &mut [E], a: &[E], b: &[E]) {
+    debug_assert!(dst.len() == a.len() && dst.len() == b.len());
+    let mut dc = dst.chunks_exact_mut(LANES);
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for ((d, a), b) in dc.by_ref().zip(ac.by_ref()).zip(bc.by_ref()) {
+        for ((o, x), y) in d.iter_mut().zip(a).zip(b) {
+            *o = *x * *y;
+        }
+    }
+    for ((o, x), y) in dc
+        .into_remainder()
+        .iter_mut()
+        .zip(ac.remainder())
+        .zip(bc.remainder())
+    {
+        *o = *x * *y;
+    }
+}
+
+/// dst[l] = (s · a[l]) · b[l]
+#[inline]
+pub(crate) fn lanes_set_mul_s<E: Element>(dst: &mut [E], s: E, a: &[E], b: &[E]) {
+    debug_assert!(dst.len() == a.len() && dst.len() == b.len());
+    let mut dc = dst.chunks_exact_mut(LANES);
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for ((d, a), b) in dc.by_ref().zip(ac.by_ref()).zip(bc.by_ref()) {
+        for ((o, x), y) in d.iter_mut().zip(a).zip(b) {
+            *o = s * *x * *y;
+        }
+    }
+    for ((o, x), y) in dc
+        .into_remainder()
+        .iter_mut()
+        .zip(ac.remainder())
+        .zip(bc.remainder())
+    {
+        *o = s * *x * *y;
+    }
+}
+
+/// dst[l] += a[l] · b[l]
+#[inline]
+pub(crate) fn lanes_mul_add<E: Element>(dst: &mut [E], a: &[E], b: &[E]) {
+    debug_assert!(dst.len() == a.len() && dst.len() == b.len());
+    let mut dc = dst.chunks_exact_mut(LANES);
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for ((d, a), b) in dc.by_ref().zip(ac.by_ref()).zip(bc.by_ref()) {
+        for ((o, x), y) in d.iter_mut().zip(a).zip(b) {
+            *o += *x * *y;
+        }
+    }
+    for ((o, x), y) in dc
+        .into_remainder()
+        .iter_mut()
+        .zip(ac.remainder())
+        .zip(bc.remainder())
+    {
+        *o += *x * *y;
+    }
+}
+
+/// dst[l] += (s · a[l]) · b[l]
+#[inline]
+pub(crate) fn lanes_mul_add_s<E: Element>(dst: &mut [E], s: E, a: &[E], b: &[E]) {
+    debug_assert!(dst.len() == a.len() && dst.len() == b.len());
+    let mut dc = dst.chunks_exact_mut(LANES);
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    for ((d, a), b) in dc.by_ref().zip(ac.by_ref()).zip(bc.by_ref()) {
+        for ((o, x), y) in d.iter_mut().zip(a).zip(b) {
+            *o += s * *x * *y;
+        }
+    }
+    for ((o, x), y) in dc
+        .into_remainder()
+        .iter_mut()
+        .zip(ac.remainder())
+        .zip(bc.remainder())
+    {
+        *o += s * *x * *y;
+    }
+}
+
+/// dst[l] += (s · a[l]) · b[l] + (t · c[l]) · d[l] — the fused two-term
+/// update of the diagonal kernels; the single composite addition per lane
+/// is preserved (splitting it would change the rounding).
+#[inline]
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn lanes_mul_add2_s<E: Element>(
+    dst: &mut [E],
+    s: E,
+    a: &[E],
+    b: &[E],
+    t: E,
+    c: &[E],
+    d: &[E],
+) {
+    debug_assert!(dst.len() == a.len() && dst.len() == b.len());
+    debug_assert!(dst.len() == c.len() && dst.len() == d.len());
+    let mut oc = dst.chunks_exact_mut(LANES);
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    let mut cc = c.chunks_exact(LANES);
+    let mut ec = d.chunks_exact(LANES);
+    for ((((o, a), b), c), e) in oc
+        .by_ref()
+        .zip(ac.by_ref())
+        .zip(bc.by_ref())
+        .zip(cc.by_ref())
+        .zip(ec.by_ref())
+    {
+        for ((((o, x), y), z), w) in o.iter_mut().zip(a).zip(b).zip(c).zip(e) {
+            *o += s * *x * *y + t * *z * *w;
+        }
+    }
+    for ((((o, x), y), z), w) in oc
+        .into_remainder()
+        .iter_mut()
+        .zip(ac.remainder())
+        .zip(bc.remainder())
+        .zip(cc.remainder())
+        .zip(ec.remainder())
+    {
+        *o += s * *x * *y + t * *z * *w;
+    }
+}
+
+/// dst[l] += a[l] · b[l] + (t · c[l]) · d[l]
+#[inline]
+pub(crate) fn lanes_mul_add2<E: Element>(dst: &mut [E], a: &[E], b: &[E], t: E, c: &[E], d: &[E]) {
+    debug_assert!(dst.len() == a.len() && dst.len() == b.len());
+    debug_assert!(dst.len() == c.len() && dst.len() == d.len());
+    let mut oc = dst.chunks_exact_mut(LANES);
+    let mut ac = a.chunks_exact(LANES);
+    let mut bc = b.chunks_exact(LANES);
+    let mut cc = c.chunks_exact(LANES);
+    let mut ec = d.chunks_exact(LANES);
+    for ((((o, a), b), c), e) in oc
+        .by_ref()
+        .zip(ac.by_ref())
+        .zip(bc.by_ref())
+        .zip(cc.by_ref())
+        .zip(ec.by_ref())
+    {
+        for ((((o, x), y), z), w) in o.iter_mut().zip(a).zip(b).zip(c).zip(e) {
+            *o += *x * *y + t * *z * *w;
+        }
+    }
+    for ((((o, x), y), z), w) in oc
+        .into_remainder()
+        .iter_mut()
+        .zip(ac.remainder())
+        .zip(bc.remainder())
+        .zip(cc.remainder())
+        .zip(ec.remainder())
+    {
+        *o += *x * *y + t * *z * *w;
+    }
+}
+
+/// dst[l] += a[l]
+#[inline]
+pub(crate) fn lanes_add<E: Element>(dst: &mut [E], a: &[E]) {
+    debug_assert_eq!(dst.len(), a.len());
+    let mut dc = dst.chunks_exact_mut(LANES);
+    let mut ac = a.chunks_exact(LANES);
+    for (d, a) in dc.by_ref().zip(ac.by_ref()) {
+        for (o, x) in d.iter_mut().zip(a) {
+            *o += *x;
+        }
+    }
+    for (o, x) in dc.into_remainder().iter_mut().zip(ac.remainder()) {
+        *o += *x;
+    }
+}
+
+/// Which run-kernel variants [`crate::runtime::exec_block_runs`] may
+/// dispatch (CLI `--simd auto|scalar`). Process-global — see the module
+/// docs for why this is not an `ExecOpts` field.
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
+pub enum SimdPolicy {
+    /// Use the explicit AVX2 microkernels when the CPU supports them
+    /// (runtime-detected); fall back to the portable tiled path otherwise.
+    #[default]
+    Auto,
+    /// Always the portable tiled path (baseline for the E18 bench and a
+    /// belt-and-braces escape hatch — results are bitwise equal either
+    /// way).
+    Scalar,
+}
+
+impl std::str::FromStr for SimdPolicy {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "auto" => Ok(SimdPolicy::Auto),
+            "scalar" => Ok(SimdPolicy::Scalar),
+            other => anyhow::bail!("unknown simd policy '{other}' (expected auto|scalar)"),
+        }
+    }
+}
+
+impl std::fmt::Display for SimdPolicy {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            SimdPolicy::Auto => "auto",
+            SimdPolicy::Scalar => "scalar",
+        })
+    }
+}
+
+static POLICY: std::sync::atomic::AtomicU8 = std::sync::atomic::AtomicU8::new(0);
+
+/// Set the process-wide SIMD dispatch policy. Safe to call at any time
+/// (kernel variants are bitwise-equal, so in-flight sweeps are unaffected).
+pub fn set_simd_policy(p: SimdPolicy) {
+    POLICY.store(p as u8, std::sync::atomic::Ordering::Relaxed);
+}
+
+/// The current process-wide SIMD dispatch policy.
+pub fn simd_policy() -> SimdPolicy {
+    match POLICY.load(std::sync::atomic::Ordering::Relaxed) {
+        1 => SimdPolicy::Scalar,
+        _ => SimdPolicy::Auto,
+    }
+}
+
+/// Whether this host can run the AVX2 microkernels (one-time runtime
+/// detection; always false off x86-64). Independent of the policy —
+/// `avx2_available() && simd_policy() == Auto` is what dispatch checks.
+pub fn avx2_available() -> bool {
+    #[cfg(target_arch = "x86_64")]
+    {
+        static DETECTED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+        *DETECTED.get_or_init(|| std::is_x86_feature_detected!("avx2"))
+    }
+    #[cfg(not(target_arch = "x86_64"))]
+    {
+        false
+    }
+}
+
+/// Dispatch predicate for the f32 run executor.
+#[inline]
+pub(crate) fn use_avx2() -> bool {
+    simd_policy() == SimdPolicy::Auto && avx2_available()
+}
+
+#[cfg(target_arch = "x86_64")]
+pub(crate) use avx2::{exec_runs_avx2_r4, exec_runs_avx2_r8};
+
+/// Explicit AVX2 variants of the register-tiled run executors
+/// (`native::exec_runs_tiled`) at r = 8 (one 256-bit vector per panel row)
+/// and r = 4 (one 128-bit vector). Each lane is an independent r-column
+/// accumulation chain — vectorizing across columns reassociates nothing —
+/// and every update uses separate mul + add intrinsics (**no FMA**), so
+/// outputs are bitwise equal to the portable path (pinned by
+/// `avx2_kernels_bitwise_match_scalar_tiled` below; FMA would contract
+/// `a*b + c` to a single rounding and break the pin, which is why the
+/// fused intrinsics are deliberately not used).
+#[cfg(target_arch = "x86_64")]
+mod avx2 {
+    use super::super::native::RunDesc;
+    use crate::tensor::RunClass;
+    use std::arch::x86_64::*;
+
+    /// r = 8 run-stream executor. Safety: caller must ensure the CPU
+    /// supports AVX2 (see [`super::use_avx2`]); panel/output slices must be
+    /// (b, 8) row-major with every desc's x/y/base/len in range — the same
+    /// contract as the portable executor, enforced here by checked slicing
+    /// before each load/store.
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) unsafe fn exec_runs_avx2_r8(
+        t: &[f32],
+        descs: &[RunDesc],
+        us: &[f32],
+        vs: &[f32],
+        ws: &[f32],
+        ci: &mut [f32],
+        cj: &mut [f32],
+        ck: &mut [f32],
+    ) {
+        const R: usize = 8;
+        #[inline(always)]
+        unsafe fn ld(s: &[f32], row: usize) -> __m256 {
+            _mm256_loadu_ps(s[row * R..row * R + R].as_ptr())
+        }
+        #[inline(always)]
+        unsafe fn acc_into(s: &mut [f32], row: usize, v: __m256) {
+            let p = s[row * R..row * R + R].as_mut_ptr();
+            _mm256_storeu_ps(p, _mm256_add_ps(_mm256_loadu_ps(p), v));
+        }
+        let two = _mm256_set1_ps(2.0);
+        let mut acc = _mm256_setzero_ps();
+        for d in descs {
+            let base = d.base as usize;
+            let len = d.len as usize;
+            let x = d.x as usize;
+            let y = d.y as usize;
+            let u = ld(us, x);
+            let v = ld(vs, y);
+            let row = &t[base..base + len];
+            // m[l] += a · w[l], one mul + one add per lane — the scalar
+            // tiled loop verbatim.
+            let mut m = _mm256_setzero_ps();
+            for (g, &a) in row.iter().enumerate() {
+                m = _mm256_add_ps(m, _mm256_mul_ps(_mm256_set1_ps(a), ld(ws, g)));
+            }
+            match d.cls {
+                RunClass::OffDiag => {
+                    let uv = _mm256_mul_ps(u, v);
+                    for (g, &a) in row.iter().enumerate() {
+                        acc_into(ck, g, _mm256_mul_ps(_mm256_set1_ps(a), uv));
+                    }
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(m, v));
+                    acc_into(cj, y, _mm256_mul_ps(m, u));
+                }
+                RunClass::GghUpper => {
+                    let uv = _mm256_mul_ps(_mm256_mul_ps(two, u), v);
+                    for (g, &a) in row.iter().enumerate() {
+                        acc_into(ck, g, _mm256_mul_ps(_mm256_set1_ps(a), uv));
+                    }
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(m, v));
+                    acc_into(ci, y, _mm256_mul_ps(m, u));
+                }
+                RunClass::GghAxis => {
+                    let uv = _mm256_mul_ps(u, v);
+                    for (g, &a) in row.iter().enumerate() {
+                        acc_into(ck, g, _mm256_mul_ps(_mm256_set1_ps(a), uv));
+                    }
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(m, u));
+                }
+                RunClass::Ghh => {
+                    let ab = _mm256_set1_ps(t[base + len]);
+                    let wy = ld(ws, y);
+                    let uv = _mm256_mul_ps(u, v);
+                    for (g, &a) in row.iter().enumerate() {
+                        acc_into(cj, g, _mm256_mul_ps(_mm256_set1_ps(a), uv));
+                    }
+                    acc = _mm256_add_ps(
+                        acc,
+                        _mm256_add_ps(
+                            _mm256_mul_ps(_mm256_mul_ps(two, m), v),
+                            _mm256_mul_ps(_mm256_mul_ps(ab, v), wy),
+                        ),
+                    );
+                    acc_into(
+                        cj,
+                        y,
+                        _mm256_add_ps(
+                            _mm256_mul_ps(m, u),
+                            _mm256_mul_ps(_mm256_mul_ps(ab, u), wy),
+                        ),
+                    );
+                }
+                RunClass::CentralUpper => {
+                    let ab_s = t[base + len];
+                    let ab = _mm256_set1_ps(ab_s);
+                    // scalar path computes t2 = 2.0 * ab once in f32
+                    let t2 = _mm256_set1_ps(2.0 * ab_s);
+                    let wy = ld(ws, y);
+                    let uv = _mm256_mul_ps(_mm256_mul_ps(two, u), v);
+                    for (g, &a) in row.iter().enumerate() {
+                        acc_into(ci, g, _mm256_mul_ps(_mm256_set1_ps(a), uv));
+                    }
+                    acc = _mm256_add_ps(
+                        acc,
+                        _mm256_add_ps(
+                            _mm256_mul_ps(_mm256_mul_ps(two, m), v),
+                            _mm256_mul_ps(_mm256_mul_ps(ab, v), wy),
+                        ),
+                    );
+                    acc_into(
+                        ci,
+                        y,
+                        _mm256_add_ps(
+                            _mm256_mul_ps(_mm256_mul_ps(two, m), u),
+                            _mm256_mul_ps(_mm256_mul_ps(t2, u), wy),
+                        ),
+                    );
+                }
+                RunClass::CentralAxis => {
+                    let aa = _mm256_set1_ps(t[base + len]);
+                    let wy = ld(ws, y);
+                    let uv = _mm256_mul_ps(u, v);
+                    for (g, &a) in row.iter().enumerate() {
+                        acc_into(ci, g, _mm256_mul_ps(_mm256_set1_ps(a), uv));
+                    }
+                    // two separate accumulator adds, as in the scalar path
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_mul_ps(two, m), v));
+                    acc = _mm256_add_ps(acc, _mm256_mul_ps(_mm256_mul_ps(aa, v), wy));
+                }
+            }
+            if d.flush {
+                acc_into(ci, x, acc);
+                acc = _mm256_setzero_ps();
+            }
+        }
+    }
+
+    /// r = 4 run-stream executor on 128-bit lanes. Same structure and
+    /// safety contract as [`exec_runs_avx2_r8`].
+    #[target_feature(enable = "avx2")]
+    #[allow(clippy::too_many_arguments)]
+    pub(crate) unsafe fn exec_runs_avx2_r4(
+        t: &[f32],
+        descs: &[RunDesc],
+        us: &[f32],
+        vs: &[f32],
+        ws: &[f32],
+        ci: &mut [f32],
+        cj: &mut [f32],
+        ck: &mut [f32],
+    ) {
+        const R: usize = 4;
+        #[inline(always)]
+        unsafe fn ld(s: &[f32], row: usize) -> __m128 {
+            _mm_loadu_ps(s[row * R..row * R + R].as_ptr())
+        }
+        #[inline(always)]
+        unsafe fn acc_into(s: &mut [f32], row: usize, v: __m128) {
+            let p = s[row * R..row * R + R].as_mut_ptr();
+            _mm_storeu_ps(p, _mm_add_ps(_mm_loadu_ps(p), v));
+        }
+        let two = _mm_set1_ps(2.0);
+        let mut acc = _mm_setzero_ps();
+        for d in descs {
+            let base = d.base as usize;
+            let len = d.len as usize;
+            let x = d.x as usize;
+            let y = d.y as usize;
+            let u = ld(us, x);
+            let v = ld(vs, y);
+            let row = &t[base..base + len];
+            let mut m = _mm_setzero_ps();
+            for (g, &a) in row.iter().enumerate() {
+                m = _mm_add_ps(m, _mm_mul_ps(_mm_set1_ps(a), ld(ws, g)));
+            }
+            match d.cls {
+                RunClass::OffDiag => {
+                    let uv = _mm_mul_ps(u, v);
+                    for (g, &a) in row.iter().enumerate() {
+                        acc_into(ck, g, _mm_mul_ps(_mm_set1_ps(a), uv));
+                    }
+                    acc = _mm_add_ps(acc, _mm_mul_ps(m, v));
+                    acc_into(cj, y, _mm_mul_ps(m, u));
+                }
+                RunClass::GghUpper => {
+                    let uv = _mm_mul_ps(_mm_mul_ps(two, u), v);
+                    for (g, &a) in row.iter().enumerate() {
+                        acc_into(ck, g, _mm_mul_ps(_mm_set1_ps(a), uv));
+                    }
+                    acc = _mm_add_ps(acc, _mm_mul_ps(m, v));
+                    acc_into(ci, y, _mm_mul_ps(m, u));
+                }
+                RunClass::GghAxis => {
+                    let uv = _mm_mul_ps(u, v);
+                    for (g, &a) in row.iter().enumerate() {
+                        acc_into(ck, g, _mm_mul_ps(_mm_set1_ps(a), uv));
+                    }
+                    acc = _mm_add_ps(acc, _mm_mul_ps(m, u));
+                }
+                RunClass::Ghh => {
+                    let ab = _mm_set1_ps(t[base + len]);
+                    let wy = ld(ws, y);
+                    let uv = _mm_mul_ps(u, v);
+                    for (g, &a) in row.iter().enumerate() {
+                        acc_into(cj, g, _mm_mul_ps(_mm_set1_ps(a), uv));
+                    }
+                    acc = _mm_add_ps(
+                        acc,
+                        _mm_add_ps(
+                            _mm_mul_ps(_mm_mul_ps(two, m), v),
+                            _mm_mul_ps(_mm_mul_ps(ab, v), wy),
+                        ),
+                    );
+                    acc_into(
+                        cj,
+                        y,
+                        _mm_add_ps(_mm_mul_ps(m, u), _mm_mul_ps(_mm_mul_ps(ab, u), wy)),
+                    );
+                }
+                RunClass::CentralUpper => {
+                    let ab_s = t[base + len];
+                    let ab = _mm_set1_ps(ab_s);
+                    let t2 = _mm_set1_ps(2.0 * ab_s);
+                    let wy = ld(ws, y);
+                    let uv = _mm_mul_ps(_mm_mul_ps(two, u), v);
+                    for (g, &a) in row.iter().enumerate() {
+                        acc_into(ci, g, _mm_mul_ps(_mm_set1_ps(a), uv));
+                    }
+                    acc = _mm_add_ps(
+                        acc,
+                        _mm_add_ps(
+                            _mm_mul_ps(_mm_mul_ps(two, m), v),
+                            _mm_mul_ps(_mm_mul_ps(ab, v), wy),
+                        ),
+                    );
+                    acc_into(
+                        ci,
+                        y,
+                        _mm_add_ps(
+                            _mm_mul_ps(_mm_mul_ps(two, m), u),
+                            _mm_mul_ps(_mm_mul_ps(t2, u), wy),
+                        ),
+                    );
+                }
+                RunClass::CentralAxis => {
+                    let aa = _mm_set1_ps(t[base + len]);
+                    let wy = ld(ws, y);
+                    let uv = _mm_mul_ps(u, v);
+                    for (g, &a) in row.iter().enumerate() {
+                        acc_into(ci, g, _mm_mul_ps(_mm_set1_ps(a), uv));
+                    }
+                    acc = _mm_add_ps(acc, _mm_mul_ps(_mm_mul_ps(two, m), v));
+                    acc = _mm_add_ps(acc, _mm_mul_ps(_mm_mul_ps(aa, v), wy));
+                }
+            }
+            if d.flush {
+                acc_into(ci, x, acc);
+                acc = _mm_setzero_ps();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn simd_policy_parses_displays_and_defaults() {
+        assert_eq!("auto".parse::<SimdPolicy>().unwrap(), SimdPolicy::Auto);
+        assert_eq!("scalar".parse::<SimdPolicy>().unwrap(), SimdPolicy::Scalar);
+        assert!("avx512".parse::<SimdPolicy>().is_err());
+        assert_eq!(SimdPolicy::default(), SimdPolicy::Auto);
+        assert_eq!(SimdPolicy::Scalar.to_string(), "scalar");
+    }
+
+    #[test]
+    fn policy_roundtrips_and_gates_dispatch() {
+        // (Global state: restore Auto before returning. Concurrent tests
+        // are safe because both kernel variants are bitwise-equal.)
+        set_simd_policy(SimdPolicy::Scalar);
+        assert_eq!(simd_policy(), SimdPolicy::Scalar);
+        assert!(!use_avx2(), "scalar policy must veto AVX2 dispatch");
+        set_simd_policy(SimdPolicy::Auto);
+        assert_eq!(simd_policy(), SimdPolicy::Auto);
+        assert_eq!(use_avx2(), avx2_available());
+    }
+
+    /// The load-bearing pin for §Perf P14: the AVX2 executors reproduce the
+    /// portable tiled executor BITWISE on every run class at r ∈ {4, 8}.
+    /// CI runs this twice — default flags and -C target-cpu=native — so a
+    /// compiler that starts contracting the portable path into FMA (which
+    /// would break parity) is caught.
+    #[cfg(target_arch = "x86_64")]
+    #[test]
+    fn avx2_kernels_bitwise_match_scalar_tiled() {
+        use super::super::native::{exec_block_runs, RunDesc};
+        use crate::tensor::{PackedBlockView, SymTensor};
+        use crate::util::rng::Rng;
+        if !avx2_available() {
+            eprintln!("skipping: host has no AVX2");
+            return;
+        }
+        let (m, b) = (4usize, 6usize);
+        let t = SymTensor::random(m * b, 77);
+        let data = t.packed_data();
+        let mut rng = Rng::new(78);
+        for blk in [(3usize, 2usize, 0usize), (3, 3, 1), (3, 1, 1), (2, 2, 2)] {
+            let view = PackedBlockView::new(blk.0, blk.1, blk.2, b);
+            let mut descs = Vec::new();
+            view.for_each_run(|run| descs.push(RunDesc::compile(&run)));
+            for r in [4usize, 8] {
+                let us = rng.normal_vec(b * r);
+                let vs = if blk.0 == blk.1 { us.clone() } else { rng.normal_vec(b * r) };
+                let ws = if blk.1 == blk.2 { vs.clone() } else { rng.normal_vec(b * r) };
+                // portable tiled path, forced via the policy gate
+                set_simd_policy(SimdPolicy::Scalar);
+                let mut si = vec![0.0f32; b * r];
+                let mut sj = vec![0.0f32; b * r];
+                let mut sk = vec![0.0f32; b * r];
+                exec_block_runs(data, &descs, &us, &vs, &ws, &mut si, &mut sj, &mut sk, r);
+                set_simd_policy(SimdPolicy::Auto);
+                // explicit AVX2 kernels, called directly
+                let mut ai = vec![0.0f32; b * r];
+                let mut aj = vec![0.0f32; b * r];
+                let mut ak = vec![0.0f32; b * r];
+                unsafe {
+                    match r {
+                        4 => exec_runs_avx2_r4(
+                            data, &descs, &us, &vs, &ws, &mut ai, &mut aj, &mut ak,
+                        ),
+                        _ => exec_runs_avx2_r8(
+                            data, &descs, &us, &vs, &ws, &mut ai, &mut aj, &mut ak,
+                        ),
+                    }
+                }
+                let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<_>>();
+                assert_eq!(bits(&si), bits(&ai), "{blk:?} r={r} ci");
+                assert_eq!(bits(&sj), bits(&aj), "{blk:?} r={r} cj");
+                assert_eq!(bits(&sk), bits(&ak), "{blk:?} r={r} ck");
+            }
+        }
+    }
+
+    /// The public dispatcher gives identical (bitwise) results under both
+    /// policies — dispatch can never change answers, only speed.
+    #[test]
+    fn dispatcher_is_policy_invariant() {
+        use super::super::native::{exec_block_runs, RunDesc};
+        use crate::tensor::{PackedBlockView, SymTensor};
+        use crate::util::rng::Rng;
+        let b = 5usize;
+        let t = SymTensor::random(4 * b, 79);
+        let view = PackedBlockView::new(3, 2, 0, b);
+        let mut descs = Vec::new();
+        view.for_each_run(|run| descs.push(RunDesc::compile(&run)));
+        let mut rng = Rng::new(80);
+        for r in [1usize, 3, 4, 8] {
+            let us = rng.normal_vec(b * r);
+            let vs = rng.normal_vec(b * r);
+            let ws = rng.normal_vec(b * r);
+            let mut out = Vec::new();
+            for policy in [SimdPolicy::Auto, SimdPolicy::Scalar] {
+                set_simd_policy(policy);
+                let mut ci = vec![0.0f32; b * r];
+                let mut cj = vec![0.0f32; b * r];
+                let mut ck = vec![0.0f32; b * r];
+                exec_block_runs(t.packed_data(), &descs, &us, &vs, &ws, &mut ci, &mut cj, &mut ck, r);
+                out.push((ci, cj, ck));
+            }
+            set_simd_policy(SimdPolicy::Auto);
+            assert_eq!(out[0], out[1], "r={r}");
+        }
+    }
+}

@@ -6,6 +6,12 @@
 //! point-to-point vs All-to-All trade-off can be quantified: p2p moves
 //! fewer words **and** uses fewer steps (q³/2+3q²/2−1 < P−1 for q ≥ 2),
 //! so it wins on both axes — the ablation bench demonstrates this.
+//!
+//! β is priced **per byte**, not per 4-byte word (§Perf P14): with the
+//! bf16 wire format a word travels as 2 bytes, so pricing the byte
+//! counters keeps predictions honest while the paper-model word counts
+//! stay untouched. At the f32 wire the two accountings coincide
+//! (`bytes = 4·words`).
 
 use super::CommStats;
 
@@ -14,17 +20,19 @@ use super::CommStats;
 pub struct CostModel {
     /// Per-message latency (seconds).
     pub alpha: f64,
-    /// Per-word transfer time (seconds/word).
+    /// Per-byte transfer time (seconds/byte). The simulator's
+    /// [`CommStats`] byte counters already reflect the run's wire format,
+    /// so this single constant prices f32 and bf16 traffic alike.
     pub beta: f64,
 }
 
 impl CostModel {
     /// A typical HPC-interconnect operating point: ~1 µs latency,
-    /// ~10 GB/s per-link bandwidth at 4-byte words.
+    /// ~10 GB/s per-link bandwidth (β = 0.1 ns/byte).
     pub fn typical() -> CostModel {
         CostModel {
             alpha: 1e-6,
-            beta: 4.0 / 10e9,
+            beta: 1.0 / 10e9,
         }
     }
 
@@ -32,14 +40,15 @@ impl CostModel {
     /// schedule: since sends/receives within a step overlap (the model
     /// allows one of each concurrently), the time is
     /// `steps·α + max(sent, recv)·β` — latency per step plus the
-    /// bandwidth-bound word stream.
+    /// bandwidth-bound byte stream.
     pub fn time(&self, stats: &CommStats, steps: usize) -> f64 {
-        self.alpha * steps as f64 + self.beta * stats.sent_words.max(stats.recv_words) as f64
+        self.alpha * steps as f64 + self.bandwidth_time(stats)
     }
 
-    /// Bandwidth-only component (the quantity Theorem 1 bounds).
+    /// Bandwidth-only component (the quantity Theorem 1 bounds, priced at
+    /// the measured wire bytes).
     pub fn bandwidth_time(&self, stats: &CommStats) -> f64 {
-        self.beta * stats.sent_words.max(stats.recv_words) as f64
+        self.beta * stats.sent_bytes.max(stats.recv_bytes) as f64
     }
 
     /// Latency-only component.
@@ -56,6 +65,8 @@ mod tests {
         CommStats {
             sent_words: sent,
             recv_words: recv,
+            sent_bytes: 4 * sent,
+            recv_bytes: 4 * recv,
             sent_msgs: 0,
             recv_msgs: 0,
         }
@@ -65,8 +76,9 @@ mod tests {
     fn time_combines_components() {
         let m = CostModel {
             alpha: 1.0,
-            beta: 0.5,
+            beta: 0.125,
         };
+        // 10 sent words = 40 bytes at the f32 wire → 40 · 0.125 = 5.0.
         let t = m.time(&stats(10, 8), 3);
         assert!((t - (3.0 + 5.0)).abs() < 1e-12);
         assert!((m.latency_time(3) - 3.0).abs() < 1e-12);
@@ -74,9 +86,22 @@ mod tests {
     }
 
     #[test]
+    fn bf16_bytes_halve_bandwidth_time() {
+        let m = CostModel::typical();
+        let f32_wire = stats(100, 100);
+        let mut bf16_wire = f32_wire;
+        bf16_wire.sent_bytes /= 2;
+        bf16_wire.recv_bytes /= 2;
+        assert!(
+            (m.bandwidth_time(&f32_wire) - 2.0 * m.bandwidth_time(&bf16_wire)).abs() < 1e-18,
+            "same words, half the bytes, half the modeled bandwidth time"
+        );
+    }
+
+    #[test]
     fn typical_is_latency_dominated_for_tiny_messages() {
         let m = CostModel::typical();
-        // 100 words over 10 steps: latency 10 µs >> bandwidth 40 ns
-        assert!(m.latency_time(10) > 100.0 * m.beta);
+        // 100 words (400 bytes) over 10 steps: latency 10 µs >> bandwidth 40 ns
+        assert!(m.latency_time(10) > 400.0 * m.beta);
     }
 }

@@ -81,6 +81,18 @@
 //! / [`Comm::recv_any_class`], keyed by [`TagClass`] ready-queues so a
 //! poll is O(1) however deep the stash) let an event-loop worker drain its
 //! own messages while a faster peer's collective traffic waits stashed.
+//!
+//! **Wire formats** (§Perf P14): [`RunCfg::wire`] selects the physical
+//! encoding of sweep payloads. [`WireFormat::F32`] (default) ships words
+//! verbatim; [`WireFormat::Bf16`] rounds each f32 to bfloat16
+//! (round-to-nearest-even on the upper 16 bits) on `isend` and expands
+//! back to f32 in `recv_into`, two halves per f32 container — accumulation
+//! stays f32 everywhere. Per-proc words and messages are **unchanged**
+//! (they count logical elements, the paper's model quantity); only
+//! [`CommStats`] byte counters see the 2-byte width, exactly halving
+//! measured payload bytes. Collective tags (≥ [`TAG_COLL_BASE`]) are
+//! exempt: rank-bitwise-deterministic reductions require exact sums, so
+//! collective traffic always travels f32.
 
 mod chaos;
 pub mod cost;
@@ -95,11 +107,24 @@ use std::sync::{mpsc, Arc, Condvar, Mutex, MutexGuard};
 use std::time::{Duration, Instant};
 
 /// Per-processor communication counters.
+///
+/// Words are the paper's model quantity (one word = one logical f32
+/// element, whatever its on-the-wire encoding); bytes are the measured
+/// physical payload under the run's [`WireFormat`] — `4·words` at f32,
+/// `2·words` for bf16-packed sweep traffic. Words and messages are
+/// wire-format-invariant by construction (property P14); bytes are what
+/// a per-byte β prices ([`cost::CostModel`]).
 #[derive(Debug, Default, Clone, Copy, PartialEq, Eq)]
 pub struct CommStats {
-    /// f32 words sent / received (payload only — the bandwidth cost β·W).
+    /// Logical f32 words sent / received (payload only — the model's
+    /// bandwidth cost β·W; independent of the wire format).
     pub sent_words: u64,
     pub recv_words: u64,
+    /// Physical payload bytes sent / received under the run's
+    /// [`WireFormat`] (excludes the half-container padding of an
+    /// odd-length bf16 payload: bytes = words × bytes-per-word exactly).
+    pub sent_bytes: u64,
+    pub recv_bytes: u64,
     /// messages sent / received (the latency cost α·S).
     pub sent_msgs: u64,
     pub recv_msgs: u64,
@@ -117,6 +142,8 @@ impl CommStats {
     pub fn absorb(&mut self, other: &CommStats) {
         self.sent_words += other.sent_words;
         self.recv_words += other.recv_words;
+        self.sent_bytes += other.sent_bytes;
+        self.recv_bytes += other.recv_bytes;
         self.sent_msgs += other.sent_msgs;
         self.recv_msgs += other.recv_msgs;
     }
@@ -127,6 +154,8 @@ impl CommStats {
         CommStats {
             sent_words: self.sent_words - earlier.sent_words,
             recv_words: self.recv_words - earlier.recv_words,
+            sent_bytes: self.sent_bytes - earlier.sent_bytes,
+            recv_bytes: self.recv_bytes - earlier.recv_bytes,
             sent_msgs: self.sent_msgs - earlier.sent_msgs,
             recv_msgs: self.recv_msgs - earlier.recv_msgs,
         }
@@ -145,9 +174,13 @@ impl CommStats {
         debug_assert!(r >= 1);
         debug_assert_eq!(self.sent_words % r64, 0, "words not r-deep");
         debug_assert_eq!(self.recv_words % r64, 0, "words not r-deep");
+        debug_assert_eq!(self.sent_bytes % r64, 0, "bytes not r-deep");
+        debug_assert_eq!(self.recv_bytes % r64, 0, "bytes not r-deep");
         QueryCommShare {
             sent_words: self.sent_words / r64,
             recv_words: self.recv_words / r64,
+            sent_bytes: self.sent_bytes / r64,
+            recv_bytes: self.recv_bytes / r64,
             sent_msgs: self.sent_msgs as f64 / r as f64,
             recv_msgs: self.recv_msgs as f64 / r as f64,
         }
@@ -155,12 +188,14 @@ impl CommStats {
 }
 
 /// One query's share of an r-deep batch's communication
-/// ([`CommStats::per_query`]): exact words, amortized (fractional)
-/// messages.
+/// ([`CommStats::per_query`]): exact words and bytes, amortized
+/// (fractional) messages.
 #[derive(Debug, Default, Clone, Copy, PartialEq)]
 pub struct QueryCommShare {
     pub sent_words: u64,
     pub recv_words: u64,
+    pub sent_bytes: u64,
+    pub recv_bytes: u64,
     pub sent_msgs: f64,
     pub recv_msgs: f64,
 }
@@ -202,6 +237,108 @@ impl TagClass {
             TagClass::Sweep => tag < TAG_COLL_BASE,
             TagClass::Collective => tag >= TAG_COLL_BASE,
         }
+    }
+}
+
+/// On-the-wire element encoding for SWEEP payloads (§Perf P14).
+///
+/// The model counts **words** (logical f32 elements) — those never change.
+/// `Bf16` packs sweep-class payloads ([`TagClass::Sweep`]) to 16-bit
+/// brain-float halves on [`Comm::isend`] and expands them back to f32 in
+/// [`Comm::recv_into`], halving the measured payload **bytes** per message
+/// while leaving per-processor words and messages exactly the closed-form
+/// counts. Accumulation stays f32 everywhere — only the wire narrows.
+/// Collective traffic ([`TagClass::Collective`], the convergence
+/// allreduces) always travels f32: its O(log P) words are latency-, not
+/// bandwidth-bound, and the resident sessions' bitwise rank-determinism
+/// depends on exact sums. The blocking [`Comm::send`] / [`Comm::recv`]
+/// pair never packs (no protocol on the sweep path uses it; asserted in
+/// debug builds).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum WireFormat {
+    /// 4 bytes per word — the identity encoding (and the bitwise oracle).
+    #[default]
+    F32,
+    /// 2 bytes per word on sweep traffic: round-to-nearest-even bf16
+    /// (upper 16 bits of the f32), relative error ≤ 2⁻⁸ per entry.
+    Bf16,
+}
+
+impl WireFormat {
+    /// Does a message with this `tag` get packed under this format?
+    pub fn packs(self, tag: u64) -> bool {
+        self == WireFormat::Bf16 && TagClass::of(tag) == TagClass::Sweep
+    }
+
+    /// Measured payload bytes per logical word for a message with `tag`
+    /// (the half-container padding of an odd-length bf16 payload is
+    /// excluded: bytes = words × this, exactly).
+    pub fn bytes_per_word(self, tag: u64) -> u64 {
+        if self.packs(tag) {
+            2
+        } else {
+            4
+        }
+    }
+}
+
+impl std::str::FromStr for WireFormat {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "f32" => Ok(WireFormat::F32),
+            "bf16" => Ok(WireFormat::Bf16),
+            other => Err(anyhow!("unknown wire format '{other}' (expected f32|bf16)")),
+        }
+    }
+}
+
+impl std::fmt::Display for WireFormat {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            WireFormat::F32 => "f32",
+            WireFormat::Bf16 => "bf16",
+        })
+    }
+}
+
+/// bf16 encoding of one f32: round-to-nearest-even into the upper 16
+/// bits. NaNs keep a quiet mantissa bit so they stay NaN after the
+/// round-trip.
+#[inline]
+pub fn bf16_bits(v: f32) -> u16 {
+    let x = v.to_bits();
+    if x & 0x7fff_ffff > 0x7f80_0000 {
+        return ((x >> 16) | 0x0040) as u16;
+    }
+    let round = 0x7fff + ((x >> 16) & 1);
+    ((x.wrapping_add(round)) >> 16) as u16
+}
+
+/// The f32 a bf16 half expands to (exact: bf16 ⊂ f32).
+#[inline]
+pub fn bf16_expand(bits: u16) -> f32 {
+    f32::from_bits((bits as u32) << 16)
+}
+
+/// Pack `src` into bf16 halves, two per f32 container slot (the transport
+/// fabric moves `Vec<f32>`); an odd trailing element leaves the upper
+/// half of the last container zero. `dst` is a pool-drawn staging buffer.
+fn pack_bf16(src: &[f32], dst: &mut Vec<f32>) {
+    dst.clear();
+    for pair in src.chunks(2) {
+        let lo = bf16_bits(pair[0]) as u32;
+        let hi = pair.get(1).map_or(0, |&v| bf16_bits(v) as u32);
+        dst.push(f32::from_bits(lo | (hi << 16)));
+    }
+}
+
+/// Expand a bf16-packed payload back into `dst.len()` f32 words.
+fn unpack_bf16(src: &[f32], dst: &mut [f32]) {
+    for (i, d) in dst.iter_mut().enumerate() {
+        let w = src[i / 2].to_bits();
+        let half = if i % 2 == 0 { w & 0xffff } else { w >> 16 };
+        *d = bf16_expand(half as u16);
     }
 }
 
@@ -370,6 +507,10 @@ pub fn allreduce_stats(p: usize, rank: usize, width: usize) -> CommStats {
     CommStats {
         sent_words: msgs * width as u64,
         recv_words: msgs * width as u64,
+        // Collective traffic always travels f32 (4 bytes/word), whatever
+        // the run's sweep WireFormat — see [`WireFormat::packs`].
+        sent_bytes: 4 * msgs * width as u64,
+        recv_bytes: 4 * msgs * width as u64,
         sent_msgs: msgs,
         recv_msgs: msgs,
     }
@@ -541,6 +682,10 @@ pub struct RunCfg {
     /// waits indefinitely (the abort protocol and the fail-fast liveness
     /// check still bound the wait when a peer actually dies).
     pub recv_timeout: Option<Duration>,
+    /// On-the-wire encoding for sweep payloads (§Perf P14). `Bf16` halves
+    /// measured payload bytes at identical words/messages; collectives
+    /// stay f32 regardless.
+    pub wire: WireFormat,
 }
 
 impl Default for RunCfg {
@@ -551,6 +696,7 @@ impl Default for RunCfg {
             slot_words: 64,
             chaos: FaultPlan::default(),
             recv_timeout: None,
+            wire: WireFormat::F32,
         }
     }
 }
@@ -965,7 +1111,9 @@ pub struct Comm {
     /// uniquely — back-to-back allreduces between the same pair can never
     /// collide, however far one rank races ahead.
     coll_seq: u64,
-    /// Word/message counters for this processor.
+    /// Sweep-payload wire encoding for this run ([`RunCfg::wire`]).
+    wire: WireFormat,
+    /// Word/byte/message counters for this processor.
     pub stats: CommStats,
 }
 
@@ -976,7 +1124,16 @@ impl Comm {
     /// copies it in place).
     pub fn send(&mut self, to: usize, tag: u64, data: Vec<f32>) -> Result<()> {
         debug_assert_ne!(to, self.rank, "self-send is a bug in the algorithm");
+        // The blocking pair never packs: the receiver of an owned-Vec
+        // `recv` has no length expectation to recover an odd logical
+        // length from. No sweep-path protocol uses it; keep bf16 runs off
+        // this API.
+        debug_assert!(
+            !self.wire.packs(tag),
+            "blocking send on a bf16-packed tag class (use isend)"
+        );
         self.stats.sent_words += data.len() as u64;
+        self.stats.sent_bytes += 4 * data.len() as u64;
         self.stats.sent_msgs += 1;
         self.inflight.add(data.len() as u64);
         self.transport.send(to, tag, data, &mut self.pool)
@@ -991,9 +1148,19 @@ impl Comm {
     pub fn isend(&mut self, to: usize, tag: u64, data: &[f32]) -> Result<()> {
         debug_assert_ne!(to, self.rank, "self-send is a bug in the algorithm");
         self.stats.sent_words += data.len() as u64;
+        self.stats.sent_bytes += self.wire.bytes_per_word(tag) * data.len() as u64;
         self.stats.sent_msgs += 1;
         self.inflight.add(data.len() as u64);
-        self.transport.send_slice(to, tag, data, &mut self.pool)
+        if self.wire.packs(tag) {
+            // bf16: round into a pool-drawn staging buffer, two halves
+            // per f32 container (zero allocations once the pool is warm;
+            // the spsc in-place fast path is traded for the pack pass).
+            let mut buf = self.pool.take(data.len().div_ceil(2));
+            pack_bf16(data, &mut buf);
+            self.transport.send(to, tag, buf, &mut self.pool)
+        } else {
+            self.transport.send_slice(to, tag, data, &mut self.pool)
+        }
     }
 
     /// Blocking receive of the message from `from` with `tag` (out-of-order
@@ -1002,8 +1169,13 @@ impl Comm {
     /// pool in its place, so ownership stays inside the pool system and
     /// repeated blocking receives allocate nothing once the pool is warm.
     pub fn recv(&mut self, from: usize, tag: u64) -> Result<Vec<f32>> {
+        debug_assert!(
+            !self.wire.packs(tag),
+            "blocking recv on a bf16-packed tag class (use recv_into)"
+        );
         let pkt = self.wait_for(from, tag)?;
         self.stats.recv_words += pkt.data.len() as u64;
+        self.stats.recv_bytes += 4 * pkt.data.len() as u64;
         self.stats.recv_msgs += 1;
         self.inflight.sub(pkt.data.len() as u64);
         let mut out = self.pool.take(pkt.data.len());
@@ -1013,21 +1185,37 @@ impl Comm {
     }
 
     /// Blocking receive delivered straight into `dst`, which must be
-    /// exactly the message length; the in-flight buffer is adopted into
-    /// this processor's pool for reuse by later `isend`s. Word/message
-    /// accounting identical to [`Comm::recv`].
+    /// exactly the logical message length; the in-flight buffer is adopted
+    /// into this processor's pool for reuse by later `isend`s. Word/message
+    /// accounting identical to [`Comm::recv`]. Under a bf16 wire format
+    /// the physical payload is `dst.len().div_ceil(2)` f32 containers and
+    /// each half-word is expanded back to f32 here; words and messages are
+    /// still counted at the logical (f32-word) granularity, only the byte
+    /// counter sees the 2-byte wire width.
     pub fn recv_into(&mut self, from: usize, tag: u64, dst: &mut [f32]) -> Result<()> {
         let pkt = self.wait_for(from, tag)?;
-        ensure!(
-            pkt.data.len() == dst.len(),
-            "recv_into from {from} tag {tag}: payload {} words, caller expected {}",
-            pkt.data.len(),
-            dst.len()
-        );
-        dst.copy_from_slice(&pkt.data);
-        self.stats.recv_words += pkt.data.len() as u64;
+        if self.wire.packs(tag) {
+            ensure!(
+                pkt.data.len() == dst.len().div_ceil(2),
+                "recv_into from {from} tag {tag}: bf16 payload {} containers, caller expected {} words",
+                pkt.data.len(),
+                dst.len()
+            );
+            unpack_bf16(&pkt.data, dst);
+            self.stats.recv_bytes += 2 * dst.len() as u64;
+        } else {
+            ensure!(
+                pkt.data.len() == dst.len(),
+                "recv_into from {from} tag {tag}: payload {} words, caller expected {}",
+                pkt.data.len(),
+                dst.len()
+            );
+            dst.copy_from_slice(&pkt.data);
+            self.stats.recv_bytes += 4 * dst.len() as u64;
+        }
+        self.stats.recv_words += dst.len() as u64;
         self.stats.recv_msgs += 1;
-        self.inflight.sub(pkt.data.len() as u64);
+        self.inflight.sub(dst.len() as u64);
         self.pool.put(pkt.data);
         Ok(())
     }
@@ -1407,6 +1595,7 @@ where
                     ctl: ctl.clone(),
                     phase: "run",
                     coll_seq: 0,
+                    wire: cfg.wire,
                     stats: CommStats::default(),
                 };
                 // Contain panics: an assert in a worker body becomes a
@@ -1527,6 +1716,8 @@ mod tests {
         for s in out {
             assert_eq!(s.sent_words, 10);
             assert_eq!(s.recv_words, 10);
+            assert_eq!(s.sent_bytes, 40);
+            assert_eq!(s.recv_bytes, 40);
             assert_eq!(s.sent_msgs, 1);
             assert_eq!(s.recv_msgs, 1);
         }
@@ -1684,6 +1875,8 @@ mod tests {
             let mut want = CommStats {
                 sent_words: 2 * words as u64,
                 recv_words: 2 * words as u64,
+                sent_bytes: 8 * words as u64,
+                recv_bytes: 8 * words as u64,
                 sent_msgs: 2,
                 recv_msgs: 2,
             };
@@ -2183,8 +2376,22 @@ mod tests {
 
     #[test]
     fn commstats_absorb_and_since_are_inverse() {
-        let a = CommStats { sent_words: 5, recv_words: 7, sent_msgs: 2, recv_msgs: 3 };
-        let b = CommStats { sent_words: 11, recv_words: 13, sent_msgs: 4, recv_msgs: 5 };
+        let a = CommStats {
+            sent_words: 5,
+            recv_words: 7,
+            sent_bytes: 20,
+            recv_bytes: 28,
+            sent_msgs: 2,
+            recv_msgs: 3,
+        };
+        let b = CommStats {
+            sent_words: 11,
+            recv_words: 13,
+            sent_bytes: 22,
+            recv_bytes: 26,
+            sent_msgs: 4,
+            recv_msgs: 5,
+        };
         let mut acc = a;
         acc.absorb(&b);
         assert_eq!(acc.since(&a), b);
@@ -2227,6 +2434,8 @@ mod tests {
         let single = CommStats {
             sent_words: 12,
             recv_words: 20,
+            sent_bytes: 48,
+            recv_bytes: 80,
             sent_msgs: 6,
             recv_msgs: 6,
         };
@@ -2234,14 +2443,140 @@ mod tests {
             let batch = CommStats {
                 sent_words: single.sent_words * r as u64,
                 recv_words: single.recv_words * r as u64,
+                sent_bytes: single.sent_bytes * r as u64,
+                recv_bytes: single.recv_bytes * r as u64,
                 sent_msgs: single.sent_msgs,
                 recv_msgs: single.recv_msgs,
             };
             let share = batch.per_query(r);
             assert_eq!(share.sent_words, single.sent_words, "r={r}");
             assert_eq!(share.recv_words, single.recv_words, "r={r}");
+            assert_eq!(share.sent_bytes, single.sent_bytes, "r={r}");
+            assert_eq!(share.recv_bytes, single.recv_bytes, "r={r}");
             assert_eq!(share.sent_msgs, single.sent_msgs as f64 / r as f64, "r={r}");
             assert_eq!(share.recv_msgs, single.recv_msgs as f64 / r as f64, "r={r}");
+        }
+    }
+
+    #[test]
+    fn wire_format_parses_and_displays() {
+        assert_eq!("f32".parse::<WireFormat>().unwrap(), WireFormat::F32);
+        assert_eq!("bf16".parse::<WireFormat>().unwrap(), WireFormat::Bf16);
+        assert!("f16".parse::<WireFormat>().is_err());
+        assert_eq!(WireFormat::Bf16.to_string(), "bf16");
+        assert_eq!(WireFormat::default(), WireFormat::F32);
+        // bf16 packs only the sweep tag class; collectives stay 4-byte.
+        assert!(WireFormat::Bf16.packs(0));
+        assert!(!WireFormat::Bf16.packs(TAG_COLL_BASE));
+        assert!(!WireFormat::F32.packs(0));
+        assert_eq!(WireFormat::Bf16.bytes_per_word(0), 2);
+        assert_eq!(WireFormat::Bf16.bytes_per_word(TAG_COLL_BASE), 4);
+        assert_eq!(WireFormat::F32.bytes_per_word(0), 4);
+    }
+
+    #[test]
+    fn bf16_roundtrip_is_within_relative_bound() {
+        // Round-to-nearest-even truncation keeps 8 mantissa bits: the
+        // relative error of a pack/expand round trip is ≤ 2⁻⁸ ≤ 2⁻⁷ per
+        // entry (the P14 bound), and specials survive.
+        let mut x = 0.7f32;
+        for _ in 0..200 {
+            x = (x * 1.7 + 0.13).fract() * 1e3 - 500.0;
+            let back = bf16_expand(bf16_bits(x));
+            assert!(
+                (back - x).abs() <= x.abs() * (1.0 / 128.0),
+                "{x} -> {back}"
+            );
+        }
+        assert_eq!(bf16_expand(bf16_bits(0.0)), 0.0);
+        assert_eq!(bf16_expand(bf16_bits(-1.0)), -1.0);
+        assert_eq!(bf16_expand(bf16_bits(f32::INFINITY)), f32::INFINITY);
+        assert!(bf16_expand(bf16_bits(f32::NAN)).is_nan());
+        // Exactly representable values (8-bit mantissa) are bit-preserved.
+        for v in [1.0f32, -2.5, 0.15625, 384.0] {
+            assert_eq!(bf16_expand(bf16_bits(v)), v);
+        }
+    }
+
+    #[test]
+    fn bf16_pack_unpack_handles_odd_lengths() {
+        for len in [1usize, 2, 5, 8, 33] {
+            let src: Vec<f32> = (0..len).map(|i| 1.0 + i as f32 * 0.25).collect();
+            let mut packed = Vec::new();
+            pack_bf16(&src, &mut packed);
+            assert_eq!(packed.len(), len.div_ceil(2));
+            let mut out = vec![0.0f32; len];
+            unpack_bf16(&packed, &mut out);
+            // Quarters below 4096 are exactly representable in bf16's
+            // 8-bit mantissa only up to 2^8/4; just check the bound.
+            for (a, b) in src.iter().zip(&out) {
+                assert!((a - b).abs() <= a.abs() / 128.0, "{a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_wire_halves_bytes_at_identical_words() {
+        // The tentpole invariant at simulator level: a bf16 ring exchange
+        // charges exactly the f32 words/messages but half the bytes, on
+        // both transports, including an odd payload length (whose final
+        // half-container is padding excluded from the byte count... the
+        // count is 2·words exactly, not 4·ceil(words/2)).
+        for transport in [TransportKind::Mpsc, TransportKind::Spsc] {
+            for words in [10usize, 17] {
+                let run_one = |wire| {
+                    let mut cfg = RunCfg::new(transport);
+                    cfg.wire = wire;
+                    let (out, _) = run_cfg(4, None, cfg, |comm| {
+                        let me = comm.rank;
+                        let next = (me + 1) % comm.p;
+                        let prev = (me + comm.p - 1) % comm.p;
+                        let payload: Vec<f32> =
+                            (0..words).map(|i| (me * words + i) as f32 * 0.5).collect();
+                        comm.isend(next, 1, &payload)?;
+                        let mut buf = vec![0.0f32; words];
+                        comm.recv_into(prev, 1, &mut buf)?;
+                        Ok((buf, comm.stats))
+                    })
+                    .unwrap();
+                    out
+                };
+                let f32_out = run_one(WireFormat::F32);
+                let bf16_out = run_one(WireFormat::Bf16);
+                for ((fbuf, fs), (bbuf, bs)) in f32_out.iter().zip(&bf16_out) {
+                    assert_eq!(fs.sent_words, bs.sent_words, "{transport} {words}");
+                    assert_eq!(fs.recv_words, bs.recv_words, "{transport} {words}");
+                    assert_eq!(fs.sent_msgs, bs.sent_msgs, "{transport} {words}");
+                    assert_eq!(fs.recv_msgs, bs.recv_msgs, "{transport} {words}");
+                    assert_eq!(fs.sent_bytes, 4 * words as u64);
+                    assert_eq!(bs.sent_bytes, 2 * words as u64);
+                    assert_eq!(bs.recv_bytes, 2 * words as u64);
+                    for (a, b) in fbuf.iter().zip(bbuf) {
+                        assert!((a - b).abs() <= a.abs() / 128.0, "{a} vs {b}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bf16_wire_leaves_collectives_exact() {
+        // Collectives must be byte-exact f32 under a bf16 wire: the sums
+        // stay bitwise rank-deterministic and their stats charge 4
+        // bytes/word (allreduce_stats closed form already does).
+        let mut cfg = RunCfg::default();
+        cfg.wire = WireFormat::Bf16;
+        let (out, _) = run_cfg(5, None, cfg, |comm| {
+            // 1/3 is inexact in bf16; a packed collective would perturb it.
+            let s = comm.allreduce_scalar((1.0f32 / 3.0) * (comm.rank as f32 + 1.0))?;
+            Ok((s, comm.stats))
+        })
+        .unwrap();
+        let want: f32 = (0..5).map(|r| (1.0f32 / 3.0) * (r as f32 + 1.0)).sum::<f32>();
+        for (rank, (s, stats)) in out.iter().enumerate() {
+            assert_eq!(s.to_bits(), out[0].0.to_bits(), "rank {rank} not bitwise");
+            assert!((s - want).abs() < 1e-5);
+            assert_eq!(*stats, allreduce_stats(5, rank, 1), "rank {rank}");
         }
     }
 }

@@ -3,28 +3,164 @@
 //! A fully symmetric tensor is stored *packed*: one value per
 //! lower-tetrahedral index (i ≥ j ≥ k), n(n+1)(n+2)/6 words — the unique
 //! parameters the paper counts. Accessors symmetrize transparently.
+//!
+//! Storage and the sequential oracles are generic over a sealed
+//! [`Element`] scalar (§Perf P14): [`SymTensor`] is the f32 instantiation
+//! every distributed path uses, and [`SymTensorG`]`<f64>` backs the
+//! conditioning studies (HOPM on ill-conditioned planted-eigenpair
+//! instances) end to end in f64. [`Precision`] names the choice at the
+//! options/CLI layer.
 
 pub mod linalg;
 
 use crate::util::rng::Rng;
 
-/// Packed fully-symmetric tensor of dimension n × n × n.
+mod sealed {
+    pub trait Sealed {}
+    impl Sealed for f32 {}
+    impl Sealed for f64 {}
+}
+
+/// The scalar type of packed tensors and the run-kernels: exactly f32 and
+/// f64 (sealed — the kernels' arithmetic identities are audited per type,
+/// not open for extension). Operations are the minimal set the packed
+/// storage, the generic run-kernels, and the f64 HOPM driver need; all of
+/// them compile to the obvious single instruction.
+pub trait Element:
+    sealed::Sealed
+    + Copy
+    + Default
+    + PartialEq
+    + PartialOrd
+    + Send
+    + Sync
+    + std::fmt::Debug
+    + std::fmt::Display
+    + std::ops::Add<Output = Self>
+    + std::ops::Sub<Output = Self>
+    + std::ops::Mul<Output = Self>
+    + std::ops::Div<Output = Self>
+    + std::ops::Neg<Output = Self>
+    + std::ops::AddAssign
+    + std::ops::SubAssign
+    + std::ops::MulAssign
+    + 'static
+{
+    const ZERO: Self;
+    const ONE: Self;
+    const TWO: Self;
+    fn from_f32(v: f32) -> Self;
+    fn from_f64(v: f64) -> Self;
+    fn to_f64(self) -> f64;
+    /// Bit pattern widened to u64 (f32 bits occupy the low 32) — the
+    /// fingerprint input, so −0.0 and +0.0 stay distinguishable.
+    fn bits(self) -> u64;
+    fn abs(self) -> Self;
+    fn sqrt(self) -> Self;
+}
+
+impl Element for f32 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const TWO: Self = 2.0;
+    fn from_f32(v: f32) -> Self {
+        v
+    }
+    fn from_f64(v: f64) -> Self {
+        v as f32
+    }
+    fn to_f64(self) -> f64 {
+        self as f64
+    }
+    fn bits(self) -> u64 {
+        self.to_bits() as u64
+    }
+    fn abs(self) -> Self {
+        f32::abs(self)
+    }
+    fn sqrt(self) -> Self {
+        f32::sqrt(self)
+    }
+}
+
+impl Element for f64 {
+    const ZERO: Self = 0.0;
+    const ONE: Self = 1.0;
+    const TWO: Self = 2.0;
+    fn from_f32(v: f32) -> Self {
+        v as f64
+    }
+    fn from_f64(v: f64) -> Self {
+        v
+    }
+    fn to_f64(self) -> f64 {
+        self
+    }
+    fn bits(self) -> u64 {
+        self.to_bits()
+    }
+    fn abs(self) -> Self {
+        f64::abs(self)
+    }
+    fn sqrt(self) -> Self {
+        f64::sqrt(self)
+    }
+}
+
+/// Element-type selector at the options/CLI layer (`--precision f32|f64`):
+/// which [`Element`] instantiation the sequential conditioning paths run.
+/// The distributed plan always computes in f32; see
+/// [`crate::coordinator::ExecOpts::precision`].
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Precision {
+    #[default]
+    F32,
+    F64,
+}
+
+impl std::str::FromStr for Precision {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> anyhow::Result<Self> {
+        match s {
+            "f32" => Ok(Precision::F32),
+            "f64" => Ok(Precision::F64),
+            other => anyhow::bail!("unknown precision '{other}' (expected f32|f64)"),
+        }
+    }
+}
+
+impl std::fmt::Display for Precision {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            Precision::F32 => "f32",
+            Precision::F64 => "f64",
+        })
+    }
+}
+
+/// Packed fully-symmetric tensor of dimension n × n × n, generic over the
+/// stored [`Element`]. [`SymTensor`] (= `SymTensorG<f32>`) is the type
+/// every distributed path consumes; `SymTensorG<f64>` serves the
+/// sequential f64 conditioning studies.
 #[derive(Debug)]
-pub struct SymTensor {
+pub struct SymTensorG<E: Element> {
     pub n: usize,
-    data: Vec<f32>,
-    /// How many times the O(n³) sequential oracles ([`SymTensor::sttsv`],
-    /// [`SymTensor::rayleigh`]) ran on THIS instance — regression
+    data: Vec<E>,
+    /// How many times the O(n³) sequential oracles ([`SymTensorG::sttsv`],
+    /// [`SymTensorG::rayleigh`]) ran on THIS instance — regression
     /// instrumentation: the distributed apps must never fall back to a
     /// dense host sweep once their plan is built (asserted in apps tests).
     dense_sttsv_calls: std::sync::atomic::AtomicU64,
 }
 
-impl Clone for SymTensor {
-    fn clone(&self) -> SymTensor {
+/// The f32 instantiation — the storage type of every distributed path.
+pub type SymTensor = SymTensorG<f32>;
+
+impl<E: Element> Clone for SymTensorG<E> {
+    fn clone(&self) -> SymTensorG<E> {
         // The oracle-call counter is per-instance instrumentation, not
         // tensor state: clones start at zero.
-        SymTensor {
+        SymTensorG {
             n: self.n,
             data: self.data.clone(),
             dense_sttsv_calls: std::sync::atomic::AtomicU64::new(0),
@@ -63,26 +199,176 @@ pub fn sort3(i: usize, j: usize, k: usize) -> (usize, usize, usize) {
     (a, b, c)
 }
 
-impl SymTensor {
+impl<E: Element> SymTensorG<E> {
     /// All-zeros tensor.
-    pub fn zeros(n: usize) -> SymTensor {
-        SymTensor {
+    pub fn zeros(n: usize) -> SymTensorG<E> {
+        SymTensorG {
             n,
-            data: vec![0.0; packed_len(n)],
+            data: vec![E::ZERO; packed_len(n)],
             dense_sttsv_calls: std::sync::atomic::AtomicU64::new(0),
         }
     }
 
     /// i.i.d. standard-normal unique entries (a generic symmetric tensor).
-    pub fn random(n: usize, seed: u64) -> SymTensor {
+    /// The stream is drawn in f32 so `SymTensorG::<f64>::random` holds the
+    /// exact same values as its f32 twin — precision comparisons see one
+    /// tensor, not two samples.
+    pub fn random(n: usize, seed: u64) -> SymTensorG<E> {
         let mut rng = Rng::new(seed);
-        SymTensor {
+        SymTensorG {
             n,
-            data: (0..packed_len(n)).map(|_| rng.normal_f32()).collect(),
+            data: (0..packed_len(n)).map(|_| E::from_f32(rng.normal_f32())).collect(),
             dense_sttsv_calls: std::sync::atomic::AtomicU64::new(0),
         }
     }
 
+    #[inline]
+    fn packed_index(i: usize, j: usize, k: usize) -> usize {
+        // requires i >= j >= k
+        tet(i) + tri(j) + k
+    }
+
+    /// Read entry (i, j, k) in any index order.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize, k: usize) -> E {
+        let (a, b, c) = sort3(i, j, k);
+        self.data[Self::packed_index(a, b, c)]
+    }
+
+    /// Write entry (i, j, k) (any order; writes the unique representative).
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, k: usize, v: E) {
+        let (a, b, c) = sort3(i, j, k);
+        self.data[Self::packed_index(a, b, c)] = v;
+    }
+
+    /// Number of stored (unique) entries.
+    pub fn packed_len(&self) -> usize {
+        self.data.len()
+    }
+
+    /// The shared packed buffer (lower-tetrahedral order). Zero-copy
+    /// consumers ([`PackedBlockView`], the packed runtime kernels) contract
+    /// directly against this slice instead of materializing dense copies.
+    pub fn packed_data(&self) -> &[E] {
+        &self.data
+    }
+
+    /// Extract the dense b³ sub-block with block index (bi, bj, bk) and
+    /// block size b, row-major ((α·b + β)·b + γ): entry (α, β, γ) holds the
+    /// full-tensor value A[bi·b+α, bj·b+β, bk·b+γ]. This is the layout the
+    /// AOT block kernels consume.
+    ///
+    /// Every sorted block index (bi ≥ bj ≥ bk — all blocks Algorithm 5
+    /// touches) takes a contiguous fast path via
+    /// [`PackedBlockView::extract_dense`]; unsorted indices fall back to the
+    /// per-element sort3 loop.
+    pub fn extract_block(&self, bi: usize, bj: usize, bk: usize, b: usize) -> Vec<E> {
+        if bi >= bj && bj >= bk {
+            return PackedBlockView::new(bi, bj, bk, b).extract_dense(&self.data);
+        }
+        let mut out = vec![E::ZERO; b * b * b];
+        for a in 0..b {
+            for be in 0..b {
+                for g in 0..b {
+                    out[(a * b + be) * b + g] = self.get(bi * b + a, bj * b + be, bk * b + g);
+                }
+            }
+        }
+        out
+    }
+
+    /// Zero-pad to dimension `n2 >= n` (paper §6.1: when q²+1 does not
+    /// divide n, pad to the next multiple; padded entries are zero so the
+    /// computation is unchanged on the first n coordinates).
+    pub fn padded(&self, n2: usize) -> SymTensorG<E> {
+        assert!(n2 >= self.n);
+        let mut out = SymTensorG::<E>::zeros(n2);
+        // packed layouts nest: indices with i < n keep their packed offsets
+        out.data[..self.data.len()].copy_from_slice(&self.data);
+        out
+    }
+
+    /// Sequential STTSV oracle: y = A ×₂ x ×₃ x via the paper's Algorithm 4
+    /// (lower-tetrahedron iteration with multiplicity weights), f64
+    /// accumulation for a trustworthy reference.
+    pub fn sttsv(&self, x: &[E]) -> Vec<E> {
+        assert_eq!(x.len(), self.n);
+        self.dense_sttsv_calls
+            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        let mut y = vec![0.0f64; self.n];
+        let mut idx = 0usize;
+        for i in 0..self.n {
+            for j in 0..=i {
+                for k in 0..=j {
+                    let a = self.data[idx].to_f64();
+                    idx += 1;
+                    let (xi, xj, xk) = (x[i].to_f64(), x[j].to_f64(), x[k].to_f64());
+                    if i != j && j != k {
+                        y[i] += 2.0 * a * xj * xk;
+                        y[j] += 2.0 * a * xi * xk;
+                        y[k] += 2.0 * a * xi * xj;
+                    } else if i == j && j != k {
+                        y[i] += 2.0 * a * xj * xk;
+                        y[k] += a * xi * xj;
+                    } else if i != j && j == k {
+                        y[i] += a * xj * xk;
+                        y[j] += 2.0 * a * xi * xk;
+                    } else {
+                        y[i] += a * xj * xk;
+                    }
+                }
+            }
+        }
+        y.into_iter().map(E::from_f64).collect()
+    }
+
+    /// Number of ternary multiplications Algorithm 4 performs: n²(n+1)/2.
+    pub fn ternary_mult_count(&self) -> usize {
+        let n = self.n;
+        n * n * (n + 1) / 2
+    }
+
+    /// Rayleigh quotient λ = A ×₁ x ×₂ x ×₃ x (Algorithm 1, line 6).
+    pub fn rayleigh(&self, x: &[E]) -> E {
+        let y = self.sttsv(x);
+        E::from_f64(y.iter().zip(x).map(|(a, b)| a.to_f64() * b.to_f64()).sum::<f64>())
+    }
+
+    /// How many times the O(n³) sequential oracles ran on this instance.
+    /// The distributed iterative apps must leave this untouched after
+    /// their plan is built — λ, norms, and deltas all come from the
+    /// distributed owned portions (regression-tested in `apps`).
+    pub fn dense_sttsv_invocations(&self) -> u64 {
+        self.dense_sttsv_calls
+            .load(std::sync::atomic::Ordering::Relaxed)
+    }
+
+    /// Content fingerprint: FNV-1a (64-bit) over `n` and the bit patterns
+    /// of the packed buffer. Two tensors fingerprint equal iff they have
+    /// the same dimension and bitwise-identical unique entries (−0.0 and
+    /// +0.0 hash differently — fine for a cache key, where a spurious miss
+    /// is only a rebuild). This is the tensor component of the serving
+    /// layer's plan-cache key (`crate::serve`); it walks the n(n+1)(n+2)/6
+    /// packed words once and is orders of magnitude cheaper than the plan
+    /// build it guards.
+    pub fn fingerprint(&self) -> u64 {
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        for byte in (self.n as u64).to_le_bytes() {
+            h = (h ^ byte as u64).wrapping_mul(FNV_PRIME);
+        }
+        for v in &self.data {
+            for byte in v.bits().to_le_bytes() {
+                h = (h ^ byte as u64).wrapping_mul(FNV_PRIME);
+            }
+        }
+        h
+    }
+}
+
+impl SymTensor {
     /// Odeco (orthogonally decomposable) tensor A = Σ_l λ_l e_l ⊗ e_l ⊗ e_l
     /// with orthonormal e_l. Returns the tensor and the factors (columns),
     /// so tests can check recovered eigenpairs exactly. The dominant
@@ -113,150 +399,55 @@ impl SymTensor {
         debug_assert_eq!(idx, packed_len(n));
         (t, cols)
     }
+}
 
-    #[inline]
-    fn packed_index(i: usize, j: usize, k: usize) -> usize {
-        // requires i >= j >= k
-        tet(i) + tri(j) + k
-    }
-
-    /// Read entry (i, j, k) in any index order.
-    #[inline]
-    pub fn get(&self, i: usize, j: usize, k: usize) -> f32 {
-        let (a, b, c) = sort3(i, j, k);
-        self.data[Self::packed_index(a, b, c)]
-    }
-
-    /// Write entry (i, j, k) (any order; writes the unique representative).
-    #[inline]
-    pub fn set(&mut self, i: usize, j: usize, k: usize, v: f32) {
-        let (a, b, c) = sort3(i, j, k);
-        self.data[Self::packed_index(a, b, c)] = v;
-    }
-
-    /// Number of stored (unique) entries.
-    pub fn packed_len(&self) -> usize {
-        self.data.len()
-    }
-
-    /// The shared packed buffer (lower-tetrahedral order). Zero-copy
-    /// consumers ([`PackedBlockView`], the packed runtime kernels) contract
-    /// directly against this slice instead of materializing dense copies.
-    pub fn packed_data(&self) -> &[f32] {
-        &self.data
-    }
-
-    /// Extract the dense b³ sub-block with block index (bi, bj, bk) and
-    /// block size b, row-major ((α·b + β)·b + γ): entry (α, β, γ) holds the
-    /// full-tensor value A[bi·b+α, bj·b+β, bk·b+γ]. This is the layout the
-    /// AOT block kernels consume.
-    ///
-    /// Every sorted block index (bi ≥ bj ≥ bk — all blocks Algorithm 5
-    /// touches) takes a contiguous fast path via
-    /// [`PackedBlockView::extract_dense`]; unsorted indices fall back to the
-    /// per-element sort3 loop.
-    pub fn extract_block(&self, bi: usize, bj: usize, bk: usize, b: usize) -> Vec<f32> {
-        if bi >= bj && bj >= bk {
-            return PackedBlockView::new(bi, bj, bk, b).extract_dense(&self.data);
-        }
-        let mut out = vec![0.0f32; b * b * b];
-        for a in 0..b {
-            for be in 0..b {
-                for g in 0..b {
-                    out[(a * b + be) * b + g] = self.get(bi * b + a, bj * b + be, bk * b + g);
-                }
-            }
-        }
-        out
-    }
-
-    /// Zero-pad to dimension `n2 >= n` (paper §6.1: when q²+1 does not
-    /// divide n, pad to the next multiple; padded entries are zero so the
-    /// computation is unchanged on the first n coordinates).
-    pub fn padded(&self, n2: usize) -> SymTensor {
-        assert!(n2 >= self.n);
-        let mut out = SymTensor::zeros(n2);
-        // packed layouts nest: indices with i < n keep their packed offsets
-        out.data[..self.data.len()].copy_from_slice(&self.data);
-        out
-    }
-
-    /// Sequential STTSV oracle: y = A ×₂ x ×₃ x via the paper's Algorithm 4
-    /// (lower-tetrahedron iteration with multiplicity weights), f64
-    /// accumulation for a trustworthy reference.
-    pub fn sttsv(&self, x: &[f32]) -> Vec<f32> {
-        assert_eq!(x.len(), self.n);
-        self.dense_sttsv_calls
-            .fetch_add(1, std::sync::atomic::Ordering::Relaxed);
-        let mut y = vec![0.0f64; self.n];
-        let mut idx = 0usize;
-        for i in 0..self.n {
-            for j in 0..=i {
-                for k in 0..=j {
-                    let a = self.data[idx] as f64;
-                    idx += 1;
-                    let (xi, xj, xk) = (x[i] as f64, x[j] as f64, x[k] as f64);
-                    if i != j && j != k {
-                        y[i] += 2.0 * a * xj * xk;
-                        y[j] += 2.0 * a * xi * xk;
-                        y[k] += 2.0 * a * xi * xj;
-                    } else if i == j && j != k {
-                        y[i] += 2.0 * a * xj * xk;
-                        y[k] += a * xi * xj;
-                    } else if i != j && j == k {
-                        y[i] += a * xj * xk;
-                        y[j] += 2.0 * a * xi * xk;
-                    } else {
-                        y[i] += a * xj * xk;
+impl SymTensorG<f64> {
+    /// f64 odeco constructor for the conditioning studies (§E18): same
+    /// planted-eigenpair structure as [`SymTensor::odeco`] but with the
+    /// factors drawn and orthonormalized entirely in f64 (local
+    /// Gram–Schmidt — `linalg::orthonormal_columns` is f32-only), so
+    /// ill-conditioned spectra (λ_max/λ_min ≫ 2²⁴) stay resolvable in the
+    /// stored entries.
+    pub fn odeco64(n: usize, lambdas: &[f64], seed: u64) -> (SymTensorG<f64>, Vec<Vec<f64>>) {
+        let r = lambdas.len();
+        assert!(r <= n);
+        let mut rng = Rng::new(seed);
+        let mut cols: Vec<Vec<f64>> = Vec::with_capacity(r);
+        for _ in 0..r {
+            // Draw, project out earlier columns (modified Gram–Schmidt,
+            // twice for orthogonality to roundoff), normalize.
+            let mut c: Vec<f64> = (0..n).map(|_| rng.normal_f32() as f64).collect();
+            for _ in 0..2 {
+                for prev in &cols {
+                    let dot: f64 = c.iter().zip(prev).map(|(a, b)| a * b).sum();
+                    for (ci, pi) in c.iter_mut().zip(prev) {
+                        *ci -= dot * pi;
                     }
                 }
             }
+            let norm = c.iter().map(|v| v * v).sum::<f64>().sqrt();
+            assert!(norm > 1e-12, "degenerate draw in odeco64 Gram-Schmidt");
+            for ci in &mut c {
+                *ci /= norm;
+            }
+            cols.push(c);
         }
-        y.into_iter().map(|v| v as f32).collect()
-    }
-
-    /// Number of ternary multiplications Algorithm 4 performs: n²(n+1)/2.
-    pub fn ternary_mult_count(&self) -> usize {
-        let n = self.n;
-        n * n * (n + 1) / 2
-    }
-
-    /// Rayleigh quotient λ = A ×₁ x ×₂ x ×₃ x (Algorithm 1, line 6).
-    pub fn rayleigh(&self, x: &[f32]) -> f32 {
-        let y = self.sttsv(x);
-        y.iter().zip(x).map(|(a, b)| (*a as f64) * (*b as f64)).sum::<f64>() as f32
-    }
-
-    /// How many times the O(n³) sequential oracles ran on this instance.
-    /// The distributed iterative apps must leave this untouched after
-    /// their plan is built — λ, norms, and deltas all come from the
-    /// distributed owned portions (regression-tested in `apps`).
-    pub fn dense_sttsv_invocations(&self) -> u64 {
-        self.dense_sttsv_calls
-            .load(std::sync::atomic::Ordering::Relaxed)
-    }
-
-    /// Content fingerprint: FNV-1a (64-bit) over `n` and the bit patterns
-    /// of the packed buffer. Two tensors fingerprint equal iff they have
-    /// the same dimension and bitwise-identical unique entries (−0.0 and
-    /// +0.0 hash differently — fine for a cache key, where a spurious miss
-    /// is only a rebuild). This is the tensor component of the serving
-    /// layer's plan-cache key (`crate::serve`); it walks the n(n+1)(n+2)/6
-    /// packed words once and is orders of magnitude cheaper than the plan
-    /// build it guards.
-    pub fn fingerprint(&self) -> u64 {
-        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
-        let mut h = FNV_OFFSET;
-        for byte in (self.n as u64).to_le_bytes() {
-            h = (h ^ byte as u64).wrapping_mul(FNV_PRIME);
-        }
-        for v in &self.data {
-            for byte in v.to_bits().to_le_bytes() {
-                h = (h ^ byte as u64).wrapping_mul(FNV_PRIME);
+        let mut t = SymTensorG::<f64>::zeros(n);
+        let mut idx = 0usize;
+        for i in 0..n {
+            for j in 0..=i {
+                for k in 0..=j {
+                    let mut v = 0.0f64;
+                    for (l, &lam) in lambdas.iter().enumerate() {
+                        v += lam * cols[l][i] * cols[l][j] * cols[l][k];
+                    }
+                    t.data[idx] = v;
+                    idx += 1;
+                }
             }
         }
-        h
+        debug_assert_eq!(idx, packed_len(n));
+        (t, cols)
     }
 }
 
@@ -343,9 +534,9 @@ impl PackedBlockView {
     /// unique entries; duplicated entries of diagonal blocks are mirrored
     /// within `out` (local index permutation, no per-element packed-index
     /// math).
-    pub fn extract_dense(&self, t: &[f32]) -> Vec<f32> {
+    pub fn extract_dense<E: Element>(&self, t: &[E]) -> Vec<E> {
         let b = self.b;
-        let mut out = vec![0.0f32; b * b * b];
+        let mut out = vec![E::ZERO; b * b * b];
         if self.is_off_diagonal() {
             for a in 0..b {
                 for be in 0..b {
@@ -872,5 +1063,70 @@ mod tests {
         );
         // Zero-padding changes content, hence the fingerprint.
         assert_ne!(a.fingerprint(), a.padded(12).fingerprint());
+    }
+
+    #[test]
+    fn precision_parses_and_displays() {
+        assert_eq!("f32".parse::<Precision>().unwrap(), Precision::F32);
+        assert_eq!("f64".parse::<Precision>().unwrap(), Precision::F64);
+        assert!("bf16".parse::<Precision>().is_err());
+        assert_eq!(Precision::F64.to_string(), "f64");
+        assert_eq!(Precision::default(), Precision::F32);
+    }
+
+    #[test]
+    fn f64_tensor_matches_f32_twin_on_shared_entries() {
+        // random() draws the same f32 stream for both element types, so the
+        // f64 instantiation is the exact promotion of the f32 one — and the
+        // sequential oracles agree to f32 roundoff.
+        let n = 9;
+        let t32 = SymTensor::random(n, 11);
+        let t64 = SymTensorG::<f64>::random(n, 11);
+        for (i, j, k) in [(8, 3, 1), (5, 5, 2), (4, 4, 4), (0, 0, 0)] {
+            assert_eq!(t64.get(i, j, k), t32.get(i, j, k) as f64);
+        }
+        let mut rng = Rng::new(12);
+        let x32 = rng.normal_vec(n);
+        let x64: Vec<f64> = x32.iter().map(|&v| v as f64).collect();
+        let y32 = t32.sttsv(&x32);
+        let y64 = t64.sttsv(&x64);
+        for i in 0..n {
+            assert!(
+                (y32[i] as f64 - y64[i]).abs() < 1e-4 * y64[i].abs().max(1.0),
+                "i={i}: {} vs {}",
+                y32[i],
+                y64[i]
+            );
+        }
+        // extract_block resolves generically too
+        let t64b = SymTensorG::<f64>::random(8, 5);
+        let blk = t64b.extract_block(1, 0, 1, 4);
+        assert_eq!(blk[(2 * 4 + 3) * 4 + 1], t64b.get(4 + 2, 3, 4 + 1));
+    }
+
+    #[test]
+    fn odeco64_eigen_structure_survives_ill_conditioning() {
+        // A spectrum spanning > 2²⁴ — below f32 resolution relative to
+        // λ_max — still yields clean Z-eigenpairs in the f64 instantiation.
+        let lambdas = [1.0e8f64, 1.0, 1.0e-1];
+        let (t, cols) = SymTensorG::<f64>::odeco64(12, &lambdas, 21);
+        for a in 0..3 {
+            for b in 0..3 {
+                let dot: f64 = cols[a].iter().zip(&cols[b]).map(|(x, y)| x * y).sum();
+                let want = if a == b { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-12, "({a},{b}) dot={dot}");
+            }
+        }
+        for (l, &lam) in lambdas.iter().enumerate() {
+            let y = t.sttsv(&cols[l]);
+            for i in 0..12 {
+                assert!(
+                    (y[i] - lam * cols[l][i]).abs() < 1e-7 * lam.abs().max(1.0),
+                    "l={l} i={i}: {} vs {}",
+                    y[i],
+                    lam * cols[l][i]
+                );
+            }
+        }
     }
 }

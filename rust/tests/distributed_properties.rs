@@ -70,6 +70,17 @@
 //!     resident solves under a checkpointed `RecoveryPolicy` recover to
 //!     the fault-free answer bitwise; without recovery they surface the
 //!     typed report instead of hanging.
+//! P14: the bf16 wire format (§Perf, PR 9) is an ENCODING, not an
+//!     algorithm change — under `wire = bf16` every per-processor word and
+//!     message count is bitwise the f32 wire's while payload bytes are
+//!     exactly halved (both matching the wire-aware
+//!     `expected_proc_stats` closed form), on both transports × both comm
+//!     modes × r ∈ {1, 4}; results agree with the f32 phased oracle
+//!     within 2⁻⁷ of the column scale (≤ 2⁻⁸ relative rounding per wire
+//!     crossing). And the pinned configuration `wire = f32` +
+//!     `simd = scalar` is bitwise the default path — the regression pin
+//!     that licenses AVX2 auto-dispatch and makes the process-global simd
+//!     policy safe to flip mid-suite.
 
 use sttsv::apps::{self, RecoveryPolicy};
 use sttsv::coordinator::session::SolverSession;
@@ -77,10 +88,12 @@ use sttsv::coordinator::{
     run_comm_only, run_comm_only_multi, run_sttsv_opts, CommMode, ExecOpts, SttsvPlan,
 };
 use sttsv::partition::{classify, BlockKind, TetraPartition};
-use sttsv::runtime::{packed_ternary_mults, Backend};
+use sttsv::runtime::{packed_ternary_mults, set_simd_policy, Backend, SimdPolicy};
 use sttsv::schedule::CommSchedule;
 use sttsv::serve::{AdmissionPolicy, SttsvServer};
-use sttsv::simulator::{allreduce_stats, CommStats, FailureReport, FaultPlan, TransportKind};
+use sttsv::simulator::{
+    allreduce_stats, CommStats, FailureReport, FaultPlan, TransportKind, WireFormat,
+};
 use sttsv::steiner::{spherical, sqs8};
 use sttsv::tensor::{linalg, PackedBlockView, SymTensor};
 use sttsv::util::proptest::check;
@@ -1520,4 +1533,155 @@ fn p13_crashed_sessions_recover_bitwise_or_report_without_recovery() {
             Ok(())
         },
     );
+}
+
+#[test]
+fn p14_bf16_wire_halves_bytes_at_bitwise_words_within_bf16_error() {
+    // The wire format is an encoding, not an algorithm change: under
+    // wire = bf16 every sweep payload travels at 2 bytes/word instead of
+    // 4, so per-processor words and messages must be BITWISE those of the
+    // f32 wire while sent/recv bytes are EXACTLY halved — and both runs'
+    // counters must equal their plan's wire-aware
+    // `expected_proc_stats(r)` closed form. Values agree with the f32
+    // phased oracle within 2⁻⁷ of the column scale: each payload word
+    // crosses the wire O(1) times at ≤ 2⁻⁸ relative rounding per
+    // crossing (round-to-nearest-even truncation to the upper 16 bits).
+    let pool = partition_pool();
+    check(
+        "bf16 wire: half the bytes, same words",
+        0x14BF,
+        4,
+        |rng: &mut Rng| {
+            let part_idx = rng.below(pool.len());
+            let b = 2 + rng.below(4); // 2..=5, including non-divisible-by-λ₁
+            let seed = rng.next_u64();
+            (part_idx, b, seed)
+        },
+        |&(part_idx, b, seed)| {
+            let part = &pool[part_idx];
+            let n = b * part.m;
+            let tensor = SymTensor::random(n, seed);
+            let mut rng = Rng::new(seed ^ 0x14BF);
+            let xs: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(n)).collect();
+            for transport in [TransportKind::Mpsc, TransportKind::Spsc] {
+                for mode in [CommMode::PointToPoint, CommMode::AllToAll] {
+                    for r in [1usize, 4] {
+                        let xs = &xs[..r];
+                        let plan_for = |wire| {
+                            SttsvPlan::new(
+                                &tensor,
+                                part,
+                                ExecOpts {
+                                    mode,
+                                    transport,
+                                    wire,
+                                    overlap: false,
+                                    ..Default::default()
+                                },
+                            )
+                        };
+                        let fplan = plan_for(WireFormat::F32).map_err(|e| e.to_string())?;
+                        let f = fplan.run_multi(xs).map_err(|e| e.to_string())?;
+                        let hplan = plan_for(WireFormat::Bf16).map_err(|e| e.to_string())?;
+                        let h = hplan.run_multi(xs).map_err(|e| e.to_string())?;
+                        let fx = fplan.expected_proc_stats(r);
+                        let hx = hplan.expected_proc_stats(r);
+                        let ctx = format!("{transport:?} {mode:?} r={r}");
+                        for p in 0..part.p {
+                            let (fs, hs) = (&f.per_proc[p].stats, &h.per_proc[p].stats);
+                            if (fs.sent_words, fs.recv_words, fs.sent_msgs, fs.recv_msgs)
+                                != (hs.sent_words, hs.recv_words, hs.sent_msgs, hs.recv_msgs)
+                            {
+                                return Err(format!(
+                                    "{ctx} proc {p}: words/messages must be \
+                                     wire-invariant (f32 {fs:?} vs bf16 {hs:?})"
+                                ));
+                            }
+                            if fs.sent_bytes != 4 * fs.sent_words
+                                || fs.recv_bytes != 4 * fs.recv_words
+                                || hs.sent_bytes != 2 * hs.sent_words
+                                || hs.recv_bytes != 2 * hs.recv_words
+                            {
+                                return Err(format!(
+                                    "{ctx} proc {p}: bytes are not wire-width × \
+                                     words (f32 {fs:?}, bf16 {hs:?})"
+                                ));
+                            }
+                            if 2 * hs.sent_bytes != fs.sent_bytes
+                                || 2 * hs.recv_bytes != fs.recv_bytes
+                            {
+                                return Err(format!(
+                                    "{ctx} proc {p}: bf16 payload bytes are not \
+                                     exactly half the f32 wire's"
+                                ));
+                            }
+                            if *fs != fx[p] || *hs != hx[p] {
+                                return Err(format!(
+                                    "{ctx} proc {p}: measured counters diverge from \
+                                     the wire-aware closed form"
+                                ));
+                            }
+                        }
+                        for l in 0..r {
+                            let scale =
+                                f.ys[l].iter().map(|v| v.abs()).fold(1.0f32, f32::max);
+                            for i in 0..n {
+                                let err = (h.ys[l][i] - f.ys[l][i]).abs();
+                                if err > scale / 128.0 {
+                                    return Err(format!(
+                                        "{ctx} col {l} i={i}: bf16 {} vs f32 {} \
+                                         (err {err:.3e} > 2^-7 of scale {scale:.3e})",
+                                        h.ys[l][i], f.ys[l][i]
+                                    ));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn p14_f32_wire_scalar_simd_pins_the_default_path_bitwise() {
+    // Regression pin for the PR 9 knobs' OFF positions: `wire = f32` +
+    // `simd = scalar` must be bitwise the default configuration. The
+    // default wire IS f32, and auto simd dispatch is licensed only
+    // because the AVX2 run-kernels are bitwise-identical to the scalar
+    // tiles — which also makes flipping the process-global simd policy
+    // mid-suite safe (concurrent tests cannot observe the difference).
+    let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+    let b = 4;
+    let n = b * part.m;
+    let tensor = SymTensor::random(n, 0x145C);
+    let mut rng = Rng::new(0x145D);
+    let xs: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(n)).collect();
+    for mode in [CommMode::PointToPoint, CommMode::AllToAll] {
+        for r in [1usize, 4] {
+            let xs = &xs[..r];
+            let dflt = SttsvPlan::new(&tensor, &part, ExecOpts { mode, ..Default::default() })
+                .unwrap()
+                .run_multi(xs)
+                .unwrap();
+            set_simd_policy(SimdPolicy::Scalar);
+            let pinned = SttsvPlan::new(
+                &tensor,
+                &part,
+                ExecOpts { mode, wire: WireFormat::F32, ..Default::default() },
+            )
+            .unwrap()
+            .run_multi(xs)
+            .unwrap();
+            set_simd_policy(SimdPolicy::Auto);
+            assert_eq!(pinned.ys, dflt.ys, "{mode:?} r={r}: results must be bitwise equal");
+            for p in 0..part.p {
+                assert_eq!(
+                    pinned.per_proc[p].stats, dflt.per_proc[p].stats,
+                    "{mode:?} r={r} proc {p}: counters must be identical"
+                );
+            }
+        }
+    }
 }
