@@ -3,7 +3,8 @@
 .PHONY: artifacts artifacts-quick test test-release-asserts pytest bench \
 	bench-smoke bench-overlap bench-compiled bench-e2e bench-e2e-smoke \
 	bench-hw bench-hw-smoke bench-serve bench-serve-smoke bench-chaos \
-	bench-chaos-smoke bench-precision bench-precision-smoke
+	bench-chaos-smoke bench-precision bench-precision-smoke bench-abft \
+	bench-abft-smoke
 
 # AOT-lower the JAX/Pallas kernels (incl. the multi-RHS block_multi_* set)
 # to HLO text artifacts for the Rust PJRT backend.
@@ -107,3 +108,16 @@ bench-precision:
 # bitwise and byte-halving asserts, and the acceptance print still execute.
 bench-precision-smoke:
 	cd rust && STTSV_BENCH_SMOKE=1 cargo bench --bench precision_simd
+
+# E19 ABFT bench: verify/scrub overhead ladder vs the ABFT-off phased
+# baseline (P in {4, 10} x both transports x r in {1, 4}) plus the
+# detection-coverage table by flipped-bit position (wire flips under f32
+# and bf16 wire formats, accumulator flips under the per-block checksum);
+# writes rust/BENCH_abft.json.
+bench-abft:
+	cd rust && cargo bench --bench abft_overhead
+
+# Fast variant (what CI runs): fewer reps, trials, and bit positions; the
+# coverage accounting and the acceptance print still execute.
+bench-abft-smoke:
+	cd rust && STTSV_BENCH_SMOKE=1 cargo bench --bench abft_overhead

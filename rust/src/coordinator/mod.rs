@@ -60,11 +60,16 @@
 pub mod baselines;
 pub mod session;
 
-use crate::partition::{block_ternary_mults, classify, factors, BlockKind, TetraPartition};
-use crate::runtime::{exec_block_runs, lanes_add, lanes_axpy, Backend, Engine, RunDesc};
+use crate::partition::{
+    block_ternary_mults, checksum_weights, classify, factors, BlockKind, TetraPartition,
+};
+use crate::runtime::{
+    exec_block_runs, lanes_add, lanes_axpy, panel_col_sums, Backend, Engine, RunDesc,
+};
 use crate::schedule::CommSchedule;
 use crate::simulator::{
-    self, BufPool, Comm, CommStats, FaultPlan, RunCfg, TagClass, TransportKind, WireFormat,
+    self, AbftMode, BufPool, Comm, CommStats, FaultPlan, MemChaos, RunCfg, SttsvError, TagClass,
+    TransportKind, WireFormat,
 };
 use crate::tensor::{PackedBlockView, Precision, SymTensor};
 use anyhow::{bail, ensure, Result};
@@ -115,6 +120,11 @@ impl std::str::FromStr for CommMode {
 /// |                                | elements would be neither the f64   |
 /// |                                | conditioning study nor the bf16     |
 /// |                                | bandwidth point)                    |
+/// | `abft` w/o `compiled`          | `abft` cleared (scrub replays the   |
+/// |                                | compiled run-descriptor stream)     |
+/// | `abft` (verify or scrub)       | `overlap` off, `compute_threads` 1  |
+/// |                                | (block verification runs on the     |
+/// |                                | bitwise-deterministic phased path)  |
 ///
 /// Post-conditions are debug-asserted in `normalize`; downgrades (e.g.
 /// requesting `compiled` on PJRT) are silent, matching how `batch` has
@@ -218,6 +228,19 @@ pub struct ExecOpts {
     /// the accuracy reference the f32/bf16 runs are compared against.
     /// Forced to `F32` under a bf16 wire (see the table above).
     pub precision: Precision,
+    /// Algorithm-based fault tolerance (§Rob P15, CLI `--abft
+    /// off|verify|scrub`). When on, the plan derives per-owned-block
+    /// checksum matrices `C_b` and the global mode-1 contraction `C` at
+    /// build (the allreduce charged to [`SttsvPlan::abft_build_stats`]),
+    /// every sweep payload carries one Fletcher-32 integrity word checked
+    /// in `recv_into`, and each worker verifies every block contribution
+    /// against `xᵀC_b x` after contraction — a detected mismatch surfaces
+    /// as a typed [`SttsvError::Corrupt`] (`verify`) or triggers a
+    /// recompute of just that block's run-descriptor stream (`scrub`).
+    /// Requires the compiled packed Native path; forces the phased
+    /// single-threaded sweep so the recompute is bitwise-deterministic
+    /// (see the table above).
+    pub abft: AbftMode,
 }
 
 impl Default for ExecOpts {
@@ -236,6 +259,7 @@ impl Default for ExecOpts {
             recv_timeout: None,
             wire: WireFormat::F32,
             precision: Precision::F32,
+            abft: AbftMode::Off,
         }
     }
 }
@@ -283,9 +307,23 @@ impl ExecOpts {
             // conditioning reference nor the bf16 bandwidth point.
             self.precision = Precision::F32;
         }
+        if self.abft.on() {
+            if self.compiled {
+                // Per-block verification (and the scrub recompute) runs on
+                // the sequential compiled phased path — the only executor
+                // whose per-block recompute is bitwise-deterministic.
+                self.overlap = false;
+                self.compute_threads = 1;
+            } else {
+                // No descriptor stream to verify or scrub against
+                // (PJRT / dense-extract / interpreter plans).
+                self.abft = AbftMode::Off;
+            }
+        }
         debug_assert!(self.compute_threads >= 1);
         debug_assert!(!self.compiled || (self.packed && self.backend == Backend::Native));
         debug_assert!(self.wire != WireFormat::Bf16 || self.precision == Precision::F32);
+        debug_assert!(!self.abft.on() || (self.compiled && !self.overlap));
         self
     }
 }
@@ -544,6 +582,12 @@ pub struct SttsvPlan<'a> {
     /// instrumentation mirroring `SymTensor::dense_sttsv_invocations`:
     /// stays exactly P (or 0 uncompiled) however many sweeps run.
     program_builds: AtomicU64,
+    /// §Rob P15 checksum state (`Some` iff `opts.abft.on()`): per-block
+    /// `C_b`, the global `C`, and the charged build communication.
+    abft: Option<AbftData>,
+    /// Blocks successfully repaired by scrub-mode recompute across every
+    /// run of this plan (a detected-and-recovered silent corruption each).
+    abft_scrubs: AtomicU64,
 }
 
 /// Overlap-mode tags: one gather and one reduce message per ordered peer
@@ -814,6 +858,144 @@ fn build_program(
     SweepProgram { blocks, descs, all }
 }
 
+/// Per-block packed checksum matrix `C_b` (§Rob P15): the coefficients of
+/// the quadratic form `xᵀC_b x` that the block's weighted contribution to
+/// `Σ_i y_i` must equal — `fi·Σci + fj·Σcj + fk·Σck = Σ_{u≥v} coef·x_u·x_v`
+/// exactly in real arithmetic (the per-entry symmetrization weights of
+/// [`checksum_weights`] restricted to this block's unique entries), so the
+/// verify residual at zero faults is pure fp noise, bounded γ-style.
+///
+/// Coordinates are block-local: the block's 1–3 distinct row blocks become
+/// `npanels` consecutive b-wide panels in ascending row-block order (which
+/// makes local order agree with global order, so `u ≥ v` is preserved),
+/// and `coef` is packed upper-triangular over the `npanels·b` local
+/// coordinates (`coef[u(u+1)/2 + v]`, v ≤ u).
+struct AbftBlock {
+    /// Worker slot of each panel (ascending row-block order); the x value
+    /// of local coordinate u is `xbuf[(slot[u/b]·b + u%b)·r + l]`.
+    slot: [u32; 3],
+    npanels: usize,
+    coef: Vec<f32>,
+}
+
+/// One processor's ABFT state: per-owned-block checksum matrices, parallel
+/// to the compiled program's block order.
+struct AbftProc {
+    blocks: Vec<AbftBlock>,
+}
+
+/// Plan-wide ABFT state: the per-processor `C_b` sets, the global mode-1
+/// contraction checksum `C[j,k] = Σ_i A[i,j,k]` (packed upper-triangular,
+/// n(n+1)/2 coefficients) for the host-side `Σ_i y_i = xᵀCx` backstop, and
+/// the build-time communication (one width-n(n+1)/2 allreduce per rank —
+/// the closed form [`crate::simulator::allreduce_stats`]`(p, rank,
+/// n(n+1)/2)`, asserted in P15). Build comm is charged here once, NOT
+/// folded into per-run stats: the tensor — and hence C — never moves again
+/// across repeated STTSVs.
+struct AbftData {
+    per_proc: Vec<AbftProc>,
+    c_global: Vec<f32>,
+    build_stats: Vec<CommStats>,
+}
+
+/// Build one block's packed `C_b` from the shared tensor buffer.
+fn build_abft_block(
+    tensor: &SymTensor,
+    view: &PackedBlockView,
+    slots: &[usize],
+    b: usize,
+) -> AbftBlock {
+    // Distinct row blocks, ascending: bk ≤ bj ≤ bi.
+    let mut panels = [view.bk, 0, 0];
+    let mut npanels = 1;
+    for rb in [view.bj, view.bi] {
+        if rb != panels[npanels - 1] {
+            panels[npanels] = rb;
+            npanels += 1;
+        }
+    }
+    let loc = |g: usize| -> usize {
+        let pi = panels[..npanels]
+            .iter()
+            .position(|&p| p == g / b)
+            .expect("entry index outside the block's row blocks");
+        pi * b + g % b
+    };
+    let nloc = npanels * b;
+    let mut coef = vec![0.0f32; nloc * (nloc + 1) / 2];
+    let data = tensor.packed_data();
+    view.for_each_unique_entry(|off, i, j, k| {
+        let a = data[off];
+        for (u, v, w) in checksum_weights(i, j, k) {
+            if w != 0.0 {
+                let (lu, lv) = (loc(u), loc(v));
+                debug_assert!(lu >= lv);
+                coef[lu * (lu + 1) / 2 + lv] += w * a;
+            }
+        }
+    });
+    let mut slot = [0u32; 3];
+    for (s, &p) in slot.iter_mut().zip(&panels[..npanels]) {
+        *s = slots[p] as u32;
+    }
+    AbftBlock { slot, npanels, coef }
+}
+
+/// Build the plan's ABFT state with a dedicated P-rank simulator run on
+/// the deterministic mpsc transport: each rank derives its owned blocks'
+/// `C_b` locally (blocks in the same group-major order as
+/// [`build_program`], so program block ids index [`AbftProc::blocks`]
+/// directly), scatters them into a global n(n+1)/2 coefficient buffer
+/// (blocks partition the unique entries, so the sum is exactly `C`), and
+/// allreduce-sums it — the only ABFT build communication.
+fn build_abft(
+    tensor: &SymTensor,
+    part: &TetraPartition,
+    groups: &[Vec<Group>],
+    slot_of: &[Vec<usize>],
+    b: usize,
+    n: usize,
+) -> Result<AbftData> {
+    let tri_n = n * (n + 1) / 2;
+    let cfg = RunCfg {
+        slot_words: tri_n.max(2),
+        ..RunCfg::default()
+    };
+    type BuildOut = (AbftProc, Vec<f32>, CommStats);
+    let (outs, _metrics): (Vec<BuildOut>, _) =
+        simulator::run_cfg(part.p, None, cfg, |comm| {
+            let me = comm.rank;
+            comm.phase = "abft-build";
+            let mut blocks = Vec::new();
+            let mut c = vec![0.0f32; tri_n];
+            for group in &groups[me] {
+                for view in &group.views {
+                    blocks.push(build_abft_block(tensor, view, &slot_of[me], b));
+                    let data = tensor.packed_data();
+                    view.for_each_unique_entry(|off, i, j, k| {
+                        let a = data[off];
+                        for (u, v, w) in checksum_weights(i, j, k) {
+                            if w != 0.0 {
+                                c[u * (u + 1) / 2 + v] += w * a;
+                            }
+                        }
+                    });
+                }
+            }
+            comm.allreduce_sum(&mut c)?;
+            Ok((AbftProc { blocks }, c, comm.stats))
+        })?;
+    let mut per_proc = Vec::with_capacity(part.p);
+    let mut build_stats = Vec::with_capacity(part.p);
+    let mut c_global = Vec::new();
+    for (proc, c, stats) in outs {
+        per_proc.push(proc);
+        c_global = c;
+        build_stats.push(stats);
+    }
+    Ok(AbftData { per_proc, c_global, build_stats })
+}
+
 /// Split `bids` into at most `threads` contiguous chunks with balanced
 /// §7.1 charge — the compute pool's deterministic work assignment (no
 /// work stealing, so the ordered reduction is reproducible for a fixed
@@ -866,6 +1048,9 @@ impl<'a> SttsvPlan<'a> {
             // constructor.
             opts.compiled = false;
             opts.compute_threads = 1;
+            // ABFT scrubs replay descriptor streams; without them it is
+            // normalized away exactly as in ExecOpts::normalize.
+            opts.abft = AbftMode::Off;
         }
         let n = tensor.n;
         ensure!(
@@ -934,6 +1119,18 @@ impl<'a> SttsvPlan<'a> {
                 debug_assert_eq!(prog.blocks.len(), meta.blocks.len());
             }
         }
+        // ABFT checksum derivation (§Rob P15) runs after the programs so
+        // AbftProc block ids line up with program block ids by shared
+        // group-major construction order.
+        let abft = if opts.abft.on() {
+            let data = build_abft(tensor, part, &groups, &slot_of, b, n)?;
+            for (proc, prog) in data.per_proc.iter().zip(&programs) {
+                debug_assert_eq!(proc.blocks.len(), prog.blocks.len());
+            }
+            Some(data)
+        } else {
+            None
+        };
         Ok(SttsvPlan {
             tensor,
             part,
@@ -948,7 +1145,24 @@ impl<'a> SttsvPlan<'a> {
             pools,
             programs,
             program_builds,
+            abft,
+            abft_scrubs: AtomicU64::new(0),
         })
+    }
+
+    /// Blocks repaired by scrub-mode recompute over this plan's lifetime
+    /// (0 in `verify` mode or at zero injected/occurred corruption).
+    pub fn abft_scrubs(&self) -> u64 {
+        self.abft_scrubs.load(Ordering::Relaxed)
+    }
+
+    /// Per-rank communication charged to the ABFT checksum build (`Some`
+    /// iff the plan runs with ABFT on): exactly one width-n(n+1)/2
+    /// allreduce per rank — [`crate::simulator::allreduce_stats`]`(p,
+    /// rank, n(n+1)/2)`, asserted in P15. Charged once at plan build, not
+    /// per run, because C is as immobile as the tensor it checksums.
+    pub fn abft_build_stats(&self) -> Option<&[CommStats]> {
+        self.abft.as_ref().map(|a| a.build_stats.as_slice())
     }
 
     /// How many sweep programs this plan ever compiled: P on a compiled
@@ -1008,6 +1222,142 @@ impl<'a> SttsvPlan<'a> {
             mults += r as u64 * blk.mults;
         }
         mults
+    }
+
+    /// The ABFT-guarded sequential executor (§Rob P15): identical block
+    /// order and arithmetic to [`Self::exec_blocks_seq`] — the verify is a
+    /// read-only side computation between the kernel and the axpy, so
+    /// zero-fault results are bitwise equal to ABFT-off — plus, per block:
+    /// an optional injected memory bit-flip (chaos), the `xᵀC_b x` check,
+    /// and in scrub mode a single recompute of the offending block's
+    /// run-descriptor stream before giving up with a typed
+    /// [`SttsvError::Corrupt`].
+    #[allow(clippy::too_many_arguments)]
+    fn exec_blocks_abft(
+        &self,
+        prog: &SweepProgram,
+        ab: &AbftProc,
+        me: usize,
+        xbuf: &[f32],
+        out: &mut [f32],
+        r: usize,
+        cscr: &mut [f32],
+        vscr: &mut [f32],
+        mem: &mut Option<MemChaos>,
+    ) -> Result<u64> {
+        let b = self.b;
+        let panel = b * r;
+        let tdata = self.tensor.packed_data();
+        debug_assert_eq!(cscr.len(), 3 * panel);
+        let (ci, rest) = cscr.split_at_mut(panel);
+        let (cj, ck) = rest.split_at_mut(panel);
+        let mut mults = 0u64;
+        for (bid, (blk, abb)) in prog.blocks.iter().zip(&ab.blocks).enumerate() {
+            let descs = &prog.descs[blk.dstart as usize..blk.dend as usize];
+            let (si, sj, sk) = (blk.si as usize, blk.sj as usize, blk.sk as usize);
+            let (us, vs, ws) = (
+                &xbuf[si * panel..(si + 1) * panel],
+                &xbuf[sj * panel..(sj + 1) * panel],
+                &xbuf[sk * panel..(sk + 1) * panel],
+            );
+            ci.fill(0.0);
+            cj.fill(0.0);
+            ck.fill(0.0);
+            exec_block_runs(tdata, descs, us, vs, ws, ci, cj, ck, r);
+            if let Some(mc) = mem.as_mut() {
+                // Corrupt the accumulator panel that is always accumulated
+                // (fi ≥ 1 for every block kind), so an injected flip is
+                // never masked by a zero multiplicity factor.
+                mc.maybe_flip(ci);
+            }
+            if !self.verify_block(abb, blk, xbuf, ci, cj, ck, r, vscr) {
+                let mut repaired = false;
+                if self.opts.abft == AbftMode::Scrub {
+                    // Recompute just this block's descriptor stream (the
+                    // kernels are bitwise-deterministic, so a clean replay
+                    // is the fault-free contribution) and re-verify.
+                    ci.fill(0.0);
+                    cj.fill(0.0);
+                    ck.fill(0.0);
+                    exec_block_runs(tdata, descs, us, vs, ws, ci, cj, ck, r);
+                    repaired = self.verify_block(abb, blk, xbuf, ci, cj, ck, r, vscr);
+                    if repaired {
+                        self.abft_scrubs.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                if !repaired {
+                    return Err(SttsvError::Corrupt {
+                        rank: me,
+                        tag: bid as u64,
+                        phase: "abft-verify",
+                    }
+                    .into());
+                }
+            }
+            axpy_panel(out, si, panel, blk.fi, ci);
+            axpy_panel(out, sj, panel, blk.fj, cj);
+            axpy_panel(out, sk, panel, blk.fk, ck);
+            mults += r as u64 * blk.mults;
+        }
+        Ok(mults)
+    }
+
+    /// Check one block's contribution against its checksum matrix: for
+    /// every column l, `fi·Σci + fj·Σcj + fk·Σck` must equal
+    /// `Σ_{u≥v} coef·x_u·x_v` within a γ-style bound — ε·(8 + 2·mults)
+    /// times the form's absolute mass Σ|coef·x_u·x_v|, covering the fp
+    /// accumulation error of both sides with margin (soak-tested to never
+    /// false-positive) while staying far below the relative error an
+    /// exponent-bit flip inflicts on any contributing accumulator word.
+    /// `vscr` is the worker's reusable 3r scratch (got/expected/mass).
+    #[allow(clippy::too_many_arguments)]
+    fn verify_block(
+        &self,
+        ab: &AbftBlock,
+        blk: &BlockProg,
+        xbuf: &[f32],
+        ci: &[f32],
+        cj: &[f32],
+        ck: &[f32],
+        r: usize,
+        vscr: &mut [f32],
+    ) -> bool {
+        let b = self.b;
+        debug_assert_eq!(vscr.len(), 3 * r);
+        let (got, rest) = vscr.split_at_mut(r);
+        let (exp, mass) = rest.split_at_mut(r);
+        got.fill(0.0);
+        exp.fill(0.0);
+        mass.fill(0.0);
+        panel_col_sums(ci, r, blk.fi, got);
+        panel_col_sums(cj, r, blk.fj, got);
+        panel_col_sums(ck, r, blk.fk, got);
+        let xcol = |u: usize| {
+            let s = ab.slot[u / b] as usize;
+            &xbuf[(s * b + u % b) * r..(s * b + u % b + 1) * r]
+        };
+        let mut idx = 0usize;
+        for u in 0..ab.npanels * b {
+            let xu = xcol(u);
+            for v in 0..=u {
+                let c = ab.coef[idx];
+                idx += 1;
+                if c == 0.0 {
+                    continue;
+                }
+                let xv = xcol(v);
+                for l in 0..r {
+                    let t = c * xu[l] * xv[l];
+                    exp[l] += t;
+                    mass[l] += t.abs();
+                }
+            }
+        }
+        let gamma = f32::EPSILON * (8.0 + 2.0 * blk.mults as f32);
+        got.iter()
+            .zip(exp.iter())
+            .zip(mass.iter())
+            .all(|((&g, &e), &m)| (g - e).abs() <= gamma * m)
     }
 
     /// Execute program blocks through the intra-worker compute pool:
@@ -1148,7 +1498,7 @@ impl<'a> SttsvPlan<'a> {
         );
         let (outs, metrics): (Vec<ProcOut>, simulator::RunMetrics) =
             simulator::run_cfg(part.p, Some(&self.pools), self.run_cfg_with(r, chaos), |comm| {
-                self.worker(comm, &views)
+                self.worker(comm, &views, chaos)
             })?;
 
         // Assemble ys from the final portions (each (i, sub-range) once;
@@ -1164,6 +1514,7 @@ impl<'a> SttsvPlan<'a> {
             });
         }
         let ys = assemble_columns(self.n, b, r, portions_all)?;
+        self.abft_global_check(&views, &ys)?;
 
         let steps_per_phase = self.steps_per_phase();
         Ok(SttsvMultiReport {
@@ -1176,6 +1527,59 @@ impl<'a> SttsvPlan<'a> {
         })
     }
 
+    /// Host-side ABFT backstop after column assembly (§Rob P15): for every
+    /// column, `Σ_i y_i` must equal the global form `xᵀCx` (with C the
+    /// packed mode-1 contraction checksum built at plan construction).
+    /// The per-block worker checks are the primary, tight detector — they
+    /// compare against the same wire-rounded xbuf the kernels consumed —
+    /// so this check's tolerance is wire-aware: under a bf16 wire both the
+    /// gathered x panels and the reduced y partials carry one
+    /// round-to-nearest-even bf16 rounding (relative 2⁻⁹ each), while the
+    /// host x and C here are full f32. Mismatch = corruption that slipped
+    /// past (or bypassed) every per-block check, attributed to no single
+    /// rank (`rank = usize::MAX`, `tag` = column). No-op with ABFT off.
+    fn abft_global_check(&self, xs: &[&[f32]], ys: &[Vec<f32>]) -> Result<()> {
+        let Some(abft) = &self.abft else {
+            return Ok(());
+        };
+        let wire_rel = match self.opts.wire {
+            WireFormat::F32 => 0.0f64,
+            // two bf16 roundings (gather + reduce), 2⁻⁹ relative each,
+            // doubled again for safety against rounding interactions
+            WireFormat::Bf16 => 4.0 / 512.0,
+        };
+        let n = self.n as f64;
+        for (l, (x, y)) in xs.iter().zip(ys).enumerate() {
+            let got: f64 = y.iter().map(|&v| v as f64).sum();
+            let got_abs: f64 = y.iter().map(|&v| v.abs() as f64).sum();
+            let mut exp = 0.0f64;
+            let mut mass = 0.0f64;
+            let mut idx = 0usize;
+            for u in 0..self.n {
+                for v in 0..=u {
+                    let c = abft.c_global[idx] as f64;
+                    idx += 1;
+                    if c != 0.0 {
+                        let t = c * x[u] as f64 * x[v] as f64;
+                        exp += t;
+                        mass += t.abs();
+                    }
+                }
+            }
+            let tol = wire_rel * (mass + got_abs)
+                + f32::EPSILON as f64 * (16.0 + 4.0 * n * n) * mass;
+            if (got - exp).abs() > tol {
+                return Err(SttsvError::Corrupt {
+                    rank: usize::MAX,
+                    tag: l as u64,
+                    phase: "abft-global",
+                }
+                .into());
+            }
+        }
+        Ok(())
+    }
+
     /// One simulated processor executing Algorithm 5 for r packed columns:
     /// a thin one-iteration session — seed the own portions from the
     /// host-resident input vectors, run exactly one sweep (phased or
@@ -1186,6 +1590,7 @@ impl<'a> SttsvPlan<'a> {
         &self,
         comm: &mut Comm,
         xs: &[&[f32]],
+        chaos: FaultPlan,
     ) -> Result<(
         CommStats,
         u64,
@@ -1195,6 +1600,7 @@ impl<'a> SttsvPlan<'a> {
         let me = comm.rank;
         let r = xs.len();
         let mut st = self.worker_state(me, r);
+        self.arm_chaos(&mut st, me, chaos);
         self.seed_own(me, xs, &mut st.xbuf);
         let (mults, compute_time) = self.sweep(comm, &mut st)?;
         Ok((comm.stats, mults, compute_time, self.owned_portions(me, &st.ybuf, r)))
@@ -1226,7 +1632,27 @@ impl<'a> SttsvPlan<'a> {
                 vec![0.0f32; 3 * self.b * r]
             },
             pool: PoolBufs::default(),
+            vscr: if self.abft.is_some() {
+                vec![0.0f32; 3 * r]
+            } else {
+                Vec::new()
+            },
+            mem: None,
         }
+    }
+
+    /// Arm a worker's memory-corruption injector from a (possibly
+    /// per-attempt reseeded) chaos plan — `None`/no-op at
+    /// `flip_mem_ppm = 0`, so fault-free runs carry no injector state.
+    /// Flips land on accumulator panels only under ABFT's guarded
+    /// executor, mirroring how the wire decorator only wraps nonzero
+    /// plans.
+    pub(crate) fn arm_chaos(&self, st: &mut WorkerState, rank: usize, chaos: FaultPlan) {
+        st.mem = if self.abft.is_some() {
+            MemChaos::new(rank, chaos)
+        } else {
+            None
+        };
     }
 
     /// Write processor `me`'s own x portions (all r columns, interleaved)
@@ -1351,7 +1777,23 @@ impl<'a> SttsvPlan<'a> {
         // stream — block order identical to the interpreted per-block loop
         // below, so `compute_threads = 1` is bitwise the interpreter.
         if let Some(prog) = self.program(me) {
-            mults = if self.opts.compute_threads > 1 {
+            mults = if let Some(abft) = &self.abft {
+                // §Rob P15: the guarded executor — same order and
+                // arithmetic as the sequential path (normalize pinned
+                // compute_threads to 1), plus per-block verification.
+                let (xbuf, ybuf) = (&st.xbuf, &mut st.ybuf);
+                self.exec_blocks_abft(
+                    prog,
+                    &abft.per_proc[me],
+                    me,
+                    xbuf,
+                    ybuf,
+                    r,
+                    &mut st.cscr,
+                    &mut st.vscr,
+                    &mut st.mem,
+                )?
+            } else if self.opts.compute_threads > 1 {
                 self.exec_blocks_pooled(
                     prog,
                     &prog.all,
@@ -1721,6 +2163,18 @@ impl<'a> SttsvPlan<'a> {
                 }
             }
         }
+        if self.opts.abft.on() {
+            // Every sweep message carries exactly one Fletcher-32
+            // integrity word, billed at the wire's sweep byte width — and
+            // every message counted above IS a sweep message, so the
+            // closed-form surcharge is one word per message (§Rob P15).
+            for s in out.iter_mut() {
+                s.sent_words += s.sent_msgs;
+                s.sent_bytes += bpw * s.sent_msgs;
+                s.recv_words += s.recv_msgs;
+                s.recv_bytes += bpw * s.recv_msgs;
+            }
+        }
         out
     }
 
@@ -1758,7 +2212,10 @@ impl<'a> SttsvPlan<'a> {
                 .unwrap_or(0),
             CommMode::AllToAll => 2 * b.div_ceil(part.lambda1()),
         };
-        (widest * r).max(r * r).max(2)
+        // Under ABFT every sweep payload grows by one f32 container for
+        // the integrity word (appended after bf16 packing, so one full
+        // word either way); the r² collective floor is never framed.
+        (widest * r + self.opts.abft.on() as usize).max(r * r).max(2)
     }
 
     /// The simulator run configuration for an r-deep sweep: the plan's
@@ -1780,6 +2237,7 @@ impl<'a> SttsvPlan<'a> {
             chaos,
             recv_timeout: self.opts.recv_timeout,
             wire: self.opts.wire,
+            abft: self.opts.abft,
         }
     }
 }
@@ -1800,6 +2258,12 @@ pub(crate) struct WorkerState {
     cscr: Vec<f32>,
     /// Compute-pool buffers, reused across batches and sweeps.
     pool: PoolBufs,
+    /// ABFT verify scratch (3r: got/expected/mass); empty when ABFT off.
+    vscr: Vec<f32>,
+    /// Armed memory bit-flip injector (§Rob chaos, `flip_mem_ppm` > 0) —
+    /// per-attempt state, re-armed by [`SttsvPlan::arm_chaos`] so retry
+    /// reseeds change the fault sequence like the wire decorator's.
+    mem: Option<MemChaos>,
 }
 
 /// Reusable intra-worker compute-pool buffers, one entry per extra pool
@@ -2843,6 +3307,26 @@ mod tests {
         assert_eq!(o.precision, Precision::F32, "bf16 wire forces f32 elements");
         let o = ExecOpts { precision: Precision::F64, ..Default::default() }.normalize();
         assert_eq!(o.precision, Precision::F64);
+        // ABFT rides the compiled path: on it, verification pins the
+        // bitwise-deterministic phased sequential execution; off it, the
+        // request downgrades silently like the other table rules.
+        let o = ExecOpts {
+            abft: AbftMode::Verify,
+            overlap: true,
+            compute_threads: 4,
+            ..Default::default()
+        }
+        .normalize();
+        assert!(o.abft.on() && o.compiled);
+        assert!(!o.overlap, "ABFT forces the phased path");
+        assert_eq!(o.compute_threads, 1, "ABFT forces sequential exec");
+        let o = ExecOpts {
+            abft: AbftMode::Scrub,
+            backend: Backend::Pjrt,
+            ..Default::default()
+        }
+        .normalize();
+        assert!(!o.abft.on(), "no compiled programs, no checksum exec");
         // plans normalize on construction: a PJRT-flagged compiled request
         // builds no programs (and still runs, via the interpreter)
         let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();

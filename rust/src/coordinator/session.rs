@@ -56,7 +56,7 @@
 use super::{assemble_columns, ProcReport, SttsvPlan};
 use crate::simulator::{self, allreduce_stats, lock_clean, CommStats};
 use crate::tensor::linalg;
-use anyhow::{ensure, Result};
+use anyhow::{bail, ensure, Result};
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
@@ -350,11 +350,13 @@ impl<'p, 't> SolverSession<'p, 't> {
                 recovery.resumed_from.push(cut);
             }
             let entries = AtomicUsize::new(0);
-            let cfg = plan.run_cfg_with(1, plan.opts.chaos.reseeded(attempt));
+            let chaos = plan.opts.chaos.reseeded(attempt);
+            let cfg = plan.run_cfg_with(1, chaos);
             let result = simulator::run_cfg(part.p, Some(&plan.pools), cfg, |comm| {
                 entries.fetch_add(1, Ordering::Relaxed);
                 let me = comm.rank;
                 let mut st = plan.worker_state(me, 1);
+                plan.arm_chaos(&mut st, me, chaos);
                 let ranges = plan.own_ranges(me, 1);
                 let mut scalars = Vec::new();
                 let mut per_iter = Vec::new();
@@ -498,7 +500,13 @@ impl<'p, 't> SolverSession<'p, 't> {
             .collect();
         let portions = outs.into_iter().map(|o| o.portions).collect();
         let mut cols = assemble_columns(plan.n, plan.b, 1, portions)?;
-        let x = cols.pop().expect("one result column");
+        let x = match cols.pop() {
+            Some(col) => col,
+            // Unreachable by construction (assemble_columns returns r = 1
+            // columns) but a chaos-path worker error must never become a
+            // panic in the session loop — propagate typed instead.
+            None => bail!("assembly returned no result column for r = 1"),
+        };
         Ok(PowerSolve {
             x,
             iters,
@@ -558,11 +566,13 @@ impl<'p, 't> SolverSession<'p, 't> {
                 recovery.resumed_from.push(cut);
             }
             let entries = AtomicUsize::new(0);
-            let cfg = plan.run_cfg_with(r, plan.opts.chaos.reseeded(attempt));
+            let chaos = plan.opts.chaos.reseeded(attempt);
+            let cfg = plan.run_cfg_with(r, chaos);
             let result = simulator::run_cfg(part.p, Some(&plan.pools), cfg, |comm| {
                 entries.fetch_add(1, Ordering::Relaxed);
                 let me = comm.rank;
                 let mut st = plan.worker_state(me, r);
+                plan.arm_chaos(&mut st, me, chaos);
                 let ranges = plan.own_ranges(me, r);
                 let mut gbuf = vec![0.0f32; st.xbuf.len()];
                 let mut tmp = vec![0.0f32; r];

@@ -23,7 +23,7 @@ use sttsv::runtime::{set_simd_policy, Backend, SimdPolicy};
 use sttsv::schedule::CommSchedule;
 use sttsv::apps::RecoveryPolicy;
 use sttsv::serve::{AdmissionPolicy, RobustnessPolicy, SttsvServer};
-use sttsv::simulator::{FaultPlan, TransportKind, WireFormat};
+use sttsv::simulator::{AbftMode, FaultPlan, TransportKind, WireFormat};
 use sttsv::steiner::{fixtures, spherical, sqs8, trivial};
 use sttsv::tensor::{linalg, Precision, SymTensor, SymTensorG};
 use sttsv::util::cli::Args;
@@ -53,7 +53,9 @@ fn main() {
                  [--overlap|--no-overlap] [--compiled|--no-compiled] \
                  [--compute-threads N] [--resident|--no-resident] \
                  [--batch-window MS] [--max-r N] [--cache N] [--queries N] \
-                 [--chaos SEED,RATE] [--recv-timeout-ms N] \
+                 [--chaos SEED,RATE] [--chaos-crash RANK@OP] \
+                 [--chaos-flip WIRE,MEM[,BIT]] [--abft off|verify|scrub] \
+                 [--recv-timeout-ms N] \
                  [--checkpoint-every N] [--retries N] [--deadline-ms MS] \
                  [--wire f32|bf16] [--precision f32|f64] [--simd auto|scalar]\n\
                  \n\
@@ -79,6 +81,25 @@ fn main() {
                  --queries N      serve: synthetic open-loop queries to replay\n\
                  --chaos SEED,RATE  inject seeded transport faults at this \
                  per-op probability (deterministic per seed; 0 = transparent)\n\
+                 --chaos-crash RANK@OP  deterministically crash rank RANK at \
+                 its OP-th transport operation (composes with --chaos; \
+                 power-method/cp-als sessions restart from the newest \
+                 checkpoint, serve retries the batch)\n\
+                 --chaos-flip WIRE,MEM[,BIT]  silent-data-corruption chaos: \
+                 flip one bit per sweep send with probability WIRE and one \
+                 bit per executed block's accumulator with probability MEM \
+                 (optional BIT pins the flipped position, 0..=31); pair \
+                 with --abft — without it wire flips are caught only by \
+                 the oracle check and memory flips go undetected\n\
+                 --abft MODE      off (default) | verify | scrub: per-block \
+                 mode-1 checksum verification of every sweep (detects \
+                 in-memory SDC; a per-message integrity word covers the \
+                 wire). verify fails typed on mismatch; scrub recomputes \
+                 the offending block first and only fails if the error \
+                 persists. Sessions (power-method/cp-als) and serve treat \
+                 the failure as retryable like any transport fault. \
+                 Requires --compiled (on by default); forces --no-overlap \
+                 and --compute-threads 1\n\
                  --recv-timeout-ms N  recv watchdog: a rank waiting longer \
                  than this on one message fails with a typed Timeout\n\
                  --checkpoint-every N  power-method/cp-als: commit a \
@@ -242,6 +263,41 @@ fn exec_opts(args: &Args) -> Result<ExecOpts> {
     if let Some(spec) = args.get("chaos") {
         opts.chaos = spec.parse::<FaultPlan>()?;
     }
+    // --chaos-crash / --chaos-flip compose onto the same FaultPlan: each
+    // sets its own fields, so `--chaos 7,0.001 --chaos-crash 2@40` keeps
+    // the random-fault stream AND the deterministic kill switch.
+    if let Some(spec) = args.get("chaos-crash") {
+        let (rank, at) = spec.split_once('@').ok_or_else(|| {
+            anyhow::anyhow!("--chaos-crash wants `RANK@OP` (e.g. 2@40)")
+        })?;
+        opts.chaos.crash_rank = Some(rank.trim().parse::<u32>()?);
+        opts.chaos.crash_at = at.trim().parse::<u64>()?;
+    }
+    if let Some(spec) = args.get("chaos-flip") {
+        let mut parts = spec.split(',');
+        let mut rate = |name: &str| -> Result<u32> {
+            let raw = parts
+                .next()
+                .ok_or_else(|| {
+                    anyhow::anyhow!("--chaos-flip wants `WIRE,MEM[,BIT]` (e.g. 0.01,0,25)")
+                })?
+                .trim()
+                .parse::<f64>()?;
+            anyhow::ensure!(
+                (0.0..=1.0).contains(&raw),
+                "chaos-flip {name} probability must be in [0,1], got {raw}"
+            );
+            Ok((raw * 1e6).round() as u32)
+        };
+        opts.chaos.flip_wire_ppm = rate("WIRE")?;
+        opts.chaos.flip_mem_ppm = rate("MEM")?;
+        if let Some(bit) = parts.next() {
+            let bit: u8 = bit.trim().parse()?;
+            anyhow::ensure!(bit < 32, "chaos-flip BIT must be 0..=31, got {bit}");
+            opts.chaos = opts.chaos.forcing_bit(bit);
+        }
+    }
+    opts.abft = args.get("abft").unwrap_or("off").parse::<AbftMode>()?;
     let recv_timeout_ms: u64 = args.get_or("recv-timeout-ms", 0u64);
     if recv_timeout_ms > 0 {
         opts.recv_timeout = Some(std::time::Duration::from_millis(recv_timeout_ms));
@@ -266,6 +322,14 @@ fn exec_opts(args: &Args) -> Result<ExecOpts> {
         eprintln!(
             "warning: --precision f64 ignored — the bf16 wire format is \
              f32-only (drop --wire bf16)"
+        );
+    }
+    if opts.abft.on() && !opts.normalize().abft.on() {
+        eprintln!(
+            "warning: --abft {} ignored — ABFT checksum verification \
+             requires the compiled packed native path (drop --no-compiled/\
+             --no-packed/--backend pjrt)",
+            opts.abft
         );
     }
     Ok(opts)

@@ -70,6 +70,33 @@ pub fn block_ternary_mults(kind: BlockKind, b: u64) -> u64 {
     }
 }
 
+/// ABFT checksum pair-weights for one unique tensor entry (i ≥ j ≥ k):
+/// up to three `(u, v, w)` terms (u ≥ v) such that accumulating
+/// `coef{u,v} += w · A[i,j,k]` over all unique entries yields the
+/// quadratic form `Σ_{u≥v} coef{u,v}·x_u·x_v = Σ_i y_i = xᵀCx` with
+/// `C[j,k] = Σ_i A[i,j,k]` (the mode-1 contraction checksum, §Rob P15).
+/// The weights are the symmetrization multiplicities of the entry — the
+/// same accounting as [`factors`]/[`block_ternary_mults`], restricted to
+/// a single entry instead of a block, so the per-block restriction `C_b`
+/// verifies exactly what the packed kernels compute. Zero-weight terms
+/// pad the array for case uniformity; accumulate-then-skip is fine.
+pub fn checksum_weights(i: usize, j: usize, k: usize) -> [(usize, usize, f32); 3] {
+    debug_assert!(i >= j && j >= k, "entry index must satisfy i >= j >= k");
+    if i > j && j > k {
+        // 6 permutations: each of the three unordered pairs appears twice
+        [(i, j, 2.0), (i, k, 2.0), (j, k, 2.0)]
+    } else if i == j && j == k {
+        // 1 permutation: the diagonal pair once
+        [(i, i, 1.0), (i, k, 0.0), (j, k, 0.0)]
+    } else if i == j {
+        // (a,a,b): 3 permutations — pair {a,b} twice, diagonal {a,a} once
+        [(i, k, 2.0), (i, i, 1.0), (j, k, 0.0)]
+    } else {
+        // (a,b,b): 3 permutations — pair {a,b} twice, diagonal {b,b} once
+        [(i, j, 2.0), (j, j, 1.0), (i, k, 0.0)]
+    }
+}
+
 /// The tetrahedral block defined by an index subset R (paper §6):
 /// TB₃(R) = {(i,j,k) : i,j,k ∈ R, i > j > k}, in lexicographic order.
 pub fn tb3(r: &[usize]) -> Vec<(usize, usize, usize)> {
@@ -331,6 +358,47 @@ mod tests {
         assert_eq!(block_ternary_mults(BlockKind::OffDiagonal, 4), 192);
         assert_eq!(block_ternary_mults(BlockKind::NonCentralDiagonal, 4), 104);
         assert_eq!(block_ternary_mults(BlockKind::CentralDiagonal, 4), 40);
+    }
+
+    #[test]
+    fn checksum_weights_reproduce_sum_of_sttsv() {
+        // Accumulating checksum_weights over all unique entries must build
+        // the exact quadratic form for Σ_i y_i = xᵀCx (f64 oracle, fp slack
+        // only for the f32 sttsv under test).
+        use crate::tensor::SymTensor;
+        use crate::util::rng::Rng;
+        let n = 9;
+        let t = SymTensor::random(n, 31);
+        let mut coef = vec![0.0f64; n * n];
+        for i in 0..n {
+            for j in 0..=i {
+                for k in 0..=j {
+                    let a = t.get(i, j, k) as f64;
+                    for (u, v, w) in checksum_weights(i, j, k) {
+                        coef[u * n + v] += w as f64 * a;
+                    }
+                }
+            }
+        }
+        let mut rng = Rng::new(7);
+        let x = rng.normal_vec(n);
+        let got: f64 = t.sttsv(&x).iter().map(|&y| y as f64).sum();
+        let mut want = 0.0f64;
+        for u in 0..n {
+            for v in 0..=u {
+                want += coef[u * n + v] * x[u] as f64 * x[v] as f64;
+            }
+        }
+        assert!(
+            (got - want).abs() < 1e-3 * want.abs().max(1.0),
+            "{got} vs {want}"
+        );
+        // permutation count conservation: weights for an entry sum to its
+        // number of distinct index permutations
+        for (i, j, k, perms) in [(3, 2, 1, 6.0), (3, 3, 1, 3.0), (3, 1, 1, 3.0), (2, 2, 2, 1.0)] {
+            let s: f32 = checksum_weights(i, j, k).iter().map(|&(_, _, w)| w).sum();
+            assert_eq!(s, perms, "({i},{j},{k})");
+        }
     }
 
     #[test]

@@ -21,7 +21,7 @@ pub use native::{
     block_contract_multi, block_contract_native, block_contract_packed,
     block_contract_packed_multi, dense_sttsv_native, diag_block_contract_packed,
     diag_block_contract_packed_multi, exec_block_runs, exec_block_runs_elem,
-    packed_ternary_mults, RunDesc,
+    packed_ternary_mults, panel_col_sums, RunDesc,
 };
 pub use simd::{avx2_available, set_simd_policy, simd_policy, SimdPolicy};
 pub(crate) use simd::{lanes_add, lanes_axpy};

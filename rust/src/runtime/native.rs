@@ -516,6 +516,24 @@ impl RunDesc {
     }
 }
 
+/// `out[l] += f · Σ_off panel[off·r + l]` — weighted column sums of an
+/// interleaved `(len, r)` panel. The ABFT verifier's reduction of a
+/// block's output panel to its r checksum contributions (§Rob P15): the
+/// weighted sums of the three panels equal the block's total contribution
+/// to `Σ_i y_i`, compared against the quadratic form `xᵀC_b x`. Skips
+/// factor-0 panels exactly like `axpy_panel` skips their accumulation.
+pub fn panel_col_sums(panel: &[f32], r: usize, f: f32, out: &mut [f32]) {
+    if f == 0.0 {
+        return;
+    }
+    debug_assert_eq!(out.len(), r);
+    for row in panel.chunks_exact(r) {
+        for (o, v) in out.iter_mut().zip(row) {
+            *o += f * v;
+        }
+    }
+}
+
 /// Execute one block's compiled run stream against the packed buffer `t`:
 /// the branch-free replay of the packed kernels. `us`/`vs`/`ws` are the
 /// block's `(b, r)` input panels (slices of the worker's gather buffer,

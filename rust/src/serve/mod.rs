@@ -176,14 +176,18 @@ impl<'t> PlanCache<'t> {
         let plan = Arc::new(SttsvPlan::new(tensor, part, opts)?);
         self.counters.plan_builds += 1;
         if self.entries.len() == self.cap {
-            let lru = self
+            // cap ≥ 1 so the map is nonempty here; if-let instead of an
+            // expect so a future cap-0 misconfiguration degrades to a
+            // cache that never evicts rather than a serving-loop panic.
+            if let Some(lru) = self
                 .entries
                 .iter()
                 .min_by_key(|(_, e)| e.last_used)
                 .map(|(k, _)| *k)
-                .expect("cap >= 1, entries nonempty");
-            self.entries.remove(&lru);
-            self.counters.evictions += 1;
+            {
+                self.entries.remove(&lru);
+                self.counters.evictions += 1;
+            }
         }
         self.entries.insert(
             key,
@@ -369,7 +373,9 @@ impl ServeReport {
             return 0.0;
         }
         let mut lats: Vec<f64> = self.outcomes.iter().map(|o| o.latency).collect();
-        lats.sort_by(|a, b| a.partial_cmp(b).expect("finite latencies"));
+        // total_cmp: NaN-tolerant total order — a corrupted latency sample
+        // must never panic a metrics call on a live server.
+        lats.sort_by(f64::total_cmp);
         let rank = ((pct / 100.0) * lats.len() as f64).ceil() as usize;
         lats[rank.clamp(1, lats.len()) - 1]
     }
@@ -515,7 +521,9 @@ impl<'t> SttsvServer<'t> {
             return Ok(ServeReport::default());
         }
         // Stable by arrival: simultaneous arrivals keep submission order.
-        queries.sort_by(|a, b| a.arrival.partial_cmp(&b.arrival).expect("finite arrivals"));
+        // total_cmp: a NaN arrival (corrupted timeline) sorts last instead
+        // of panicking the drain loop.
+        queries.sort_by(|a, b| a.arrival.total_cmp(&b.arrival));
         let plan = self.plan()?;
         let max_r = self.policy.max_r.max(1);
         let window = self.policy.batch_window.max(0.0);

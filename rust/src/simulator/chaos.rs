@@ -4,8 +4,12 @@
 //! [`ChaosTransport`] wraps either backend (the mpsc counting oracle or
 //! the lock-free spsc rings) behind the same private [`Transport`] trait
 //! and injects faults according to a [`FaultPlan`]: message delays that
-//! reorder arrivals, transient send/recv failures, and a deterministic
-//! rank-crash-at-op event. Because every counter, stash, pool, and
+//! reorder arrivals, transient send/recv failures, a deterministic
+//! rank-crash-at-op event, and — for the ABFT layer (§Rob P15, E19) —
+//! silent single-bit flips on outgoing sweep wire containers
+//! (`flip_wire_ppm`) and, via the separate [`MemChaos`] injector the
+//! compute path arms, in freshly contracted accumulator panels
+//! (`flip_mem_ppm`). Because every counter, stash, pool, and
 //! collective lives in `Comm` ABOVE the trait, a zero-fault plan is
 //! observationally invisible — bitwise-identical results and identical
 //! `CommStats` (the P13 transparency leg).
@@ -26,7 +30,7 @@
 //! per attempt and the one-shot `crash_rank` event is dropped after the
 //! first attempt, modeling a crashed-and-replaced worker.
 
-use super::{BufPool, Packet, SttsvError, Transport};
+use super::{BufPool, Packet, SttsvError, TagClass, Transport};
 use crate::util::rng::Rng;
 use anyhow::Result;
 use std::collections::VecDeque;
@@ -56,6 +60,23 @@ pub struct FaultPlan {
     pub crash_rank: Option<u32>,
     /// The fallible-op index at which `crash_rank` dies.
     pub crash_at: u64,
+    /// Per-sweep-send probability (ppm) of flipping one bit somewhere in
+    /// the outgoing wire containers — AFTER bf16 packing and the ABFT
+    /// integrity word, so a firing corrupts exactly the bits that travel.
+    /// Collective/control tags are never flipped: their bitwise
+    /// rank-determinism is a correctness guard, and "never silently
+    /// wrong" is about sweep data (§Rob, `FaultKind::BitFlip{wire}`).
+    pub flip_wire_ppm: u32,
+    /// Per-executed-block probability (ppm) of flipping one bit in that
+    /// block's accumulator panels after contraction, before the ABFT
+    /// check reads them — modeling in-memory SDC the wire word cannot see
+    /// (`FaultKind::BitFlip{memory}`; injected via [`MemChaos`] on the
+    /// compiled sequential exec path).
+    pub flip_mem_ppm: u32,
+    /// Forced bit position for both flip kinds, stored as `bit + 1`
+    /// (0 = uniform over all 32 bits). The E19 coverage table sweeps this
+    /// to attribute detection by bit position (exponent vs mantissa).
+    pub flip_bit: u8,
 }
 
 impl FaultPlan {
@@ -65,35 +86,63 @@ impl FaultPlan {
         FaultPlan {
             seed,
             rate_ppm: (rate.clamp(0.0, 1.0) * 1e6).round() as u32,
-            crash_rank: None,
-            crash_at: 0,
+            ..FaultPlan::default()
         }
     }
 
     /// Deterministic crash plan: `rank` dies at its `at`-th transport op.
     pub fn crash(seed: u64, rank: usize, at: u64) -> FaultPlan {
-        FaultPlan { seed, rate_ppm: 0, crash_rank: Some(rank as u32), crash_at: at }
+        FaultPlan {
+            seed,
+            crash_rank: Some(rank as u32),
+            crash_at: at,
+            ..FaultPlan::default()
+        }
+    }
+
+    /// Bit-flip plan (§Rob ABFT): wire flips at `wire_ppm` per sweep
+    /// send, accumulator-panel flips at `mem_ppm` per executed block,
+    /// bit position uniform. Compose with [`FaultPlan::forcing_bit`] for
+    /// the E19 coverage-by-position table.
+    pub fn bit_flip(seed: u64, wire_ppm: u32, mem_ppm: u32) -> FaultPlan {
+        FaultPlan {
+            seed,
+            flip_wire_ppm: wire_ppm.min(1_000_000),
+            flip_mem_ppm: mem_ppm.min(1_000_000),
+            ..FaultPlan::default()
+        }
+    }
+
+    /// Pin every flip of this plan to bit `bit` (0..32) of its f32
+    /// container instead of a uniform draw.
+    pub fn forcing_bit(mut self, bit: u8) -> FaultPlan {
+        debug_assert!(bit < 32, "f32 containers have 32 bits");
+        self.flip_bit = bit + 1;
+        self
     }
 
     /// The plan a restart should run under. Attempt 0 is the plan itself;
-    /// later attempts remix the transient-fault stream (same rate — the
-    /// environment is still hostile) and drop the one-shot crash event
-    /// (the crashed worker was replaced).
+    /// later attempts remix the transient-fault stream (same rates — the
+    /// environment is still hostile, bit flips included) and drop the
+    /// one-shot crash event (the crashed worker was replaced).
     pub fn reseeded(self, attempt: u32) -> FaultPlan {
         if attempt == 0 {
             return self;
         }
         FaultPlan {
             seed: self.seed ^ (attempt as u64).wrapping_mul(0xA076_1D64_78BD_642F),
-            rate_ppm: self.rate_ppm,
             crash_rank: None,
             crash_at: 0,
+            ..self
         }
     }
 
     /// True when the plan can inject nothing (the transparency case).
     pub fn is_zero(&self) -> bool {
-        self.rate_ppm == 0 && self.crash_rank.is_none()
+        self.rate_ppm == 0
+            && self.crash_rank.is_none()
+            && self.flip_wire_ppm == 0
+            && self.flip_mem_ppm == 0
     }
 }
 
@@ -146,6 +195,22 @@ impl ChaosTransport {
         self.plan.rate_ppm > 0 && self.rng.next_u64() % 1_000_000 < self.plan.rate_ppm as u64
     }
 
+    /// Maybe corrupt one bit of an outgoing sweep payload (§Rob ABFT).
+    /// Zero-rate plans never touch the RNG; collective tags are exempt
+    /// (see [`FaultPlan::flip_wire_ppm`]).
+    fn maybe_flip_wire(&mut self, tag: u64, data: &mut [f32]) {
+        if self.plan.flip_wire_ppm == 0
+            || data.is_empty()
+            || TagClass::of(tag) != TagClass::Sweep
+            || self.rng.next_u64() % 1_000_000 >= self.plan.flip_wire_ppm as u64
+        {
+            return;
+        }
+        let idx = (self.rng.next_u64() % data.len() as u64) as usize;
+        let bit = forced_or_random_bit(self.plan.flip_bit, &mut self.rng);
+        data[idx] = f32::from_bits(data[idx].to_bits() ^ (1u32 << bit));
+    }
+
     /// Advance the fallible-op counter; `Err` when this op crashes the
     /// rank or draws a transient fault.
     fn step(&mut self, op: &'static str) -> Result<()> {
@@ -166,13 +231,22 @@ impl ChaosTransport {
 }
 
 impl Transport for ChaosTransport {
-    fn send(&mut self, to: usize, tag: u64, data: Vec<f32>, pool: &mut BufPool) -> Result<()> {
+    fn send(&mut self, to: usize, tag: u64, mut data: Vec<f32>, pool: &mut BufPool) -> Result<()> {
         self.step("send")?;
+        self.maybe_flip_wire(tag, &mut data);
         self.inner.send(to, tag, data, pool)
     }
 
     fn send_slice(&mut self, to: usize, tag: u64, data: &[f32], pool: &mut BufPool) -> Result<()> {
         self.step("send")?;
+        if self.plan.flip_wire_ppm > 0 && TagClass::of(tag) == TagClass::Sweep {
+            // The borrowed fast path cannot be mutated in place: stage a
+            // pool copy, flip (maybe), and hand that off as owned.
+            let mut buf = pool.take(data.len());
+            buf.extend_from_slice(data);
+            self.maybe_flip_wire(tag, &mut buf);
+            return self.inner.send(to, tag, buf, pool);
+        }
         self.inner.send_slice(to, tag, data, pool)
     }
 
@@ -219,5 +293,51 @@ impl Transport for ChaosTransport {
             return Ok(pkt);
         }
         self.inner.recv(pool)
+    }
+}
+
+/// The plan's forced bit position, or a uniform draw over all 32.
+fn forced_or_random_bit(flip_bit: u8, rng: &mut Rng) -> u32 {
+    match flip_bit {
+        0 => (rng.next_u64() % 32) as u32,
+        b => (b - 1) as u32,
+    }
+}
+
+/// In-memory SDC injector for the compute path (§Rob ABFT,
+/// [`FaultPlan::flip_mem_ppm`]): one decision per executed block, seeded
+/// per rank like the transport wrapper but from an independent stream
+/// (mixing constant differs), so wire and memory fault sequences do not
+/// alias. The coordinator arms one per worker and offers every block's
+/// freshly contracted accumulator panels to [`MemChaos::maybe_flip`]
+/// BEFORE the ABFT check reads them — a firing is exactly the corruption
+/// the `xᵀC_b x` verify must catch, and a scrub's recomputation heals it
+/// (the decision stream has moved on).
+#[derive(Debug)]
+pub struct MemChaos {
+    plan: FaultPlan,
+    rng: Rng,
+}
+
+impl MemChaos {
+    /// `None` when the plan injects no memory flips — the zero-cost (and
+    /// zero-RNG) default path.
+    pub fn new(rank: usize, plan: FaultPlan) -> Option<MemChaos> {
+        (plan.flip_mem_ppm > 0).then(|| MemChaos {
+            plan,
+            rng: Rng::new(plan.seed ^ (rank as u64 + 1).wrapping_mul(0xD6E8_FEB8_6659_FD93)),
+        })
+    }
+
+    /// Flip one bit of one element of `buf` at the plan's per-block rate.
+    /// Returns the flipped (index, bit) for test/bench attribution.
+    pub fn maybe_flip(&mut self, buf: &mut [f32]) -> Option<(usize, u32)> {
+        if buf.is_empty() || self.rng.next_u64() % 1_000_000 >= self.plan.flip_mem_ppm as u64 {
+            return None;
+        }
+        let idx = (self.rng.next_u64() % buf.len() as u64) as usize;
+        let bit = forced_or_random_bit(self.plan.flip_bit, &mut self.rng);
+        buf[idx] = f32::from_bits(buf[idx].to_bits() ^ (1u32 << bit));
+        Some((idx, bit))
     }
 }

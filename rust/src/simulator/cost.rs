@@ -12,6 +12,11 @@
 //! counters keeps predictions honest while the paper-model word counts
 //! stay untouched. At the f32 wire the two accountings coincide
 //! (`bytes = 4·words`).
+//!
+//! ABFT needs no special case here: the Fletcher-32 integrity word that
+//! `--abft` appends to each sweep payload is billed through the ordinary
+//! counters (+1 word, +wire-width bytes per message — §Rob P15), so the
+//! same α/β evaluation prices protected and unprotected runs alike.
 
 use super::CommStats;
 

@@ -98,7 +98,7 @@ mod chaos;
 pub mod cost;
 mod spsc;
 
-pub use chaos::FaultPlan;
+pub use chaos::{FaultPlan, MemChaos};
 
 use anyhow::{anyhow, ensure, Result};
 use std::collections::{HashMap, VecDeque};
@@ -302,6 +302,91 @@ impl std::fmt::Display for WireFormat {
     }
 }
 
+/// Algorithm-based fault tolerance mode (§Rob, `ExecOpts::abft`, CLI
+/// `--abft off|verify|scrub`).
+///
+/// When on, two independent detectors guard every sweep:
+///
+/// * **wire**: every sweep-class [`Comm::isend`] appends one Fletcher-32
+///   integrity word over the final wire containers (after bf16 packing,
+///   so it covers both formats bit for bit); [`Comm::recv_into`] verifies
+///   and strips it, surfacing a mismatch as [`SttsvError::Corrupt`]. The
+///   word is billed like payload: +1 word and +`bytes_per_word` bytes per
+///   sweep message, a closed form the plan's expected counters carry.
+/// * **compute**: after contracting a block, the worker checks the
+///   block's contribution sum against the quadratic form `xᵀC_b x` of a
+///   plan-built per-block checksum matrix, within a γ-style fp tolerance.
+///
+/// `Verify` turns a detection into a typed failure; `Scrub` first
+/// recomputes the offending block's run-descriptor stream (bitwise
+/// deterministic) and only fails if the mismatch persists. Collective
+/// traffic is exempt (its bitwise rank-determinism is itself a guard).
+#[derive(Debug, Default, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AbftMode {
+    /// No checksums, no integrity words — the zero-overhead baseline.
+    #[default]
+    Off,
+    /// Detect and fail typed ([`SttsvError::Corrupt`]).
+    Verify,
+    /// Detect, recompute the offending block, then fail only if the
+    /// corruption survives recomputation (memory, not transient).
+    Scrub,
+}
+
+impl AbftMode {
+    /// Is any ABFT machinery active?
+    pub fn on(self) -> bool {
+        self != AbftMode::Off
+    }
+
+    /// Does a message with this `tag` carry the integrity word? (Sweep
+    /// class only — collectives stay exactly the [`allreduce_stats`]
+    /// closed form.)
+    pub fn frames(self, tag: u64) -> bool {
+        self.on() && TagClass::of(tag) == TagClass::Sweep
+    }
+}
+
+impl std::str::FromStr for AbftMode {
+    type Err = anyhow::Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "off" => Ok(AbftMode::Off),
+            "verify" => Ok(AbftMode::Verify),
+            "scrub" => Ok(AbftMode::Scrub),
+            other => Err(anyhow!("unknown abft mode '{other}' (expected off|verify|scrub)")),
+        }
+    }
+}
+
+impl std::fmt::Display for AbftMode {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(match self {
+            AbftMode::Off => "off",
+            AbftMode::Verify => "verify",
+            AbftMode::Scrub => "scrub",
+        })
+    }
+}
+
+/// Fletcher-32 over the raw bits of f32 wire containers (two 16-bit
+/// halves per container, running sums mod 65535). Any single flipped bit
+/// in the payload — or in the checksum word itself — changes one half by
+/// ±2^k with 0 ≤ k < 16, which is never ≡ 0 (mod 65535), so single-bit
+/// detection is exact, independent of the wire format (the containers are
+/// hashed *after* bf16 packing).
+pub fn fletcher32(containers: &[f32]) -> u32 {
+    let (mut s1, mut s2) = (0u32, 0u32);
+    for v in containers {
+        let bits = v.to_bits();
+        for half in [bits & 0xffff, bits >> 16] {
+            s1 = (s1 + half) % 65535;
+            s2 = (s2 + s1) % 65535;
+        }
+    }
+    (s2 << 16) | s1
+}
+
 /// bf16 encoding of one f32: round-to-nearest-even into the upper 16
 /// bits. NaNs keep a quiet mantissa bit so they stay NaN after the
 /// round-trip.
@@ -369,16 +454,29 @@ pub enum SttsvError {
     Aborted { rank: usize },
     /// The worker body panicked; [`run_cfg`] contained the panic.
     Panicked { rank: usize, msg: String },
+    /// Silent-data-corruption detection fired (§Rob, [`AbftMode`]): the
+    /// wire integrity word mismatched in [`Comm::recv_into`] (then `tag`
+    /// is the message tag and `phase` the comm phase label), or a block's
+    /// contribution failed its `xᵀC_b x` checksum and — in scrub mode —
+    /// failed it again after recomputation (then `tag` carries the
+    /// offending block id and `phase` is `"abft-verify"`), or the host's
+    /// final global-checksum identity failed (`rank == usize::MAX`,
+    /// `phase == "abft-global"`).
+    Corrupt { rank: usize, tag: u64, phase: &'static str },
 }
 
 impl SttsvError {
-    /// Faults a retry under a reseeded [`FaultPlan`] can clear.
+    /// Faults a retry under a reseeded [`FaultPlan`] can clear. `Corrupt`
+    /// is included: injected bit flips are seeded, so a reseeded rerun
+    /// clears them, and genuinely sticky corruption re-surfaces (typed,
+    /// never silent) until the retry budget runs out.
     pub fn is_transient(&self) -> bool {
         matches!(
             self,
             SttsvError::Transient { .. }
                 | SttsvError::Timeout { .. }
                 | SttsvError::RecvStalled { .. }
+                | SttsvError::Corrupt { .. }
         )
     }
 
@@ -412,6 +510,19 @@ impl std::fmt::Display for SttsvError {
             }
             SttsvError::Panicked { rank, msg } => {
                 write!(f, "rank {rank} panicked: {msg}")
+            }
+            SttsvError::Corrupt { rank, tag, phase } => {
+                if *rank == usize::MAX {
+                    write!(f, "host-side global ABFT checksum failed for column {tag}")
+                } else if *phase == "abft-verify" {
+                    write!(f, "rank {rank} detected corruption in block {tag} (ABFT checksum)")
+                } else {
+                    write!(
+                        f,
+                        "rank {rank} received a corrupt message (tag {tag}, phase '{phase}': \
+                         integrity word mismatch)"
+                    )
+                }
             }
         }
     }
@@ -686,6 +797,11 @@ pub struct RunCfg {
     /// measured payload bytes at identical words/messages; collectives
     /// stay f32 regardless.
     pub wire: WireFormat,
+    /// ABFT mode (§Rob). When on, every sweep-class message carries one
+    /// Fletcher-32 integrity word ([`Comm::isend`] appends, billed as one
+    /// extra word; [`Comm::recv_into`] verifies and strips). Size spsc
+    /// slots for the extra physical container.
+    pub abft: AbftMode,
 }
 
 impl Default for RunCfg {
@@ -697,6 +813,7 @@ impl Default for RunCfg {
             chaos: FaultPlan::default(),
             recv_timeout: None,
             wire: WireFormat::F32,
+            abft: AbftMode::Off,
         }
     }
 }
@@ -1113,6 +1230,9 @@ pub struct Comm {
     coll_seq: u64,
     /// Sweep-payload wire encoding for this run ([`RunCfg::wire`]).
     wire: WireFormat,
+    /// ABFT mode for this run ([`RunCfg::abft`]): when on, sweep-class
+    /// `isend`/`recv_into` traffic carries the Fletcher-32 integrity word.
+    abft: AbftMode,
     /// Word/byte/message counters for this processor.
     pub stats: CommStats,
 }
@@ -1132,6 +1252,10 @@ impl Comm {
             !self.wire.packs(tag),
             "blocking send on a bf16-packed tag class (use isend)"
         );
+        debug_assert!(
+            !self.abft.frames(tag),
+            "blocking send on an ABFT-framed tag class (use isend)"
+        );
         self.stats.sent_words += data.len() as u64;
         self.stats.sent_bytes += 4 * data.len() as u64;
         self.stats.sent_msgs += 1;
@@ -1147,16 +1271,30 @@ impl Comm {
     /// accounting to [`Comm::send`].
     pub fn isend(&mut self, to: usize, tag: u64, data: &[f32]) -> Result<()> {
         debug_assert_ne!(to, self.rank, "self-send is a bug in the algorithm");
-        self.stats.sent_words += data.len() as u64;
-        self.stats.sent_bytes += self.wire.bytes_per_word(tag) * data.len() as u64;
+        let framed = self.abft.frames(tag);
+        let billed = data.len() as u64 + framed as u64;
+        self.stats.sent_words += billed;
+        self.stats.sent_bytes += self.wire.bytes_per_word(tag) * billed;
         self.stats.sent_msgs += 1;
-        self.inflight.add(data.len() as u64);
+        self.inflight.add(billed);
         if self.wire.packs(tag) {
             // bf16: round into a pool-drawn staging buffer, two halves
             // per f32 container (zero allocations once the pool is warm;
             // the spsc in-place fast path is traded for the pack pass).
-            let mut buf = self.pool.take(data.len().div_ceil(2));
+            let mut buf = self.pool.take(data.len().div_ceil(2) + framed as usize);
             pack_bf16(data, &mut buf);
+            if framed {
+                // The integrity word hashes the FINAL wire containers —
+                // after packing — so it covers exactly the bits that
+                // travel, in either format.
+                let ck = fletcher32(&buf);
+                buf.push(f32::from_bits(ck));
+            }
+            self.transport.send(to, tag, buf, &mut self.pool)
+        } else if framed {
+            let mut buf = self.pool.take(data.len() + 1);
+            buf.extend_from_slice(data);
+            buf.push(f32::from_bits(fletcher32(data)));
             self.transport.send(to, tag, buf, &mut self.pool)
         } else {
             self.transport.send_slice(to, tag, data, &mut self.pool)
@@ -1172,6 +1310,10 @@ impl Comm {
         debug_assert!(
             !self.wire.packs(tag),
             "blocking recv on a bf16-packed tag class (use recv_into)"
+        );
+        debug_assert!(
+            !self.abft.frames(tag),
+            "blocking recv on an ABFT-framed tag class (use recv_into)"
         );
         let pkt = self.wait_for(from, tag)?;
         self.stats.recv_words += pkt.data.len() as u64;
@@ -1194,28 +1336,40 @@ impl Comm {
     /// counter sees the 2-byte wire width.
     pub fn recv_into(&mut self, from: usize, tag: u64, dst: &mut [f32]) -> Result<()> {
         let pkt = self.wait_for(from, tag)?;
-        if self.wire.packs(tag) {
-            ensure!(
-                pkt.data.len() == dst.len().div_ceil(2),
-                "recv_into from {from} tag {tag}: bf16 payload {} containers, caller expected {} words",
-                pkt.data.len(),
-                dst.len()
-            );
-            unpack_bf16(&pkt.data, dst);
-            self.stats.recv_bytes += 2 * dst.len() as u64;
-        } else {
-            ensure!(
-                pkt.data.len() == dst.len(),
-                "recv_into from {from} tag {tag}: payload {} words, caller expected {}",
-                pkt.data.len(),
-                dst.len()
-            );
-            dst.copy_from_slice(&pkt.data);
-            self.stats.recv_bytes += 4 * dst.len() as u64;
+        let framed = self.abft.frames(tag);
+        let containers = if self.wire.packs(tag) { dst.len().div_ceil(2) } else { dst.len() };
+        ensure!(
+            pkt.data.len() == containers + framed as usize,
+            "recv_into from {from} tag {tag}: payload {} containers, caller expected {} \
+             ({} logical words{})",
+            pkt.data.len(),
+            containers + framed as usize,
+            dst.len(),
+            if framed { " + integrity word" } else { "" }
+        );
+        if framed {
+            // Verify the Fletcher-32 integrity word over the payload
+            // containers BEFORE unpacking: a flipped wire bit must never
+            // reach an accumulator. The caller propagates the typed error
+            // through the §Rob machinery (abort protocol, FailureReport).
+            let want = pkt.data[containers].to_bits();
+            let got = fletcher32(&pkt.data[..containers]);
+            if got != want {
+                let err = SttsvError::Corrupt { rank: self.rank, tag, phase: self.phase };
+                self.pool.put(pkt.data);
+                return Err(err.into());
+            }
         }
-        self.stats.recv_words += dst.len() as u64;
+        if self.wire.packs(tag) {
+            unpack_bf16(&pkt.data[..containers], dst);
+        } else {
+            dst.copy_from_slice(&pkt.data[..containers]);
+        }
+        let billed = dst.len() as u64 + framed as u64;
+        self.stats.recv_bytes += self.wire.bytes_per_word(tag) * billed;
+        self.stats.recv_words += billed;
         self.stats.recv_msgs += 1;
-        self.inflight.sub(dst.len() as u64);
+        self.inflight.sub(billed);
         self.pool.put(pkt.data);
         Ok(())
     }
@@ -1596,6 +1750,7 @@ where
                     phase: "run",
                     coll_seq: 0,
                     wire: cfg.wire,
+                    abft: cfg.abft,
                     stats: CommStats::default(),
                 };
                 // Contain panics: an assert in a worker body becomes a
@@ -2577,6 +2732,146 @@ mod tests {
             assert_eq!(s.to_bits(), out[0].0.to_bits(), "rank {rank} not bitwise");
             assert!((s - want).abs() < 1e-5);
             assert_eq!(*stats, allreduce_stats(5, rank, 1), "rank {rank}");
+        }
+    }
+
+    #[test]
+    fn bf16_roundtrip_edge_cases() {
+        // ±inf survive exactly (the 8-bit exponent is kept whole).
+        assert_eq!(bf16_bits(f32::INFINITY), 0x7f80);
+        assert_eq!(bf16_bits(f32::NEG_INFINITY), 0xff80);
+        assert_eq!(bf16_expand(bf16_bits(f32::INFINITY)), f32::INFINITY);
+        assert_eq!(bf16_expand(bf16_bits(f32::NEG_INFINITY)), f32::NEG_INFINITY);
+        // NaN quieting: every NaN stays NaN after the round trip — in
+        // particular a signaling NaN whose surviving mantissa bits would
+        // all round away must pick up the quiet bit instead of decaying
+        // to ±inf.
+        for bits in [0x7fc0_0001u32, 0x7f80_0001, 0xffbf_ffff, 0x7f8f_0000] {
+            let v = f32::from_bits(bits);
+            assert!(v.is_nan());
+            let half = bf16_bits(v);
+            assert!(half & 0x0040 != 0, "quiet bit set for {bits:#010x}");
+            assert!(bf16_expand(half).is_nan(), "{bits:#010x} decayed to non-NaN");
+            assert_eq!(half >> 15, (bits >> 31) as u16, "sign preserved");
+        }
+        // Subnormals: bf16 shares f32's exponent range, so small f32
+        // subnormals round to (signed) zero and the largest ones round up
+        // into bf16's subnormal/normal boundary — monotonically.
+        assert_eq!(bf16_bits(f32::from_bits(0x0000_0001)), 0x0000);
+        assert_eq!(bf16_bits(f32::from_bits(0x8000_0001)), 0x8000);
+        // Largest f32 subnormal 0x007fffff rounds up to the smallest
+        // normal bf16 0x0080 (RNE carries across the exponent boundary).
+        assert_eq!(bf16_bits(f32::from_bits(0x007f_ffff)), 0x0080);
+        assert_eq!(bf16_expand(0x0080), f32::from_bits(0x0080_0000));
+        // RNE ties-to-even at the half-ULP boundary: lower half exactly
+        // 0x8000 rounds to the EVEN upper half — down when already even,
+        // up when odd.
+        assert_eq!(bf16_bits(f32::from_bits(0x3f80_8000)), 0x3f80); // even: down
+        assert_eq!(bf16_bits(f32::from_bits(0x3f81_8000)), 0x3f82); // odd: up
+        // Just past the tie always rounds up; just under always down.
+        assert_eq!(bf16_bits(f32::from_bits(0x3f80_8001)), 0x3f81);
+        assert_eq!(bf16_bits(f32::from_bits(0x3f80_7fff)), 0x3f80);
+        // Random roundtrip: |x − expand(pack(x))| ≤ 2⁻⁸·|x| for normals.
+        let mut rng = crate::util::rng::Rng::new(0xb16e);
+        for _ in 0..4096 {
+            let v = rng.normal_f32() * 1e3;
+            let back = bf16_expand(bf16_bits(v));
+            assert!((v - back).abs() <= v.abs() / 256.0, "{v} -> {back}");
+        }
+    }
+
+    #[test]
+    fn fletcher32_detects_every_single_bit_flip() {
+        // Exhaustive: over a payload of mixed magnitudes (including 0.0,
+        // whose containers are all-zero), flipping ANY single bit of any
+        // container — or of the checksum word itself — is detected.
+        let payload: Vec<f32> = vec![0.0, 1.0, -2.5e-3, 3.4e38, 1.17e-38, -0.0, 7.0];
+        let ck = fletcher32(&payload);
+        for i in 0..payload.len() {
+            for bit in 0..32 {
+                let mut flipped = payload.clone();
+                flipped[i] = f32::from_bits(flipped[i].to_bits() ^ (1u32 << bit));
+                assert_ne!(fletcher32(&flipped), ck, "missed flip word {i} bit {bit}");
+            }
+        }
+        for bit in 0..32 {
+            assert_ne!(ck ^ (1u32 << bit), ck);
+        }
+    }
+
+    #[test]
+    fn abft_integrity_word_bills_one_word_and_detects_wire_flips() {
+        // Zero faults: the framed ring pass succeeds bitwise and each
+        // rank's counters carry exactly +1 word (+bytes_per_word bytes)
+        // per sweep message, on both transports and both wire formats.
+        for transport in [TransportKind::Mpsc, TransportKind::Spsc] {
+            for wire in [WireFormat::F32, WireFormat::Bf16] {
+                let mut cfg = RunCfg::new(transport);
+                cfg.wire = wire;
+                cfg.abft = AbftMode::Verify;
+                cfg.slot_words = 32;
+                let words = 9usize;
+                let (out, _) = run_cfg(4, None, cfg, |comm| {
+                    let me = comm.rank;
+                    let next = (me + 1) % comm.p;
+                    let prev = (me + comm.p - 1) % comm.p;
+                    let payload: Vec<f32> =
+                        (0..words).map(|i| (me * words + i) as f32 * 0.25).collect();
+                    comm.isend(next, 1, &payload)?;
+                    let mut buf = vec![0.0f32; words];
+                    comm.recv_into(prev, 1, &mut buf)?;
+                    // Collectives stay exempt — and exact.
+                    let s = comm.allreduce_scalar(1.0)?;
+                    Ok((buf, s, comm.stats))
+                })
+                .unwrap();
+                let bpw = wire.bytes_per_word(1);
+                for (rank, (buf, s, stats)) in out.iter().enumerate() {
+                    let prev = (rank + 4 - 1) % 4;
+                    for (i, v) in buf.iter().enumerate() {
+                        let want = (prev * words + i) as f32 * 0.25;
+                        if wire == WireFormat::F32 {
+                            assert_eq!(v.to_bits(), want.to_bits());
+                        } else {
+                            assert!((v - want).abs() <= want.abs() / 128.0);
+                        }
+                    }
+                    assert_eq!(*s, 4.0);
+                    let coll = allreduce_stats(4, rank, 1);
+                    assert_eq!(stats.sent_words - coll.sent_words, words as u64 + 1);
+                    assert_eq!(stats.sent_bytes - coll.sent_bytes, bpw * (words as u64 + 1));
+                    assert_eq!(stats.recv_words - coll.recv_words, words as u64 + 1);
+                    assert_eq!(stats.sent_msgs - coll.sent_msgs, 1);
+                }
+            }
+        }
+        // Every injected wire flip (rate 1.0 ⇒ every sweep send) is
+        // caught by recv_into and surfaces as a typed Corrupt — including
+        // under bf16 packing, and wherever in the message the bit lands.
+        for wire in [WireFormat::F32, WireFormat::Bf16] {
+            for seed in 1..=8u64 {
+                let mut cfg = RunCfg::default();
+                cfg.wire = wire;
+                cfg.abft = AbftMode::Verify;
+                cfg.chaos = FaultPlan::bit_flip(seed, 1_000_000, 0);
+                let err = run_cfg(3, None, cfg, |comm| {
+                    let me = comm.rank;
+                    let next = (me + 1) % comm.p;
+                    let prev = (me + comm.p - 1) % comm.p;
+                    comm.phase = "sweep";
+                    comm.isend(next, 1, &[1.0, 2.0, 3.0, 4.0, 5.0])?;
+                    let mut buf = vec![0.0f32; 5];
+                    comm.recv_into(prev, 1, &mut buf)?;
+                    Ok(())
+                })
+                .unwrap_err();
+                let report = err.downcast_ref::<FailureReport>().expect("typed report");
+                assert!(
+                    matches!(report.kind, Some(SttsvError::Corrupt { .. })),
+                    "{wire} seed {seed}: root cause {:?} not Corrupt",
+                    report.kind
+                );
+            }
         }
     }
 }

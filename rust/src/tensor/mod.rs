@@ -659,6 +659,29 @@ impl PackedRun {
 }
 
 impl PackedBlockView {
+    /// Enumerate the block's unique packed entries as `(packed offset,
+    /// global i, global j, global k)` with i ≥ j ≥ k — exactly
+    /// [`Self::unique_len`] callbacks, in packed-buffer order. Each unique
+    /// entry of the whole tensor belongs to exactly one block view, so
+    /// iterating every owned block visits a processor's packed words once
+    /// each — the walk the ABFT layer uses to build per-block checksum
+    /// matrices `C_b` (and, summed over all owners, the global
+    /// `C[j,k] = Σ_i A[i,j,k]`) at plan build (§Rob P15).
+    pub fn for_each_unique_entry(&self, mut f: impl FnMut(usize, usize, usize, usize)) {
+        let b = self.b;
+        for a in 0..b {
+            let bmax = if self.bi == self.bj { a + 1 } else { b };
+            for be in 0..bmax {
+                let base = self.row_base(a, be);
+                let i = self.bi * b + a;
+                let j = self.bj * b + be;
+                for g in 0..self.row_len(be) {
+                    f(base + g, i, j, self.bk * b + g);
+                }
+            }
+        }
+    }
+
     /// Enumerate the block's packed γ-runs in the exact iteration order of
     /// the packed contraction kernels (α outer, β inner), with per-run
     /// weight classes and flush marks. This is the geometry the compiled
@@ -892,6 +915,31 @@ mod tests {
             .map(|(i, j, k)| PackedBlockView::new(i, j, k, b).unique_len())
             .sum();
         assert_eq!(total, packed_len(m * b));
+    }
+
+    #[test]
+    fn unique_entry_enumeration_matches_packed_words() {
+        // for_each_unique_entry must visit exactly unique_len() packed
+        // offsets, each once, with sorted global indices i ≥ j ≥ k whose
+        // tensor value is the packed word at that offset.
+        let b = 4usize;
+        let t = SymTensor::random(5 * b, 23);
+        let data = t.packed_data();
+        for blk in [(3usize, 2usize, 0usize), (4, 4, 1), (4, 2, 2), (3, 3, 3)] {
+            let v = PackedBlockView::new(blk.0, blk.1, blk.2, b);
+            let mut seen = std::collections::HashSet::new();
+            let mut count = 0usize;
+            v.for_each_unique_entry(|off, i, j, k| {
+                assert!(seen.insert(off), "{blk:?}: offset {off} revisited");
+                assert!(i >= j && j >= k, "{blk:?}: ({i},{j},{k}) not sorted");
+                assert_eq!(i / b, blk.0);
+                assert_eq!(j / b, blk.1);
+                assert_eq!(k / b, blk.2);
+                assert_eq!(data[off], t.get(i, j, k), "{blk:?}: ({i},{j},{k})");
+                count += 1;
+            });
+            assert_eq!(count, v.unique_len(), "{blk:?}");
+        }
     }
 
     #[test]

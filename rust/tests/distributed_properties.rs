@@ -81,6 +81,24 @@
 //!     `simd = scalar` is bitwise the default path — the regression pin
 //!     that licenses AVX2 auto-dispatch and makes the process-global simd
 //!     policy safe to flip mid-suite.
+//! P15: ABFT checksum execution (§Rob) — with zero faults, `abft =
+//!     verify` is observationally free: results are BITWISE the ABFT-off
+//!     phased path's, message counts are unchanged, and every
+//!     per-processor counter exceeds the baseline by exactly one
+//!     integrity word (and its wire-width bytes) per sweep message —
+//!     matching the ABFT-aware `expected_proc_stats` closed form — on
+//!     both transports × both comm modes × both wire formats × r ∈
+//!     {1, 4}; checksum construction itself charges exactly one
+//!     n(n+1)/2-word allreduce per rank, reported separately. Scrub mode
+//!     is equally bitwise and scrubs nothing. Under forced bit flips the
+//!     system is never silently wrong: a wire flip (any bit position) is
+//!     caught by the per-message integrity word or never fired — Ok
+//!     means the bitwise fault-free oracle; a high-exponent-bit
+//!     accumulator flip (fires every block) always trips the per-block
+//!     γ-bounded checksum check — verify mode surfaces a typed
+//!     `Corrupt`, scrub mode recomputes the block and returns the
+//!     bitwise oracle — and a clean rerun through the same plan stays
+//!     bitwise after any failure.
 
 use sttsv::apps::{self, RecoveryPolicy};
 use sttsv::coordinator::session::SolverSession;
@@ -92,7 +110,8 @@ use sttsv::runtime::{packed_ternary_mults, set_simd_policy, Backend, SimdPolicy}
 use sttsv::schedule::CommSchedule;
 use sttsv::serve::{AdmissionPolicy, SttsvServer};
 use sttsv::simulator::{
-    allreduce_stats, CommStats, FailureReport, FaultPlan, TransportKind, WireFormat,
+    allreduce_stats, AbftMode, CommStats, FailureReport, FaultPlan, SttsvError, TransportKind,
+    WireFormat,
 };
 use sttsv::steiner::{spherical, sqs8};
 use sttsv::tensor::{linalg, PackedBlockView, SymTensor};
@@ -1684,4 +1703,255 @@ fn p14_f32_wire_scalar_simd_pins_the_default_path_bitwise() {
             }
         }
     }
+}
+
+#[test]
+fn p15_abft_verify_zero_fault_is_bitwise_with_exact_checksum_words() {
+    // ABFT verification is a read-only side computation on the phased
+    // sequential path: with nothing corrupt it must change NO result bit,
+    // and its wire cost is exactly one integrity word per sweep message
+    // (messages unchanged, words += msgs, bytes += wire-width × msgs) —
+    // which the ABFT-aware `expected_proc_stats` closed form must also
+    // predict. Checksum construction charges one n(n+1)/2-word allreduce
+    // per rank, billed separately via `abft_build_stats`. Scrub mode on a
+    // clean run is the same bitwise path with zero scrubs.
+    let pool = partition_pool();
+    check(
+        "abft: observationally free when nothing is corrupt",
+        0x15AB,
+        3,
+        |rng: &mut Rng| {
+            let part_idx = rng.below(pool.len());
+            let b = 2 + rng.below(4); // 2..=5, including non-divisible-by-λ₁
+            let wire = if rng.below(2) == 0 { WireFormat::F32 } else { WireFormat::Bf16 };
+            let seed = rng.next_u64();
+            (part_idx, b, wire, seed)
+        },
+        |&(part_idx, b, wire, seed)| {
+            let part = &pool[part_idx];
+            let n = b * part.m;
+            let tensor = SymTensor::random(n, seed);
+            let mut rng = Rng::new(seed ^ 0x15AB);
+            let xs: Vec<Vec<f32>> = (0..4).map(|_| rng.normal_vec(n)).collect();
+            let bpw = match wire {
+                WireFormat::F32 => 4u64,
+                WireFormat::Bf16 => 2,
+            };
+            for transport in [TransportKind::Mpsc, TransportKind::Spsc] {
+                for mode in [CommMode::PointToPoint, CommMode::AllToAll] {
+                    for r in [1usize, 4] {
+                        let xs = &xs[..r];
+                        let plan_for = |abft| {
+                            SttsvPlan::new(
+                                &tensor,
+                                part,
+                                ExecOpts {
+                                    mode,
+                                    transport,
+                                    wire,
+                                    abft,
+                                    overlap: false,
+                                    ..Default::default()
+                                },
+                            )
+                        };
+                        let base = plan_for(AbftMode::Off).map_err(|e| e.to_string())?;
+                        let bo = base.run_multi(xs).map_err(|e| e.to_string())?;
+                        let vplan = plan_for(AbftMode::Verify).map_err(|e| e.to_string())?;
+                        let vo = vplan.run_multi(xs).map_err(|e| e.to_string())?;
+                        let ctx = format!("{transport:?} {mode:?} {wire:?} r={r}");
+                        if vo.ys != bo.ys {
+                            return Err(format!(
+                                "{ctx}: verify-mode results are not bitwise the \
+                                 ABFT-off path's"
+                            ));
+                        }
+                        let vx = vplan.expected_proc_stats(r);
+                        for p in 0..part.p {
+                            let (bs, vs) = (&bo.per_proc[p].stats, &vo.per_proc[p].stats);
+                            if (vs.sent_msgs, vs.recv_msgs) != (bs.sent_msgs, bs.recv_msgs) {
+                                return Err(format!(
+                                    "{ctx} proc {p}: ABFT must not add messages \
+                                     (off {bs:?} vs verify {vs:?})"
+                                ));
+                            }
+                            if vs.sent_words != bs.sent_words + bs.sent_msgs
+                                || vs.recv_words != bs.recv_words + bs.recv_msgs
+                                || vs.sent_bytes != bs.sent_bytes + bpw * bs.sent_msgs
+                                || vs.recv_bytes != bs.recv_bytes + bpw * bs.recv_msgs
+                            {
+                                return Err(format!(
+                                    "{ctx} proc {p}: overhead must be exactly one \
+                                     integrity word per sweep message \
+                                     (off {bs:?} vs verify {vs:?})"
+                                ));
+                            }
+                            if *vs != vx[p] {
+                                return Err(format!(
+                                    "{ctx} proc {p}: measured counters diverge from \
+                                     the ABFT-aware closed form ({vs:?} vs {:?})",
+                                    vx[p]
+                                ));
+                            }
+                        }
+                        let builds = vplan
+                            .abft_build_stats()
+                            .ok_or_else(|| format!("{ctx}: ABFT plan lost its build stats"))?;
+                        for p in 0..part.p {
+                            if builds[p] != allreduce_stats(part.p, p, n * (n + 1) / 2) {
+                                return Err(format!(
+                                    "{ctx} proc {p}: checksum build comm must be one \
+                                     n(n+1)/2-word allreduce ({:?})",
+                                    builds[p]
+                                ));
+                            }
+                        }
+                        let splan = plan_for(AbftMode::Scrub).map_err(|e| e.to_string())?;
+                        let so = splan.run_multi(xs).map_err(|e| e.to_string())?;
+                        if so.ys != bo.ys {
+                            return Err(format!(
+                                "{ctx}: scrub-mode results are not bitwise the \
+                                 ABFT-off path's"
+                            ));
+                        }
+                        if splan.abft_scrubs() != 0 {
+                            return Err(format!(
+                                "{ctx}: zero-fault run scrubbed {} blocks",
+                                splan.abft_scrubs()
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn p15_bit_flips_never_silently_wrong() {
+    // SDC containment (§Rob): under injected bit flips every run either
+    // returns the bitwise fault-free oracle or fails with a typed
+    // `Corrupt` — never a silently wrong answer, never a panic.
+    //
+    //   wire flips (any bit, ~15% of sweep sends): the per-message
+    //     Fletcher integrity word detects EVERY single-bit flip, so
+    //     Ok ⇒ no flip fired ⇒ bitwise oracle; a firing is a typed
+    //     failure in both verify and scrub mode (wire corruption has no
+    //     block to recompute — retry layers own that recovery).
+    //   memory flips (exponent MSB, every executed block): flipping bit
+    //     30 of ANY f32 changes it by at least 2 (set: |z| < 2 lands in
+    //     [2, 4) or beyond, even from zero and subnormals; clear: the
+    //     value shrinks by 2¹²⁸ from |z| ≥ 2; exponent 255 results are
+    //     inf/NaN, which fail the γ comparison outright) — far beyond
+    //     the γ·mass floor — so the per-block check always fires.
+    //     Verify mode surfaces `Corrupt`; scrub mode recomputes the
+    //     block (bitwise-deterministic) and returns the exact oracle
+    //     with every repair counted in `abft_scrubs`.
+    //
+    // After any failure the same plan must complete a clean rerun
+    // bitwise (pools and state survive the unwind, as in P13).
+    let part = TetraPartition::from_steiner(&spherical(2).unwrap()).unwrap();
+    let b = 4usize;
+    let n = b * part.m;
+    let tensor = SymTensor::random(n, 0x15B0);
+    let mut rng = Rng::new(0x15B1);
+    let xs: Vec<Vec<f32>> = (0..2).map(|_| rng.normal_vec(n)).collect();
+
+    let mut plans = Vec::new(); // per transport: [verify, scrub]
+    let mut oracles = Vec::new();
+    for transport in [TransportKind::Mpsc, TransportKind::Spsc] {
+        let mk = |abft| {
+            SttsvPlan::new(
+                &tensor,
+                &part,
+                ExecOpts { transport, abft, overlap: false, ..Default::default() },
+            )
+            .unwrap()
+        };
+        oracles.push(mk(AbftMode::Off).run_multi(&xs).unwrap().ys);
+        plans.push([mk(AbftMode::Verify), mk(AbftMode::Scrub)]);
+    }
+
+    let mut detected = 0u32;
+    let mut scrubbed = 0u64;
+    check(
+        "bit flips: detected or absent, never silently wrong",
+        0x15B2,
+        24,
+        |rng: &mut Rng| {
+            let seed = rng.next_u64();
+            let t = rng.below(2); // transport index
+            let wire_not_mem = rng.below(2) == 0;
+            // Wire flips are caught at ANY position (Fletcher); memory
+            // flips pin the exponent MSB so the injected error is
+            // unconditionally above the detection floor (lower-bit
+            // coverage is E19's detection-coverage table, not a
+            // never-silently-wrong guarantee).
+            let bit = if wire_not_mem { rng.below(32) as u8 } else { 30 };
+            (seed, t, wire_not_mem, bit)
+        },
+        |&(seed, t, wire_not_mem, bit)| {
+            let oracle = &oracles[t];
+            let chaos = if wire_not_mem {
+                FaultPlan::bit_flip(seed, 150_000, 0) // ~15% of sweep sends
+            } else {
+                FaultPlan::bit_flip(seed, 0, 1_000_000) // every executed block
+            }
+            .forcing_bit(bit);
+            for (mi, plan) in plans[t].iter().enumerate() {
+                let kind = if wire_not_mem { "wire" } else { "mem" };
+                let ctx = format!("seed {seed:#x} bit {bit} {kind} mode {mi}");
+                let scrubs0 = plan.abft_scrubs();
+                match plan.run_multi_with(&xs, chaos) {
+                    Ok(rep) => {
+                        let repaired = plan.abft_scrubs() - scrubs0;
+                        scrubbed += repaired;
+                        if !wire_not_mem && (mi == 0 || repaired == 0) {
+                            // ppm = 10⁶ flips every block: verify mode
+                            // cannot succeed, scrub mode cannot succeed
+                            // without repairs.
+                            return Err(format!(
+                                "{ctx}: memory flips fired on every block yet the \
+                                 run passed with {repaired} repairs"
+                            ));
+                        }
+                        if rep.ys != *oracle {
+                            return Err(format!(
+                                "{ctx}: Ok result is not the bitwise fault-free \
+                                 oracle — silently wrong"
+                            ));
+                        }
+                    }
+                    Err(e) => {
+                        detected += 1;
+                        let root = match e.downcast_ref::<FailureReport>() {
+                            Some(rp) => rp.kind.clone(),
+                            None => e.downcast_ref::<SttsvError>().cloned(),
+                        };
+                        match root {
+                            Some(SttsvError::Corrupt { .. }) => {}
+                            other => {
+                                return Err(format!(
+                                    "{ctx}: failure must be typed Corrupt, got \
+                                     {other:?} ({e:#})"
+                                ));
+                            }
+                        }
+                        let clean = plan
+                            .run_multi(&xs)
+                            .map_err(|e| format!("{ctx}: clean rerun failed: {e:#}"))?;
+                        if clean.ys != *oracle {
+                            return Err(format!(
+                                "{ctx}: clean rerun after Corrupt is not bitwise"
+                            ));
+                        }
+                    }
+                }
+            }
+            Ok(())
+        },
+    );
+    assert!(detected > 0, "no flip was ever detected — injection is not firing");
+    assert!(scrubbed > 0, "no block was ever scrubbed — the repair path went untested");
 }
